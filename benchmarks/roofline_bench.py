@@ -1,0 +1,61 @@
+"""Roofline table rows from the dry-run JSON cache.
+
+Reads benchmarks/results/dryrun_baseline/*.json (produced by
+``python -m repro.launch.dryrun --all``) and emits per-cell roofline rows:
+compute/memory/collective seconds, dominant term, MODEL_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Tuple
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def load_cells(dirname: str = "dryrun_baseline"):
+    cells = []
+    d = RESULTS / dirname
+    if not d.exists():
+        return cells
+    for f in sorted(d.glob("*.json")):
+        try:
+            cells.append(json.loads(f.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return cells
+
+
+def roofline_rows(dirname: str = "dryrun_baseline") -> List[Tuple[str, float, str]]:
+    rows = []
+    for c in load_cells(dirname):
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c.get("status") != "ok":
+            rows.append((name, 0.0, f"SKIP:{c.get('reason', '?')[:60]}"))
+            continue
+        r = c["roofline"]
+        rows.append((
+            name,
+            r["bound_s"] * 1e6,
+            (f"comp={r['compute_s']:.3e}s,mem={r['memory_s']:.3e}s,"
+             f"coll={r['collective_s']:.3e}s,dom={r['dominant']},"
+             f"useful={r.get('useful_flops_ratio', 0):.2f}"),
+        ))
+    return rows
+
+
+def summary_rows(dirname: str = "dryrun_baseline"):
+    cells = [c for c in load_cells(dirname) if c.get("status") == "ok"]
+    if not cells:
+        return [("roofline/summary", 0.0, "no dry-run cache; run dryrun --all")]
+    doms = {}
+    for c in cells:
+        doms[c["roofline"]["dominant"]] = doms.get(
+            c["roofline"]["dominant"], 0) + 1
+    fits = sum(1 for c in cells
+               if c["memory_analysis"].get("temp_size_in_bytes", 0)
+               + c["memory_analysis"].get("argument_size_in_bytes", 0) < 16e9)
+    return [
+        ("roofline/cells_ok", float(len(cells)), f"dominants={doms}"),
+        ("roofline/cells_fit_16GB", float(fits), f"of {len(cells)}"),
+    ]

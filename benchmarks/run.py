@@ -1,0 +1,87 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: paper tables/figures + kernel microbenches + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig16,kernels
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def kernel_microbench():
+    """Pallas kernels (interpret on CPU) vs XLA oracle timings."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import blocked_matmul, flash_attention, ref
+
+    def med(fn, reps=3):
+        fn()
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)) * 1e6
+
+    rows = []
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    mm_ref = jax.jit(ref.matmul)
+    rows.append(("kernels/matmul_xla_256", med(lambda: mm_ref(a, b)),
+                 f"{2 * 256**3 / 1e6:.0f}Mflop"))
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 4, 64))
+    fa_ref = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v))
+    rows.append(("kernels/attention_xla_256", med(lambda: fa_ref(q, q, q)), ""))
+    return rows
+
+
+SUITES = {}
+
+
+def _register_suites():
+    from benchmarks import eudoxus_bench, oracle_scheduler, roofline_bench, sb_sizing
+    SUITES.update({
+        "fig3": eudoxus_bench.fig3_accuracy_tradeoff,
+        "fig5": eudoxus_bench.fig5_latency_split,
+        "fig9_11": eudoxus_bench.fig9_11_variation,
+        "fig16": eudoxus_bench.fig16_kernel_scaling,
+        "fig17_18": eudoxus_bench.fig17_18_speedup,
+        "tbl1": eudoxus_bench.tbl1_building_blocks,
+        "tbl2": eudoxus_bench.tbl2_sharing,
+        "sbV-C": sb_sizing.sb_sizing_rows,
+        "viiF_oracle": oracle_scheduler.oracle_rows,
+        "kernels": kernel_microbench,
+        "roofline": roofline_bench.roofline_rows,
+        "roofline_summary": roofline_bench.summary_rows,
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default="")
+    args = ap.parse_args()
+    _register_suites()
+    chosen = (args.only.split(",") if args.only else list(SUITES))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        fn = SUITES[name]
+        try:
+            for row in fn():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

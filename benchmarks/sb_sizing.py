@@ -1,0 +1,81 @@
+"""Stencil-buffer sizing arithmetic (paper Sec. V-C, Fig. 14).
+
+The FPGA's SB must hold a pixel from its production cycle P until its last
+consumption cycle C; with one shared SB that is max(C1,C2)-P1 pixels. When
+two consumers are far apart in the pipeline (IF/FD at stream time vs DR
+millions of cycles later), re-reading pixels from DRAM and keeping two
+small SBs — (C1-P1) + (C2-P2) — is far smaller. The paper reports ~0.4 MB
+of SB vs ~9 MB without the optimization on EDX-CAR; this module reproduces
+that arithmetic from the pipeline structure and emits it as benchmark rows.
+
+On TPU the same objective (bounded on-chip residency for multi-consumer
+stencils) is expressed as re-reading HBM in a second pallas_call instead
+of carrying data in VMEM across kernels — the sizing model below is the
+decision rule for when that is worthwhile.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass
+class StencilConsumer:
+    name: str
+    rows: int              # stencil height (lines that must be resident)
+    start_cycle: int       # first consumption relative to pixel production
+
+
+def pipeline_consumers(width: int, height: int,
+                       block_match_window: int = 11) -> List[StencilConsumer]:
+    """The frontend's consumers of the raw image (Fig. 12):
+    IF (gaussian 5x5) + FD (FAST ring 7x7) consume at stream time; DR
+    (block matching) consumes after FE->FC->MO complete — about one full
+    frame of cycles later (the '3 million cycles' in Sec. VII-D)."""
+    frame_cycles = width * height
+    return [
+        StencilConsumer("IF+FD", rows=7, start_cycle=0),
+        StencilConsumer("DR", rows=block_match_window,
+                        start_cycle=int(2.5 * frame_cycles)),
+    ]
+
+
+def sb_bytes_shared(width: int, consumers: List[StencilConsumer],
+                    bytes_per_px: int = 1) -> int:
+    """One shared SB: every pixel resident from production to the LAST
+    consumer: size = max(start + rows*W) - 0."""
+    return max((c.start_cycle + c.rows * width) for c in consumers) * bytes_per_px
+
+
+def sb_bytes_replicated(width: int, consumers: List[StencilConsumer],
+                        bytes_per_px: int = 1) -> int:
+    """Per-consumer SBs with DRAM re-reads: each holds only its own
+    stencil window (rows x W)."""
+    return sum(c.rows * width for c in consumers) * bytes_per_px
+
+
+def dram_extra_bytes(width: int, height: int, consumers, bytes_per_px: int = 1):
+    """Cost side of the trade: (n_consumers - 1) extra frame reads."""
+    return (len(consumers) - 1) * width * height * bytes_per_px
+
+
+def rows(instance: str, width: int, height: int) -> List[Tuple[str, float, str]]:
+    cons = pipeline_consumers(width, height)
+    shared = sb_bytes_shared(width, cons)
+    repl = sb_bytes_replicated(width, cons)
+    extra = dram_extra_bytes(width, height, cons)
+    return [
+        (f"sbV-C/{instance}/shared_sb_bytes", 0.0, f"{shared/1e6:.2f}MB"),
+        (f"sbV-C/{instance}/replicated_sb_bytes", 0.0,
+         f"{repl/1e3:.1f}KB ({shared/max(repl,1):.0f}x smaller)"),
+        (f"sbV-C/{instance}/extra_dram_per_frame", 0.0, f"{extra/1e6:.2f}MB"),
+    ]
+
+
+def sb_sizing_rows() -> List[Tuple[str, float, str]]:
+    # paper check: EDX-CAR without the optimization needs ~MBs more SB
+    out = rows("edx-car_1280x720", 1280, 720)
+    out += rows("edx-drone_640x480", 640, 480)
+    car_shared = sb_bytes_shared(1280, pipeline_consumers(1280, 720))
+    assert car_shared > 2e6, "paper: pixel resident ~3M cycles => MB-scale SB"
+    return out

@@ -1,0 +1,184 @@
+"""Config dataclasses for model architectures and input shapes.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG: ModelConfig``. Input shapes are global (same four for every
+LM-family arch) but carry per-arch applicability rules (e.g. ``long_500k``
+only runs on sub-quadratic families).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block config (capacity-based routing)."""
+    n_experts: int
+    top_k: int
+    expert_d_ff: int
+    n_shared: int = 0            # always-active shared experts (Qwen-MoE style)
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD state-space block config."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64           # SSD head dim (P)
+    chunk_size: int = 256
+    # zamba2-style hybrid: a single *shared* transformer block applied
+    # after every `shared_attn_interval` mamba layers (0 = pure SSM).
+    shared_attn_interval: int = 0
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block mix: mLSTM (matrix memory) with periodic sLSTM."""
+    slstm_every: int = 8         # every k-th block is sLSTM, rest mLSTM
+    proj_factor: float = 2.0     # mLSTM up-projection factor
+    chunk_size: int = 256        # chunkwise-parallel mLSTM chunk
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    attn_bias: bool = False
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # VLM: gated cross-attention block inserted after every k-th layer.
+    cross_attn_interval: int = 0
+    n_image_tokens: int = 0      # stub modality frontend sequence length
+    # Audio (MusicGen): parallel codebooks over EnCodec tokens (stub frontend).
+    n_codebooks: int = 0
+    # Numerics / execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat_policy: str = "nothing"   # none | nothing | dots
+    scan_layers: bool = True
+    num_microbatches: int = 1       # gradient accumulation (train shapes)
+    fsdp: bool = False              # weights also sharded over data axes
+    attn_impl: str = "auto"         # auto | einsum | chunked | fused
+    serve_resident_weights: bool = False  # decode: TP weights over
+    #   (model,pod), batch over data only — no per-step FSDP regather
+    kv_cache_dtype: str = "bfloat16"      # bfloat16 | int8 (quantized cache)
+    # Provenance: [source; verified-tier] from the assignment table.
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode state does not grow quadratically with context.
+
+        SSM/hybrid/recurrent families qualify for the 500k-context shape.
+        """
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                    # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    def applicable(self, cfg: ModelConfig) -> bool:
+        # long-context decode only for sub-quadratic families (see
+        # DESIGN.md §5); every assigned arch is decoder-only so decode
+        # shapes otherwise apply universally.
+        if self.seq_len >= 500_000:
+            return cfg.is_subquadratic
+        return True
+
+    def skip_reason(self, cfg: ModelConfig) -> str:
+        if self.applicable(cfg):
+            return ""
+        return (
+            f"{self.name} requires sub-quadratic attention; {cfg.name} is a "
+            "pure full-attention arch (see DESIGN.md §5)"
+        )
+
+
+# The four assigned LM-family shapes (seq_len x global_batch).
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4_096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    ShapeConfig("decode_32k", "decode", 32_768, 128),
+    ShapeConfig("long_500k", "decode", 524_288, 1),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def get_shape(name: str) -> ShapeConfig:
+    try:
+        return SHAPES_BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES_BY_NAME)}")
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests.
+
+    Keeps the family topology (GQA ratio, MoE routing, hybrid interleave,
+    cross-attn cadence) while shrinking width/depth/vocab.
+    """
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        num_microbatches=1,
+        remat_policy="none",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8, top_k=min(cfg.moe.top_k, 2), expert_d_ff=64,
+            n_shared=min(cfg.moe.n_shared, 1))
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk_size=32,
+            shared_attn_interval=min(cfg.ssm.shared_attn_interval, 2)
+            if cfg.ssm.shared_attn_interval else 0)
+    if cfg.xlstm is not None:
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, slstm_every=2, chunk_size=32)
+    if cfg.cross_attn_interval:
+        kw["cross_attn_interval"] = 2
+        kw["n_image_tokens"] = 16
+    kw.update(overrides)
+    return cfg.replace(**kw)

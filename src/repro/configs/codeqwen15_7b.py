@@ -1,0 +1,25 @@
+"""codeqwen1.5-7b [dense] — 32L d_model=4096 32H (GQA kv=32) d_ff=13440 vocab=92416.
+
+qwen1.5-arch. [hf:Qwen/CodeQwen1.5-7B; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=13440,
+    vocab=92416,
+    qk_norm=False,
+    attn_bias=True,           # qwen1.5 uses qkv bias
+    rope_theta=1e6,
+    remat_policy="dots",
+    num_microbatches=8,
+    attn_impl="fused",
+    kv_cache_dtype="int8",
+    source="[hf:Qwen/CodeQwen1.5-7B; hf]",
+)

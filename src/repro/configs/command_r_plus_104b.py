@@ -1,0 +1,28 @@
+"""command-r-plus-104b [dense] — 64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000.
+
+GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab=256000,
+    qk_norm=False,
+    attn_bias=False,
+    rope_theta=75_000_000.0,
+    tie_embeddings=True,      # cohere ties input/output embeddings
+    remat_policy="nothing",
+    num_microbatches=64,      # 104B @ batch 256*4k needs accumulation
+    fsdp=True,                # params alone exceed a model-axis shard
+
+    attn_impl="fused",
+    serve_resident_weights=True,
+    source="[hf:CohereForAI/c4ai-command-r-v01; unverified]",
+)

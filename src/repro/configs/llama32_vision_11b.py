@@ -1,0 +1,27 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+
+Cross-attn image layers every 5th layer; the vision tower is a STUB per
+the assignment (``input_specs()`` provides precomputed patch embeddings).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=128256,
+    qk_norm=False,
+    rope_theta=500_000.0,
+    cross_attn_interval=5,    # gated cross-attn block after every 5th layer
+    n_image_tokens=1024,      # stub: precomputed patch embeddings (B, 1024, D)
+    remat_policy="dots",
+    num_microbatches=8,
+    attn_impl="fused",
+    source="[hf:meta-llama/Llama-3.2-11B-Vision; unverified]",
+)

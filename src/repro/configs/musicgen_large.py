@@ -1,0 +1,27 @@
+"""musicgen-large [audio] — 48L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=2048.
+
+Decoder-only over EnCodec tokens, 4 parallel codebooks (delay pattern).
+The EnCodec frontend is a STUB per the assignment (``input_specs()``
+provides token ids / frame embeddings). [arXiv:2306.05284; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab=2048,
+    n_codebooks=4,
+    qk_norm=False,
+    rope_theta=10_000.0,
+    remat_policy="dots",
+    num_microbatches=8,
+    attn_impl="fused",
+    kv_cache_dtype="int8",
+    source="[arXiv:2306.05284; hf]",
+)

@@ -1,0 +1,31 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (GQA kv=16) d_ff=1024 vocab=50304.
+
+MoE: 64 experts top-8, no shared experts. qk-norm per OLMoE.
+[arXiv:2409.02060; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab=50304,
+    moe=MoEConfig(
+        n_experts=64,
+        top_k=8,
+        expert_d_ff=1024,
+        n_shared=0,
+        capacity_factor=1.25,
+    ),
+    qk_norm=True,
+    rope_theta=10_000.0,
+    remat_policy="dots",
+    num_microbatches=8,
+    attn_impl="fused",
+    source="[arXiv:2409.02060; hf]",
+)

@@ -1,0 +1,31 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936.
+
+MoE: 60 routed experts top-4 + 4 shared (shared-expert width 4x1408=5632).
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                # routed expert width
+    vocab=151936,
+    moe=MoEConfig(
+        n_experts=60,
+        top_k=4,
+        expert_d_ff=1408,
+        n_shared=4,           # 4 always-active shared expert units
+        capacity_factor=1.25,
+    ),
+    attn_bias=True,
+    rope_theta=1e6,
+    remat_policy="dots",
+    num_microbatches=4,
+    attn_impl="fused",
+    source="[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]",
+)

@@ -1,0 +1,24 @@
+"""stablelm-1.6b [dense] — 24L d_model=2048 32H (GQA kv=32) d_ff=5632 vocab=100352.
+
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab=100352,
+    qk_norm=False,
+    attn_bias=True,           # stablelm-2 uses qkv bias
+    rope_theta=10_000.0,
+    remat_policy="dots",
+    num_microbatches=4,
+    attn_impl="fused",
+    source="[hf:stabilityai/stablelm-2-1_6b; unverified]",
+)

@@ -1,0 +1,24 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304.
+
+sLSTM + mLSTM blocks (xLSTM[7:1]-style mix: every 8th block sLSTM).
+d_ff=0: blocks use internal up-projection instead of separate FFN.
+[arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab=50304,
+    xlstm=XLSTMConfig(slstm_every=8, proj_factor=2.0, chunk_size=256),
+    remat_policy="dots",
+    num_microbatches=8,
+    serve_resident_weights=True,
+    source="[arXiv:2405.04517; unverified]",
+)

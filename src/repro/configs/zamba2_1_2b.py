@@ -1,0 +1,30 @@
+"""zamba2-1.2b [hybrid] — 38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+
+Mamba2 backbone + a single shared transformer block applied periodically
+(Zamba2 weight-sharing scheme). [arXiv:2411.15242; hf]
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,              # mamba2 layers; shared attn applied every 6
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,                # shared block MLP width
+    vocab=32000,
+    ssm=SSMConfig(
+        d_state=64,
+        d_conv=4,
+        expand=2,
+        head_dim=64,
+        chunk_size=256,
+        shared_attn_interval=6,
+    ),
+    remat_policy="dots",
+    num_microbatches=8,
+    attn_impl="fused",
+    source="[arXiv:2411.15242; hf]",
+)

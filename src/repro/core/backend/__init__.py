@@ -1,0 +1,1 @@
+from repro.core.backend import matrix_blocks, msckf, fusion, mapping, tracking

@@ -1,0 +1,36 @@
+"""GPS fusion (VIO mode only): loosely-coupled position EKF.
+
+The paper integrates GPS through a simple EKF on top of the filtering
+block's pose (Sec. IV-A "Fusion"); here the GPS position observation
+updates the MSCKF state directly through the shared Kalman-gain block —
+H selects the position rows, so the same matrix engine serves it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import matrix_blocks as mb
+from repro.core.backend.msckf import MsckfState, apply_correction
+
+
+def gps_update(state: MsckfState, gps_pos: jax.Array,
+               sigma_gps: float = 0.05) -> Tuple[MsckfState, jax.Array]:
+    """Fuse a GPS position fix (world frame). NaN-safe: invalid fixes
+    (any NaN) are skipped via zero-weight."""
+    d = state.P.shape[0]
+    valid = jnp.all(jnp.isfinite(gps_pos))
+    gps_safe = jnp.where(valid, gps_pos, state.p)
+
+    H = jnp.zeros((3, d)).at[:, 3:6].set(jnp.eye(3))
+    r = gps_safe - state.p
+    K = mb.kalman_gain(state.P, H, sigma_gps ** 2)
+    w = valid.astype(jnp.float32)
+    dx = (K @ r) * w
+    ikh = jnp.eye(d) - w * mb.matmul(K, H)
+    P_new = mb.matmul(mb.matmul(ikh, state.P), mb.transpose(ikh)) \
+        + w * (sigma_gps ** 2) * mb.matmul(K, mb.transpose(K))
+    P_new = 0.5 * (P_new + P_new.T)
+    return apply_correction(state, dx)._replace(P=P_new), jnp.linalg.norm(dx[3:6])

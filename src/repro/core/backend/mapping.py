@@ -1,0 +1,178 @@
+"""SLAM mapping: Levenberg-Marquardt bundle adjustment + marginalization.
+
+The paper's SLAM backend solves a nonlinear least-squares problem (Ceres
+LM, Sec. IV-A) whose variation-dominating kernel is *marginalization* —
+Schur-complement elimination with the [[diag A, B],[B^T, D(6x6)]]
+structure (Sec. VI-A). Both are built on the shared matrix blocks:
+  - normal equations: blocked H = J^T J (matmul)
+  - landmark elimination: diag-block inverse (the specialized unit)
+  - pose solve: Cholesky + fwd/bwd substitution
+All shapes static: K poses x M landmarks with validity masks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import matrix_blocks as mb
+from repro.core.backend.msckf import quat_to_rot, skew
+
+
+class BAProblem(NamedTuple):
+    poses_R: jax.Array      # (K,3,3) cam-to-world rotation
+    poses_p: jax.Array      # (K,3)
+    landmarks: jax.Array    # (M,3)
+    obs_uv: jax.Array       # (K,M,2) pixel observations
+    obs_valid: jax.Array    # (K,M) bool
+    intrinsics: jax.Array   # (4,) fx fy cx cy
+
+
+def reproject(R, p, lm, intr):
+    pc = R.T @ (lm - p)
+    z = jnp.maximum(pc[2], 1e-3)
+    return jnp.array([intr[0] * pc[0] / z + intr[2],
+                      intr[1] * pc[1] / z + intr[3]]), pc
+
+
+def residuals(prob: BAProblem, dposes: jax.Array, dlms: jax.Array):
+    """r, J blocks for pose deltas (K,6: rot, trans) and landmark deltas."""
+    K, M = prob.obs_valid.shape
+    intr = prob.intrinsics
+
+    def one(k, m):
+        # apply increments on the linearization point
+        R = prob.poses_R[k] @ (jnp.eye(3) + skew(dposes[k, :3]))
+        p = prob.poses_p[k] + dposes[k, 3:]
+        lm = prob.landmarks[m] + dlms[m]
+        pred, pc = reproject(R, p, lm, intr)
+        w = prob.obs_valid[k, m].astype(jnp.float32)
+        r = (prob.obs_uv[k, m] - pred) * w
+        z = jnp.maximum(pc[2], 1e-3)
+        Jp = jnp.array([[intr[0] / z, 0, -intr[0] * pc[0] / z ** 2],
+                        [0, intr[1] / z, -intr[1] * pc[1] / z ** 2]])
+        J_rot = Jp @ skew(pc) * w
+        J_tr = -(Jp @ R.T) * w
+        J_lm = (Jp @ R.T) * w
+        return r, jnp.concatenate([J_rot, J_tr], axis=1), J_lm
+
+    ks, ms = jnp.mgrid[0:K, 0:M]
+    r, Jx, Jl = jax.vmap(jax.vmap(one))(ks, ms)   # (K,M,2), (K,M,2,6), (K,M,2,3)
+    return r, Jx, Jl
+
+
+def build_normal_eqs(r, Jx, Jl):
+    """Blocked Gauss-Newton system:
+    Hpp (K6,K6), Hpl (K6,M3), Hll_blocks (M,3,3), bp (K6,), bl (M3,)."""
+    K, M = r.shape[:2]
+    Hpp = jnp.einsum("kmri,kmrj->kij", Jx, Jx)              # block-diag per pose
+    Hll = jnp.einsum("kmri,kmrj->mij", Jl, Jl)              # (M,3,3)
+    Hpl = jnp.einsum("kmri,kmrj->kmij", Jx, Jl)             # (K,M,6,3)
+    bp = jnp.einsum("kmri,kmr->ki", Jx, r)                  # (K,6)
+    bl = jnp.einsum("kmri,kmr->mi", Jl, r)                  # (M,3)
+    return Hpp, Hpl, Hll, bp, bl
+
+
+def schur_solve(Hpp, Hpl, Hll, bp, bl, lam: float,
+                anchor_weight: float = 1e6):
+    """Eliminate landmarks (diag 3x3 blocks — the paper's reciprocal/
+    small-inverse unit), solve the reduced pose system by Cholesky.
+
+    The first pose is gauge-anchored (strong prior): windowed BA has a
+    6-DoF gauge freedom, and without the anchor the solution slides along
+    it (cost converges, poses don't)."""
+    K, M = Hpl.shape[0], Hpl.shape[1]
+    Hll_d = Hll + lam * jnp.eye(3)[None]
+    Hll_inv = jax.vmap(mb.inverse_spd)(Hll_d)               # (M,3,3)
+    # reduced system: S = Hpp_full - Hpl Hll^-1 Hlp
+    HplHinv = jnp.einsum("kmij,mjl->kmil", Hpl, Hll_inv)    # (K,M,6,3)
+    S_off = jnp.einsum("kmil,qmjl->kiqj", HplHinv, Hpl)     # (K,6,K,6)
+    S = -S_off.reshape(6 * K, 6 * K)
+    diag = jax.scipy.linalg.block_diag(*[Hpp[i] for i in range(K)])
+    S = S + diag + lam * jnp.eye(6 * K)
+    S = S.at[:6, :6].add(anchor_weight * jnp.eye(6))        # gauge anchor
+    rhs = bp.reshape(6 * K) - jnp.einsum("kmil,ml->ki", HplHinv, bl).reshape(6 * K)
+    dx_p = mb.solve_spd(S, rhs[:, None])[:, 0]
+    # back-substitute landmarks
+    dxp_k = dx_p.reshape(K, 6)
+    dl = jnp.einsum("mij,mj->mi", Hll_inv,
+                    bl - jnp.einsum("kmij,ki->mj", Hpl, dxp_k))
+    return dxp_k, dl
+
+
+def lm_optimize(prob: BAProblem, iters: int = 10, lam0: float = 1e-3):
+    """Levenberg-Marquardt loop (fixed iterations, damped retry built in)."""
+    K, M = prob.obs_valid.shape
+    dp0 = jnp.zeros((K, 6))
+    dl0 = jnp.zeros((M, 3))
+
+    def cost(dp, dl):
+        r, _, _ = residuals(prob, dp, dl)
+        return jnp.sum(r ** 2)
+
+    def body(carry, _):
+        dp, dl, lam = carry
+        r, Jx, Jl = residuals(prob, dp, dl)
+        Hpp, Hpl, Hll, bp, bl = build_normal_eqs(r, Jx, Jl)
+        step_p, step_l = schur_solve(Hpp, Hpl, Hll, bp, bl, lam)
+        c0 = jnp.sum(r ** 2)
+        c1 = cost(dp + step_p, dl + step_l)
+        improved = c1 < c0
+        dp = jnp.where(improved, dp + step_p, dp)
+        dl = jnp.where(improved, dl + step_l, dl)
+        lam = jnp.where(improved, lam * 0.5, lam * 4.0)
+        return (dp, dl, lam), c1
+
+    (dp, dl, _), costs = jax.lax.scan(body, (dp0, dl0, jnp.float32(lam0)),
+                                      None, length=iters)
+    poses_R = jax.vmap(lambda R, d: R @ (jnp.eye(3) + skew(d[:3])))(
+        prob.poses_R, dp)
+    poses_p = prob.poses_p + dp[:, 3:]
+    lms = prob.landmarks + dl
+    return prob._replace(poses_R=poses_R, poses_p=poses_p, landmarks=lms), costs
+
+
+def marginalize(Hpp, Hpl, Hll, bp, bl, n_drop_poses: int = 1,
+                jitter: float = 1e-4):
+    """Marginalize the oldest pose + all landmarks via Schur complement.
+
+    The paper's A_mm = [[A, B], [B^T, D]] structure (Sec. VI-A): A is the
+    landmark block (block-diagonal 3x3 — eliminated by the specialized
+    batched small-inverse unit, the paper's "diagonal + reciprocal"
+    optimization), D is the 6x6 oldest-pose block. The kept poses receive
+    the resulting prior (H_prior, b_prior).
+    """
+    K, M = Hpl.shape[0], Hpl.shape[1]
+    # A^{-1}: batched 3x3 inverses (the specialized small-inverse unit)
+    A_inv = jax.vmap(lambda h: mb.inverse_spd(h + jitter * jnp.eye(3)))(Hll)
+    Bt = Hpl[0]                                          # (M,6,3): B^T chunks
+    # Schur complement of A inside H_mm: S_D = D - B^T A^{-1} B   (6x6)
+    BtAinv = jnp.einsum("mij,mjl->mil", Bt, A_inv)       # (M,6,3)
+    S_D = Hpp[0] + jitter * jnp.eye(6) - jnp.einsum(
+        "mil,mjl->ij", BtAinv, Bt)
+    S_D_inv = mb.inverse_spd(S_D, jitter=jitter)
+
+    # kept-pose <-> landmark couplings (kept <-> pose0 coupling is zero in
+    # vision-only BA: no pose-pose factors)
+    C_lm = Hpl[1:]                                       # (K-1, M, 6, 3)
+    CAinv = jnp.einsum("kmij,mjl->kmil", C_lm, A_inv)    # C A^{-1}
+
+    # H_km H_mm^{-1} H_mk = C (A^{-1} + A^{-1}B S^{-1} B^T A^{-1}) C^T
+    term1 = jnp.einsum("kmil,qmjl->kiqj", CAinv, C_lm)
+    u = jnp.einsum("kmil,mjl->kij", CAinv, Bt)           # C A^{-1} B  (K-1,6,6)
+    term2 = jnp.einsum("kij,jl,qml->kiqm", u, S_D_inv, u)
+    n_keep = 6 * (K - 1)
+    Hkeep = jax.scipy.linalg.block_diag(*[Hpp[i] for i in range(1, K)])
+    H_prior = Hkeep - (term1 + term2).reshape(n_keep, n_keep)
+    H_prior = 0.5 * (H_prior + H_prior.T)
+
+    # b_prior = b_keep - H_km H_mm^{-1} b_m,  b_m = [bl; bp0]
+    v_l = jnp.einsum("mij,mj->mi", A_inv, bl)            # A^{-1} bl
+    w = bp[0] - jnp.einsum("mil,ml->i", BtAinv, bl)      # bp0 - B^T A^{-1} bl
+    y0 = S_D_inv @ w                                     # marginal pose soln
+    AinvB = jnp.einsum("mij,mlj->mil", A_inv, Bt)        # (M,3,6) = A^{-1} B
+    x_l = v_l - jnp.einsum("mil,l->mi", AinvB, y0)       # landmark soln
+    corr = jnp.einsum("kmij,mj->ki", C_lm, x_l)          # C x_l (+ 0 * y0)
+    b_prior = bp[1:].reshape(n_keep) - corr.reshape(n_keep)
+    return H_prior, b_prior

@@ -1,0 +1,100 @@
+"""The five matrix building blocks (paper Tbl. I) shared by all backend
+modes: multiplication, decomposition, inverse, transpose, fwd/bwd
+substitution.
+
+This is the software face of the paper's backend engine (Fig. 15): the
+three variation-heavy kernels — projection (registration), Kalman gain
+(VIO), marginalization (SLAM) — are all composed from these. Each block
+dispatches through kernels/ops.py, which picks the Pallas TPU kernel or
+the XLA path exactly like the paper's runtime scheduler picks FPGA vs
+host (Sec. VI-B).
+
+Structure-exploiting specials mirror Sec. VI-A "Optimization":
+  - ``solve_spd``: S symmetric => Cholesky + two triangular solves
+    (half the cost of LU; the paper halves S's compute/storage).
+  - ``block_diag_schur_inverse``: marginalization's A_mm = [[A,B],[C,D]]
+    with diagonal A and small (6x6) D => reciprocal + Schur complement,
+    the paper's specialized inversion unit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Mult. block — dispatched (Pallas blocked-matmul on TPU)."""
+    from repro.kernels import ops
+    return ops.matmul(a, b)
+
+
+def transpose(a: jax.Array) -> jax.Array:
+    """Tp. block (layout change; free on TPU via dot dimension numbers)."""
+    return a.T
+
+
+def cholesky(a: jax.Array) -> jax.Array:
+    """Decomp. block: lower-triangular Cholesky factor of an SPD matrix."""
+    from repro.kernels import ops
+    return ops.cholesky(a)
+
+
+def tri_solve(l: jax.Array, b: jax.Array, *, lower: bool = True,
+              trans: bool = False) -> jax.Array:
+    """Fwd./Bwd. substitution block."""
+    from repro.kernels import ops
+    return ops.tri_solve(l, b, lower=lower, trans=trans)
+
+
+def solve_spd(s: jax.Array, b: jax.Array, jitter: float = 1e-8) -> jax.Array:
+    """Solve S x = b for symmetric positive-definite S (Kalman-gain path:
+    decomposition + forward + backward substitution, per Equ. 1b)."""
+    n = s.shape[-1]
+    l = cholesky(s + jitter * jnp.eye(n, dtype=s.dtype))
+    y = tri_solve(l, b, lower=True)
+    return tri_solve(l, y, lower=True, trans=True)
+
+
+def inverse_spd(s: jax.Array, jitter: float = 1e-8) -> jax.Array:
+    """Inv. block for SPD matrices (via solve against identity)."""
+    return solve_spd(s, jnp.eye(s.shape[-1], dtype=s.dtype), jitter)
+
+
+def block_diag_schur_inverse(a_diag: jax.Array, b: jax.Array,
+                             d: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                                    jax.Array, jax.Array]:
+    """Inverse of M = [[diag(a), B], [B^T, D]] with small dense D.
+
+    The paper's specialized marginalization inverse: A is diagonal
+    (landmark blocks), D is 6x6 (the pose being solved). Returns the four
+    blocks of M^{-1} via the Schur complement of A:
+        S  = D - B^T A^{-1} B         (small dense)
+        M^{-1} = [[A^{-1} + A^{-1} B S^{-1} B^T A^{-1}, -A^{-1} B S^{-1}],
+                  [-S^{-1} B^T A^{-1},                   S^{-1}]]
+    """
+    ainv = 1.0 / a_diag                      # reciprocal unit
+    aib = b * ainv[:, None]                  # A^{-1} B
+    s = d - matmul(transpose(b), aib)        # Schur complement (6x6-ish)
+    sinv = inverse_spd(s)
+    tl = jnp.diag(ainv) + matmul(matmul(aib, sinv), transpose(aib))
+    tr = -matmul(aib, sinv)
+    return tl, tr, transpose(tr), sinv
+
+
+def qr(a: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Thin QR (used for MSCKF nullspace projection / residual compression)."""
+    return jnp.linalg.qr(a)
+
+
+def kalman_gain(p: jax.Array, h: jax.Array, r_diag: float) -> jax.Array:
+    """K from Equ. (1): S = H P H^T + R; solve S K^T = H P^T.
+
+    Exploits S's symmetry via the Cholesky path (the paper's 'computing
+    Kalman gain' kernel).
+    """
+    ph_t = matmul(p, transpose(h))                     # (n, m)
+    s = matmul(h, ph_t) + r_diag * jnp.eye(h.shape[0], dtype=p.dtype)
+    kt = solve_spd(s, transpose(ph_t))                 # (m, n)
+    return transpose(kt)

@@ -1,0 +1,344 @@
+"""MSCKF (Multi-State Constraint Kalman Filter) — the VIO backend mode.
+
+Sliding window of camera pose clones (paper: window 30); feature tracks
+spanning the window produce constraints that update the filter without
+putting landmarks in the state (Mourikis & Roumeliotis 2007). The
+variation-dominating kernel is the Kalman gain (S = HPH^T + R; solve),
+built on the shared matrix blocks.
+
+State layout (error-state, all fixed shapes):
+  nominal: q (4) wxyz world<-body, p (3), v (3), bg (3), ba (3)
+           + window clones: (W, 7) [q, p]
+  error:   15 + 6W  (theta, dp, dv, dbg, dba | per clone: dtheta, dp)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import matrix_blocks as mb
+
+GRAVITY = jnp.array([0.0, -9.81, 0.0])
+
+
+# --------------------------------------------------------------------------
+# quaternion / so3 utilities (wxyz)
+# --------------------------------------------------------------------------
+
+def quat_mult(a, b):
+    w1, x1, y1, z1 = a
+    w2, x2, y2, z2 = b
+    return jnp.stack([
+        w1 * w2 - x1 * x2 - y1 * y2 - z1 * z2,
+        w1 * x2 + x1 * w2 + y1 * z2 - z1 * y2,
+        w1 * y2 - x1 * z2 + y1 * w2 + z1 * x2,
+        w1 * z2 + x1 * y2 - y1 * x2 + z1 * w2,
+    ])
+
+
+def quat_normalize(q):
+    return q / jnp.maximum(jnp.linalg.norm(q), 1e-12)
+
+
+def quat_to_rot(q):
+    w, x, y, z = q
+    return jnp.array([
+        [1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y)],
+        [2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x)],
+        [2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y)],
+    ])
+
+
+def small_quat(dtheta):
+    half = 0.5 * dtheta
+    return quat_normalize(jnp.concatenate([jnp.ones((1,)), half]))
+
+
+def skew(v):
+    return jnp.array([[0, -v[2], v[1]], [v[2], 0, -v[0]], [-v[1], v[0], 0.0]])
+
+
+# --------------------------------------------------------------------------
+# filter state
+# --------------------------------------------------------------------------
+
+class MsckfState(NamedTuple):
+    q: jax.Array        # (4,)
+    p: jax.Array        # (3,)
+    v: jax.Array        # (3,)
+    bg: jax.Array       # (3,)
+    ba: jax.Array       # (3,)
+    clones_q: jax.Array  # (W,4)
+    clones_p: jax.Array  # (W,3)
+    n_clones: jax.Array  # () int32
+    P: jax.Array        # (15+6W, 15+6W) error covariance
+
+
+def init_state(window: int, p0=None, q0=None, v0=None) -> MsckfState:
+    d = 15 + 6 * window
+    # honest initial uncertainty: tight attitude/position (known start),
+    # loose velocity/biases
+    diag = jnp.concatenate([
+        jnp.full(3, 1e-4), jnp.full(3, 1e-4), jnp.full(3, 0.25),
+        jnp.full(3, 1e-4), jnp.full(3, 1e-2), jnp.full(6 * window, 1e-4)])
+    P = jnp.diag(diag)
+    return MsckfState(
+        q=q0 if q0 is not None else jnp.array([1.0, 0, 0, 0]),
+        p=p0 if p0 is not None else jnp.zeros(3),
+        v=v0 if v0 is not None else jnp.zeros(3),
+        bg=jnp.zeros(3), ba=jnp.zeros(3),
+        clones_q=jnp.tile(jnp.array([1.0, 0, 0, 0]), (window, 1)),
+        clones_p=jnp.zeros((window, 3)),
+        n_clones=jnp.int32(0), P=P)
+
+
+# --------------------------------------------------------------------------
+# IMU propagation
+# --------------------------------------------------------------------------
+
+def propagate(state: MsckfState, accel: jax.Array, gyro: jax.Array,
+              dt: float, sigma_a: float = 0.08,
+              sigma_g: float = 0.004) -> MsckfState:
+    """Propagate nominal state + covariance through IMU samples.
+
+    accel/gyro: (K,3) body-frame measurements at interval dt.
+    """
+    W = state.clones_q.shape[0]
+    d = 15 + 6 * W
+
+    def step(carry, uw):
+        q, p, v, P = carry
+        am, wm = uw
+        w_hat = wm - state.bg
+        a_hat = am - state.ba
+        R = quat_to_rot(q)
+        a_w = R @ a_hat + GRAVITY
+        # nominal integration
+        p_new = p + v * dt + 0.5 * a_w * dt * dt
+        v_new = v + a_w * dt
+        q_new = quat_normalize(quat_mult(q, small_quat(w_hat * dt)))
+        # error-state transition (15x15 IMU block)
+        F = jnp.eye(15)
+        F = F.at[0:3, 0:3].set(jnp.eye(3) - skew(w_hat) * dt)
+        F = F.at[0:3, 9:12].set(-jnp.eye(3) * dt)
+        F = F.at[3:6, 6:9].set(jnp.eye(3) * dt)
+        F = F.at[6:9, 0:3].set(-R @ skew(a_hat) * dt)
+        F = F.at[6:9, 12:15].set(-R * dt)
+        Q = jnp.zeros((15, 15))
+        Q = Q.at[0:3, 0:3].set(jnp.eye(3) * (sigma_g * dt) ** 2)
+        Q = Q.at[6:9, 6:9].set(jnp.eye(3) * (sigma_a * dt) ** 2)
+        Q = Q.at[9:12, 9:12].set(jnp.eye(3) * (1e-5 * dt) ** 2)
+        Q = Q.at[12:15, 12:15].set(jnp.eye(3) * (1e-4 * dt) ** 2)
+        Pii = P[:15, :15]
+        Pic = P[:15, 15:]
+        Pii_new = mb.matmul(mb.matmul(F, Pii), mb.transpose(F)) + Q
+        Pic_new = mb.matmul(F, Pic)
+        P_new = P.at[:15, :15].set(0.5 * (Pii_new + Pii_new.T))
+        P_new = P_new.at[:15, 15:].set(Pic_new)
+        P_new = P_new.at[15:, :15].set(Pic_new.T)
+        return (q_new, p_new, v_new, P_new), None
+
+    (q, p, v, P), _ = jax.lax.scan(step, (state.q, state.p, state.v, state.P),
+                                   (accel, gyro))
+    return state._replace(q=q, p=p, v=v, P=P)
+
+
+def augment(state: MsckfState) -> MsckfState:
+    """Clone the current pose into the sliding window (shift-out oldest)."""
+    W = state.clones_q.shape[0]
+    # shift clones left (oldest drops), append current pose
+    clones_q = jnp.concatenate([state.clones_q[1:], state.q[None]], axis=0)
+    clones_p = jnp.concatenate([state.clones_p[1:], state.p[None]], axis=0)
+    # covariance: new clone errors = J x_err with J selecting theta & p
+    d = 15 + 6 * W
+    J = jnp.zeros((6, d))
+    J = J.at[0:3, 0:3].set(jnp.eye(3))
+    J = J.at[3:6, 3:6].set(jnp.eye(3))
+    P = state.P
+    # shift clone blocks up-left by 6
+    idx = jnp.arange(d)
+    keep = jnp.concatenate([jnp.arange(15), jnp.arange(21, d), jnp.arange(15, 21)])
+    P_shift = P[keep][:, keep]        # oldest clone rows/cols moved to end
+    PJ = mb.matmul(P_shift, mb.transpose(J))          # (d,6)
+    JPJ = mb.matmul(J, PJ)                            # (6,6)
+    P_new = P_shift.at[:, d - 6:].set(PJ)
+    P_new = P_new.at[d - 6:, :].set(PJ.T)
+    P_new = P_new.at[d - 6:, d - 6:].set(JPJ)
+    return state._replace(clones_q=clones_q, clones_p=clones_p,
+                          n_clones=jnp.minimum(state.n_clones + 1, W),
+                          P=P_new)
+
+
+# --------------------------------------------------------------------------
+# feature update (the Kalman-gain kernel consumer)
+# --------------------------------------------------------------------------
+
+def triangulate(obs_uv: jax.Array, obs_valid: jax.Array, clones_q, clones_p,
+                fx: float, fy: float, cx: float, cy: float) -> Tuple[jax.Array, jax.Array]:
+    """Linear triangulation of one feature from its windowed observations.
+
+    obs_uv: (W,2) pixel observations in each clone (u,v). Returns (pw, ok).
+    Solves sum over obs of || [I - dd^T] (pw - c) ||^2 via normal equations
+    where d is the unit ray of the observation in world frame.
+    """
+    W = obs_uv.shape[0]
+
+    def ray(i):
+        d_c = jnp.array([(obs_uv[i, 0] - cx) / fx,
+                         (obs_uv[i, 1] - cy) / fy, 1.0])
+        R = quat_to_rot(clones_q[i])
+        d_w = R @ d_c
+        return d_w / jnp.maximum(jnp.linalg.norm(d_w), 1e-9)
+
+    A = jnp.zeros((3, 3))
+    b = jnp.zeros(3)
+    for i in range(W):
+        d = ray(i)
+        Pm = jnp.eye(3) - jnp.outer(d, d)
+        w = obs_valid[i].astype(jnp.float32)
+        A = A + w * Pm
+        b = b + w * (Pm @ clones_p[i])
+    n_obs = jnp.sum(obs_valid)
+    reg = 1e-9 * jnp.trace(A) + 1e-9
+    pw0 = mb.solve_spd(A + reg * jnp.eye(3), b[:, None])[:, 0]
+
+    # Gauss-Newton refinement on reprojection error (kills the linear
+    # method's depth bias, which would otherwise leak second-order error
+    # past the nullspace projection)
+    def gn(pw, _):
+        def per(i):
+            R = quat_to_rot(clones_q[i])
+            pc = R.T @ (pw - clones_p[i])
+            z = jnp.maximum(pc[2], 0.3)
+            pred = jnp.array([fx * pc[0] / z + cx, fy * pc[1] / z + cy])
+            Jp = jnp.array([[fx / z, 0, -fx * pc[0] / z ** 2],
+                            [0, fy / z, -fy * pc[1] / z ** 2]])
+            w = obs_valid[i].astype(jnp.float32)
+            return (obs_uv[i] - pred) * w, (Jp @ R.T) * w
+
+        r, J = jax.vmap(per)(jnp.arange(W))        # (W,2), (W,2,3)
+        Jf = J.reshape(-1, 3)
+        H = Jf.T @ Jf + 1e-4 * jnp.eye(3)
+        g = Jf.T @ r.reshape(-1)
+        return pw + mb.solve_spd(H, g[:, None])[:, 0], None
+
+    pw, _ = jax.lax.scan(gn, pw0, None, length=5)
+
+    # sanity gating: enough parallax-bearing obs, point in front of every
+    # observing camera, finite
+    def depth(i):
+        R = quat_to_rot(clones_q[i])
+        pc = R.T @ (pw - clones_p[i])
+        return jnp.where(obs_valid[i], pc[2], 1.0)
+
+    depths = jax.vmap(depth)(jnp.arange(W))
+    # parallax gate: depth is unobservable without baseline; features whose
+    # observing-camera spread is small relative to depth inject coherent
+    # second-order error past the nullspace projection — drop them.
+    wts = obs_valid.astype(jnp.float32)
+    centroid = jnp.sum(clones_p * wts[:, None], 0) / jnp.maximum(n_obs, 1)
+    spread = jnp.sqrt(jnp.sum(jnp.sum((clones_p - centroid) ** 2, -1) * wts)
+                      / jnp.maximum(n_obs, 1))
+    mean_depth = jnp.sum(jnp.where(obs_valid, depths, 0.0)) / jnp.maximum(n_obs, 1)
+    parallax = spread / jnp.maximum(mean_depth, 1e-3)
+    ok = ((n_obs >= 3) & jnp.all(depths > 0.4) & jnp.all(jnp.isfinite(pw))
+          & (jnp.linalg.norm(pw) < 1e3) & (parallax > 0.02))
+    return pw, ok
+
+
+def feature_jacobians(pw, clones_q, clones_p, obs_uv, obs_valid,
+                      fx, fy, cx, cy):
+    """Residuals + Jacobians for one feature over the window.
+
+    Returns r (2W,), Hx (2W, 6W) w.r.t clone errors, Hf (2W, 3).
+    """
+    W = clones_q.shape[0]
+
+    def per_clone(i):
+        R = quat_to_rot(clones_q[i])
+        pc = R.T @ (pw - clones_p[i])               # world -> cam
+        z = jnp.maximum(pc[2], 0.3)
+        pred = jnp.array([fx * pc[0] / z + cx, fy * pc[1] / z + cy])
+        r_i = (obs_uv[i] - pred)
+        # d(pred)/d(pc)
+        J_proj = jnp.array([[fx / z, 0, -fx * pc[0] / z ** 2],
+                            [0, fy / z, -fy * pc[1] / z ** 2]])
+        # pc = R^T (pw - p_clone):
+        H_theta = J_proj @ skew(pc)                 # w.r.t clone rotation err
+        H_p = -J_proj @ R.T                         # w.r.t clone position err
+        H_f = J_proj @ R.T                          # w.r.t feature position
+        w = obs_valid[i].astype(jnp.float32)
+        return r_i * w, H_theta * w, H_p * w, H_f * w
+
+    rs, Hts, Hps, Hfs = jax.vmap(per_clone)(jnp.arange(W))
+    r = rs.reshape(2 * W)
+    Hx = jnp.zeros((2 * W, 6 * W))
+    for i in range(W):
+        Hx = Hx.at[2 * i:2 * i + 2, 6 * i:6 * i + 3].set(Hts[i])
+        Hx = Hx.at[2 * i:2 * i + 2, 6 * i + 3:6 * i + 6].set(Hps[i])
+    Hf = Hfs.reshape(2 * W, 3)
+    return r, Hx, Hf
+
+
+def nullspace_project(r, Hx, Hf):
+    """Project out the feature Jacobian: A^T r, A^T Hx where A spans the
+    left nullspace of Hf (QR-based, the MSCKF trick)."""
+    q_full, _ = mb.qr(jnp.concatenate([Hf, jnp.eye(Hf.shape[0])], axis=1))
+    A = q_full[:, 3:]                   # (2W, 2W-3) nullspace basis
+    return A.T @ r, A.T @ Hx
+
+
+def update(state: MsckfState, tracks_uv: jax.Array, tracks_valid: jax.Array,
+           fx: float, fy: float, cx: float, cy: float,
+           sigma_px: float = 1.0) -> Tuple[MsckfState, jax.Array]:
+    """MSCKF update from F feature tracks. tracks_uv: (F, W, 2)."""
+    W = state.clones_q.shape[0]
+    F_n = tracks_uv.shape[0]
+    d = 15 + 6 * W
+
+    def one(feat_uv, feat_valid):
+        pw, ok = triangulate(feat_uv, feat_valid, state.clones_q,
+                             state.clones_p, fx, fy, cx, cy)
+        r, Hx, Hf = feature_jacobians(pw, state.clones_q, state.clones_p,
+                                      feat_uv, feat_valid, fx, fy, cx, cy)
+        # chi2-ish feature gate BEFORE nullspace mixing: any wild raw
+        # residual kills the whole feature (outlier rejection)
+        ok = ok & (jnp.max(jnp.abs(r)) < 20.0)
+        r0, H0 = nullspace_project(r, Hx, Hf)
+        okf = ok.astype(jnp.float32)
+        return r0 * okf, H0 * okf
+
+    r_all, H_all = jax.vmap(one)(tracks_uv, tracks_valid)
+    m = r_all.size
+    r_stack = r_all.reshape(m)
+    H_stack = jnp.zeros((m, d))
+    H_stack = H_stack.at[:, 15:].set(H_all.reshape(m, 6 * W))
+
+    K = mb.kalman_gain(state.P, H_stack, sigma_px ** 2)   # (d, m)
+    dx = K @ r_stack
+    ikh = jnp.eye(d) - mb.matmul(K, H_stack)
+    P_new = mb.matmul(mb.matmul(ikh, state.P), mb.transpose(ikh)) \
+        + (sigma_px ** 2) * mb.matmul(K, mb.transpose(K))
+    P_new = 0.5 * (P_new + P_new.T)
+    new_state = apply_correction(state, dx)._replace(P=P_new)
+    return new_state, jnp.linalg.norm(dx[:15])
+
+
+def apply_correction(state: MsckfState, dx: jax.Array) -> MsckfState:
+    W = state.clones_q.shape[0]
+    q = quat_normalize(quat_mult(state.q, small_quat(dx[0:3])))
+    p = state.p + dx[3:6]
+    v = state.v + dx[6:9]
+    bg = state.bg + dx[9:12]
+    ba = state.ba + dx[12:15]
+    dc = dx[15:].reshape(W, 6)
+
+    def fix(cq, cp, d6):
+        return (quat_normalize(quat_mult(cq, small_quat(d6[:3]))),
+                cp + d6[3:6])
+
+    cq, cp = jax.vmap(fix)(state.clones_q, state.clones_p, dc)
+    return state._replace(q=q, p=p, v=v, bg=bg, ba=ba,
+                          clones_q=cq, clones_p=cp)

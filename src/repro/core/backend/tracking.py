@@ -1,0 +1,118 @@
+"""Tracking block: bag-of-words place recognition + camera-model projection.
+
+Active in Registration mode (map given) and SLAM mode (latest map from the
+mapping block). The variation-dominating kernel here is *projection*:
+C (3x4) x X (4xM homogeneous map points) — the paper's exact example of a
+matmul-block kernel whose latency scales linearly with map size (Fig. 16a).
+
+BoW: random-hyperplane LSH over ORB descriptor space (a DBoW-style
+vocabulary without the training corpus); TF-IDF-weighted histogram match.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import matrix_blocks as mb
+from repro.core.backend.msckf import skew
+
+N_BITS = 256
+
+
+def make_vocab(vocab_size: int, seed: int = 7) -> np.ndarray:
+    """Random-hyperplane codebook: log2(vocab) hyperplanes over {0,1}^256."""
+    depth = int(np.ceil(np.log2(vocab_size)))
+    rng = np.random.RandomState(seed)
+    planes = rng.randn(depth, N_BITS).astype(np.float32)
+    return planes
+
+
+def bow_histogram(desc: jax.Array, valid: jax.Array,
+                  planes: jax.Array) -> jax.Array:
+    """(N,256) bool descriptors -> (V,) l2-normalized word histogram."""
+    depth = planes.shape[0]
+    centered = desc.astype(jnp.float32) - 0.5
+    bits = (centered @ planes.T) > 0                     # (N, depth)
+    words = jnp.sum(bits.astype(jnp.int32)
+                    * (2 ** jnp.arange(depth, dtype=jnp.int32)), axis=1)
+    V = 2 ** depth
+    hist = jnp.zeros((V,)).at[words].add(valid.astype(jnp.float32))
+    return hist / jnp.maximum(jnp.linalg.norm(hist), 1e-9)
+
+
+def place_recognition(hist: jax.Array, db_hists: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Cosine match against keyframe database. Returns (best_idx, score)."""
+    scores = db_hists @ hist
+    i = jnp.argmax(scores)
+    return i, scores[i]
+
+
+def project(cam_matrix: jax.Array, points_h: jax.Array) -> jax.Array:
+    """THE projection kernel: C (3,4) x X (4,M) -> normalized pixels (2,M).
+
+    Latency scales linearly in M (paper Fig. 16a); runs on the Mult. block.
+    """
+    ph = mb.matmul(cam_matrix, points_h)                 # (3, M)
+    z = jnp.where(jnp.abs(ph[2]) > 1e-6, ph[2], 1e-6)
+    return ph[:2] / z
+
+
+def associate(projected_uv: jax.Array, point_valid: jax.Array,
+              feat_yx: jax.Array, feat_valid: jax.Array,
+              max_px: float = 6.0, feat_desc=None, map_desc=None,
+              hamming_budget: int = 80):
+    """Nearest-projected-map-point data association (fixed shapes),
+    optionally gated by ORB descriptor distance.
+
+    Returns per-feature (map_idx, valid)."""
+    fu = feat_yx[:, 1].astype(jnp.float32)
+    fv = feat_yx[:, 0].astype(jnp.float32)
+    du = projected_uv[0][None, :] - fu[:, None]          # (N, M)
+    dv = projected_uv[1][None, :] - fv[:, None]
+    d2 = du * du + dv * dv
+    d2 = jnp.where(point_valid[None, :], d2, 1e12)
+    idx = jnp.argmin(d2, axis=1)
+    best = jnp.take_along_axis(d2, idx[:, None], axis=1)[:, 0]
+    ok = feat_valid & (best < max_px ** 2)
+    if feat_desc is not None and map_desc is not None:
+        cand = map_desc[idx]                             # (N,256)
+        ham = jnp.sum(cand != feat_desc, axis=1)
+        ok = ok & (ham < hamming_budget)
+    return idx.astype(jnp.int32), ok
+
+
+def pnp_gauss_newton(map_points: jax.Array, obs_uv: jax.Array,
+                     obs_valid: jax.Array, R0: jax.Array, p0: jax.Array,
+                     intr: jax.Array, iters: int = 8):
+    """Pose-only Gauss-Newton on reprojection error (6x6 solve via the
+    shared Cholesky + substitution blocks)."""
+
+    def body(carry, _):
+        R, p = carry
+
+        def one(lm, uv, w):
+            pc = R.T @ (lm - p)
+            z = jnp.maximum(pc[2], 1e-3)
+            pred = jnp.array([intr[0] * pc[0] / z + intr[2],
+                              intr[1] * pc[1] / z + intr[3]])
+            Jp = jnp.array([[intr[0] / z, 0, -intr[0] * pc[0] / z ** 2],
+                            [0, intr[1] / z, -intr[1] * pc[1] / z ** 2]])
+            J = jnp.concatenate([Jp @ skew(pc), -(Jp @ R.T)], axis=1)
+            wf = w.astype(jnp.float32)
+            return (uv - pred) * wf, J * wf
+
+        r, J = jax.vmap(one)(map_points, obs_uv, obs_valid)  # (N,2),(N,2,6)
+        Jf = J.reshape(-1, 6)
+        rf = r.reshape(-1)
+        H = mb.matmul(mb.transpose(Jf), Jf) + 1e-4 * jnp.eye(6)
+        g = Jf.T @ rf
+        dx = mb.solve_spd(H, g[:, None])[:, 0]
+        R_new = R @ (jnp.eye(3) + skew(dx[:3]))
+        p_new = p + dx[3:]
+        return (R_new, p_new), jnp.sum(rf ** 2)
+
+    (R, p), costs = jax.lax.scan(body, (R0, p0), None, length=iters)
+    return R, p, costs

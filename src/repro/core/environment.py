@@ -1,0 +1,40 @@
+"""Operating-environment taxonomy (paper Fig. 2).
+
+Two booleans — GPS availability and pre-built map availability — induce
+four scenarios, each preferring one backend mode (paper Fig. 3):
+
+    <No GPS, No Map>   indoor unknown   -> SLAM
+    <No GPS, Map>      indoor known     -> Registration
+    <GPS,    No Map>   outdoor unknown  -> VIO (+GPS fusion)
+    <GPS,    Map>      outdoor known    -> VIO (+GPS fusion)
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+
+class Mode(enum.Enum):
+    REGISTRATION = "registration"
+    VIO = "vio"
+    SLAM = "slam"
+
+
+@dataclass(frozen=True)
+class Environment:
+    gps_available: bool
+    map_available: bool
+
+    @property
+    def name(self) -> str:
+        a = "outdoor" if self.gps_available else "indoor"
+        b = "known" if self.map_available else "unknown"
+        return f"{a}-{b}"
+
+
+def select_mode(env: Environment) -> Mode:
+    if env.gps_available:
+        return Mode.VIO            # outdoor: VIO+GPS Pareto-dominates (Fig.3c/d)
+    if env.map_available:
+        return Mode.REGISTRATION   # indoor known: best error at higher FPS (Fig.3b)
+    return Mode.SLAM               # indoor unknown: lowest error (Fig.3a)

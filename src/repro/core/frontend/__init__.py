@@ -1,0 +1,1 @@
+from repro.core.frontend.pipeline import FrontendResult, run_frontend

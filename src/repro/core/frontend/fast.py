@@ -1,0 +1,104 @@
+"""FAST-9 corner detection (the frontend's FD task) + grid NMS.
+
+Fixed-shape, mask-based JAX implementation: the feature list is a static
+``max_features``-long buffer with a validity mask (TPU-friendly — no
+dynamic shapes), mirroring the FPGA's fixed feature-budget SRAM.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Bresenham circle of radius 3 (standard FAST-16 ring, clockwise).
+CIRCLE = np.array([
+    (-3, 0), (-3, 1), (-2, 2), (-1, 3), (0, 3), (1, 3), (2, 2), (3, 1),
+    (3, 0), (3, -1), (2, -2), (1, -3), (0, -3), (-1, -3), (-2, -2), (-3, -1),
+], dtype=np.int32)
+
+
+class Features(NamedTuple):
+    yx: jax.Array       # (N, 2) int32 row, col
+    score: jax.Array    # (N,) float32 corner score
+    valid: jax.Array    # (N,) bool
+
+
+def _ring_stack(img: jax.Array) -> jax.Array:
+    """(16, H, W): ring pixel intensities around each pixel (edge-padded)."""
+    p = jnp.pad(img, 3, mode="edge")
+    H, W = img.shape
+    return jnp.stack([p[3 + dy:3 + dy + H, 3 + dx:3 + dx + W]
+                      for dy, dx in CIRCLE])
+
+
+def fast_score(img: jax.Array, threshold: float, arc_len: int = 9) -> jax.Array:
+    """Per-pixel FAST corner score (0 where not a corner).
+
+    A pixel is a corner if >= arc_len contiguous ring pixels are all
+    brighter than p+t or all darker than p-t. Score = sum of |diff|-t over
+    the qualifying polarity (OpenCV-style SAD score).
+    """
+    img = img.astype(jnp.float32)
+    ring = _ring_stack(img)                           # (16,H,W)
+    diff = ring - img[None]
+    brighter = diff > threshold
+    darker = diff < -threshold
+
+    def has_arc(flags):
+        # contiguous run of arc_len around the 16-ring (wraparound)
+        out = jnp.zeros(flags.shape[1:], bool)
+        for start in range(16):
+            run = flags[start % 16]
+            for j in range(1, arc_len):
+                run = run & flags[(start + j) % 16]
+            out = out | run
+        return out
+
+    corner_b = has_arc(brighter)
+    corner_d = has_arc(darker)
+    sb = jnp.sum(jnp.where(brighter, jnp.abs(diff) - threshold, 0.0), axis=0)
+    sd = jnp.sum(jnp.where(darker, jnp.abs(diff) - threshold, 0.0), axis=0)
+    score = jnp.where(corner_b, sb, 0.0) + jnp.where(corner_d, sd, 0.0)
+    # suppress the border (descriptor patch must fit)
+    H, W = img.shape
+    yy, xx = jnp.mgrid[0:H, 0:W]
+    margin = 16
+    inside = ((yy >= margin) & (yy < H - margin) &
+              (xx >= margin) & (xx < W - margin))
+    return jnp.where(inside, score, 0.0)
+
+
+def grid_nms_topk(score: jax.Array, max_features: int,
+                  cell: int = 8) -> Features:
+    """Non-max suppression on a cell grid, then global top-K.
+
+    Reshape trick keeps everything fixed-shape: one candidate per cell
+    (argmax), then the strongest max_features cells win.
+    """
+    H, W = score.shape
+    Hc, Wc = H // cell, W // cell
+    s = score[:Hc * cell, :Wc * cell].reshape(Hc, cell, Wc, cell)
+    s = s.transpose(0, 2, 1, 3).reshape(Hc * Wc, cell * cell)
+    idx = jnp.argmax(s, axis=1)
+    best = jnp.take_along_axis(s, idx[:, None], axis=1)[:, 0]   # (cells,)
+    cy = jnp.arange(Hc * Wc) // Wc * cell + idx // cell
+    cx = jnp.arange(Hc * Wc) % Wc * cell + idx % cell
+
+    k = min(max_features, best.shape[0])
+    top_score, top_i = jax.lax.top_k(best, k)
+    yx = jnp.stack([cy[top_i], cx[top_i]], axis=1).astype(jnp.int32)
+    valid = top_score > 0
+    if k < max_features:                     # pad to fixed budget
+        pad = max_features - k
+        yx = jnp.pad(yx, ((0, pad), (0, 0)))
+        top_score = jnp.pad(top_score, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    return Features(yx=yx, score=top_score, valid=valid)
+
+
+def detect(img: jax.Array, threshold: float = 20.0, max_features: int = 512,
+           nms_cell: int = 8, arc_len: int = 9) -> Features:
+    return grid_nms_topk(fast_score(img, threshold, arc_len),
+                         max_features, nms_cell)

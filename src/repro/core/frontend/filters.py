@@ -1,0 +1,56 @@
+"""Image filtering (the frontend's IF task): separable Gaussian + Sobel.
+
+Stencil ops — the FPGA uses stencil buffers (Fig. 13); the Pallas twin
+(kernels/conv2d.py) tiles HBM->VMEM with halo instead. This module is the
+jnp reference path used on CPU and as the kernels' oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=16)
+def gaussian_taps(sigma: float, radius: int = 0):
+    r = radius or max(1, int(3 * sigma + 0.5))
+    x = np.arange(-r, r + 1)
+    k = np.exp(-0.5 * (x / sigma) ** 2)
+    return tuple((k / k.sum()).tolist())
+
+
+def _conv1d(img: jax.Array, taps, axis: int) -> jax.Array:
+    """Same-size 1D convolution along axis with edge padding."""
+    r = len(taps) // 2
+    pad = [(0, 0)] * img.ndim
+    pad[axis] = (r, r)
+    p = jnp.pad(img, pad, mode="edge").astype(jnp.float32)
+    out = jnp.zeros_like(img, dtype=jnp.float32)
+    n = img.shape[axis]
+    for i, t in enumerate(taps):
+        sl = [slice(None)] * img.ndim
+        sl[axis] = slice(i, i + n)
+        out = out + p[tuple(sl)] * t
+    return out
+
+
+def gaussian_blur(img: jax.Array, sigma: float = 2.0) -> jax.Array:
+    taps = gaussian_taps(sigma)
+    return _conv1d(_conv1d(img, taps, -2), taps, -1)
+
+
+def sobel(img: jax.Array):
+    """Returns (gx, gy) image gradients (float32)."""
+    smooth = (1.0, 2.0, 1.0)
+    diff = (-1.0, 0.0, 1.0)
+    gx = _conv1d(_conv1d(img, smooth, -2), diff, -1) / 8.0
+    gy = _conv1d(_conv1d(img, diff, -2), smooth, -1) / 8.0
+    return gx, gy
+
+
+def downsample2(img: jax.Array) -> jax.Array:
+    """Blur + 2x decimation (pyramid level)."""
+    b = gaussian_blur(img, 1.0)
+    return b[..., ::2, ::2]

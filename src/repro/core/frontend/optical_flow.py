@@ -1,0 +1,98 @@
+"""Pyramidal Lucas-Kanade temporal matching (the frontend's DC+LSS tasks).
+
+Tracks feature points from frame t-1 to frame t: per level, iterate the
+2x2 least-squares flow update over an 11x11 window (derivatives from
+Sobel, bilinear sampling for sub-pixel warps). The per-feature 2x2 solve
+is the paper's (linear) least-squares-solver task.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontend import filters
+from repro.core.frontend.orb import _bilinear
+
+
+class FlowResult(NamedTuple):
+    yx: jax.Array     # (N,2) float32 tracked positions in frame t
+    valid: jax.Array  # (N,) bool
+
+
+def build_pyramid(img: jax.Array, levels: int) -> List[jax.Array]:
+    pyr = [img.astype(jnp.float32)]
+    for _ in range(levels - 1):
+        pyr.append(filters.downsample2(pyr[-1]))
+    return pyr
+
+
+def _track_level(img0, img1, gx, gy, p0, p1, *, window: int, iters: int):
+    """One pyramid level of LK. p0: source positions, p1: current guesses."""
+    w = window // 2
+    dy, dx = jnp.mgrid[-w:w + 1, -w:w + 1]
+    dyf = dy.astype(jnp.float32).ravel()
+    dxf = dx.astype(jnp.float32).ravel()
+
+    def one(p_src, p_cur):
+        ys = p_src[0] + dyf
+        xs = p_src[1] + dxf
+        i0 = _bilinear(img0, ys, xs)
+        ix = _bilinear(gx, ys, xs)
+        iy = _bilinear(gy, ys, xs)
+        gxx = jnp.sum(ix * ix)
+        gxy = jnp.sum(ix * iy)
+        gyy = jnp.sum(iy * iy)
+        det = gxx * gyy - gxy * gxy
+
+        def body(_, p):
+            i1 = _bilinear(img1, p[0] + dyf, p[1] + dxf)
+            it = i1 - i0
+            bx = jnp.sum(it * ix)
+            by = jnp.sum(it * iy)
+            # solve [gxx gxy; gxy gyy] d = -[bx; by]
+            ddx = (-bx * gyy + by * gxy) / jnp.maximum(det, 1e-6)
+            ddy = (-by * gxx + bx * gxy) / jnp.maximum(det, 1e-6)
+            return p + jnp.array([ddy, ddx])
+
+        p_new = jax.lax.fori_loop(0, iters, body, p_cur)
+        ok = det > 1e-4
+        return jnp.where(ok, p_new, p_cur), ok
+
+    return jax.vmap(one)(p0, p1)
+
+
+def track(img_prev: jax.Array, img_next: jax.Array, yx_prev: jax.Array,
+          valid: jax.Array, *, levels: int = 3, window: int = 11,
+          iters: int = 10, max_residual: float = 12.0) -> FlowResult:
+    """Track yx_prev (N,2 int/float) from img_prev into img_next."""
+    pyr0 = build_pyramid(img_prev, levels)
+    pyr1 = build_pyramid(img_next, levels)
+    p_src_top = yx_prev.astype(jnp.float32) / (2 ** (levels - 1))
+    p = p_src_top
+    ok_all = valid
+    for lv in range(levels - 1, -1, -1):
+        img0, img1 = pyr0[lv], pyr1[lv]
+        gx, gy = filters.sobel(img0)
+        p_src = yx_prev.astype(jnp.float32) / (2 ** lv)
+        p, ok = _track_level(img0, img1, gx, gy, p_src, p,
+                             window=window, iters=iters)
+        ok_all = ok_all & ok
+        if lv > 0:
+            p = p * 2.0
+    # forward-track residual check: appearance difference at the result
+    w = 2
+    dyw, dxw = jnp.mgrid[-w:w + 1, -w:w + 1]
+    dyf, dxf = dyw.ravel().astype(jnp.float32), dxw.ravel().astype(jnp.float32)
+
+    def resid(p_old, p_new):
+        a = _bilinear(pyr0[0], p_old[0] + dyf, p_old[1] + dxf)
+        b = _bilinear(pyr1[0], p_new[0] + dyf, p_new[1] + dxf)
+        return jnp.mean(jnp.abs(a - b))
+
+    res = jax.vmap(resid)(yx_prev.astype(jnp.float32), p)
+    H, W = img_next.shape
+    inside = ((p[:, 0] >= 1) & (p[:, 0] < H - 2) &
+              (p[:, 1] >= 1) & (p[:, 1] < W - 2))
+    return FlowResult(yx=p, valid=ok_all & inside & (res < max_residual))

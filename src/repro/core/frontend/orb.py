@@ -1,0 +1,85 @@
+"""rBRIEF / ORB descriptors (the frontend's FC task).
+
+256 point-pair intensity comparisons on a Gaussian-smoothed patch, rotated
+by the intensity-centroid orientation (Rublee et al. 2011). The sampling
+pattern is a fixed table (seeded) — the FPGA stores it in ROM; we bake it
+as a module constant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_BITS = 256
+PATCH_R = 15        # 31x31 patch
+
+_rng = np.random.RandomState(1234)
+# BRIEF pattern: gaussian-distributed pairs clipped to the patch
+PAIRS = np.clip(_rng.randn(N_BITS, 4) * PATCH_R / 2.5, -PATCH_R, PATCH_R
+                ).astype(np.float32)   # (256, [y1,x1,y2,x2])
+
+
+def _bilinear(img: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
+    """Bilinear sample; y/x float arrays (clipped to valid range)."""
+    H, W = img.shape
+    y = jnp.clip(y, 0.0, H - 1.001)
+    x = jnp.clip(x, 0.0, W - 1.001)
+    y0 = jnp.floor(y).astype(jnp.int32)
+    x0 = jnp.floor(x).astype(jnp.int32)
+    dy = y - y0
+    dx = x - x0
+    v00 = img[y0, x0]
+    v01 = img[y0, x0 + 1]
+    v10 = img[y0 + 1, x0]
+    v11 = img[y0 + 1, x0 + 1]
+    return (v00 * (1 - dy) * (1 - dx) + v01 * (1 - dy) * dx
+            + v10 * dy * (1 - dx) + v11 * dy * dx)
+
+
+def orientation(img: jax.Array, yx: jax.Array) -> jax.Array:
+    """Intensity-centroid angle per feature. yx (N,2) int32 -> (N,) radians."""
+    r = 7
+    dy, dx = np.mgrid[-r:r + 1, -r:r + 1]
+    circle = (dy ** 2 + dx ** 2) <= r ** 2
+    dy = jnp.asarray(dy[circle], jnp.float32)
+    dx = jnp.asarray(dx[circle], jnp.float32)
+
+    def one(p):
+        ys = p[0].astype(jnp.float32) + dy
+        xs = p[1].astype(jnp.float32) + dx
+        v = _bilinear(img, ys, xs)
+        m01 = jnp.sum(v * dy)
+        m10 = jnp.sum(v * dx)
+        return jnp.arctan2(m01, m10)
+
+    return jax.vmap(one)(yx)
+
+
+def describe(img: jax.Array, yx: jax.Array, angles: jax.Array) -> jax.Array:
+    """(N, 256) bool rBRIEF descriptors (img should be pre-smoothed)."""
+    img = img.astype(jnp.float32)
+    pairs = jnp.asarray(PAIRS)                       # (256,4)
+
+    def one(p, a):
+        c, s = jnp.cos(a), jnp.sin(a)
+        # rotate both sample points of every pair
+        y1 = pairs[:, 0] * c - pairs[:, 1] * s
+        x1 = pairs[:, 0] * s + pairs[:, 1] * c
+        y2 = pairs[:, 2] * c - pairs[:, 3] * s
+        x2 = pairs[:, 2] * s + pairs[:, 3] * c
+        py = p[0].astype(jnp.float32)
+        px = p[1].astype(jnp.float32)
+        v1 = _bilinear(img, py + y1, px + x1)
+        v2 = _bilinear(img, py + y2, px + x2)
+        return v1 < v2
+
+    return jax.vmap(one)(yx, angles)
+
+
+def pack_bits(desc: jax.Array) -> jax.Array:
+    """(N,256) bool -> (N,8) uint32 (kernel-side layout)."""
+    n = desc.shape[0]
+    d = desc.reshape(n, 8, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(d * weights[None, None, :], axis=-1, dtype=jnp.uint32)

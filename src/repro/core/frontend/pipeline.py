@@ -1,0 +1,89 @@
+"""Frontend task graph (paper Fig. 12).
+
+Tasks and dependencies (Sec. V-B):
+    IF (image filter) ─┬─> FC (descriptors) ──> MO ─> DR   (stereo match)
+    FD (FAST detect)  ─┘                      (needs L+R)
+    IF(left) ─> DC ─> LSS                     (temporal match, L only)
+
+The FPGA time-multiplexes FE hardware between the L/R streams and
+pipelines FE->SM; here the analogue is batching L/R through one jitted FE
+(one compiled program = one set of "LUTs") and frame-level software
+pipelining in the localizer loop. Returns 2-3 KB of correspondences —
+exactly what the paper ships to the backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontend import fast, filters, optical_flow, orb, stereo
+
+
+class FrontendResult(NamedTuple):
+    yx: jax.Array            # (N,2) int32 left-image feature positions
+    score: jax.Array         # (N,) float32
+    valid: jax.Array         # (N,) bool
+    desc: jax.Array          # (N,256) bool ORB descriptors (left)
+    disparity: jax.Array     # (N,) float32 stereo disparity
+    stereo_valid: jax.Array  # (N,) bool
+    prev_yx: jax.Array       # (N,2) float32 tracked position of PREVIOUS
+    track_valid: jax.Array   # (N,) bool      frame's features in this frame
+
+
+def feature_extraction(img: jax.Array, cfg) -> tuple:
+    """FE block = IF + FD + FC on one image. Batched over L/R by vmap
+    (the time-multiplexing analogue)."""
+    smooth = filters.gaussian_blur(img, cfg.gaussian_sigma)     # IF
+    feats = fast.detect(img, cfg.fast_threshold, cfg.max_features,
+                        cfg.nms_window, cfg.fast_arc_len)       # FD
+    ang = orb.orientation(smooth, feats.yx)
+    desc = orb.describe(smooth, feats.yx, ang)                  # FC
+    return feats, desc
+
+
+def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
+                 prev_img_l: Optional[jax.Array] = None,
+                 prev_feats: Optional[fast.Features] = None) -> FrontendResult:
+    """Full frontend for one stereo frame (optionally tracking from t-1)."""
+    # FE on both streams through one compiled path (vmap = multiplexing)
+    both = jnp.stack([img_l, img_r]).astype(jnp.float32)
+    feats_b, desc_b = jax.vmap(lambda im: feature_extraction(im, cfg))(both)
+    fl = fast.Features(yx=feats_b.yx[0], score=feats_b.score[0],
+                       valid=feats_b.valid[0])
+    fr = fast.Features(yx=feats_b.yx[1], score=feats_b.score[1],
+                       valid=feats_b.valid[1])
+    dl, dr_ = desc_b[0], desc_b[1]
+
+    # SM: MO + DR
+    m = stereo.match(dl, fl.yx, fl.valid, dr_, fr.yx, fr.valid,
+                     max_disparity=cfg.stereo_max_disparity,
+                     hamming_budget=cfg.stereo_hamming_budget)
+    m = stereo.refine(img_l, img_r, fl.yx, m,
+                      radius=cfg.block_match_radius)
+
+    # TM: LK tracking of the previous frame's features into frame t
+    if prev_img_l is not None and prev_feats is not None:
+        tr = optical_flow.track(prev_img_l, img_l, prev_feats.yx,
+                                prev_feats.valid,
+                                levels=cfg.lk_pyramid_levels,
+                                window=cfg.lk_window, iters=cfg.lk_iters)
+        prev_yx, track_valid = tr.yx, tr.valid
+    else:
+        prev_yx = jnp.zeros(fl.yx.shape, jnp.float32)
+        track_valid = jnp.zeros(fl.valid.shape, bool)
+
+    return FrontendResult(
+        yx=fl.yx, score=fl.score, valid=fl.valid, desc=dl,
+        disparity=m.disparity, stereo_valid=m.valid & fl.valid,
+        prev_yx=prev_yx, track_valid=track_valid)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def run_frontend_jit(img_l, img_r, prev_img_l, prev_yx_valid, cfg):
+    prev_feats = fast.Features(
+        yx=prev_yx_valid[0], score=jnp.zeros(prev_yx_valid[1].shape),
+        valid=prev_yx_valid[1])
+    return run_frontend(img_l, img_r, cfg, prev_img_l, prev_feats)

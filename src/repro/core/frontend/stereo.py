@@ -1,0 +1,89 @@
+"""Stereo matching: MO (hamming matching) + DR (block-matching refinement).
+
+MO compares ORB descriptors between left/right features under the
+epipolar constraint (same row +- tolerance, disparity in [0, max_disp]).
+This is the hamming-distance-matrix kernel the paper maps onto its
+matching-optimization unit; kernels/stereo_hamming.py is the Pallas twin.
+
+DR refines the matched disparity by SAD block matching around the match
+plus parabolic sub-pixel interpolation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(1e9)
+
+
+class StereoMatches(NamedTuple):
+    right_idx: jax.Array    # (NL,) int32: matched right feature per left
+    disparity: jax.Array    # (NL,) float32 refined disparity (px)
+    valid: jax.Array        # (NL,) bool
+
+
+def hamming_matrix(dl: jax.Array, dr: jax.Array) -> jax.Array:
+    """(NL,256)x(NR,256) bool -> (NL,NR) float32 hamming distances."""
+    # XOR-popcount as dot products on {0,1}: d = a.(1-b) + (1-a).b
+    a = dl.astype(jnp.float32)
+    b = dr.astype(jnp.float32)
+    return a @ (1 - b).T + (1 - a) @ b.T
+
+
+def match(dl, yxl, vl, dr_, yxr, vr, *, max_disparity: int = 96,
+          row_tol: int = 2, hamming_budget: int = 64) -> StereoMatches:
+    dist = hamming_matrix(dl, dr_)                        # (NL,NR)
+    rowdiff = jnp.abs(yxl[:, None, 0] - yxr[None, :, 0])
+    disp = yxl[:, None, 1] - yxr[None, :, 1]              # left x - right x
+    ok = ((rowdiff <= row_tol) & (disp >= 0) & (disp <= max_disparity)
+          & vl[:, None] & vr[None, :])
+    dist = jnp.where(ok, dist, BIG)
+    right_idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    best = jnp.take_along_axis(dist, right_idx[:, None], axis=1)[:, 0]
+    valid = best <= hamming_budget
+    disparity = jnp.take_along_axis(disp.astype(jnp.float32),
+                                    right_idx[:, None], axis=1)[:, 0]
+    return StereoMatches(right_idx=right_idx,
+                         disparity=jnp.maximum(disparity, 0.0), valid=valid)
+
+
+def refine(img_l: jax.Array, img_r: jax.Array, yxl: jax.Array,
+           matches: StereoMatches, *, radius: int = 5,
+           window: int = 9) -> StereoMatches:
+    """DR: SAD search of +-radius around the matched disparity, sub-pixel
+    parabola fit on the SAD minimum."""
+    w = window // 2
+    il = img_l.astype(jnp.float32)
+    ir = img_r.astype(jnp.float32)
+    dy, dx = jnp.mgrid[-w:w + 1, -w:w + 1]
+
+    def sad_at(y, xl, xr):
+        pl = il[jnp.clip(y + dy, 0, il.shape[0] - 1),
+                jnp.clip(xl + dx, 0, il.shape[1] - 1)]
+        pr = ir[jnp.clip(y + dy, 0, ir.shape[0] - 1),
+                jnp.clip(xr + dx, 0, ir.shape[1] - 1)]
+        return jnp.sum(jnp.abs(pl - pr))
+
+    offsets = jnp.arange(-radius, radius + 1)
+
+    def one(p, d0):
+        y, xl = p[0], p[1]
+        xr0 = xl - d0.astype(jnp.int32)
+        sads = jax.vmap(lambda o: sad_at(y, xl, xr0 + o))(offsets)
+        j = jnp.argmin(sads)
+        # parabola fit around the minimum (clamped to interior)
+        jc = jnp.clip(j, 1, sads.shape[0] - 2)
+        s_m, s_0, s_p = sads[jc - 1], sads[jc], sads[jc + 1]
+        denom = s_m - 2 * s_0 + s_p
+        sub = jnp.where(jnp.abs(denom) > 1e-6,
+                        0.5 * (s_m - s_p) / jnp.maximum(denom, 1e-6), 0.0)
+        # right x moved by offset => disparity shrinks by the same amount
+        d = d0 - (offsets[jc].astype(jnp.float32) + jnp.clip(sub, -1, 1))
+        return d
+
+    d_ref = jax.vmap(one)(yxl, matches.disparity)
+    d_ref = jnp.where(matches.valid, jnp.maximum(d_ref, 0.1), 0.0)
+    return StereoMatches(right_idx=matches.right_idx, disparity=d_ref,
+                         valid=matches.valid & (d_ref > 0))

@@ -1,0 +1,331 @@
+"""EUDOXUS end-to-end localizer: frontend -> mode dispatch -> backend.
+
+Per frame (paper Fig. 4):
+  1. frontend: FAST+ORB features, stereo correspondences, LK tracks
+  2. backend mode from the environment taxonomy (Fig. 2):
+       VIO          — MSCKF propagate/augment/update (+ GPS fusion)
+       SLAM         — track features -> windowed LM bundle adjustment,
+                      marginalize old keyframes, grow the map
+       Registration — BoW place recognition + projection + PnP vs the map
+  3. runtime scheduler decides kernel offload; variation tracked per frame.
+
+Maintains fixed-shape feature tracks across the MSCKF window (the FPGA's
+on-chip track SRAM analogue) and a persistable map (SLAM -> Registration
+handoff, the paper's "map persisted offline" path).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.eudoxus import EudoxusConfig
+from repro.core import scheduler as sched
+from repro.core.backend import fusion, mapping, matrix_blocks as mb, msckf, tracking
+from repro.core.environment import Environment, Mode, select_mode
+from repro.core.frontend import fast
+from repro.core.frontend.pipeline import run_frontend
+
+
+@dataclass
+class MapData:
+    points: np.ndarray          # (M,3) world landmarks
+    descriptors: np.ndarray     # (M,256) bool
+    valid: np.ndarray           # (M,) bool
+    keyframe_hists: np.ndarray  # (K,V) BoW histograms
+    keyframe_poses: np.ndarray  # (K,4,4)
+
+
+@dataclass
+class LocalizerState:
+    filt: msckf.MsckfState
+    prev_img: Optional[jnp.ndarray] = None
+    prev_feats: Optional[fast.Features] = None
+    # track buffer: (N, W, 2) uv observations across the window + validity
+    tracks_uv: Optional[np.ndarray] = None
+    tracks_valid: Optional[np.ndarray] = None
+    frame_idx: int = 0
+
+
+class Localizer:
+    def __init__(self, cfg: EudoxusConfig, cam, window: Optional[int] = None,
+                 scheduler: Optional[sched.LatencyModels] = None):
+        self.cfg = cfg
+        self.cam = cam
+        self.window = window or cfg.backend.msckf_window
+        self.scheduler = scheduler or sched.LatencyModels()
+        self.vocab = jnp.asarray(tracking.make_vocab(cfg.backend.bow_vocab_size))
+        self.variation = {m: sched.VariationTracker() for m in Mode}
+        self.map: Optional[MapData] = None
+        self._slam_keyframes: List[Dict] = []
+        self.trajectory: List[np.ndarray] = []
+        # jitted hot paths (fixed shapes => compile once per run)
+        self._propagate = jax.jit(msckf.propagate,
+                                  static_argnames=("dt", "sigma_a", "sigma_g"))
+        self._augment = jax.jit(msckf.augment)
+        self._update = jax.jit(msckf.update,
+                               static_argnames=("fx", "fy", "cx", "cy"))
+        self._gps_update = jax.jit(fusion.gps_update,
+                                   static_argnames=("sigma_gps",))
+        self._frontend = jax.jit(run_frontend, static_argnames=("cfg",))
+
+    # ------------------------------------------------------------------
+    def init_state(self, p0=None, v0=None, q0=None) -> LocalizerState:
+        """p0/v0/q0: known start pose/velocity (e.g. first GPS fixes or a
+        calibrated launch pad) — standard for autonomous machines."""
+        n = self.cfg.frontend.max_features
+        return LocalizerState(
+            filt=msckf.init_state(
+                self.window,
+                p0=None if p0 is None else jnp.asarray(p0, jnp.float32),
+                v0=None if v0 is None else jnp.asarray(v0, jnp.float32),
+                q0=None if q0 is None else jnp.asarray(q0, jnp.float32)),
+            tracks_uv=np.zeros((n, self.window, 2), np.float32),
+            tracks_valid=np.zeros((n, self.window), bool),
+        )
+
+    # ------------------------------------------------------------------
+    def step(self, state: LocalizerState, img_l, img_r, imu_accel, imu_gyro,
+             gps, env: Environment, dt_imu: float) -> LocalizerState:
+        """One frame. imu_accel/gyro must cover the interval ENDING at this
+        frame's timestamp (clone/observation alignment)."""
+        t0 = time.perf_counter()
+        mode = select_mode(env)
+        img_l = jnp.asarray(img_l, jnp.float32)
+        img_r = jnp.asarray(img_r, jnp.float32)
+
+        fr = self._frontend(img_l, img_r, self.cfg.frontend,
+                            state.prev_img, state.prev_feats)
+
+        # --- track bookkeeping (fixed-shape ring buffer over the window)
+        self._update_tracks(state, fr)
+
+        # --- backend dispatch
+        if mode == Mode.VIO:
+            self._vio_step(state, imu_accel, imu_gyro, gps, dt_imu)
+        elif mode == Mode.SLAM:
+            self._vio_step(state, imu_accel, imu_gyro, None, dt_imu)
+            self._slam_step(state, fr)
+        else:  # REGISTRATION
+            self._vio_step(state, imu_accel, imu_gyro, None, dt_imu)
+            self._registration_step(state, fr)
+
+        self.trajectory.append(np.asarray(state.filt.p))
+        self.variation[mode].add(time.perf_counter() - t0)
+        state.prev_img = img_l
+        state.prev_feats = fast.Features(yx=fr.yx, score=fr.score,
+                                         valid=fr.valid)
+        state.frame_idx += 1
+        return state
+
+    # ------------------------------------------------------------------
+    def _update_tracks(self, state: LocalizerState, fr):
+        """Shift the window; continue tracks via LK correspondence, start
+        new tracks at fresh detections."""
+        n, W = state.tracks_valid.shape
+        state.tracks_uv = np.roll(state.tracks_uv, -1, axis=1)
+        state.tracks_valid = np.roll(state.tracks_valid, -1, axis=1)
+        state.tracks_uv[:, -1] = 0
+        state.tracks_valid[:, -1] = False
+
+        if state.frame_idx == 0 or state.prev_feats is None:
+            yx = np.asarray(fr.yx, np.float32)
+            state.tracks_uv[:, -1, 0] = yx[:, 1]
+            state.tracks_uv[:, -1, 1] = yx[:, 0]
+            state.tracks_valid[:, -1] = np.asarray(fr.valid)
+            return
+
+        tracked = np.asarray(fr.prev_yx)        # prev features in new frame
+        tvalid = np.asarray(fr.track_valid)
+        cont = tvalid & state.tracks_valid[:, -2]
+        state.tracks_uv[cont, -1, 0] = tracked[cont, 1]
+        state.tracks_uv[cont, -1, 1] = tracked[cont, 0]
+        state.tracks_valid[cont, -1] = True
+        # re-seed dead slots with fresh detections
+        dead = ~cont
+        yx = np.asarray(fr.yx, np.float32)
+        fv = np.asarray(fr.valid)
+        state.tracks_uv[dead, :, :] = 0
+        state.tracks_valid[dead, :] = False
+        state.tracks_uv[dead, -1, 0] = yx[dead, 1]
+        state.tracks_uv[dead, -1, 1] = yx[dead, 0]
+        state.tracks_valid[dead, -1] = fv[dead]
+
+    # ------------------------------------------------------------------
+    def _vio_step(self, state, accel, gyro, gps, dt_imu):
+        cam = self.cam
+        if state.frame_idx > 0:      # frame 0 defines the start pose
+            state.filt = self._propagate(state.filt, jnp.asarray(accel),
+                                         jnp.asarray(gyro), dt=float(dt_imu))
+        state.filt = self._augment(state.filt)
+
+        # MSCKF update on CONSUMED tracks only (ended this frame, or at full
+        # window length) — each observation is used exactly once, the MSCKF
+        # consistency requirement.
+        obs_count = state.tracks_valid.sum(axis=1)
+        ended = (~state.tracks_valid[:, -1]) & (obs_count >= 4)
+        full = state.tracks_valid.all(axis=1)
+        use = np.nonzero(ended | full)[0][:24]
+        if use.size >= 4 and state.frame_idx >= 3:
+            # fixed-shape update batch (pad to 24) => one compile
+            uv_buf = np.zeros((24, self.window, 2), np.float32)
+            vd_buf = np.zeros((24, self.window), bool)
+            uv_buf[:use.size] = state.tracks_uv[use]
+            vd_buf[:use.size] = state.tracks_valid[use]
+            uv = jnp.asarray(uv_buf)
+            vd = jnp.asarray(vd_buf)
+            h_height = int(use.size * 2 * self.window)
+            if self.scheduler.should_offload("kalman_gain", h_height,
+                                             uv.size * 4):
+                state.filt, _ = self._update(
+                    state.filt, uv, vd, fx=cam.fx, fy=cam.fy,
+                    cx=cam.cx, cy=cam.cy)
+            # consume: restart used tracks from their latest observation
+            state.tracks_valid[use, :-1] = False
+        if gps is not None and np.all(np.isfinite(gps)):
+            state.filt, _ = self._gps_update(state.filt, jnp.asarray(gps))
+
+    # ------------------------------------------------------------------
+    def _slam_step(self, state, fr):
+        """Windowed BA over recent keyframes; extend the map."""
+        cam = self.cam
+        kf = {
+            "pose_R": np.asarray(msckf.quat_to_rot(state.filt.q)),
+            "pose_p": np.asarray(state.filt.p),
+            "yx": np.asarray(fr.yx, np.float32),
+            "disparity": np.asarray(fr.disparity),
+            "svalid": np.asarray(fr.stereo_valid),
+            "desc": np.asarray(fr.desc),
+            "hist": np.asarray(tracking.bow_histogram(
+                fr.desc, fr.valid, self.vocab)),
+        }
+        self._slam_keyframes.append(kf)
+        K = self.cfg.backend.ba_window
+        if len(self._slam_keyframes) >= 3 and state.frame_idx % 2 == 0:
+            self._run_ba(self._slam_keyframes[-K:])
+        self._extend_map(kf)
+
+    def _run_ba(self, kfs):
+        cam = self.cam
+        K = len(kfs)
+        # landmarks: this window's stereo points from the newest keyframe
+        ref = kfs[-1]
+        pts, valid = stereo_points_world(ref, cam)
+        M = min(64, pts.shape[0])
+        sel = np.argsort(~valid)[:M]
+        lms = pts[sel]
+        intr = jnp.asarray([cam.fx, cam.fy, cam.cx, cam.cy])
+        obs = np.zeros((K, M, 2), np.float32)
+        ov = np.zeros((K, M), bool)
+        for k, kf in enumerate(kfs):
+            R, p = kf["pose_R"], kf["pose_p"]
+            pc = (lms - p) @ R
+            z = np.maximum(pc[:, 2], 1e-3)
+            u = cam.fx * pc[:, 0] / z + cam.cx
+            v = cam.fy * pc[:, 1] / z + cam.cy
+            obs[k, :, 0] = u
+            obs[k, :, 1] = v
+            ov[k] = valid[sel] & (pc[:, 2] > 0.3)
+        size = int(valid[sel].sum())
+        if not self.scheduler.should_offload("marginalization", size,
+                                             obs.nbytes):
+            return
+        prob = mapping.BAProblem(
+            poses_R=jnp.asarray(np.stack([k_["pose_R"] for k_ in kfs])),
+            poses_p=jnp.asarray(np.stack([k_["pose_p"] for k_ in kfs])),
+            landmarks=jnp.asarray(lms),
+            obs_uv=jnp.asarray(obs), obs_valid=jnp.asarray(ov),
+            intrinsics=intr)
+        prob, costs = mapping.lm_optimize(prob, self.cfg.backend.lm_iters,
+                                          self.cfg.backend.lm_lambda0)
+        # marginalize the oldest pose into a prior (paper's kernel) —
+        # prior currently informs map points only
+        r, Jx, Jl = mapping.residuals(
+            prob, jnp.zeros((K, 6)), jnp.zeros((prob.landmarks.shape[0], 3)))
+        Hpp, Hpl, Hll, bp, bl = mapping.build_normal_eqs(r, Jx, Jl)
+        mapping.marginalize(Hpp, Hpl, Hll, bp, bl)
+
+    def _extend_map(self, kf):
+        cam = self.cam
+        pts, valid = stereo_points_world(kf, cam)
+        mp = self.cfg.backend.max_map_points
+        if self.map is None:
+            self.map = MapData(
+                points=np.zeros((mp, 3), np.float32),
+                descriptors=np.zeros((mp, 256), bool),
+                valid=np.zeros(mp, bool),
+                keyframe_hists=kf["hist"][None].copy(),
+                keyframe_poses=np.eye(4)[None].repeat(1, 0))
+        m = self.map
+        free = np.nonzero(~m.valid)[0]
+        add = np.nonzero(valid)[0][:free.size]
+        slots = free[:add.size]
+        m.points[slots] = pts[add]
+        m.descriptors[slots] = kf["desc"][add]
+        m.valid[slots] = True
+        m.keyframe_hists = np.concatenate([m.keyframe_hists, kf["hist"][None]])
+        pose = np.eye(4)
+        pose[:3, :3] = kf["pose_R"]
+        pose[:3, 3] = kf["pose_p"]
+        m.keyframe_poses = np.concatenate([m.keyframe_poses, pose[None]])
+
+    # ------------------------------------------------------------------
+    def _registration_step(self, state, fr):
+        if self.map is None or not self.map.valid.any():
+            return
+        cam = self.cam
+        m = self.map
+        hist = tracking.bow_histogram(fr.desc, fr.valid, self.vocab)
+        kf_idx, score = tracking.place_recognition(
+            hist, jnp.asarray(m.keyframe_hists))
+
+        # projection kernel (scheduler-gated, Fig. 16a)
+        R = np.asarray(msckf.quat_to_rot(state.filt.q))
+        p = np.asarray(state.filt.p)
+        n_pts = int(m.valid.sum())
+        self.scheduler.should_offload("projection", n_pts, m.points.nbytes)
+        Xh = np.concatenate([m.points.T, np.ones((1, m.points.shape[0]))], 0)
+        P34 = self.cam_matrix(R, p)
+        uv = tracking.project(jnp.asarray(P34), jnp.asarray(Xh))
+        idx, ok = tracking.associate(
+            uv, jnp.asarray(m.valid), fr.yx, fr.valid,
+            feat_desc=fr.desc, map_desc=jnp.asarray(m.descriptors))
+        if int(ok.sum()) >= 6:
+            mp = jnp.asarray(m.points)[idx]
+            obs = jnp.stack([fr.yx[:, 1], fr.yx[:, 0]], 1).astype(jnp.float32)
+            intr = jnp.asarray([cam.fx, cam.fy, cam.cx, cam.cy])
+            R_new, p_new, _ = tracking.pnp_gauss_newton(
+                mp, obs, ok, jnp.asarray(R), jnp.asarray(p), intr)
+            # fuse the registration pose as a position observation
+            state.filt, _ = fusion.gps_update(state.filt, p_new,
+                                              sigma_gps=0.08)
+
+    def cam_matrix(self, R, p):
+        K = self.cam.K
+        Rt = np.concatenate([R.T, (-R.T @ p)[:, None]], axis=1)
+        return (K @ Rt).astype(np.float32)
+
+    # ------------------------------------------------------------------
+    def rmse(self, gt_positions: np.ndarray) -> float:
+        est = np.asarray(self.trajectory)
+        n = min(len(est), len(gt_positions))
+        return float(np.sqrt(np.mean(np.sum(
+            (est[:n] - gt_positions[:n]) ** 2, axis=1))))
+
+
+def stereo_points_world(kf, cam) -> tuple:
+    """Back-project a keyframe's stereo features to world points."""
+    disp = kf["disparity"]
+    valid = kf["svalid"] & (disp > 0.5)
+    z = cam.fx * cam.baseline / np.maximum(disp, 1e-3)
+    u = kf["yx"][:, 1]
+    v = kf["yx"][:, 0]
+    x = (u - cam.cx) / cam.fx * z
+    y = (v - cam.cy) / cam.fy * z
+    pc = np.stack([x, y, z], axis=1)
+    pw = pc @ kf["pose_R"].T + kf["pose_p"]
+    return pw.astype(np.float32), valid & (z < 60.0)

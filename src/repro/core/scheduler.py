@@ -1,0 +1,117 @@
+"""Runtime scheduler (paper Sec. VI-B, Fig. 16).
+
+Offloading a backend kernel to the accelerator is only worthwhile when
+predicted accelerator time (kernel latency profile + DMA transfer) beats
+predicted host time. The paper fits per-kernel regression models offline
+on 25% of frames — projection is linear in map size, Kalman gain and
+marginalization quadratic in their matrix dimension — and reports
+R^2 = 0.83/0.82/0.98.
+
+This module reproduces that machinery: fit linear/quadratic latency
+models from measured profiles, expose offload decisions, and track the
+achieved R^2. On TPU the "accelerator path" is the fused Pallas kernel
+chain and the "host path" is unfused XLA/numpy; the decision structure
+is identical.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class RegressionModel:
+    """Polynomial latency model: t(n) = sum_i c_i n^i."""
+    degree: int
+    coeffs: Optional[np.ndarray] = None
+    r2: float = 0.0
+
+    def fit(self, sizes: np.ndarray, times: np.ndarray) -> "RegressionModel":
+        sizes = np.asarray(sizes, np.float64)
+        times = np.asarray(times, np.float64)
+        self.coeffs = np.polyfit(sizes, times, self.degree)
+        pred = np.polyval(self.coeffs, sizes)
+        ss_res = float(np.sum((times - pred) ** 2))
+        ss_tot = float(np.sum((times - times.mean()) ** 2))
+        self.r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+        return self
+
+    def predict(self, size: float) -> float:
+        assert self.coeffs is not None, "model not fitted"
+        return float(np.polyval(self.coeffs, size))
+
+
+# paper kernel -> (size feature, model degree)
+KERNEL_MODELS = {
+    "projection": 1,        # linear in #map points (Fig. 16a)
+    "kalman_gain": 2,       # quadratic in H height (Fig. 16b)
+    "marginalization": 2,   # quadratic in #features (Fig. 16c)
+}
+
+
+@dataclass
+class LatencyModels:
+    host: Dict[str, RegressionModel] = field(default_factory=dict)
+    accel: Dict[str, RegressionModel] = field(default_factory=dict)
+    transfer_bw: float = 7.9e9      # PCIe 3.0 (EDX-CAR); 1.2e9 for drone
+    fixed_overhead_s: float = 2e-4  # launch/DMA setup
+
+    def fit_kernel(self, name: str, sizes, host_times, accel_times):
+        deg = KERNEL_MODELS[name]
+        self.host[name] = RegressionModel(deg).fit(sizes, host_times)
+        self.accel[name] = RegressionModel(deg).fit(sizes, accel_times)
+
+    def should_offload(self, name: str, size: float,
+                       transfer_bytes: int = 0) -> bool:
+        """The paper's decision: offload iff predicted accel time
+        (+ transfer + overhead) < predicted host time."""
+        if name not in self.host or name not in self.accel:
+            return True      # no model yet: offload by default
+        t_host = self.host[name].predict(size)
+        t_accel = (self.accel[name].predict(size)
+                   + transfer_bytes / self.transfer_bw
+                   + self.fixed_overhead_s)
+        return t_accel < t_host
+
+    def r2_report(self) -> Dict[str, float]:
+        return {k: m.r2 for k, m in self.host.items()}
+
+
+def profile_fn(fn: Callable, reps: int = 3) -> float:
+    """Median wall time of fn() (used to build offline profiles)."""
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        elif isinstance(out, (tuple, list)):
+            for o in out:
+                if hasattr(o, "block_until_ready"):
+                    o.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclass
+class VariationTracker:
+    """Per-frame latency statistics: mean, SD, RSD (the paper's variation
+    metrics, Fig. 5/9-11 and the SD-reduction claims in Fig. 17)."""
+    samples: List[float] = field(default_factory=list)
+
+    def add(self, seconds: float):
+        self.samples.append(seconds)
+
+    def stats(self) -> Dict[str, float]:
+        a = np.asarray(self.samples)
+        if a.size == 0:
+            return {"mean": 0.0, "sd": 0.0, "rsd": 0.0, "worst_over_best": 0.0}
+        return {
+            "mean": float(a.mean()),
+            "sd": float(a.std()),
+            "rsd": float(a.std() / max(a.mean(), 1e-12)),
+            "worst_over_best": float(a.max() / max(a.min(), 1e-12)),
+        }

@@ -1,0 +1,42 @@
+"""Synthetic LM token pipeline: deterministic, shardable, restartable.
+
+Production posture: each (host, step) pair maps to a unique RNG stream so
+restart-at-step-k reproduces the exact batch sequence (checkpoint/resume
+never replays or skips data), and each data-parallel host only
+materializes its own shard.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class TokenStream:
+    """Deterministic synthetic token batches (Zipf-ish unigram mix)."""
+
+    def __init__(self, vocab: int, batch: int, seq_len: int, seed: int = 0,
+                 n_codebooks: int = 0, shard: int = 0, n_shards: int = 1):
+        assert batch % n_shards == 0
+        self.vocab = vocab
+        self.batch = batch // n_shards
+        self.seq_len = seq_len
+        self.seed = seed
+        self.n_codebooks = n_codebooks
+        self.shard = shard
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step * 9176 + self.shard) % (2 ** 31))
+        shape = ((self.batch, self.n_codebooks, self.seq_len)
+                 if self.n_codebooks else (self.batch, self.seq_len))
+        # Zipf-like skew keeps losses realistic vs uniform noise
+        z = rng.zipf(1.3, size=shape)
+        tokens = np.minimum(z - 1, self.vocab - 1).astype(np.int32)
+        return {"tokens": tokens}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (
+    LogicalRules, default_rules, spec_for, named_sharding, shard,
+    sharding_context, opt_state_spec, tree_specs,
+)

@@ -1,0 +1,45 @@
+"""Elastic scaling: checkpoint-mediated re-mesh.
+
+Checkpoints store GLOBAL arrays (checkpoint/checkpointer.py), so scaling
+the fleet is: drain -> checkpoint -> relaunch with a new mesh -> restore
+with the new mesh's shardings. ``reshard_restore`` performs the restore +
+re-shard in one step; ``plan_mesh`` picks the mesh for a surviving device
+count (the failure-response policy: shrink the data axis first — model
+parallelism is topology-constrained, data parallelism is not).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def plan_mesh(n_devices: int, model_parallel: int = 16,
+              pod_size: int = 256) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Mesh shape for a (possibly degraded) device count.
+
+    Policy: keep the model axis (sharding-critical) intact; give up data
+    parallel replicas; drop to single-pod when below one pod.
+    """
+    while model_parallel > 1 and n_devices % model_parallel:
+        model_parallel //= 2
+    data = n_devices // model_parallel
+    if n_devices > pod_size and data % (n_devices // pod_size) == 0:
+        pods = n_devices // pod_size
+        return (pods, data // pods, model_parallel), ("pod", "data", "model")
+    return (data, model_parallel), ("data", "model")
+
+
+def reshard_restore(template, ckpt_path, mesh: Mesh, spec_tree):
+    """Restore a checkpoint onto `mesh` with `spec_tree` shardings."""
+    from repro.checkpoint import restore_pytree
+    host_tree = restore_pytree(template, ckpt_path)
+
+    def put(x, spec):
+        return jax.device_put(np.asarray(x), NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        put, host_tree, spec_tree,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

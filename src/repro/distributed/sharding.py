@@ -1,0 +1,260 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility guards.
+
+Every parameter / activation is annotated with *logical* axis names; a
+``LogicalRules`` object maps those to mesh axes at lower time. A dimension
+is only sharded when its size divides the mesh-axis product — this keeps
+every (arch x shape x mesh) cell compilable without uneven-shard padding
+surprises (e.g. 40 query heads on a 16-way model axis fall back to the
+merged head*dim axis; 60 experts on 16 shards fall back to expert d_ff).
+
+This module is also where the paper's "unified substrate" idea shows up at
+the distribution layer: all ten architectures share one rule table.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+
+# logical axis -> ordered candidates of mesh axes (prefix-preference).
+DEFAULT_RULES: Dict[Optional[str], Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "dbatch": ("pod", "data"),   # decode residual-stream batch (see below)
+    "zero": ("data",),          # ZeRO-1: extra opt-state sharding axis
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),     # fallback when head counts don't divide
+    "qkv": ("model",),          # merged heads*head_dim projection axis
+    "expert": ("model",),
+    "expert_mlp": ("model",),
+    "ssm_inner": ("model",),
+    # recurrent-state dim (mLSTM dk): replicated in training (chunk math
+    # stays local), sharded at serve (the matrix memory dominates decode
+    # bandwidth) — see SERVE_RESIDENT_OVERRIDES
+    "ssm_state": (),
+    "cache_seq": ("model",),    # decode KV-cache sequence sharding
+    "seq": (),                  # replicated unless seq-parallel rules used
+    "embed": (),
+    None: (),
+}
+
+# Sequence-parallel variant used by the perf hillclimb: activations between
+# blocks are sharded over the model axis along sequence.
+SEQ_PARALLEL_OVERRIDES = {"seq": ("model",)}
+
+# Context-parallel, TP-free: for small models at long context the Megatron
+# activation exchange (~2 x h bytes/layer) dwarfs everything; replicating
+# the (small) weights and using the model axis purely for sequence sharding
+# leaves only the attention k/v gathers. Picked per-arch by napkin math —
+# the Eudoxus scheduler idea applied to parallelism selection.
+CONTEXT_PARALLEL_OVERRIDES = {
+    "seq": ("model",),
+    "qkv": (), "mlp": (), "vocab": (), "heads": (), "kv_heads": (),
+    "expert": (), "expert_mlp": (), "ssm_inner": (),
+}
+
+# FSDP / ZeRO-3: weights additionally sharded over the data axes along
+# their embed dim; GSPMD all-gathers them at use. Required for the 100B+
+# configs (params alone exceed one model-axis shard's HBM).
+FSDP_OVERRIDES = {"embed": ("data", "pod")}
+
+# Decode-serving with RESIDENT weights: 2D tensor parallelism — the
+# qkv/mlp/vocab dims stay on "model" (as in training) and the embed
+# (contraction) dim shards over "pod", so weights are never re-gathered:
+# the pod axis contributes only small activation psums (row-parallel TP).
+# Re-gathering FSDP shards every token step (naive reuse of the training
+# sharding) costs params_bytes/step of collectives; this layout removes
+# it while still fitting 100B-class weights. EXPERIMENTS.md §Perf cell 3.
+SERVE_RESIDENT_OVERRIDES = {
+    "ssm_state": ("model",),  # shard recurrent matrix memory at serve
+    "embed": ("pod",),      # weight contraction dims 2D-sharded (model,pod)
+    "dbatch": ("data",),    # decode residual stream: replicated over pod so
+    #   the (embed@pod) weight contraction is local + one small psum; the
+    #   KV cache keeps full (pod,data) batch sharding — only the tiny
+    #   per-layer h tensor reshards between the two layouts.
+}
+
+
+class LogicalRules:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name, 1)
+
+    def spec_for(self, shape: Sequence[int], axes: Axes) -> P:
+        """PartitionSpec for `shape` annotated with logical `axes`.
+
+        Guarantees: no mesh axis used twice; sharded dims divisible —
+        unless the logical name ends with "!" (force-shard: GSPMD pads
+        uneven dims; used for GQA kv-head sharding where kv < TP).
+        """
+        assert len(shape) == len(axes), (shape, axes)
+        mesh_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used = set()
+        parts = []
+        for dim, ax in zip(shape, axes):
+            force = False
+            if isinstance(ax, str) and ax.endswith("!"):
+                ax, force = ax[:-1], True
+            cands = [m for m in self.rules.get(ax, ())
+                     if m in mesh_sizes and m not in used]
+            chosen: Tuple[str, ...] = ()
+            # longest prefix whose product divides the dim …
+            for k in range(len(cands), 0, -1):
+                prod = math.prod(mesh_sizes[m] for m in cands[:k])
+                if prod > 1 and dim % prod == 0:
+                    chosen = tuple(cands[:k])
+                    break
+            # … else any single candidate that divides.
+            if not chosen:
+                for m in cands:
+                    if mesh_sizes[m] > 1 and dim % mesh_sizes[m] == 0:
+                        chosen = (m,)
+                        break
+            # … else force the first candidate (uneven, GSPMD pads).
+            if not chosen and force and cands:
+                chosen = (cands[0],)
+            used.update(chosen)
+            if not chosen:
+                parts.append(None)
+            elif len(chosen) == 1:
+                parts.append(chosen[0])
+            else:
+                parts.append(chosen)
+        return P(*parts)
+
+    def named(self, shape: Sequence[int], axes: Axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+
+def default_rules(mesh: Mesh, seq_parallel: bool = False,
+                  fsdp: bool = False, serve_resident: bool = False,
+                  context_parallel: bool = False) -> LogicalRules:
+    overrides = {}
+    if seq_parallel:
+        overrides.update(SEQ_PARALLEL_OVERRIDES)
+    if context_parallel:
+        overrides.update(CONTEXT_PARALLEL_OVERRIDES)
+    if fsdp:
+        overrides.update(FSDP_OVERRIDES)
+    if serve_resident:
+        overrides.update(SERVE_RESIDENT_OVERRIDES)
+    return LogicalRules(mesh, overrides or None)
+
+
+def spec_for(mesh, shape, axes, **kw) -> P:
+    return LogicalRules(mesh, kw.get("rules")).spec_for(shape, axes)
+
+
+def named_sharding(mesh, shape, axes) -> NamedSharding:
+    return LogicalRules(mesh).named(shape, axes)
+
+
+# ---------------------------------------------------------------------------
+# Ambient sharding context: model code calls ``shard(x, 'batch','seq','embed')``
+# and gets a with_sharding_constraint under dry-run/train, or a no-op in
+# single-device smoke tests.
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    rules: Optional[LogicalRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(rules: Optional[LogicalRules]):
+    prev = _CTX.rules
+    _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.rules = prev
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    rules = _CTX.rules
+    if rules is None:
+        return x
+    spec = rules.spec_for(x.shape, tuple(axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def current_axis_size(name: str) -> int:
+    """Mesh axis size under the ambient sharding context (1 if none)."""
+    rules = _CTX.rules
+    return rules.axis_size(name) if rules is not None else 1
+
+
+def current_rule(logical: str) -> Tuple[str, ...]:
+    rules = _CTX.rules
+    return tuple(rules.rules.get(logical, ())) if rules is not None else ()
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer moments take the param spec plus one extra data-axis
+# sharding on the first divisible unsharded dim.
+# ---------------------------------------------------------------------------
+
+def opt_state_spec(param_spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if "data" not in mesh_sizes:
+        return param_spec
+    parts = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    flat_used = set()
+    for p in parts:
+        if p is None:
+            continue
+        flat_used.update(p if isinstance(p, tuple) else (p,))
+    if "data" in flat_used:
+        return param_spec
+    dsize = mesh_sizes["data"]
+    for i, (dim, p) in enumerate(zip(shape, parts)):
+        if p is None and dsize > 1 and dim % dsize == 0:
+            parts[i] = "data"
+            return P(*parts)
+    return param_spec
+
+
+def _get_by_path(tree, path):
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            tree = tree[p.key]
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            tree = tree[p.idx]
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            tree = getattr(tree, p.name)
+        else:
+            raise TypeError(f"unsupported path entry {p!r}")
+    return tree
+
+
+def tree_specs(rules: LogicalRules, shapes, logical_axes):
+    """Map a pytree of ShapeDtypeStructs/arrays + a *matching-by-path* pytree
+    of logical-axes tuples to a pytree of PartitionSpecs.
+
+    The axes tree holds tuples of axis names at the leaf positions; tuples
+    are pytree containers, so naive tree_map would recurse into them —
+    instead we walk the shapes tree's paths and index the axes tree.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for path, leaf in flat:
+        ax = _get_by_path(logical_axes, path)
+        assert isinstance(ax, tuple) and all(
+            a is None or isinstance(a, str) for a in ax), (path, ax)
+        specs.append(rules.spec_for(leaf.shape, ax))
+    return jax.tree_util.tree_unflatten(treedef, specs)

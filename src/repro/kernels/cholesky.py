@@ -1,0 +1,53 @@
+"""Cholesky factorization Pallas kernel — the backend Decomp. unit.
+
+Right-looking column algorithm with the full SPD matrix resident in VMEM
+(backend matrices are small: MSCKF S is ~hundreds, BA reduced systems
+~6K; all well under VMEM). The trailing update is the rank-1 outer
+product — vectorized over the full matrix per step, masked to the
+trailing submatrix, so the inner loop is VPU/MXU work rather than scalar.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import default_interpret
+
+
+def _chol_kernel(a_ref, o_ref, *, n: int):
+    a = a_ref[...].astype(jnp.float32)
+    rows = jax.lax.iota(jnp.int32, n)
+
+    def col_step(j, a):
+        piv = jnp.sqrt(jnp.maximum(a[j, j], 1e-30))
+        col = a[:, j] / piv
+        col = jnp.where(rows >= j, col, 0.0)        # zero above-diagonal
+        a = a.at[:, j].set(col)
+        # trailing update: A[:, j+1:] -= col * col[j+1:]^T (masked)
+        mask = (rows > j).astype(jnp.float32)
+        upd = jnp.outer(col, col * mask)
+        cols_mask = (rows > j)[None, :].astype(jnp.float32)
+        return a - upd * cols_mask
+
+    a = jax.lax.fori_loop(0, n, col_step, a)
+    tri = rows[:, None] >= rows[None, :]
+    o_ref[...] = jnp.where(tri, a, 0.0).astype(o_ref.dtype)
+
+
+def cholesky(a: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
+    """Lower Cholesky factor of SPD a (N,N), whole-matrix VMEM residency."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = a.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_chol_kernel, n=n),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=interpret,
+    )(a)

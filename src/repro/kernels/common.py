@@ -1,0 +1,21 @@
+"""Shared Pallas kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels execute natively on TPU; everywhere else they run
+    in interpret mode (used by the CPU validation suite)."""
+    try:
+        return jax.devices()[0].platform != "tpu"
+    except Exception:
+        return True
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps grids exact)."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b

@@ -1,0 +1,54 @@
+"""3x3 stencil (image filtering) Pallas kernel — the frontend IF task.
+
+Stencil-buffer adaptation (paper Fig. 13): the FPGA cascades line-buffer
+FIFOs sized per stencil at synthesis time; on TPU the image rows reside in
+VMEM and the output is produced in row-blocks. For EDX-CAR's 1280x720
+(3.7 MB fp32) the whole frame fits VMEM, mirroring the paper's
+"access DRAM only at the beginning and end of the pipeline" property; the
+row-block grid keeps the working set bounded for larger frames.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import default_interpret, pick_block
+
+
+def _conv_kernel(img_ref, k_ref, o_ref, *, bh: int, H: int):
+    i = pl.program_id(0)
+    img = img_ref[...]                      # full (padded) image in VMEM
+    k = k_ref[...]
+    row0 = i * bh                           # output rows [row0, row0+bh)
+    acc = jnp.zeros((bh,) + (img.shape[1] - 2,), jnp.float32)
+    for dy in range(3):
+        rows = jax.lax.dynamic_slice_in_dim(img, row0 + dy, bh, axis=0)
+        for dx in range(3):
+            acc += rows[:, dx:dx + img.shape[1] - 2] * k[dy, dx]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv2d_3x3(img: jax.Array, k: jax.Array, *, block_h: int = 128,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Same-size 3x3 convolution with edge padding. img (H,W); k (3,3)."""
+    if interpret is None:
+        interpret = default_interpret()
+    H, W = img.shape
+    bh = pick_block(H, block_h)
+    pad = jnp.pad(img, 1, mode="edge")
+    grid = (H // bh,)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, bh=bh, H=H),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((H + 2, W + 2), lambda i: (0, 0)),   # resident frame
+            pl.BlockSpec((3, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        interpret=interpret,
+    )(pad.astype(jnp.float32), k.astype(jnp.float32))

@@ -1,0 +1,70 @@
+"""FAST-9 corner-score Pallas kernel — the frontend FD task.
+
+The 16-pixel Bresenham ring comparison is pure stencil work: the frame is
+VMEM-resident (paper's "DRAM only at pipeline ends") and each grid step
+emits one row-block of corner scores. The 16 ring taps become 16 shifted
+row-block reads — the shift-register analogue of the paper's SB design.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.frontend.fast import CIRCLE
+from repro.kernels.common import default_interpret, pick_block
+
+
+def _fast_kernel(img_ref, o_ref, *, bh: int, W: int, threshold: float,
+                 arc_len: int):
+    i = pl.program_id(0)
+    img = img_ref[...]                     # (H+6, W+6) padded, VMEM
+    row0 = i * bh
+    center = jax.lax.dynamic_slice(img, (row0 + 3, 3), (bh, W))
+    ring = []
+    for dy, dx in CIRCLE:
+        ring.append(jax.lax.dynamic_slice(
+            img, (row0 + 3 + int(dy), 3 + int(dx)), (bh, W)))
+    diffs = [r - center for r in ring]
+    brighter = [d > threshold for d in diffs]
+    darker = [d < -threshold for d in diffs]
+
+    def has_arc(flags):
+        out = jnp.zeros((bh, W), bool)
+        for start in range(16):
+            run = flags[start % 16]
+            for j in range(1, arc_len):
+                run = run & flags[(start + j) % 16]
+            out = out | run
+        return out
+
+    sb = sum(jnp.where(b, jnp.abs(d) - threshold, 0.0)
+             for b, d in zip(brighter, diffs))
+    sd = sum(jnp.where(k, jnp.abs(d) - threshold, 0.0)
+             for k, d in zip(darker, diffs))
+    score = (jnp.where(has_arc(brighter), sb, 0.0)
+             + jnp.where(has_arc(darker), sd, 0.0))
+    o_ref[...] = score.astype(o_ref.dtype)
+
+
+def fast_score(img: jax.Array, threshold: float = 20.0, arc_len: int = 9,
+               *, block_h: int = 64,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Per-pixel FAST corner score, borders zeroed by the caller's NMS."""
+    if interpret is None:
+        interpret = default_interpret()
+    H, W = img.shape
+    bh = pick_block(H, block_h)
+    pad = jnp.pad(img.astype(jnp.float32), 3, mode="edge")
+    return pl.pallas_call(
+        functools.partial(_fast_kernel, bh=bh, W=W, threshold=float(threshold),
+                          arc_len=arc_len),
+        grid=(H // bh,),
+        in_specs=[pl.BlockSpec((H + 6, W + 6), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        interpret=interpret,
+    )(pad)

@@ -1,0 +1,90 @@
+"""Flash attention Pallas kernel (causal, multi-head).
+
+The TPU twin of models/attention._chunked_attention: q/k/v tiles staged
+into VMEM, online-softmax state (acc, m, l) in VMEM scratch carried across
+the kv grid dimension — score blocks never touch HBM, which is exactly
+the memory-roofline win recorded in EXPERIMENTS.md §Perf.
+
+Layout: q (B,S,H,D); k,v (B,T,H,D) with matching head counts (GQA heads
+are expanded by the caller — see models/attention._prepare_gqa).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import default_interpret, pick_block
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+               *, nk: int, bq: int, bk: int, scale: float, causal: bool):
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        qpos = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+        kpos = kk * bk + jax.lax.iota(jnp.int32, bk)
+        s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        o_ref[0, :, 0, :] = (acc_ref[...]
+                             / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    assert k.shape == (B, T, H, D) and v.shape == (B, T, H, D)
+    bq = pick_block(S, block_q)
+    bk = pick_block(T, block_k)
+    grid = (B, S // bq, H, T // bk)
+    scale = 1.0 / (D ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, nk=grid[3], bq=bq, bk=bk,
+                          scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, qi, h, kk: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, qi, h, kk: (b, kk, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, qi, h, kk: (b, kk, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, qi, h, kk: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

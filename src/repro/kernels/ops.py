@@ -1,0 +1,95 @@
+"""Jitted dispatch wrappers over the Pallas kernels.
+
+This layer is the paper's runtime-scheduler decision point (Sec. VI-B):
+each op picks the accelerator path (Pallas TPU kernel) or the host/XLA
+path (ref.py) based on platform, shape thresholds, and — when a
+``core.scheduler.LatencyModels`` is installed — predicted latency, the
+same linear/quadratic regression models as paper Fig. 16.
+
+On this CPU container the Pallas path runs in interpret mode and is used
+by the kernel tests; the scheduler keeps production dispatch on XLA.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_FORCE = os.environ.get("REPRO_KERNELS", "auto")  # auto | pallas | xla
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def use_pallas(op: str, *shape_args) -> bool:
+    if _FORCE == "pallas":
+        return True
+    if _FORCE == "xla":
+        return False
+    return _on_tpu()
+
+
+# --------------------------------------------------------------------------
+# matrix building blocks
+# --------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    if use_pallas("matmul", a.shape, b.shape) and _tileable(a.shape, b.shape):
+        from repro.kernels import blocked_matmul
+        return blocked_matmul.matmul(a, b)
+    return ref.matmul(a, b)
+
+
+def _tileable(sa, sb) -> bool:
+    return (len(sa) == 2 and len(sb) == 2
+            and sa[0] % 8 == 0 and sa[1] % 128 == 0 and sb[1] % 128 == 0)
+
+
+def cholesky(a: jax.Array) -> jax.Array:
+    if use_pallas("cholesky", a.shape) and a.shape[-1] % 128 == 0:
+        from repro.kernels import cholesky as chol_k
+        return chol_k.cholesky(a)
+    return ref.cholesky(a)
+
+
+def tri_solve(l: jax.Array, b: jax.Array, *, lower: bool = True,
+              trans: bool = False) -> jax.Array:
+    return ref.tri_solve(l, b, lower=lower, trans=trans)
+
+
+# --------------------------------------------------------------------------
+# frontend kernels
+# --------------------------------------------------------------------------
+
+def conv2d_3x3(img: jax.Array, k: jax.Array) -> jax.Array:
+    if use_pallas("conv2d", img.shape):
+        from repro.kernels import conv2d
+        return conv2d.conv2d_3x3(img, k)
+    return ref.conv2d_3x3(img, k)
+
+
+def hamming_distance(dl: jax.Array, dr: jax.Array) -> jax.Array:
+    if use_pallas("hamming", dl.shape, dr.shape):
+        from repro.kernels import stereo_hamming
+        return stereo_hamming.hamming_distance(dl, dr)
+    return ref.hamming_distance(dl, dr)
+
+
+# --------------------------------------------------------------------------
+# LM kernels
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, causal: bool = True):
+    if use_pallas("flash", q.shape):
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal)
+    return ref.flash_attention(q, k, v, causal=causal)

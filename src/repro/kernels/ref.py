@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Tests sweep shapes/dtypes asserting kernels (interpret=True on CPU)
+allclose against these. These are also the XLA execution path the
+scheduler falls back to off-TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def cholesky(a: jax.Array) -> jax.Array:
+    return jnp.linalg.cholesky(a)
+
+
+def tri_solve(l: jax.Array, b: jax.Array, *, lower: bool = True,
+              trans: bool = False) -> jax.Array:
+    # note: scipy's `lower` describes the STORED factor; `trans` requests
+    # solving a^T x = b with that same stored factor.
+    return jax.scipy.linalg.solve_triangular(
+        l, b, lower=lower, trans=1 if trans else 0)
+
+
+def conv2d_3x3(img: jax.Array, k: jax.Array) -> jax.Array:
+    """Same-size 3x3 convolution, edge-padded. img (H,W); k (3,3)."""
+    p = jnp.pad(img, 1, mode="edge").astype(jnp.float32)
+    H, W = img.shape
+    out = jnp.zeros((H, W), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            out = out + p[dy:dy + H, dx:dx + W] * k[dy, dx]
+    return out
+
+
+def hamming_distance(dl: jax.Array, dr: jax.Array) -> jax.Array:
+    """Packed-bits hamming distances. dl (N,W) uint32, dr (M,W) uint32 ->
+    (N,M) int32 popcount(xor)."""
+    x = jnp.bitwise_xor(dl[:, None, :], dr[None, :, :])
+    # popcount via unpacking to bits
+    bits = ((x[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)
+    return jnp.sum(bits, axis=(-1, -2)).astype(jnp.int32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """Reference attention. q (B,S,H,D); k,v (B,T,H,D) (same head count)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (D ** 0.5)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def fast_score(img: jax.Array, threshold: float, arc_len: int = 9):
+    from repro.core.frontend.fast import fast_score as _fs
+    return _fs(img, threshold, arc_len)

@@ -1,0 +1,53 @@
+"""Hamming-distance-matrix Pallas kernel — the stereo MO task.
+
+Packed 256-bit ORB descriptors as (N, 8) uint32; the (NL x NR) distance
+matrix is produced in (bn x bm) VMEM tiles with a SWAR popcount over the
+XOR — the paper's matching-optimization unit, matmul-shaped so the same
+blocked execution applies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import default_interpret, pick_block
+
+
+def _popcount32(x):
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return (x * 0x01010101) >> 24
+
+
+def _ham_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]                                  # (bn, 8) uint32
+    b = b_ref[...]                                  # (bm, 8)
+    x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+    pc = _popcount32(x.astype(jnp.uint32))
+    o_ref[...] = jnp.sum(pc, axis=-1).astype(jnp.int32)
+
+
+def hamming_distance(dl: jax.Array, dr: jax.Array, *, block: int = 128,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """dl (N,8) uint32, dr (M,8) uint32 -> (N,M) int32."""
+    if interpret is None:
+        interpret = default_interpret()
+    N, Wd = dl.shape
+    M, _ = dr.shape
+    bn = pick_block(N, block)
+    bm = pick_block(M, block)
+    grid = (N // bn, M // bm)
+    return pl.pallas_call(
+        _ham_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, Wd), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bm, Wd), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, M), jnp.int32),
+        interpret=interpret,
+    )(dl, dr)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); that is why this module must only ever be run as a
+script / fresh subprocess, never imported into a live session:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh single_pod --out results.json
+
+Driver mode (all cells, parallel subprocesses):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --jobs 4 \
+        --outdir benchmarks/results/dryrun
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, list_configs, SHAPES
+from repro.distributed.sharding import LogicalRules, default_rules, sharding_context
+from repro.launch import hlo_analysis, jaxpr_cost, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D forward-only (N = active
+    params for MoE; D = tokens processed in the step)."""
+    n = model_lib.count_params_analytic(cfg, active_only=cfg.moe is not None)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1      # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                seq_parallel: bool = False, context_parallel: bool = False,
+                overrides: dict = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = get_shape(shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi_pod" if multi_pod else "single_pod",
+           "kind": shape.kind}
+    if not shape.applicable(cfg):
+        rec.update(status="skip", reason=shape.skip_reason(cfg))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    serve_resident = shape.kind != "train" and cfg.serve_resident_weights
+    rules = default_rules(mesh, seq_parallel=seq_parallel,
+                          context_parallel=context_parallel,
+                          fsdp=cfg.fsdp and shape.kind == "train",
+                          serve_resident=serve_resident)
+    t0 = time.time()
+
+    with mesh, sharding_context(rules):
+        if shape.kind == "train":
+            step = steps.make_train_step(cfg)
+            state = steps.abstract_train_state(cfg)
+            sspecs = steps.train_state_specs(cfg, rules)
+            batch, bspecs = steps.train_batch_specs(cfg, shape, rules)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, sspecs), _named(mesh, bspecs)),
+                out_shardings=(_named(mesh, sspecs), None),
+                donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            step = steps.make_prefill_step(cfg)
+            (params, batch), (pspecs, bspecs) = steps.prefill_inputs(cfg, shape, rules)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+                out_shardings=None)
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            step = steps.make_decode_step(cfg)
+            args, in_specs = steps.decode_inputs(cfg, shape, rules)
+            # out = (logits, new_cache): cache keeps its input sharding so
+            # donation aliases buffers instead of materializing a copy
+            jitted = jax.jit(
+                step,
+                in_shardings=_named(mesh, in_specs),
+                out_shardings=(None, _named(mesh, in_specs[1])),
+                donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        # trip-count-exact algorithmic cost from the jaxpr (global totals)
+        if shape.kind == "train":
+            est = jaxpr_cost.estimate(step, state, batch)
+        elif shape.kind == "prefill":
+            est = jaxpr_cost.estimate(step, params, batch)
+        else:
+            est = jaxpr_cost.estimate(step, *args)
+
+    summary = hlo_analysis.summarize(compiled, lowered)
+    n_dev = mesh.devices.size
+    # roofline from trip-exact per-device numbers + trip-corrected HLO
+    # collectives (hlo cost_analysis kept as a cross-check: it counts loop
+    # bodies once — see jaxpr_cost module docstring).
+    flops_dev = est["flops"] / n_dev
+    bytes_dev = est["bytes"] / n_dev
+    coll_dev = summary["collective_bytes_per_device"]
+    mf = model_flops(cfg, shape)
+    summary["roofline"] = hlo_analysis.roofline_terms(flops_dev, bytes_dev, coll_dev)
+    summary["roofline"]["model_flops"] = mf
+    summary["roofline"]["useful_flops_ratio"] = mf / max(est["flops"], 1.0)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        n_devices=n_dev,
+        seq_parallel=seq_parallel,
+        jaxpr_flops_global=est["flops"],
+        jaxpr_matmul_flops_global=est["matmul_flops"],
+        jaxpr_bytes_global=est["bytes"],
+        unknown_while_loops=est["unknown_while"],
+        **summary,
+    )
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# driver: run every cell in parallel subprocesses (fresh XLA_FLAGS each)
+# ---------------------------------------------------------------------------
+
+def _cell_cmd(arch, shape, mesh_name, outfile, extra=()):
+    return [sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh_name,
+            "--out", str(outfile), *extra]
+
+
+def run_all(outdir: Path, jobs: int, meshes, archs=None, shapes=None,
+            extra=()):
+    outdir.mkdir(parents=True, exist_ok=True)
+    cells = []
+    for arch in (archs or list_configs()):
+        for sh in (shapes or [s.name for s in SHAPES]):
+            for mesh_name in meshes:
+                out = outdir / f"{arch}__{sh}__{mesh_name}.json"
+                cells.append((arch, sh, mesh_name, out))
+
+    running, queue = [], list(cells)
+    failures = 0
+    while queue or running:
+        while queue and len(running) < jobs:
+            arch, sh, mesh_name, out = queue.pop(0)
+            if out.exists():
+                print(f"cached   {out.name}")
+                continue
+            proc = subprocess.Popen(
+                _cell_cmd(arch, sh, mesh_name, out, extra),
+                stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+            running.append((proc, arch, sh, mesh_name, out))
+        still = []
+        for proc, arch, sh, mesh_name, out in running:
+            ret = proc.poll()
+            if ret is None:
+                still.append((proc, arch, sh, mesh_name, out))
+                continue
+            logtxt = proc.stdout.read().decode(errors="replace")
+            if ret != 0 or not out.exists():
+                failures += 1
+                print(f"FAILED   {arch} {sh} {mesh_name} (rc={ret})")
+                print("\n".join(logtxt.splitlines()[-15:]))
+                out.with_suffix(".log").write_text(logtxt)
+            else:
+                rec = json.loads(out.read_text())
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                print(f"done     {arch:22s} {sh:12s} {mesh_name:10s} "
+                      f"status={rec['status']:4s} dominant={dom}")
+        running = still
+        time.sleep(0.5)
+    print(f"\n{len(cells)} cells, {failures} failures")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs())
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single_pod", "multi_pod"],
+                    default="single_pod")
+    ap.add_argument("--out", type=Path)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--context-parallel", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (e.g. remat_policy=dots)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--outdir", type=Path,
+                    default=Path("benchmarks/results/dryrun"))
+    args = ap.parse_args()
+
+    if args.all:
+        meshes = ["single_pod", "multi_pod"]
+        extra = (["--seq-parallel"] if args.seq_parallel else [])
+        for kv in args.override:
+            extra += ["--override", kv]
+        sys.exit(1 if run_all(args.outdir, args.jobs, meshes, extra=tuple(extra)) else 0)
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    rec = dryrun_cell(args.arch, args.shape, args.mesh == "multi_pod",
+                      seq_parallel=args.seq_parallel,
+                      context_parallel=args.context_parallel,
+                      overrides=overrides)
+    text = json.dumps(rec, indent=2)
+    if args.out:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(text)
+    print(text)
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        print(f"\n[roofline] compute={r['compute_s']:.4e}s "
+              f"memory={r['memory_s']:.4e}s collective={r['collective_s']:.4e}s "
+              f"dominant={r['dominant']}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real device count.
+
+Mesh shapes (TPU v5e pods):
+  single-pod: (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+The "pod" axis is a second data-parallel axis whose collectives cross the
+inter-pod DCI links; gradient compression (optim/compression.py) targets it.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0, (n, model_parallel)
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+MESH_VARIANTS = {
+    "single_pod": dict(multi_pod=False),
+    "multi_pod": dict(multi_pod=True),
+}

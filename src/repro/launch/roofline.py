@@ -1,0 +1,130 @@
+"""Roofline report generator: dry-run JSON caches -> markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline \
+        --baseline benchmarks/results/dryrun_baseline \
+        --optimized benchmarks/results/dryrun_optimized \
+        --out EXPERIMENTS_tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+HBM_BUDGET = 16e9     # v5e per-chip
+
+
+def load(dirpath: Path) -> Dict[tuple, dict]:
+    cells = {}
+    for f in sorted(Path(dirpath).glob("*.json")):
+        try:
+            r = json.loads(f.read_text())
+        except json.JSONDecodeError:
+            continue
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def fmt_cell(r: dict) -> str:
+    if r.get("status") != "ok":
+        return "SKIP"
+    rf = r["roofline"]
+    m = r["memory_analysis"]
+    fit = (m.get("temp_size_in_bytes", 0)
+           + m.get("argument_size_in_bytes", 0)) / 1e9
+    frac = rf["compute_s"] / rf["bound_s"] if rf["bound_s"] else 0.0
+    return (f"{rf['compute_s']:.3g} / {rf['memory_s']:.3g} / "
+            f"{rf['collective_s']:.3g} | {rf['dominant'].replace('_s','')} "
+            f"| {frac:.2f} | {rf['useful_flops_ratio']:.2f} | {fit:.1f}")
+
+
+def table(cells: Dict[tuple, dict], mesh: str) -> List[str]:
+    lines = [
+        "| arch | shape | compute/memory/collective (s) | bound | frac | useful | GB/chip |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | SKIP ({r.get('reason','')[:48]}...) | | | | |")
+            continue
+        lines.append(f"| {arch} | {shape} | {fmt_cell(r)} |")
+    return lines
+
+
+def improvements(base: Dict, opt: Dict) -> List[str]:
+    lines = [
+        "| arch | shape | mesh | bound before (s) | bound after (s) | gain |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        b, o = base.get(key), opt.get(key)
+        if not b or not o or b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        bb = b["roofline"]["bound_s"]
+        oo = o["roofline"]["bound_s"]
+        if bb <= 0:
+            continue
+        gain = bb / max(oo, 1e-12)
+        if abs(gain - 1.0) < 0.02:
+            continue
+        lines.append(f"| {key[0]} | {key[1]} | {key[2]} | {bb:.3g} | {oo:.3g} "
+                     f"| {gain:.1f}x |")
+    return lines
+
+
+def summarize(cells: Dict) -> str:
+    ok = [r for r in cells.values() if r.get("status") == "ok"]
+    doms = {}
+    fits = 0
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+        m = r["memory_analysis"]
+        if (m.get("temp_size_in_bytes", 0)
+                + m.get("argument_size_in_bytes", 0)) <= HBM_BUDGET:
+            fits += 1
+    skips = sum(1 for r in cells.values() if r.get("status") == "skip")
+    return (f"{len(ok)} cells ok, {skips} skipped-by-design; "
+            f"dominant terms: {doms}; {fits}/{len(ok)} fit {HBM_BUDGET/1e9:.0f}GB/chip")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=Path,
+                    default=Path("benchmarks/results/dryrun_baseline"))
+    ap.add_argument("--optimized", type=Path,
+                    default=Path("benchmarks/results/dryrun_optimized"))
+    ap.add_argument("--out", type=Path, default=None)
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    opt = load(args.optimized) if args.optimized.exists() else {}
+
+    out = []
+    out.append(f"### Baseline summary\n\n{summarize(base)}\n")
+    for mesh in ("single_pod", "multi_pod"):
+        out.append(f"\n### Baseline roofline — {mesh} "
+                   "(terms from trip-count-exact jaxpr costs + trip-corrected HLO collectives)\n")
+        out.extend(table(base, mesh))
+    if opt:
+        out.append(f"\n### Optimized summary\n\n{summarize(opt)}\n")
+        for mesh in ("single_pod", "multi_pod"):
+            out.append(f"\n### Optimized roofline — {mesh}\n")
+            out.extend(table(opt, mesh))
+        out.append("\n### Baseline -> optimized gains\n")
+        out.extend(improvements(base, opt))
+
+    text = "\n".join(out)
+    if args.out:
+        args.out.write_text(text)
+        print(f"wrote {args.out}")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

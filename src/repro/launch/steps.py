@@ -1,0 +1,195 @@
+"""Step builders: train / prefill / decode, plus their sharding specs.
+
+These are the pjit-level entry points used by the dry-run, the trainer,
+and the server. Gradient accumulation (microbatching) and ZeRO-1 moment
+sharding are wired here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import LogicalRules, opt_state_spec, tree_specs
+from repro.models import model
+from repro.optim import adamw_update, cosine_schedule
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg):
+    n_mb = max(cfg.num_microbatches, 1)
+
+    def loss(params, mb):
+        return model.loss_fn(params, cfg, mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_mb > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:]),
+                batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + metrics["loss"], a_acc + metrics["aux"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum, asum), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            l, a = lsum / n_mb, asum / n_mb
+        else:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+            a = metrics["aux"]
+
+        lr = cosine_schedule(state["step"])
+        new_params, new_opt, gnorm = adamw_update(
+            grads, state["opt"], params, state["step"], lr=lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": l, "aux": a, "grad_norm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def abstract_train_state(cfg):
+    pshapes = model.abstract_params(cfg)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "params": pshapes,
+        "opt": {"m": jax.tree.map(f32, pshapes), "v": jax.tree.map(f32, pshapes)},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_train_state(cfg, rng):
+    params = model.init_params(cfg, rng)
+    from repro.optim import adamw_init
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(cfg, rules: LogicalRules):
+    pshapes = model.abstract_params(cfg)
+    paxes = model.param_axes(cfg)
+    pspecs = tree_specs(rules, pshapes, paxes)
+    mspecs = jax.tree.map(
+        lambda spec, sds: opt_state_spec(spec, sds.shape, rules.mesh),
+        pspecs, pshapes,
+        is_leaf=lambda x: isinstance(x, P))
+    return {
+        "params": pspecs,
+        "opt": {"m": mspecs, "v": mspecs},
+        "step": P(),
+    }
+
+
+def train_batch_specs(cfg, shape, rules: LogicalRules):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks, S), jnp.int32)
+        tok_ax = ("batch", None, "seq")
+    else:
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tok_ax = ("batch", "seq")
+    batch = {"tokens": tok}
+    axes = {"tokens": tok_ax}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        axes["image_embeds"] = ("batch", None, "embed")
+    specs = tree_specs(rules, batch, axes)
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill & decode
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg):
+    """Full-sequence forward returning last-token logits + KV/state cache."""
+    def prefill(params, batch):
+        logits, _, cache = model.forward(
+            params, cfg, batch, return_cache=True, last_token_only=True)
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+def abstract_serve_params(cfg):
+    """Serving params in compute dtype (bf16) — no optimizer state."""
+    pshapes = model.abstract_params(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dt), pshapes)
+
+
+def serve_param_specs(cfg, rules: LogicalRules):
+    return tree_specs(rules, model.abstract_params(cfg), model.param_axes(cfg))
+
+
+def abstract_cache(cfg, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(model.init_cache, cfg, batch, max_len))
+
+
+def cache_specs(cfg, batch: int, max_len: int, rules: LogicalRules):
+    return tree_specs(rules, abstract_cache(cfg, batch, max_len),
+                      model.cache_axes(cfg))
+
+
+def decode_inputs(cfg, shape, rules: LogicalRules):
+    """(abstract_args, in_specs) for serve_step(params, cache, tokens, pos)."""
+    B, T = shape.global_batch, shape.seq_len
+    params = abstract_serve_params(cfg)
+    pspecs = serve_param_specs(cfg, rules)
+    cache = abstract_cache(cfg, B, T)
+    cspecs = cache_specs(cfg, B, T, rules)
+    if cfg.family == "audio":
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks, 1), jnp.int32)
+        tok_spec = rules.spec_for(tok.shape, ("batch", None, None))
+    else:
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_spec = rules.spec_for(tok.shape, ("batch", None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (params, cache, tok, pos), (pspecs, cspecs, tok_spec, P())
+
+
+def prefill_inputs(cfg, shape, rules: LogicalRules):
+    B, S = shape.global_batch, shape.seq_len
+    params = abstract_serve_params(cfg)
+    pspecs = serve_param_specs(cfg, rules)
+    batch, bspecs = train_batch_specs(cfg, shape, rules)
+    return (params, batch), (pspecs, bspecs)
+
+
+def input_specs(arch: str, shape_name: str, rules: LogicalRules):
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for every model input of
+    the (arch, shape) cell — weak-type-correct, shardable, no allocation.
+
+    Returns (abstract_args, in_specs) for the cell's step function
+    (train_step / prefill / serve_step)."""
+    from repro.configs import get_config, get_shape
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        state = abstract_train_state(cfg)
+        sspecs = train_state_specs(cfg, rules)
+        batch, bspecs = train_batch_specs(cfg, shape, rules)
+        return (state, batch), (sspecs, bspecs)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape, rules)
+    return decode_inputs(cfg, shape, rules)

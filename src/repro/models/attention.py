@@ -1,0 +1,371 @@
+"""GQA attention: init, train/prefill (chunked online-softmax), decode.
+
+Two execution paths, dispatched the way the paper's runtime scheduler
+dispatches backend kernels (Sec. VI-B):
+  - ``einsum``  : materializes (B,H,S,T) scores — fine for short S.
+  - ``chunked`` : flash-attention algorithm in pure jnp (q-chunk outer scan,
+                  kv-chunk inner scan, fp32 online softmax). This is the
+                  XLA path used by the dry-run; kernels/flash_attention.py
+                  is the Pallas TPU twin validated against the same oracle.
+Decode uses a position-masked einsum over the KV cache (seq-sharded cache
+=> flash-decode style partial-softmax combine is inserted by GSPMD).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_axis_size, current_rule, shard
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def _prepare_gqa(q, k, v):
+    """See below; under sequence parallelism (rules map "seq" -> model)
+    attention is context-parallel instead: q seq-sharded, k/v gathered,
+    heads replicated — MLP/projections then run with zero all-reduces."""
+    if "model" in current_rule("seq"):
+        B, S, Hq, hd = q.shape
+        Hkv = k.shape[2]
+        qg = q.reshape(B, S, Hkv, Hq // Hkv, hd)
+        qg = shard(qg, "batch", "seq", None, None, None)
+        # gather k/v in bf16: explicit cast + barrier before the constraint
+        # (XLA otherwise gathers an fp32 intermediate — 2x the bytes)
+        k = k.astype(jnp.bfloat16)
+        v = v.astype(jnp.bfloat16)
+        k, v = jax.lax.optimization_barrier((k, v))
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+        return qg, k, v
+    return _prepare_gqa_headwise(q, k, v)
+
+
+def _prepare_gqa_headwise(q, k, v):
+    """Make GQA shardable on the model axis without resharding storms.
+
+    Returns (qg (B,S,K,G,hd), k, v (B,T,K,hd)) with K chosen so both the
+    kv dim (K) and grouping (G) divide cleanly under the ambient TP size:
+
+      - Hkv % TP == 0:                keep native kv heads.
+      - TP % Hkv == 0 and Hq % TP==0: replicate kv heads x(TP/Hkv)
+                                      (standard kv-replication; command-r).
+      - otherwise:                    expand kv to full MHA (K = Hq) and
+                                      force-shard heads (GSPMD pads uneven
+                                      head counts, e.g. qwen3's 40 -> 48).
+    """
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    tp = current_axis_size("model")
+    if tp <= 1 or Hkv % tp == 0:
+        K = Hkv
+        force = ""
+    elif tp % Hkv == 0 and Hq % tp == 0:
+        K = tp
+        force = ""
+    else:
+        K = Hq
+        force = "!"
+    if K != Hkv:
+        k = jnp.repeat(k, K // Hkv, axis=2)
+        v = jnp.repeat(v, K // Hkv, axis=2)
+    G = Hq // K
+    qg = q.reshape(B, S, K, G, hd)
+    qg = shard(qg, "batch", None, "kv_heads" + force, None, None)
+    k = shard(k, "batch", None, "kv_heads" + force, None)
+    v = shard(v, "batch", None, "kv_heads" + force, None)
+    return qg, k, v
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, d_in: Optional[int] = None):
+    hd = cfg.resolved_head_dim
+    d_in = d_in or cfg.d_model
+    kq, kk, kv, ko = L.split_keys(key, 4)
+    p = {
+        "wq": L.dense_init(kq, d_in, cfg.n_heads * hd),
+        "wk": L.dense_init(kk, d_in, cfg.n_kv_heads * hd),
+        "wv": L.dense_init(kv, d_in, cfg.n_kv_heads * hd),
+        "wo": L.dense_init(ko, cfg.n_heads * hd, cfg.d_model),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def attention_axes(cfg):
+    ax = {
+        "wq": ("embed", "qkv"),
+        "wk": ("embed", "qkv"),
+        "wv": ("embed", "qkv"),
+        "wo": ("qkv", "embed"),
+    }
+    if cfg.attn_bias:
+        ax.update({"bq": ("qkv",), "bk": ("qkv",), "bv": ("qkv",)})
+    if cfg.qk_norm:
+        ax.update({"q_norm": (None,), "k_norm": (None,)})
+    return ax
+
+
+def _project_qkv(params, cfg, x, x_kv=None):
+    """x: (B,S,D) -> q (B,S,Hq,hd), k/v (B,T,Hkv,hd)."""
+    dt = x.dtype
+    hd = cfg.resolved_head_dim
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dh->bth", x_kv, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dh->bth", x_kv, params["wv"].astype(dt))
+    if cfg.attn_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(*q.shape[:-1], cfg.n_heads, hd)
+    k = k.reshape(*k.shape[:-1], cfg.n_kv_heads, hd)
+    v = v.reshape(*v.shape[:-1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _out_proj(params, cfg, o):
+    dt = o.dtype
+    o = o.reshape(*o.shape[:-2], cfg.n_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _einsum_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                      kv_len: Optional[jax.Array] = None,
+                      constrain: bool = False):
+    """q (B,S,Hq,hd); k,v (B,T,Hkv,hd)."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    if constrain:
+        # keep attention math local per shard (kv-replication when kv < TP)
+        # — avoids GSPMD resharding storms through the GQA reshape
+        # (see DESIGN.md §6 and EXPERIMENTS.md §Perf).
+        qg, k, v = _prepare_gqa(q, k, v)
+    else:
+        G = Hq // Hkv
+        qg = q.reshape(B, S, Hkv, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        qpos = jnp.arange(S)[:, None] + q_offset
+        kpos = jnp.arange(T)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if kv_len is not None:
+        valid = jnp.arange(T)[None, :] < kv_len  # kv_len: scalar or (B,1)
+        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return o.reshape(B, S, Hq, hd)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, chunk_q: int, chunk_k: int,
+                       parallel_q: bool = False):
+    """Flash-attention algorithm in jnp: O(S*chunk) score memory.
+
+    q (B,S,Hq,hd); k,v (B,T,Hkv,hd). Assumes S % chunk_q == T % chunk_k == 0.
+    """
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    cq = min(chunk_q, S)
+    ck = min(chunk_k, T)
+    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / (hd ** 0.5)
+
+    qg, k, v = _prepare_gqa(q, k, v)
+    Hkv, G = qg.shape[2], qg.shape[3]
+    qg = qg.reshape(B, nq, cq, Hkv, G, hd)
+    kc = k.reshape(B, nk, ck, Hkv, hd)
+    vc = v.reshape(B, nk, ck, Hkv, hd)
+
+    if parallel_q:
+        return _chunked_attention_parallel_q(
+            qg, kc, vc, B=B, S=S, Hq=Hq, hd=hd, nq=nq, nk=nk, cq=cq, ck=ck,
+            scale=scale, causal=causal)
+
+    def q_block(carry, qi):
+        qb = qg[:, qi]                                   # (B,cq,Hkv,G,hd)
+
+        def kv_block(state, ki):
+            acc, m, l = state
+            kb = kc[:, ki]
+            vb = vc[:, ki]
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qb, kb).astype(jnp.float32)
+            s = s * scale
+            if causal:
+                qpos = qi * cq + jnp.arange(cq)
+                kpos = ki * ck + jnp.arange(ck)
+                mask = kpos[None, :] <= qpos[:, None]    # (cq,ck)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(vb.dtype), vb)
+            acc_new = acc * alpha[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((B, Hkv, G, cq, hd), jnp.float32),
+            jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, cq), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        ob = acc / jnp.maximum(l[..., None], 1e-30)      # (B,Hkv,G,cq,hd)
+        ob = ob.transpose(0, 3, 1, 2, 4)                 # (B,cq,Hkv,G,hd)
+        return carry, ob.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))  # (nq,B,cq,Hkv,G,hd)
+    o = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hq, hd)
+    return o
+
+
+def _chunked_attention_parallel_q(qg, kc, vc, *, B, S, Hq, hd, nq, nk, cq,
+                                  ck, scale, causal):
+    """All q-chunks advance together through one kv scan (the q-chunk axis
+    may be mesh-sharded; it is never indexed)."""
+    qpos = (jnp.arange(nq)[:, None] * cq + jnp.arange(cq)[None, :])  # (nq,cq)
+
+    def kv_block(state, ki):
+        acc, m, l = state                                 # (B,nq,Hkv,G,cq,*)
+        kb = kc[:, ki]
+        vb = vc[:, ki]
+        s = jnp.einsum("bnqkgh,btkh->bnkgqt", qg, kb).astype(jnp.float32)
+        s = s * scale
+        if causal:
+            kpos = ki * ck + jnp.arange(ck)
+            mask = kpos[None, None, :] <= qpos[:, :, None]    # (nq,cq,ck)
+            s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bnkgqt,btkh->bnkgqh", p.astype(vb.dtype), vb)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    Hkv, G = qg.shape[3], qg.shape[4]
+    init = (
+        jnp.zeros((B, nq, Hkv, G, cq, hd), jnp.float32),
+        jnp.full((B, nq, Hkv, G, cq), NEG_INF, jnp.float32),
+        jnp.zeros((B, nq, Hkv, G, cq), jnp.float32),
+    )
+    # qg stays (B,nq,cq,Hkv,G,hd) — the einsum labels handle the layout
+    (acc, m, l), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+    o = acc / jnp.maximum(l[..., None], 1e-30)            # (B,nq,Hkv,G,cq,hd)
+    o = o.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, Hq, hd)
+    return o.astype(kc.dtype)
+
+
+def _fused_flash_attention(q, k, v, causal, chunk_q, chunk_k,
+                           parallel_q=False):
+    """On TPU this region runs as kernels/flash_attention.py (one Pallas
+    call, scores VMEM-resident). The inner-jit wrapper marks the region
+    for the roofline's fused accounting (launch/jaxpr_cost.py) and the
+    scheduler dispatches the real kernel on TPU. parallel_q: all q-chunks
+    advance together through the kv scan (used under sequence parallelism
+    where the q-chunk axis is mesh-sharded and must not be indexed)."""
+    from repro.kernels import ops as kops
+    if kops.use_pallas("flash", q.shape):
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal,
+                                  block_q=chunk_q, block_k=chunk_k)
+    return _chunked_attention(q, k, v, causal=causal, chunk_q=chunk_q,
+                              chunk_k=chunk_k, parallel_q=parallel_q)
+
+
+def multihead_attention(q, k, v, *, causal: bool = True, impl: str = "auto",
+                        chunk_q: int = 512, chunk_k: int = 1024,
+                        q_offset: int = 0, kv_len=None, constrain: bool = False):
+    S, T = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if S * T > 2048 * 2048 and S > 1 else "einsum"
+    if impl in ("chunked", "fused") and S % min(chunk_q, S) == 0 \
+            and T % min(chunk_k, T) == 0 and q_offset == 0 and kv_len is None:
+        if impl == "fused":
+            from repro.distributed.sharding import current_rule
+            par_q = "model" in current_rule("seq")
+
+            def _fused_attention_region(q_, k_, v_):
+                return _fused_flash_attention(q_, k_, v_, causal,
+                                              chunk_q, chunk_k,
+                                              parallel_q=par_q)
+            return jax.jit(_fused_attention_region)(q, k, v)
+        return _chunked_attention(q, k, v, causal=causal,
+                                  chunk_q=chunk_q, chunk_k=chunk_k)
+    return _einsum_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             kv_len=kv_len, constrain=constrain)
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+# ---------------------------------------------------------------------------
+
+def self_attention(params, cfg, x, positions, *, impl: str = "auto"):
+    """Training / prefill self-attention. x: (B,S,D)."""
+    q, k, v = _project_qkv(params, cfg, x)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    o = multihead_attention(q, k, v, causal=True, impl=impl, constrain=True)
+    return _out_proj(params, cfg, o), (k, v)
+
+
+KV_INT8_SCALE = 0.0625   # fixed symmetric scale for quantized KV caches
+
+
+def _to_cache_dtype(x, cache_dtype):
+    if cache_dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_INT8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(cache_dtype)
+
+
+def _from_cache_dtype(x, compute_dtype):
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) * KV_INT8_SCALE).astype(compute_dtype)
+    return x.astype(compute_dtype)
+
+
+def decode_self_attention(params, cfg, x, k_cache, v_cache, pos):
+    """Single-token decode. x: (B,1,D); caches (B,T,Hkv,hd); pos: scalar.
+
+    Caches may be int8-quantized (kv_cache_dtype config) — halves decode
+    HBM traffic and footprint at ~0.4% logit error."""
+    q, k, v = _project_qkv(params, cfg, x)
+    q = L.rope(q, pos[None] if jnp.ndim(pos) == 0 else pos, cfg.rope_theta)
+    k = L.rope(k, pos[None] if jnp.ndim(pos) == 0 else pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, _to_cache_dtype(k, k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, _to_cache_dtype(v, v_cache.dtype), pos, axis=1)
+    o = _einsum_attention(q, _from_cache_dtype(k_cache, q.dtype),
+                          _from_cache_dtype(v_cache, q.dtype),
+                          causal=False, kv_len=pos + 1)
+    return _out_proj(params, cfg, o), (k_cache, v_cache)
+
+
+def cross_attention(params, cfg, x, kv_states):
+    """VLM gated cross-attention: kv from precomputed image embeddings."""
+    q, k, v = _project_qkv(params, cfg, x, x_kv=kv_states)
+    o = multihead_attention(q, k, v, causal=False, impl="einsum",
+                            constrain=True)
+    return _out_proj(params, cfg, o)

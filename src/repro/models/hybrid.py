@@ -1,0 +1,208 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* transformer block
+applied after every `shared_attn_interval` mamba layers.
+
+Weight sharing note: Zamba2 feeds concat(hidden, original_embedding) into
+the shared block and adds per-invocation LoRA deltas; we reproduce the
+concat+projection and share the block verbatim (no LoRA — noted in
+DESIGN.md as a simplification that does not change the systems shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def group_layout(cfg):
+    """38 mamba layers -> (n_groups of interval) + tail."""
+    k = cfg.ssm.shared_attn_interval
+    g = cfg.n_layers // k
+    tail = cfg.n_layers - g * k
+    return g, k, tail
+
+
+def init(key, cfg):
+    ke, km, kt, ks, kh = L.split_keys(key, 5)
+    g, k, tail = group_layout(cfg)
+
+    def stack(key_, n):
+        keys = jnp.stack(L.split_keys(key_, n))
+        return jax.vmap(lambda kk: M.init_mamba_layer(kk, cfg))(keys)
+
+    keys_g = jnp.stack(L.split_keys(km, g))
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model),
+        "mamba_groups": jax.vmap(lambda kk: jax.vmap(
+            lambda k2: M.init_mamba_layer(k2, cfg))(jnp.stack(jax.random.split(kk, k))))(keys_g),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab),
+    }
+    if tail:
+        params["mamba_tail"] = stack(kt, tail)
+    k1, k2, k3 = L.split_keys(ks, 3)
+    params["shared"] = {
+        "concat_proj": L.dense_init(k1, 2 * cfg.d_model, cfg.d_model),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": A.init_attention(k2, cfg),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+    return params
+
+
+def axes(cfg):
+    g, k, tail = group_layout(cfg)
+    m_ax = M.mamba_layer_axes(cfg)
+    add = lambda t, n: jax.tree.map(lambda a: (None,) * n + a, t,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    ax = {
+        "embed": ("vocab", "embed"),
+        "mamba_groups": add(m_ax, 2),
+        "final_norm": ("embed",),
+        "lm_head": ("embed", "vocab"),
+        "shared": {
+            "concat_proj": ("embed", "embed"),
+            "ln1": ("embed",), "ln2": ("embed",),
+            "attn": A.attention_axes(cfg),
+            "mlp": L.mlp_axes(),
+        },
+    }
+    if tail:
+        ax["mamba_tail"] = add(m_ax, 1)
+    return ax
+
+
+def _shared_block(params, cfg, h, h0, positions):
+    sp = params["shared"]
+    dt = h.dtype
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = jnp.einsum("bsd,dk->bsk", x, sp["concat_proj"].astype(dt))
+    impl = cfg.attn_impl if cfg.attn_impl != "auto" else "auto"
+    ao, _ = A.self_attention(sp["attn"], cfg, L.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                             positions, impl=impl)
+    x = x + ao
+    x = x + L.mlp(sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return h + x
+
+
+def forward(params, cfg, tokens, *, return_cache: bool = False, **_):
+    g, k, tail = group_layout(cfg)
+    S = tokens.shape[-1]
+    positions = jnp.arange(S)
+    dt = jnp.dtype(cfg.compute_dtype)
+    h0 = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    h = shard(h0, "batch", "seq", "embed")
+
+    def mamba_body(h_, lp):
+        h_ = M.mamba_forward(lp, cfg, h_)
+        return shard(h_, "batch", "seq", "embed"), None
+
+    mamba_body_r = _maybe_remat(mamba_body, cfg)
+
+    def group(h_, gp):
+        h_, _ = jax.lax.scan(mamba_body_r, h_, gp)
+        h_ = _shared_block(params, cfg, h_, h0, positions)
+        return h_, None
+
+    h, _ = jax.lax.scan(group, h, params["mamba_groups"])
+    if tail:
+        h, _ = jax.lax.scan(mamba_body_r, h, params["mamba_tail"])
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))
+    aux = jnp.zeros((), jnp.float32)
+    return logits, aux, None
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat_policy == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat_policy == "dots"
+              else jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    g, k, tail = group_layout(cfg)
+    hd = cfg.resolved_head_dim
+
+    def stack_state(n_outer):
+        st = M.init_mamba_state(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda x: jnp.zeros(n_outer + x.shape, x.dtype), st)
+
+    cache = {
+        "mamba_groups": stack_state((g, k)),
+        "attn_k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "attn_v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+    if tail:
+        cache["mamba_tail"] = stack_state((tail,))
+    return cache
+
+
+def cache_axes(cfg):
+    g, k, tail = group_layout(cfg)
+    m_ax = M.mamba_state_axes(cfg)
+    add = lambda t, n: jax.tree.map(lambda a: (None,) * n + a, t,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    ax = {
+        "mamba_groups": add(m_ax, 2),
+        "attn_k": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+        "attn_v": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+    if tail:
+        ax["mamba_tail"] = add(m_ax, 1)
+    return ax
+
+
+def _shared_block_decode(params, cfg, h, h0, kc, vc, pos):
+    sp = params["shared"]
+    dt = h.dtype
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = jnp.einsum("bsd,dk->bsk", x, sp["concat_proj"].astype(dt))
+    ao, (kc, vc) = A.decode_self_attention(
+        sp["attn"], cfg, L.rms_norm(x, sp["ln1"], cfg.norm_eps), kc, vc, pos)
+    x = x + ao
+    x = x + L.mlp(sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return h + x, kc, vc
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    g, k, tail = group_layout(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    h0 = jnp.take(params["embed"], tokens, axis=0).astype(dt)   # (B,1,D)
+    h = h0
+
+    def mamba_body(h_, xs):
+        lp, st = xs
+        h_, st = M.mamba_decode(lp, cfg, h_, st)
+        return h_, st
+
+    def group(h_, xs):
+        gp, gst, kc, vc = xs
+        h_, gst = jax.lax.scan(mamba_body, h_, (gp, gst))
+        h_, kc, vc = _shared_block_decode(params, cfg, h_, h0, kc, vc, pos)
+        return h_, (gst, kc, vc)
+
+    h, (gstates, ks, vs) = jax.lax.scan(
+        group, h, (params["mamba_groups"], cache["mamba_groups"],
+                   cache["attn_k"], cache["attn_v"]))
+    new_cache = dict(cache, mamba_groups=gstates, attn_k=ks, attn_v=vs)
+    if tail:
+        h, tstates = jax.lax.scan(mamba_body, h,
+                                  (params["mamba_tail"], cache["mamba_tail"]))
+        new_cache["mamba_tail"] = tstates
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))
+    return logits, new_cache

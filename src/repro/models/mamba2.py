@@ -1,0 +1,204 @@
+"""Mamba2 (SSD) blocks: chunked-parallel training form + recurrent decode.
+
+The chunked SSD algorithm is blocked-matmul-shaped — the same "blocking
+nature of matrix operations" the paper's backend engine exploits (Sec.
+VI-A): intra-chunk terms are (chunk x chunk) matmuls on the MXU, the
+inter-chunk state pass is a short sequential scan, exactly the structure
+of the paper's blocked decomposition kernels.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm.head_dim
+
+
+def conv_dim(cfg) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm.d_state
+
+
+def init_mamba_layer(key, cfg):
+    s = cfg.ssm
+    di = d_inner(cfg)
+    H = n_ssm_heads(cfg)
+    k1, k2, k3 = L.split_keys(key, 3)
+    proj_out = 2 * di + 2 * s.d_state + H       # z, x, B, C, dt
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "in_proj": L.dense_init(k1, cfg.d_model, proj_out),
+        "conv_w": jax.random.normal(k2, (s.d_conv, conv_dim(cfg)), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim(cfg),), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(k3, di, cfg.d_model),
+    }
+
+
+def mamba_layer_axes(cfg):
+    return {
+        "ln": ("embed",),
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "gate_norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = d_inner(cfg)
+    N = cfg.ssm.d_state
+    H = n_ssm_heads(cfg)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv over sequence. xBC: (B,S,C); conv_w: (K,C)."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(K):          # K=4: unrolled taps
+        out = out + pad[:, i:i + xBC.shape[1]].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    return (out + conv_b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def ssd_chunked(x, dA, Bm, Cm, chunk: int):
+    """Chunked SSD. x: (b,s,h,p); dA: (b,s,h) log-decay (<=0);
+    Bm, Cm: (b,s,n). Returns y: (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    xc = x.reshape(b, nc, c, h, p).astype(jnp.float32)
+    dAc = dA.reshape(b, nc, c, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, c, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, c, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(dAc, axis=2)                              # (b,nc,c,h)
+    # intra-chunk: y_i += sum_{j<=i} C_i.B_j exp(cum_i - cum_j) x_j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    Lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, NEG_INF))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, Lmat, xc)
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) B_j (x)op x_j
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (b,nc,c,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_end, xc)
+    total = jnp.exp(cum[:, :, -1, :])                          # (b,nc,h)
+
+    def pass_state(s_prev, inp):
+        st, tot = inp
+        s_new = s_prev * tot[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, prev = jax.lax.scan(pass_state, s0,
+                           (states.transpose(1, 0, 2, 3, 4),
+                            total.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                       # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum), prev)
+    return (y_intra + y_inter).reshape(b, s, h, p).astype(x.dtype)
+
+
+def mamba_forward(params, cfg, h):
+    """Full-sequence Mamba2 block (pre-norm residual). h: (B,S,D)."""
+    s = cfg.ssm
+    H = n_ssm_heads(cfg)
+    P = s.head_dim
+    dt_ = h.dtype
+    hn = L.rms_norm(h, params["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", hn, params["in_proj"].astype(dt_))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    di = d_inner(cfg)
+    x = xBC[..., :di].reshape(*xBC.shape[:2], H, P)
+    Bm = xBC[..., di:di + s.d_state]
+    Cm = xBC[..., di + s.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))               # (H,)
+    y = ssd_chunked(x * dt[..., None].astype(dt_), dt * A[None, None, :],
+                    Bm, Cm, s.chunk_size)
+    y = y + x * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(*y.shape[:2], di)
+    y = L.rms_norm(y, params["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
+    return h + out
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token recurrence)
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    return {
+        "ssm": jnp.zeros((batch, n_ssm_heads(cfg), s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim(cfg)), dtype),
+    }
+
+
+def mamba_state_axes(cfg):
+    return {
+        "ssm": ("batch", None, None, "ssm_inner"),
+        "conv": ("batch", None, "ssm_inner"),
+    }
+
+
+def mamba_decode(params, cfg, h, state):
+    """h: (B,1,D). Returns (out (B,1,D), new_state)."""
+    s = cfg.ssm
+    H = n_ssm_heads(cfg)
+    P = s.head_dim
+    di = d_inner(cfg)
+    dt_ = h.dtype
+    hn = L.rms_norm(h, params["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", hn, params["in_proj"].astype(dt_))
+    z, xBC_t, dt_raw = _split_proj(cfg, zxbcdt)                 # (B,1,*)
+    # conv over (conv_state ++ current)
+    window = jnp.concatenate([state["conv"], xBC_t.astype(state["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))  # (B,C)
+    new_conv = window[:, 1:]
+
+    x = xBC[:, :di].reshape(-1, H, P).astype(jnp.float32)
+    Bm = xBC[:, di:di + s.d_state].astype(jnp.float32)          # (B,N)
+    Cm = xBC[:, di + s.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                            # (B,H)
+    ssm = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm, x * dt[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", Cm, ssm)
+    y = y + x * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, di).astype(dt_)
+    y = L.rms_norm(y, params["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
+    return h + out, {"ssm": ssm, "conv": new_conv}

@@ -1,0 +1,120 @@
+"""Family dispatch: one substrate, many modes (the paper's C2 at the
+model layer). All ten assigned architectures flow through this module:
+
+  init_params / param_axes      -> pytree + logical-axes pytree
+  forward / loss_fn             -> train & prefill
+  init_cache / cache_axes / decode_step -> serving
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import hybrid, transformer, xlstm
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def _module(cfg):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "ssm":
+        return xlstm
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_params(cfg, rng):
+    return _module(cfg).init(rng, cfg)
+
+
+def param_axes(cfg):
+    return _module(cfg).axes(cfg)
+
+
+def abstract_params(cfg, rng=None):
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: init_params(cfg, r), rng)
+
+
+def forward(params, cfg, batch: Dict[str, Any], **kw):
+    """batch: {'tokens': ..., ['image_embeds': ...]} -> (logits, aux, cache)."""
+    mod = _module(cfg)
+    if cfg.family == "vlm":
+        return mod.forward(params, cfg, batch["tokens"],
+                           image_embeds=batch["image_embeds"], **kw)
+    return mod.forward(params, cfg, batch["tokens"], **kw)
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    return _module(cfg).init_cache(cfg, batch_size, max_len, dtype)
+
+
+def cache_axes(cfg):
+    return _module(cfg).cache_axes(cfg)
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    return _module(cfg).decode_step(params, cfg, cache, tokens, pos)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """logits (..., V) fp-any; labels (...) int32. fp32 math, mean over all."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token LM loss; returns (loss, metrics)."""
+    logits, aux, _ = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        # tokens (B,K,S); logits (B,K,S,V)
+        loss = cross_entropy(logits[:, :, :-1], tokens[:, :, 1:])
+    else:
+        loss = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter count (roofline MODEL_FLOPS = 6*N*D)
+# ---------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    """Exact count via eval_shape; `active_only` scales routed-expert params
+    by top_k/n_experts (MoE active-parameter accounting)."""
+    shapes = abstract_params(cfg)
+    if not active_only or cfg.moe is None:
+        return count_params(shapes)
+
+    ratio = cfg.moe.top_k / cfg.moe.n_experts
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        keys = [getattr(p, "key", None) for p in path]
+        is_routed = "moe" in keys and any(
+            k in ("w_gate", "w_up", "w_down") for k in keys)
+        total += int(n * ratio) if is_routed else n
+    return total

@@ -1,0 +1,190 @@
+"""Capacity-based top-k MoE FFN (Qwen-MoE / OLMoE style).
+
+Dispatch/combine use scatter-gather into an (experts, capacity, d_model)
+buffer so compiled FLOPs stay proportional to *active* parameters
+(top_k/n_experts of routed compute), matching the MODEL_FLOPS accounting
+in the roofline analysis. Expert weights carry the ("expert", "embed",
+"expert_mlp") logical axes: expert-parallel when n_experts divides the
+model axis (olmoe: 64/16), tensor-parallel on expert d_ff otherwise
+(qwen2-moe: 60 experts -> shard 1408-wide FFN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    D = cfg.d_model
+    keys = L.split_keys(key, 6)
+    p = {
+        "router": L.dense_init(keys[0], D, m.n_experts),
+        "w_gate": _expert_init(keys[1], m.n_experts, D, m.expert_d_ff),
+        "w_up": _expert_init(keys[2], m.n_experts, D, m.expert_d_ff),
+        "w_down": _expert_init(keys[3], m.n_experts, m.expert_d_ff, D),
+    }
+    if m.n_shared:
+        p["shared"] = L.init_mlp(keys[4], D, m.n_shared * m.expert_d_ff)
+        p["shared_gate"] = L.dense_init(keys[5], D, 1)
+    return p
+
+
+def _expert_init(key, e, din, dout):
+    std = 1.0 / (din ** 0.5)
+    return jax.random.normal(key, (e, din, dout), jnp.float32) * std
+
+
+def moe_axes(cfg):
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("expert", "embed", "expert_mlp"),
+        "w_up": ("expert", "embed", "expert_mlp"),
+        "w_down": ("expert", "expert_mlp", "embed"),
+    }
+    if cfg.moe.n_shared:
+        ax["shared"] = L.mlp_axes()
+        ax["shared_gate"] = ("embed", None)
+    return ax
+
+
+def moe_ffn(params, cfg, x):
+    """x: (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Under a sharding context this runs as a shard_map: token dispatch is
+    LOCAL to each data shard (no cross-device scatter/gather/cumsum — the
+    naive GSPMD lowering of capacity dispatch all-gathers the (N*k, E)
+    position tensors per layer, the dominant collective in the baseline
+    MoE cells), and only the expert-FFN row-parallel psum crosses the
+    model axis. See EXPERIMENTS.md §Perf cell 1.
+    """
+    from repro.distributed import sharding as SH
+    rules = SH._CTX.rules
+    if rules is not None and rules.mesh.devices.size > 1:
+        return _moe_ffn_sharded(params, cfg, x, rules)
+    return _moe_ffn_math(params, cfg, x)
+
+
+def _flat_axes(part) -> tuple:
+    if part is None:
+        return ()
+    return tuple(part) if isinstance(part, tuple) else (part,)
+
+
+def _moe_ffn_sharded(params, cfg, x, rules):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    x_spec = rules.spec_for(x.shape, ("batch", "seq", "embed"))
+    ax = moe_axes(cfg)
+    p_specs = {k: (rules.spec_for(params[k].shape, v)
+                   if not isinstance(v, dict) else
+                   {kk: rules.spec_for(params[k][kk].shape, vv)
+                    for kk, vv in v.items()})
+               for k, v in ax.items()}
+    down_spec = p_specs["w_down"]
+    expert_axes = _flat_axes(down_spec[0])          # axes sharding experts
+    # combine-psum axes: expert shards + FFN-contraction shards
+    psum_axes = expert_axes + _flat_axes(down_spec[1])
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    spec_leaves = treedef.flatten_up_to(p_specs)
+
+    def local(x_, *leaves_):
+        p_ = jax.tree_util.tree_unflatten(treedef, leaves_)
+        return _moe_ffn_math(p_, cfg, x_, psum_axes=psum_axes,
+                             expert_axes=expert_axes,
+                             mesh_axes=mesh.axis_names)
+
+    out, aux = shard_map(
+        local, mesh=mesh, in_specs=(x_spec, *spec_leaves),
+        out_specs=(x_spec, P()), check_rep=False)(x, *leaves)
+    return out, aux
+
+
+def _moe_ffn_math(params, cfg, x, psum_axes=(), expert_axes=(),
+                  mesh_axes=()):
+    """Capacity-dispatch MoE on (local) tokens. Inside shard_map the
+    expert/FFN dims may be shards: `expert_axes` give this shard's expert
+    slice offset; `psum_axes` combine partial outputs."""
+    m = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    dt = x.dtype
+    xf = x.reshape(N, D)
+    E_local = params["w_gate"].shape[0]
+    if expert_axes:
+        off = jnp.int32(0)
+        stride = E_local
+        for a in reversed(expert_axes):
+            off = off + jax.lax.axis_index(a) * stride
+            stride = stride * jax.lax.psum(1, a)
+    else:
+        off = jnp.int32(0)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)            # (N,k) global ids
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # per-expert capacity: expected local load = N_local*k/E_global
+    capacity = max(int(N * m.top_k / m.n_experts * m.capacity_factor),
+                   m.top_k)
+    e_flat = top_e.reshape(-1)                              # (N*k,)
+    local_id = e_flat - off
+    in_shard = (local_id >= 0) & (local_id < E_local)
+    local_id = jnp.clip(local_id, 0, E_local - 1)
+    onehot = jnp.where(in_shard[:, None],
+                       jax.nn.one_hot(local_id, E_local, dtype=jnp.int32), 0)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    keep = (pos >= 0) & (pos < capacity) & in_shard
+    pos = jnp.clip(pos, 0, capacity - 1)
+    w_flat = (top_w.reshape(-1) * keep).astype(dt)
+
+    tok = jnp.repeat(jnp.arange(N), m.top_k)
+    contrib = jnp.where(keep[:, None], xf[tok], 0)
+    buf = jnp.zeros((E_local, capacity, D), dt).at[local_id, pos].add(contrib)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+
+    y_tok = y[local_id, pos] * w_flat[:, None]              # (N*k, D)
+    partial = jnp.sum(y_tok.reshape(N, m.top_k, D), axis=1)
+
+    if m.n_shared:
+        # shared expert: col-parallel gate/up (elementwise on the sharded
+        # F dim is valid), row-parallel down -> partial summed with the
+        # routed partial under ONE psum (same contraction axes)
+        sg = jax.nn.sigmoid(
+            jnp.einsum("nd,do->no", xf.astype(jnp.float32),
+                       params["shared_gate"].astype(jnp.float32)))
+        shared = L.mlp(params["shared"], xf) * sg.astype(dt)
+        if psum_axes:
+            # counted once per shard along psum axes -> pre-divide
+            n = 1
+            for a in psum_axes:
+                n *= jax.lax.psum(1, a)
+            shared_down_sharded = params["shared"]["w_down"].shape[0] != \
+                cfg.moe.n_shared * cfg.moe.expert_d_ff
+            if not shared_down_sharded:
+                shared = shared / n
+        partial = partial + shared
+
+    out = jax.lax.psum(partial, psum_axes) if psum_axes else partial
+
+    # load-balance + router-z aux losses (Switch/ST-MoE style)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e, m.n_experts, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=0)
+    lb = m.n_experts * jnp.sum(frac_tokens * mean_probs)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = lb + m.router_z_loss * z
+    if mesh_axes:
+        aux = jax.lax.pmean(aux, tuple(mesh_axes))
+    return out.reshape(B, S, D), aux

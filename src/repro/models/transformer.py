@@ -1,0 +1,334 @@
+"""Generic decoder-only transformer covering the dense / moe / vlm / audio
+families. Layers are stacked + scanned (compact HLO, depth-independent
+compile time) with configurable remat policy.
+
+Param tree:
+  embed       (V, D)            or (K, V, D) for audio codebooks
+  layers      stacked (L, ...)  [dense/moe/audio]
+              stacked (G, I, ...) for vlm (G groups of I self layers)
+  cross       stacked (G, ...)  [vlm only: gated cross-attn after each group]
+  final_norm  (D,)
+  lm_head     (D, V) / (K, D, V); omitted when cfg.tie_embeddings
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg):
+    k1, k2 = L.split_keys(key, 2)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": A.init_attention(k1, cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = MOE.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _layer_axes(cfg):
+    ax = {
+        "ln1": ("embed",),
+        "ln2": ("embed",),
+        "attn": A.attention_axes(cfg),
+    }
+    if cfg.moe is not None:
+        ax["moe"] = MOE.moe_axes(cfg)
+    else:
+        ax["mlp"] = L.mlp_axes()
+    return ax
+
+
+def _init_cross(key, cfg):
+    k1, k2 = L.split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": A.init_attention(k1, cfg),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+        "attn_gate": jnp.zeros((), jnp.float32),
+        "mlp_gate": jnp.zeros((), jnp.float32),
+    }
+
+
+def _cross_axes(cfg):
+    return {
+        "ln1": ("embed",), "ln2": ("embed",),
+        "attn": A.attention_axes(cfg),
+        "mlp": L.mlp_axes(),
+        "attn_gate": (), "mlp_gate": (),
+    }
+
+
+def _stack(init_fn, key, n: int):
+    """Initialize n copies with a leading stack axis (for lax.scan)."""
+    keys = jnp.stack(L.split_keys(key, n))
+    return jax.vmap(init_fn)(keys)
+
+
+def n_groups(cfg) -> Tuple[int, int]:
+    if cfg.cross_attn_interval:
+        assert cfg.n_layers % cfg.cross_attn_interval == 0
+        return cfg.n_layers // cfg.cross_attn_interval, cfg.cross_attn_interval
+    return cfg.n_layers, 1
+
+
+def init(key, cfg):
+    ke, kl, kc, kh, kn = L.split_keys(key, 5)
+    if cfg.family == "audio":
+        embed = jax.vmap(lambda k: L.embed_init(k, cfg.vocab, cfg.d_model))(
+            jnp.stack(L.split_keys(ke, cfg.n_codebooks)))
+    else:
+        embed = L.embed_init(ke, cfg.vocab, cfg.d_model)
+    params = {"embed": embed, "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+
+    G, I = n_groups(cfg)
+    if cfg.cross_attn_interval:
+        params["layers"] = _stack(
+            lambda k: _stack(lambda k2: _init_layer(k2, cfg), k, I), kl, G)
+        params["cross"] = _stack(lambda k: _init_cross(k, cfg), kc, G)
+    else:
+        params["layers"] = _stack(lambda k: _init_layer(k, cfg), kl, cfg.n_layers)
+
+    if not cfg.tie_embeddings:
+        if cfg.family == "audio":
+            params["lm_head"] = jax.vmap(
+                lambda k: L.dense_init(k, cfg.d_model, cfg.vocab))(
+                    jnp.stack(L.split_keys(kh, cfg.n_codebooks)))
+        else:
+            params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab)
+    return params
+
+
+def axes(cfg):
+    ax = {
+        "embed": ("vocab", "embed") if cfg.family != "audio"
+                 else (None, "vocab", "embed"),
+        "final_norm": ("embed",),
+    }
+    lax_ = _layer_axes(cfg)
+    if cfg.cross_attn_interval:
+        ax["layers"] = jax.tree.map(lambda t: (None, None) + t, lax_,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        ax["cross"] = jax.tree.map(lambda t: (None,) + t, _cross_axes(cfg),
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        ax["layers"] = jax.tree.map(lambda t: (None,) + t, lax_,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("embed", "vocab") if cfg.family != "audio" \
+            else (None, "embed", "vocab")
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _layer_fwd(cfg, h, lp, positions, impl):
+    ao, kv = A.self_attention(lp["attn"], cfg, L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                              positions, impl=impl)
+    h = h + ao
+    hn = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = MOE.moe_ffn(lp["moe"], cfg, hn)
+    else:
+        f, aux = L.mlp(lp["mlp"], hn), jnp.zeros((), jnp.float32)
+    h = h + f
+    h = shard(h, "batch", "seq", "embed")
+    return h, aux, kv
+
+
+def _cross_fwd(cfg, h, cp, img):
+    ao = A.cross_attention(cp["attn"], cfg, L.rms_norm(h, cp["ln1"], cfg.norm_eps), img)
+    h = h + jnp.tanh(cp["attn_gate"]).astype(h.dtype) * ao
+    f = L.mlp(cp["mlp"], L.rms_norm(h, cp["ln2"], cfg.norm_eps))
+    h = h + jnp.tanh(cp["mlp_gate"]).astype(h.dtype) * f
+    return h
+
+
+def embed_tokens(params, cfg, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "audio":
+        # tokens (B,K,S): sum codebook embeddings
+        def take(tab, tok):
+            return jnp.take(tab, tok, axis=0)
+        e = jax.vmap(take, in_axes=(0, 1), out_axes=1)(params["embed"], tokens)
+        return jnp.sum(e, axis=1).astype(dt)                # (B,S,D)
+    return jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+
+def logits_fn(params, cfg, h):
+    dt = h.dtype
+    if cfg.family == "audio":
+        head = params["lm_head"].astype(dt)                 # (K,D,V)
+        return jnp.einsum("bsd,kdv->bksv", h, head)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    return jnp.einsum("bsd,dv->bsv", h, head)
+
+
+def forward(params, cfg, tokens, *, image_embeds=None, impl: str = "auto",
+            return_cache: bool = False, last_token_only: bool = False):
+    """tokens: (B,S) int32, or (B,K,S) for audio. Returns (logits, aux, cache)."""
+    if impl == "auto" and cfg.attn_impl != "auto":
+        impl = cfg.attn_impl
+    S = tokens.shape[-1]
+    positions = jnp.arange(S)
+    h = embed_tokens(params, cfg, tokens)
+    h = shard(h, "batch", "seq", "embed")
+
+    G, I = n_groups(cfg)
+    body = _remat(
+        lambda h_, lp: _layer_fwd(cfg, h_, lp, positions, impl), cfg)
+
+    if cfg.cross_attn_interval:
+        img = image_embeds.astype(h.dtype)
+
+        def group(h_, gp):
+            lp, cp = gp
+
+            def inner(h2, lp_i):
+                h2, aux, kv = body(h2, lp_i)
+                return h2, (aux, kv)
+
+            h_, (auxs, kvs) = jax.lax.scan(inner, h_, lp)
+            h_ = _cross_fwd(cfg, h_, cp, img)
+            return h_, (jnp.sum(auxs), kvs)
+
+        h, (aux, kv) = jax.lax.scan(group, h, (params["layers"], params["cross"]))
+        aux = jnp.sum(aux)
+    else:
+        def step(h_, lp):
+            h_, aux, kv = body(h_, lp)
+            return h_, (aux, kv)
+
+        h, (auxs, kv) = jax.lax.scan(step, h, params["layers"])
+        aux = jnp.sum(auxs)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if last_token_only:
+        h = h[:, -1:]
+    logits = logits_fn(params, cfg, h)
+    cache = None
+    if return_cache:
+        ks, vs = kv
+        cache = {"k": ks, "v": vs}   # (L,B,S,Hkv,hd) or (G,I,...) for vlm
+    return logits, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    if cfg.kv_cache_dtype == "int8":
+        dtype = jnp.int8
+    G, I = n_groups(cfg)
+    kv = lambda: jnp.zeros(
+        ((G, I) if cfg.cross_attn_interval else (cfg.n_layers,))
+        + (batch, max_len, cfg.n_kv_heads, hd), dtype)
+    cache = {"k": kv(), "v": kv()}
+    if cfg.cross_attn_interval:
+        cache["img_k"] = jnp.zeros(
+            (G, batch, cfg.n_image_tokens, cfg.n_kv_heads, hd), dtype)
+        cache["img_v"] = jnp.zeros_like(cache["img_k"])
+    return cache
+
+
+def cache_axes(cfg):
+    pre = (None, None) if cfg.cross_attn_interval else (None,)
+    kv_ax = pre + ("batch", "cache_seq", "kv_heads", "head_dim")
+    ax = {"k": kv_ax, "v": kv_ax}
+    if cfg.cross_attn_interval:
+        ax["img_k"] = (None, "batch", None, "kv_heads", "head_dim")
+        ax["img_v"] = ax["img_k"]
+    return ax
+
+
+def _decode_layer(cfg, h, lp, kc, vc, pos):
+    h = shard(h, "dbatch", None, None)
+    ao, (kc, vc) = A.decode_self_attention(
+        lp["attn"], cfg, L.rms_norm(h, lp["ln1"], cfg.norm_eps), kc, vc, pos)
+    h = h + ao
+    hn = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, _ = MOE.moe_ffn(lp["moe"], cfg, hn)
+    else:
+        f = L.mlp(lp["mlp"], hn)
+    return h + f, kc, vc
+
+
+def _decode_cross(cfg, h, cp, img_k, img_v):
+    q, _, _ = A._project_qkv(cp["attn"], cfg, L.rms_norm(h, cp["ln1"], cfg.norm_eps))
+    o = A._einsum_attention(q, img_k.astype(q.dtype), img_v.astype(q.dtype),
+                            causal=False)
+    ao = A._out_proj(cp["attn"], cfg, o)
+    h = h + jnp.tanh(cp["attn_gate"]).astype(h.dtype) * ao
+    f = L.mlp(cp["mlp"], L.rms_norm(h, cp["ln2"], cfg.norm_eps))
+    return h + jnp.tanh(cp["mlp_gate"]).astype(h.dtype) * f
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """One decode step. tokens (B,1) / audio (B,K,1); pos scalar int32.
+
+    Returns (logits, new_cache).
+    """
+    h = embed_tokens(params, cfg, tokens)
+    h = shard(h, "batch", None, "embed")
+
+    if cfg.cross_attn_interval:
+        def group(h_, xs):
+            lp, cp, kcg, vcg, ik, iv = xs
+
+            def inner(h2, xs2):
+                lp_i, kc, vc = xs2
+                h2, kc, vc = _decode_layer(cfg, h2, lp_i, kc, vc, pos)
+                return h2, (kc, vc)
+
+            h_, (kcg, vcg) = jax.lax.scan(inner, h_, (lp, kcg, vcg))
+            h_ = _decode_cross(cfg, h_, cp, ik, iv)
+            return h_, (kcg, vcg)
+
+        h, (ks, vs) = jax.lax.scan(
+            group, h,
+            (params["layers"], params["cross"], cache["k"], cache["v"],
+             cache["img_k"], cache["img_v"]))
+        new_cache = dict(cache, k=ks, v=vs)
+    else:
+        def step(h_, xs):
+            lp, kc, vc = xs
+            h_, kc, vc = _decode_layer(cfg, h_, lp, kc, vc, pos)
+            return h_, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(step, h, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)
+    return logits, new_cache

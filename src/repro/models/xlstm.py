@@ -1,0 +1,421 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training form)
+with every k-th block an sLSTM (scalar memory, recurrent).
+
+The chunkwise mLSTM is the same blocked structure as SSD/flash-attention:
+intra-chunk (chunk x chunk) MXU matmuls + a short inter-chunk scan carrying
+the stabilized (C, n, m) state — again the paper's blocked-matrix pattern.
+
+Stabilized exponential gating follows the xLSTM paper: carry m is the
+running log-scale max; C and n are stored pre-multiplied by exp(-m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def d_inner(cfg) -> int:
+    return int(cfg.xlstm.proj_factor * cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    di = d_inner(cfg)
+    H = cfg.n_heads
+    ks = L.split_keys(key, 7)
+    dh = di // H
+    bd = lambda k: (jax.random.normal(k, (H, dh, dh), jnp.float32)
+                    / (dh ** 0.5))
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "up_proj": L.dense_init(ks[0], cfg.d_model, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (4, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        # block-diagonal per-head q/k/v (official xLSTM structure — keeps
+        # the 1.3B budget; a dense di x di qkv would be 2.5x over)
+        "wq": bd(ks[2]),
+        "wk": bd(ks[3]),
+        "wv": bd(ks[4]),
+        "igate": L.dense_init(ks[5], di, H, scale=0.1),
+        "igate_b": jnp.full((H,), -10.0, jnp.float32),
+        "fgate": L.dense_init(ks[6], di, H, scale=0.1),
+        "fgate_b": jnp.full((H,), 3.0, jnp.float32),
+        "onorm": jnp.ones((di,), jnp.float32),
+        "down_proj": L.dense_init(jax.random.fold_in(key, 7), di, cfg.d_model),
+    }
+
+
+def mlstm_axes(cfg):
+    return {
+        "ln": ("embed",),
+        "up_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        # q/k sharded on the OUTPUT (dk) dim — matches the mLSTM matrix
+        # memory C's dk sharding so the state never reshards; v replicated
+        # (C = k (x) v outer product can only shard one factor). "ssm_state"
+        # resolves to replicated in training, model-sharded at serve.
+        "wq": (None, None, "ssm_state"),
+        "wk": (None, None, "ssm_state"),
+        "wv": (None, None, None),
+        "igate": ("ssm_inner", None),
+        "igate_b": (None,),
+        "fgate": ("ssm_inner", None),
+        "fgate_b": (None,),
+        "onorm": ("ssm_inner",),
+        "down_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlstm_qkv_gates(params, cfg, hn):
+    di = d_inner(cfg)
+    H = cfg.n_heads
+    dh = di // H
+    dt = hn.dtype
+    up = jnp.einsum("bsd,dk->bsk", hn, params["up_proj"].astype(dt))
+    x_in, z = up[..., :di], up[..., di:]
+    xc = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
+    B, S = xc.shape[:2]
+    xch = xc.reshape(B, S, H, dh)
+    xih = x_in.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xch, params["wq"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", xch, params["wk"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", xih, params["wv"].astype(dt))
+    i_raw = (jnp.einsum("bsk,kh->bsh", xc.astype(jnp.float32), params["igate"])
+             + params["igate_b"])
+    f_raw = (jnp.einsum("bsk,kh->bsh", xc.astype(jnp.float32), params["fgate"])
+             + params["fgate_b"])
+    return q, k, v, i_raw, f_raw, z
+
+
+def mlstm_cell_chunked(q, k, v, i_raw, f_raw, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,dh); i_raw,f_raw: (B,S,H). Returns h: (B,S,H,dh).
+    """
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    scale = dh ** -0.5
+    qc = q.reshape(B, nc, c, H, dh).astype(jnp.float32) * scale
+    kc = k.reshape(B, nc, c, H, dh).astype(jnp.float32)
+    vc = v.reshape(B, nc, c, H, dh).astype(jnp.float32)
+    ic = i_raw.reshape(B, nc, c, H)
+    logf = jax.nn.log_sigmoid(f_raw).reshape(B, nc, c, H)
+
+    g = jnp.cumsum(logf, axis=2)                         # (B,nc,c,H)
+    g_total = g[:, :, -1, :]                             # (B,nc,H)
+    # intra log-weights: w[i,j] = g_i - g_j + i_j  (j <= i)
+    lw = g[:, :, :, None, :] - g[:, :, None, :, :] + ic[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    lw = jnp.where(tri[None, None, :, :, None], lw, NEG_INF)
+    m_intra = jnp.max(lw, axis=3)                        # (B,nc,c,H)
+
+    def chunk_step(carry, xs):
+        C_st, n_st, m_st = carry                         # stabilized state
+        qb, kb, vb, lwb, m_in, gb, gt, ib = xs
+        # row stabilizer: max(inter-chunk, intra-chunk) log-scales
+        m_row = jnp.maximum(gb + m_st[:, None, :], m_in)         # (B,c,H)
+        w = jnp.exp(lwb - m_row[:, :, None, :])                  # (B,i,j,H)
+        scores = jnp.einsum("bihd,bjhd->bijh", qb, kb)
+        h_num = jnp.einsum("bijh,bjhd->bihd", w * scores, vb)
+        inter_scale = jnp.exp(gb + m_st[:, None, :] - m_row)     # (B,i,H)
+        h_num = h_num + inter_scale[..., None] * jnp.einsum(
+            "bihd,bhde->bihe", qb, C_st)
+        # normalizer: q·n with the same stabilization
+        qn = jnp.sum(w * scores, axis=2)                         # (B,i,H)
+        qn = qn + inter_scale * jnp.einsum("bihd,bhd->bih", qb, n_st)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_row))
+        h_out = h_num / denom[..., None]
+        # carry state to end of chunk
+        m_next = jnp.maximum(m_st + gt, jnp.max(gt[:, None, :] - gb + ib, axis=1))
+        w_state = jnp.exp(gt[:, None, :] - gb + ib - m_next[:, None, :])  # (B,j,H)
+        C_next = (jnp.exp(m_st + gt - m_next)[:, :, None, None] * C_st
+                  + jnp.einsum("bjh,bjhd,bjhe->bhde", w_state, kb, vb))
+        n_next = (jnp.exp(m_st + gt - m_next)[:, :, None] * n_st
+                  + jnp.einsum("bjh,bjhd->bhd", w_state, kb))
+        return (C_next, n_next, m_next), h_out
+
+    init = (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4),
+          m_intra.transpose(1, 0, 2, 3), g.transpose(1, 0, 2, 3),
+          g_total.transpose(1, 0, 2), ic.transpose(1, 0, 2, 3))
+    _, hs = jax.lax.scan(chunk_step, init, xs)           # (nc,B,c,H,dh)
+    return hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+
+def mlstm_forward(params, cfg, h):
+    di = d_inner(cfg)
+    dt = h.dtype
+    hn = L.rms_norm(h, params["ln"], cfg.norm_eps)
+    q, k, v, i_raw, f_raw, z = _mlstm_qkv_gates(params, cfg, hn)
+    hc = mlstm_cell_chunked(q, k, v, i_raw, f_raw, cfg.xlstm.chunk_size)
+    B, S = hc.shape[:2]
+    hc = hc.reshape(B, S, di).astype(dt)
+    hc = L.rms_norm(hc, params["onorm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", hc, params["down_proj"].astype(dt))
+    return h + out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (recurrent)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    k1, k2, k3 = L.split_keys(key, 3)
+    return {
+        "ln": jnp.ones((D,), jnp.float32),
+        "W": L.dense_init(k1, D, 4 * D),
+        "b": jnp.zeros((4 * D,), jnp.float32),
+        "R": jax.random.normal(k2, (H, dh, 4 * dh), jnp.float32) / (dh ** 0.5),
+        "onorm": jnp.ones((D,), jnp.float32),
+        "out_proj": L.dense_init(k3, D, D),
+    }
+
+
+def slstm_axes(cfg):
+    return {
+        "ln": ("embed",), "W": ("embed", None), "b": (None,),
+        "R": (None, None, None),
+        "onorm": ("embed",), "out_proj": ("embed", "embed"),
+    }
+
+
+def _slstm_step(params, cfg, carry, xg_t):
+    """carry: (h, c, n, m) each (B,H,dh); xg_t: (B,4,H,dh) input gates."""
+    h, c, n, m = carry
+    rg = jnp.einsum("bhd,hdk->bhk", h, params["R"])
+    B, H, dh4 = rg.shape
+    dh = dh4 // 4
+    raw = xg_t + rg.reshape(B, H, 4, dh).transpose(0, 2, 1, 3)
+    i_raw, f_raw, z_raw, o_raw = raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3]
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(f_raw + m - m_new)
+    c_new = f * c + i * jnp.tanh(z_raw)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(params, cfg, h):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    B, S = h.shape[:2]
+    dt = h.dtype
+    hn = L.rms_norm(h, params["ln"], cfg.norm_eps)
+    xg = (jnp.einsum("bsd,dk->bsk", hn.astype(jnp.float32), params["W"])
+          + params["b"])                                  # (B,S,4D)
+    xg = xg.reshape(B, S, 4, H, dh)
+
+    def step(carry, x_t):
+        new = _slstm_step(params, cfg, carry, x_t)
+        return new, new[0]
+
+    init = tuple(jnp.zeros((B, H, dh), jnp.float32) for _ in range(4))
+    _, hs = jax.lax.scan(step, init, xg.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(dt)
+    hs = L.rms_norm(hs, params["onorm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", hs, params["out_proj"].astype(dt))
+    return h + out
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def group_layout(cfg):
+    k = cfg.xlstm.slstm_every
+    assert cfg.n_layers % k == 0
+    return cfg.n_layers // k, k - 1     # groups of (k-1 mLSTM + 1 sLSTM)
+
+
+def init(key, cfg):
+    ke, km, ks, kh = L.split_keys(key, 4)
+    g, m_per = group_layout(cfg)
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model),
+        "mlstm": jax.vmap(lambda kk: jax.vmap(
+            lambda k2: init_mlstm(k2, cfg))(jnp.stack(jax.random.split(kk, m_per))))(
+                jnp.stack(L.split_keys(km, g))),
+        "slstm": jax.vmap(lambda kk: init_slstm(kk, cfg))(
+            jnp.stack(L.split_keys(ks, g))),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab),
+    }
+    return params
+
+
+def axes(cfg):
+    add = lambda t, n: jax.tree.map(lambda a: (None,) * n + a, t,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": ("vocab", "embed"),
+        "mlstm": add(mlstm_axes(cfg), 2),
+        "slstm": add(slstm_axes(cfg), 1),
+        "final_norm": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+def forward(params, cfg, tokens, *, return_cache: bool = False, **_):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    h = shard(h, "batch", "seq", "embed")
+
+    def m_body(h_, lp):
+        h_ = mlstm_forward(lp, cfg, h_)
+        return shard(h_, "batch", "seq", "embed"), None
+
+    if cfg.remat_policy != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        m_body = jax.checkpoint(m_body, policy=policy)
+
+    def group(h_, gp):
+        mp, sp = gp
+        h_, _ = jax.lax.scan(m_body, h_, mp)
+        h_ = slstm_forward(sp, cfg, h_)
+        return h_, None
+
+    h, _ = jax.lax.scan(group, h, (params["mlstm"], params["slstm"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))
+    return logits, jnp.zeros((), jnp.float32), None
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
+    g, m_per = group_layout(cfg)
+    di = d_inner(cfg)
+    H = cfg.n_heads
+    dh_m = di // H
+    dh_s = cfg.d_model // H
+    return {
+        "mlstm": {
+            "C": jnp.zeros((g, m_per, batch, H, dh_m, dh_m), jnp.float32),
+            "n": jnp.zeros((g, m_per, batch, H, dh_m), jnp.float32),
+            "m": jnp.zeros((g, m_per, batch, H), jnp.float32),
+            "conv": jnp.zeros((g, m_per, batch, 3, di), dtype),
+        },
+        "slstm": tuple(jnp.zeros((g, batch, H, dh_s), jnp.float32)
+                       for _ in range(4)),
+    }
+
+
+def cache_axes(cfg):
+    return {
+        "mlstm": {
+            "C": (None, None, "batch", None, "ssm_state", None),
+            "n": (None, None, "batch", None, "ssm_state"),
+            "m": (None, None, "batch", None),
+            "conv": (None, None, "batch", None, "ssm_inner"),
+        },
+        "slstm": tuple((None, "batch", None, None) for _ in range(4)),
+    }
+
+
+def mlstm_decode(params, cfg, h, state):
+    """One-step stabilized mLSTM recurrence. h: (B,1,D)."""
+    di = d_inner(cfg)
+    H = cfg.n_heads
+    dh = di // H
+    dt = h.dtype
+    hn = L.rms_norm(h, params["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,dk->bsk", hn, params["up_proj"].astype(dt))
+    x_in, z = up[..., :di], up[..., di:]
+    window = jnp.concatenate([state["conv"], x_in.astype(state["conv"].dtype)], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                                params["conv_w"].astype(jnp.float32))
+                     + params["conv_b"])                # (B,di)
+    xch = xc.reshape(-1, H, dh)
+    xih = x_in[:, 0].astype(jnp.float32).reshape(-1, H, dh)
+    q = jnp.einsum("bhd,hde->bhe", xch, params["wq"]) * (dh ** -0.5)
+    k = jnp.einsum("bhd,hde->bhe", xch, params["wk"])
+    v = jnp.einsum("bhd,hde->bhe", xih, params["wv"])
+    i_raw = xc @ params["igate"] + params["igate_b"]    # (B,H)
+    f_raw = xc @ params["fgate"] + params["fgate_b"]
+    logf = jax.nn.log_sigmoid(f_raw)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, i_raw)
+    fs = jnp.exp(logf + m - m_new)
+    is_ = jnp.exp(i_raw - m_new)
+    C_new = fs[..., None, None] * C + is_[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n_new = fs[..., None] * n + is_[..., None] * k
+    qn = jnp.einsum("bhd,bhd->bh", q, n_new)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h_out = jnp.einsum("bhd,bhde->bhe", q, C_new) / denom[..., None]
+    hc = h_out.reshape(-1, 1, di).astype(dt)
+    hc = L.rms_norm(hc, params["onorm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", hc, params["down_proj"].astype(dt))
+    new_state = {"C": C_new, "n": n_new, "m": m_new, "conv": window[:, 1:]}
+    return h + out, new_state
+
+
+def slstm_decode(params, cfg, h, state):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    B = h.shape[0]
+    dt = h.dtype
+    hn = L.rms_norm(h, params["ln"], cfg.norm_eps)
+    xg = (jnp.einsum("bsd,dk->bsk", hn.astype(jnp.float32), params["W"])
+          + params["b"])[:, 0].reshape(B, 4, H, dh)
+    new = _slstm_step(params, cfg, state, xg)
+    hs = new[0].reshape(B, 1, D).astype(dt)
+    hs = L.rms_norm(hs, params["onorm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", hs, params["out_proj"].astype(dt))
+    return h + out, new
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def m_body(h_, xs):
+        lp, st = xs
+        h_, st = mlstm_decode(lp, cfg, h_, st)
+        return h_, st
+
+    def group(h_, xs):
+        mp, mst, sp, sst = xs
+        h_, mst = jax.lax.scan(m_body, h_, (mp, mst))
+        h_, sst = slstm_decode(sp, cfg, h_, sst)
+        return h_, (mst, sst)
+
+    h, (mstates, sstates) = jax.lax.scan(
+        group, h, (params["mlstm"], cache["mlstm"], params["slstm"], cache["slstm"]))
+    new_cache = {"mlstm": mstates, "slstm": sstates}
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))
+    return logits, new_cache

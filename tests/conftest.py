@@ -1,0 +1,25 @@
+import os
+import sys
+from pathlib import Path
+
+# tests must see the real device count (1 CPU device) — the 512-device
+# flag is only ever set inside repro.launch.dryrun subprocesses.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def synthetic_sequence():
+    """One shared small synthetic stereo/IMU/GPS sequence."""
+    from repro.data import frames
+    return frames.generate(n_frames=14, H=120, W=160, n_landmarks=240,
+                           gps_available=True, accel_sigma=0.5,
+                           gyro_sigma=0.02, seed=0)

@@ -1,0 +1,260 @@
+"""Backend: matrix blocks vs numpy, MSCKF behaviors, BA convergence,
+marginalization structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import fusion, mapping, matrix_blocks as mb, msckf, tracking
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestMatrixBlocks:
+    def test_solve_spd(self):
+        m = jax.random.normal(KEY, (40, 40))
+        s = m @ m.T + 40 * jnp.eye(40)
+        b = jax.random.normal(jax.random.fold_in(KEY, 1), (40, 5))
+        x = mb.solve_spd(s, b)
+        np.testing.assert_allclose(s @ x, b, rtol=1e-3, atol=1e-3)
+
+    def test_inverse_spd(self):
+        m = jax.random.normal(KEY, (24, 24))
+        s = m @ m.T + 24 * jnp.eye(24)
+        np.testing.assert_allclose(mb.inverse_spd(s) @ s, jnp.eye(24),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_block_diag_schur_inverse(self):
+        n, k = 18, 6
+        a_diag = jnp.abs(jax.random.normal(KEY, (n,))) + 1.0
+        B = jax.random.normal(jax.random.fold_in(KEY, 2), (n, k)) * 0.1
+        m = jax.random.normal(jax.random.fold_in(KEY, 3), (k, k))
+        D = m @ m.T + k * jnp.eye(k)
+        tl, tr, bl, br = mb.block_diag_schur_inverse(a_diag, B, D)
+        M = jnp.block([[jnp.diag(a_diag), B], [B.T, D]])
+        Minv = jnp.block([[tl, tr], [bl, br]])
+        np.testing.assert_allclose(M @ Minv, jnp.eye(n + k), rtol=1e-3,
+                                   atol=2e-3)
+
+    def test_kalman_gain_matches_closed_form(self):
+        d, m_ = 12, 6
+        a = jax.random.normal(KEY, (d, d))
+        P = a @ a.T / d + jnp.eye(d)
+        H = jax.random.normal(jax.random.fold_in(KEY, 4), (m_, d))
+        K = mb.kalman_gain(P, H, 0.5)
+        S = H @ P @ H.T + 0.5 * jnp.eye(m_)
+        K_ref = P @ H.T @ jnp.linalg.inv(S)
+        np.testing.assert_allclose(K, K_ref, rtol=1e-3, atol=1e-3)
+
+
+class TestMsckf:
+    def _make_scene(self, W=6):
+        rng = np.random.RandomState(0)
+        gt_p = np.stack([np.array([0.1 * i, 0.01 * i, 0.4 * i])
+                         for i in range(W)])
+        gt_q = np.tile([1.0, 0, 0, 0], (W, 1))
+        lms = np.stack([rng.uniform(-6, 6, 12), rng.uniform(-4, 4, 12),
+                        rng.uniform(8, 18, 12)], 1)
+        fx = fy = 144.0
+        cx, cy = 80.0, 60.0
+        uv = np.zeros((12, W, 2), np.float32)
+        for j in range(12):
+            for w in range(W):
+                pc = lms[j] - gt_p[w]
+                uv[j, w] = [fx * pc[0] / pc[2] + cx, fy * pc[1] / pc[2] + cy]
+        return gt_p, gt_q, lms, uv, (fx, fy, cx, cy)
+
+    def _state_with_clones(self, clones_p, gt_q, W, clone_sigma2=0.05):
+        st = msckf.init_state(W, p0=jnp.asarray(clones_p[-1], jnp.float32))
+        P = np.eye(15 + 6 * W, dtype=np.float32) * 1e-4
+        P[15:, 15:] = np.eye(6 * W) * clone_sigma2
+        return st._replace(clones_q=jnp.asarray(gt_q, jnp.float32),
+                           clones_p=jnp.asarray(clones_p, jnp.float32),
+                           P=jnp.asarray(P))
+
+    def test_update_is_noop_at_truth(self):
+        gt_p, gt_q, lms, uv, intr = self._make_scene()
+        st = self._state_with_clones(gt_p, gt_q, 6)
+        vd = jnp.ones((12, 6), bool)
+        st2, dxn = msckf.update(st, jnp.asarray(uv), vd, *intr)
+        assert float(dxn) < 1e-3
+        assert not bool(jnp.any(jnp.isnan(st2.P)))
+
+    def test_update_reduces_clone_error(self):
+        gt_p, gt_q, lms, uv, intr = self._make_scene()
+        rng = np.random.RandomState(1)
+        err = rng.randn(6, 3) * 0.1
+        st = self._state_with_clones(gt_p + err, gt_q, 6)
+        st2, _ = msckf.update(st, jnp.asarray(uv), jnp.ones((12, 6), bool),
+                              *intr)
+        before = np.abs(err).mean()
+        after = np.abs(np.asarray(st2.clones_p) - gt_p).mean()
+        assert after < 0.75 * before
+
+    def test_triangulation_with_parallax(self):
+        gt_p, gt_q, lms, uv, intr = self._make_scene()
+        st = self._state_with_clones(gt_p, gt_q, 6)
+        pw, ok = msckf.triangulate(jnp.asarray(uv[0]), jnp.ones(6, bool),
+                                   st.clones_q, st.clones_p, *intr)
+        assert bool(ok)
+        np.testing.assert_allclose(pw, lms[0], rtol=0.05, atol=0.2)
+
+    def test_parallax_gate_rejects_degenerate(self):
+        # all observations from the SAME pose: no parallax -> rejected
+        gt_p, gt_q, lms, uv, intr = self._make_scene()
+        same = np.tile(uv[0, :1], (6, 1))
+        st = self._state_with_clones(np.tile(gt_p[:1], (6, 1)), gt_q, 6)
+        _, ok = msckf.triangulate(jnp.asarray(same), jnp.ones(6, bool),
+                                  st.clones_q, st.clones_p, *intr)
+        assert not bool(ok)
+
+    def test_propagate_integrates_gravity_free_motion(self):
+        st = msckf.init_state(4, v0=jnp.asarray([1.0, 0, 0]))
+        accel = jnp.tile(-msckf.GRAVITY[None], (10, 1))  # hover: specific force
+        gyro = jnp.zeros((10, 3))
+        st2 = msckf.propagate(st, accel, gyro, 0.01)
+        np.testing.assert_allclose(st2.p, [0.1, 0, 0], atol=1e-3)
+        np.testing.assert_allclose(st2.v, [1.0, 0, 0], atol=1e-3)
+        # covariance grows under propagation
+        assert float(jnp.trace(st2.P[:15, :15])) > float(
+            jnp.trace(st.P[:15, :15]))
+
+    def test_gps_update_pulls_position(self):
+        st = msckf.init_state(4)
+        st = st._replace(P=st.P.at[3:6, 3:6].set(jnp.eye(3) * 1.0))
+        target = jnp.asarray([1.0, 2.0, 3.0])
+        st2, _ = fusion.gps_update(st, target, sigma_gps=0.01)
+        np.testing.assert_allclose(st2.p, target, atol=0.05)
+
+    def test_gps_update_nan_safe(self):
+        st = msckf.init_state(4)
+        st2, dxn = fusion.gps_update(st, jnp.asarray([jnp.nan] * 3))
+        assert float(dxn) == 0.0
+        assert not bool(jnp.any(jnp.isnan(st2.P)))
+
+
+class TestMapping:
+    def _make_ba(self, K=4, M=24, noise=0.0, pose_err=0.05):
+        rng = np.random.RandomState(0)
+        fx = fy = 144.0
+        cx, cy = 80.0, 60.0
+        lms = np.stack([rng.uniform(-5, 5, M), rng.uniform(-3, 3, M),
+                        rng.uniform(6, 20, M)], 1)
+        poses_p = np.stack([[0.2 * k, 0.0, 0.5 * k] for k in range(K)])
+        obs = np.zeros((K, M, 2), np.float32)
+        for k in range(K):
+            pc = lms - poses_p[k]
+            obs[k, :, 0] = fx * pc[:, 0] / pc[:, 2] + cx
+            obs[k, :, 1] = fy * pc[:, 1] / pc[:, 2] + cy
+        obs += rng.randn(*obs.shape) * noise
+        perturb = rng.randn(K, 3) * pose_err
+        perturb[0] = 0.0          # pose 0 is the gauge anchor
+        prob = mapping.BAProblem(
+            poses_R=jnp.tile(jnp.eye(3)[None], (K, 1, 1)),
+            poses_p=jnp.asarray(poses_p + perturb, jnp.float32),
+            landmarks=jnp.asarray(lms + rng.randn(M, 3) * 0.2, jnp.float32),
+            obs_uv=jnp.asarray(obs),
+            obs_valid=jnp.ones((K, M), bool),
+            intrinsics=jnp.asarray([fx, fy, cx, cy]))
+        return prob, lms, poses_p
+
+    def test_lm_reduces_cost(self):
+        prob, lms, poses_p = self._make_ba(noise=0.2)
+        r0, _, _ = mapping.residuals(prob, jnp.zeros((4, 6)),
+                                     jnp.zeros((24, 3)))
+        c0 = float(jnp.sum(r0 ** 2))
+        prob2, costs = mapping.lm_optimize(prob, iters=8)
+        assert float(costs[-1]) < 0.05 * c0
+
+    def test_lm_recovers_poses(self):
+        prob, lms, poses_p = self._make_ba(noise=0.1, pose_err=0.08)
+        prob2, _ = mapping.lm_optimize(prob, iters=10)
+        err_before = np.abs(np.asarray(prob.poses_p) - poses_p).mean()
+        err_after = np.abs(np.asarray(prob2.poses_p) - poses_p).mean()
+        assert err_after < 0.5 * err_before
+
+    def test_marginalization_matches_dense_reference(self):
+        import scipy.linalg as sla
+        prob, _, _ = self._make_ba()
+        K, M = 4, 24
+        r, Jx, Jl = mapping.residuals(prob, jnp.zeros((K, 6)),
+                                      jnp.zeros((M, 3)))
+        Hpp, Hpl, Hll, bp, bl = mapping.build_normal_eqs(r, Jx, Jl)
+        H_prior, b_prior = mapping.marginalize(Hpp, Hpl, Hll, bp, bl)
+        assert H_prior.shape == (18, 18) and b_prior.shape == (18,)
+
+        # dense brute-force Schur complement as the oracle
+        n_m = 3 * M + 6
+        n_k = 6 * (K - 1)
+        H = np.zeros((n_m + n_k, n_m + n_k))
+        H[:3 * M, :3 * M] = sla.block_diag(
+            *[np.asarray(Hll[m]) for m in range(M)])
+        H[3 * M:n_m, 3 * M:n_m] = np.asarray(Hpp[0])
+        for m in range(M):
+            H[3 * m:3 * m + 3, 3 * M:n_m] = np.asarray(Hpl[0, m]).T
+            H[3 * M:n_m, 3 * m:3 * m + 3] = np.asarray(Hpl[0, m])
+        for k in range(1, K):
+            o = n_m + 6 * (k - 1)
+            H[o:o + 6, o:o + 6] = np.asarray(Hpp[k])
+            for m in range(M):
+                H[o:o + 6, 3 * m:3 * m + 3] = np.asarray(Hpl[k, m])
+                H[3 * m:3 * m + 3, o:o + 6] = np.asarray(Hpl[k, m]).T
+        b = np.concatenate([np.asarray(bl).reshape(-1), np.asarray(bp[0]),
+                            np.asarray(bp[1:]).reshape(-1)])
+        Hmm = H[:n_m, :n_m] + 1e-4 * np.eye(n_m)
+        Hmk = H[:n_m, n_m:]
+        ref_H = H[n_m:, n_m:] - Hmk.T @ np.linalg.solve(Hmm, Hmk)
+        ref_b = b[n_m:] - Hmk.T @ np.linalg.solve(Hmm, b[:n_m])
+        scale = np.abs(ref_H).max()
+        np.testing.assert_allclose(H_prior, ref_H, atol=1e-4 * scale)
+        np.testing.assert_allclose(b_prior, ref_b,
+                                   atol=1e-4 * max(np.abs(ref_b).max(), 1))
+        # PSD up to fp32 numerics (relative to spectral scale)
+        evals = np.linalg.eigvalsh(np.asarray(H_prior))
+        assert evals.min() > -1e-4 * evals.max()
+
+
+class TestTracking:
+    def test_projection_kernel(self):
+        P34 = jnp.asarray(np.random.RandomState(0).randn(3, 4), jnp.float32)
+        X = jnp.asarray(np.random.RandomState(1).rand(4, 50) + 0.5,
+                        jnp.float32)
+        uv = tracking.project(P34, X)
+        ph = np.asarray(P34) @ np.asarray(X)
+        np.testing.assert_allclose(uv, ph[:2] / ph[2], rtol=1e-4, atol=1e-4)
+
+    def test_pnp_recovers_pose(self):
+        rng = np.random.RandomState(0)
+        fx = fy = 144.0
+        cx, cy = 80.0, 60.0
+        lms = np.stack([rng.uniform(-5, 5, 40), rng.uniform(-3, 3, 40),
+                        rng.uniform(6, 20, 40)], 1).astype(np.float32)
+        p_true = np.array([0.4, -0.2, 0.3], np.float32)
+        pc = lms - p_true
+        obs = np.stack([fx * pc[:, 0] / pc[:, 2] + cx,
+                        fy * pc[:, 1] / pc[:, 2] + cy], 1).astype(np.float32)
+        R, p, costs = tracking.pnp_gauss_newton(
+            jnp.asarray(lms), jnp.asarray(obs), jnp.ones(40, bool),
+            jnp.eye(3), jnp.zeros(3), jnp.asarray([fx, fy, cx, cy]))
+        np.testing.assert_allclose(p, p_true, atol=0.02)
+
+    def test_bow_histogram_discriminates(self):
+        rng = np.random.RandomState(0)
+        planes = jnp.asarray(tracking.make_vocab(256))
+        d1 = jnp.asarray(rng.rand(64, 256) > 0.5)
+        d2 = jnp.asarray(rng.rand(64, 256) > 0.5)
+        v = jnp.ones(64, bool)
+        h1 = tracking.bow_histogram(d1, v, planes)
+        h1b = tracking.bow_histogram(d1, v, planes)
+        h2 = tracking.bow_histogram(d2, v, planes)
+        assert float(h1 @ h1b) > float(h1 @ h2)
+
+    def test_place_recognition_picks_self(self):
+        rng = np.random.RandomState(0)
+        planes = jnp.asarray(tracking.make_vocab(256))
+        descs = [jnp.asarray(rng.rand(64, 256) > 0.5) for _ in range(5)]
+        v = jnp.ones(64, bool)
+        hists = jnp.stack([tracking.bow_histogram(d, v, planes)
+                           for d in descs])
+        idx, score = tracking.place_recognition(hists[3], hists)
+        assert int(idx) == 3

@@ -1,0 +1,85 @@
+"""Assigned architecture configs: exact public dims + shape rules."""
+import pytest
+
+from repro.configs import (SHAPES, all_configs, get_config, get_shape,
+                           list_configs, reduced)
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab)
+ASSIGNED = {
+    "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+}
+
+
+def test_all_assigned_archs_present():
+    assert set(list_configs()) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_exact_dims(name):
+    L, D, H, KV, FF, V = ASSIGNED[name]
+    cfg = get_config(name)
+    assert cfg.n_layers == L
+    assert cfg.d_model == D
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == FF
+    assert cfg.vocab == V
+    assert cfg.source, "must carry [source; tier] provenance"
+
+
+def test_family_markers():
+    assert get_config("qwen3-14b").qk_norm
+    assert get_config("zamba2-1.2b").ssm.d_state == 64
+    assert get_config("zamba2-1.2b").ssm.shared_attn_interval == 6
+    moe = get_config("qwen2-moe-a2.7b").moe
+    assert (moe.n_experts, moe.top_k, moe.n_shared) == (60, 4, 4)
+    moe2 = get_config("olmoe-1b-7b").moe
+    assert (moe2.n_experts, moe2.top_k) == (64, 8)
+    assert get_config("musicgen-large").n_codebooks == 4
+    assert get_config("llama-3.2-vision-11b").cross_attn_interval == 5
+
+
+def test_shape_table():
+    names = {s.name: s for s in SHAPES}
+    assert names["train_4k"].kind == "train"
+    assert names["train_4k"].seq_len == 4096 and names["train_4k"].global_batch == 256
+    assert names["prefill_32k"].seq_len == 32768 and names["prefill_32k"].global_batch == 32
+    assert names["decode_32k"].global_batch == 128
+    assert names["long_500k"].seq_len == 524288 and names["long_500k"].global_batch == 1
+
+
+def test_long_context_applicability():
+    long = get_shape("long_500k")
+    runs = {n for n in list_configs() if long.applicable(get_config(n))}
+    assert runs == {"zamba2-1.2b", "xlstm-1.3b"}
+    assert "full-attention" in long.skip_reason(get_config("qwen3-14b"))
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_reduced_keeps_topology(name):
+    cfg = get_config(name)
+    r = reduced(cfg)
+    assert r.family == cfg.family
+    assert (r.moe is None) == (cfg.moe is None)
+    assert (r.ssm is None) == (cfg.ssm is None)
+    assert r.d_model <= 64 and r.vocab <= 256
+
+
+def test_param_counts_in_band():
+    # analytic counts should be within ~35% of the advertised sizes
+    expect = {"qwen3-14b": 14e9, "stablelm-1.6b": 1.6e9,
+              "command-r-plus-104b": 104e9, "codeqwen1.5-7b": 7e9,
+              "olmoe-1b-7b": 7e9, "zamba2-1.2b": 1.2e9,
+              "xlstm-1.3b": 1.3e9}
+    for name, n in expect.items():
+        got = get_config(name).param_count()
+        assert 0.6 * n < got < 1.6 * n, (name, got, n)

@@ -1,0 +1,115 @@
+"""Dry-run machinery: jaxpr cost walker exactness, HLO collective parser
+(incl. trip-count correction), roofline terms, input specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis, jaxpr_cost
+
+
+def test_jaxpr_scan_trip_counts():
+    W = jnp.ones((64, 64))
+
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ W, None), x, None, length=7)
+        return y
+
+    est = jaxpr_cost.estimate(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    assert est["matmul_flops"] == 7 * 2 * 64 ** 3
+
+
+def test_jaxpr_remat_counts_recompute():
+    def layer(h, w):
+        return jnp.tanh(h @ w), None
+
+    def model(ws, x):
+        body = jax.checkpoint(layer,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(h)
+
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    mm = 2 * 32 ** 3
+    fwd = jaxpr_cost.estimate(model, ws, x)["matmul_flops"] / mm
+    bwd = jaxpr_cost.estimate(jax.grad(model), ws, x)["matmul_flops"] / mm
+    assert fwd == 5
+    assert bwd == 20          # 5 fwd + 5 recompute + 10 bwd
+
+
+def test_collective_parser_trip_correction():
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = f32[256]{0} all-gather(%y), replica_groups={}
+  ROOT %r = f32[128] get-tuple-element(%w), index=1
+}
+"""
+    stats = hlo_analysis.collective_stats(hlo)
+    assert stats["all-reduce"]["count"] == 12
+    assert stats["all-reduce"]["bytes"] == 12 * 128 * 4
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 256 * 4
+
+
+def test_roofline_terms_dominance():
+    t = hlo_analysis.roofline_terms(197e12, 0.0, 0.0)   # 1s of compute
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    t2 = hlo_analysis.roofline_terms(0.0, 819e9, 50e9)
+    assert t2["dominant"] in ("memory_s", "collective_s")
+
+
+def test_shape_bytes_parser():
+    assert hlo_analysis._shape_bytes("f32[128,4]") == 128 * 4 * 4
+    assert hlo_analysis._shape_bytes("(bf16[64], s32[8])") == 64 * 2 + 8 * 4
+    assert hlo_analysis._shape_bytes("pred[]") == 1
+
+
+def test_input_specs_cover_all_archs():
+    """Every (arch, shape) cell must produce abstract inputs + specs."""
+    from repro.configs import SHAPES, get_config, list_configs
+    from repro.distributed.sharding import LogicalRules
+    from repro.launch import steps as steps_lib
+    import tests.test_sharding as ts
+
+    rules = LogicalRules(ts.fake_mesh((2, 2), ("data", "model")))
+    for arch in list_configs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if not shape.applicable(cfg):
+                continue
+            if shape.kind == "train":
+                batch, specs = steps_lib.train_batch_specs(cfg, shape, rules)
+                assert batch["tokens"].shape[0] == shape.global_batch
+            elif shape.kind == "decode":
+                args, in_specs = steps_lib.decode_inputs(cfg, shape, rules)
+                assert len(args) == 4
+            else:
+                (params, batch), _ = steps_lib.prefill_inputs(cfg, shape, rules)
+
+
+def test_model_flops_accounting():
+    from repro.configs import get_config, get_shape
+    from repro.launch.dryrun import model_flops
+    cfg = get_config("stablelm-1.6b")
+    n = cfg.param_count()
+    mf = model_flops(cfg, get_shape("train_4k"))
+    assert abs(mf - 6 * n * 256 * 4096) / mf < 1e-6
+    # MoE uses ACTIVE params
+    moe = get_config("olmoe-1b-7b")
+    assert model_flops(moe, get_shape("train_4k")) < \
+        6 * moe.param_count() * 256 * 4096

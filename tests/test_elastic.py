@@ -1,0 +1,47 @@
+"""Elastic scaling: degraded-fleet mesh planning + checkpoint-mediated
+re-mesh restore."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_pytree
+from repro.distributed.elastic import plan_mesh, reshard_restore
+
+
+class TestPlanMesh:
+    def test_full_fleet(self):
+        shape, axes = plan_mesh(512, model_parallel=16, pod_size=256)
+        assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+
+    def test_one_pod(self):
+        shape, axes = plan_mesh(256, model_parallel=16)
+        assert shape == (16, 16) and axes == ("data", "model")
+
+    def test_degraded_keeps_model_axis(self):
+        # lose half a pod: model parallelism survives, data shrinks
+        shape, axes = plan_mesh(128, model_parallel=16)
+        assert shape == (8, 16)
+
+    def test_tiny_fleet_shrinks_model(self):
+        shape, axes = plan_mesh(8, model_parallel=16)
+        assert shape[0] * shape[1] == 8
+        assert shape[1] <= 8
+
+    def test_indivisible_device_count(self):
+        shape, axes = plan_mesh(24, model_parallel=16)
+        assert int(np.prod(shape)) == 24
+
+
+def test_reshard_restore_roundtrip(tmp_path):
+    """Checkpoint written 'elsewhere' restores onto this host's mesh with
+    requested shardings (global arrays => mesh-independent)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8),
+            "b": jnp.ones(8)}
+    save_pytree(tree, tmp_path / "ckpt.npz")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    specs = {"w": P(None, None), "b": P(None)}
+    restored = reshard_restore({"w": jnp.zeros((4, 8)), "b": jnp.zeros(8)},
+                               tmp_path / "ckpt.npz", mesh, specs)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    assert restored["w"].sharding.mesh.shape == {"data": 1, "model": 1}

@@ -1,0 +1,92 @@
+"""Frontend validation against synthetic ground truth: FAST finds the
+rendered landmarks, stereo disparity and LK flow match geometry."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.eudoxus import EDX_DRONE
+from repro.core.frontend import fast
+from repro.core.frontend.pipeline import run_frontend
+
+
+@pytest.fixture(scope="module")
+def fe_cfg():
+    return dataclasses.replace(EDX_DRONE.frontend, height=120, width=160,
+                               max_features=128)
+
+
+def gt_projections(seq, frame):
+    cam = seq.cam
+    R = seq.poses[frame][:3, :3]
+    t = seq.poses[frame][:3, 3]
+    pw = (seq.landmarks - t) @ R
+    z = pw[:, 2]
+    u = cam.fx * pw[:, 0] / np.maximum(z, 1e-6) + cam.cx
+    v = cam.fy * pw[:, 1] / np.maximum(z, 1e-6) + cam.cy
+    vis = (z > 0.5) & (u > 4) & (u < 156) & (v > 4) & (v < 116)
+    return u, v, z, vis
+
+
+def test_fast_detects_landmarks(synthetic_sequence, fe_cfg):
+    seq = synthetic_sequence
+    r = run_frontend(jnp.asarray(seq.images_left[0]),
+                     jnp.asarray(seq.images_right[0]), fe_cfg)
+    n_valid = int(r.valid.sum())
+    assert n_valid >= 40, "should detect a healthy share of rendered blobs"
+    u, v, z, vis = gt_projections(seq, 0)
+    yx = np.asarray(r.yx)[np.asarray(r.valid)]
+    dists = []
+    for y, x in yx:
+        d = np.hypot(u[vis] - x, v[vis] - y).min()
+        dists.append(d)
+    assert np.median(dists) < 2.0, "features should sit on landmarks"
+
+
+def test_stereo_disparity_accuracy(synthetic_sequence, fe_cfg):
+    seq = synthetic_sequence
+    cam = seq.cam
+    r = run_frontend(jnp.asarray(seq.images_left[0]),
+                     jnp.asarray(seq.images_right[0]), fe_cfg)
+    u, v, z, vis = gt_projections(seq, 0)
+    sv = np.asarray(r.stereo_valid)
+    assert sv.sum() >= 25
+    yx = np.asarray(r.yx)
+    disp = np.asarray(r.disparity)
+    errs = []
+    for i in np.nonzero(sv)[0]:
+        j = np.argmin(np.hypot(u[vis] - yx[i, 1], v[vis] - yx[i, 0]))
+        if np.hypot(u[vis][j] - yx[i, 1], v[vis][j] - yx[i, 0]) < 2:
+            errs.append(abs(cam.fx * cam.baseline / z[vis][j] - disp[i]))
+    assert np.median(errs) < 1.0, f"median disparity error {np.median(errs)}"
+
+
+def test_lk_tracking_accuracy(synthetic_sequence, fe_cfg):
+    seq = synthetic_sequence
+    il0 = jnp.asarray(seq.images_left[0])
+    r0 = run_frontend(il0, jnp.asarray(seq.images_right[0]), fe_cfg)
+    feats0 = fast.Features(yx=r0.yx, score=r0.score, valid=r0.valid)
+    r1 = run_frontend(jnp.asarray(seq.images_left[1]),
+                      jnp.asarray(seq.images_right[1]), fe_cfg, il0, feats0)
+    tv = np.asarray(r1.track_valid)
+    assert tv.sum() >= 25
+    u0, v0, _, vis0 = gt_projections(seq, 0)
+    u1, v1, _, _ = gt_projections(seq, 1)
+    yx0 = np.asarray(r0.yx)
+    ty = np.asarray(r1.prev_yx)
+    errs = []
+    for i in np.nonzero(tv)[0]:
+        j = np.argmin(np.hypot(u0[vis0] - yx0[i, 1], v0[vis0] - yx0[i, 0]))
+        if np.hypot(u0[vis0][j] - yx0[i, 1], v0[vis0][j] - yx0[i, 0]) < 2:
+            errs.append(np.hypot(u1[vis0][j] - ty[i, 1], v1[vis0][j] - ty[i, 0]))
+    assert np.median(errs) < 1.0, f"median flow error {np.median(errs)}"
+
+
+def test_descriptor_stability(synthetic_sequence, fe_cfg):
+    """Same feature across L/R views should have small hamming distance."""
+    seq = synthetic_sequence
+    r = run_frontend(jnp.asarray(seq.images_left[0]),
+                     jnp.asarray(seq.images_right[0]), fe_cfg)
+    # matched stereo pairs passed the hamming budget by construction
+    assert int(r.stereo_valid.sum()) >= 25

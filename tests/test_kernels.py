@@ -1,0 +1,96 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (blocked_matmul, cholesky, conv2d, fast_detect,
+                           flash_attention, ref, stereo_hamming)
+
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (64, 96, 160), (128, 256, 128),
+                                   (8, 128, 256), (56, 40, 72)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a = jax.random.normal(KEY, (m, k)).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n)).astype(dtype)
+    got = blocked_matmul.matmul(a, b, interpret=True)
+    want = ref.matmul(a, b)
+    # fp32: accumulation-order differences grow ~sqrt(k); scale atol
+    tol = 1e-3 if dtype == jnp.float32 else 2e-2
+    atol = (1e-6 * k ** 0.5) if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=atol)
+
+
+@pytest.mark.parametrize("B,S,T,H,D", [(1, 64, 64, 2, 32), (2, 128, 128, 4, 64),
+                                       (1, 32, 96, 1, 16)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, T, H, D, causal, dtype):
+    if causal and S != T:
+        pytest.skip("causal requires S == T in this harness")
+    ks = [jax.random.fold_in(KEY, i) for i in range(3)]
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, H, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, H, D)).astype(dtype)
+    got = flash_attention.flash_attention(q, k, v, causal=causal,
+                                          block_q=32, block_k=32,
+                                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("H,W", [(64, 96), (120, 160), (96, 128)])
+def test_conv2d_sweep(H, W):
+    img = jax.random.normal(KEY, (H, W)) * 20
+    k = jnp.asarray([[1., 2, 1], [2, 4, 2], [1, 2, 1]]) / 16
+    np.testing.assert_allclose(conv2d.conv2d_3x3(img, k, interpret=True),
+                               ref.conv2d_3x3(img, k), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("N,M", [(32, 32), (64, 96), (128, 256)])
+def test_hamming_sweep(N, M):
+    dl = jax.random.bits(KEY, (N, 8), jnp.uint32)
+    dr = jax.random.bits(jax.random.fold_in(KEY, 1), (M, 8), jnp.uint32)
+    got = stereo_hamming.hamming_distance(dl, dr, interpret=True)
+    np.testing.assert_array_equal(got, ref.hamming_distance(dl, dr))
+    # identical descriptors -> zero distance
+    z = stereo_hamming.hamming_distance(dl[:8], dl[:8], interpret=True)
+    np.testing.assert_array_equal(np.diag(z), np.zeros(8, np.int32))
+
+
+@pytest.mark.parametrize("n", [16, 64, 96, 128])
+def test_cholesky_sweep(n):
+    m = jax.random.normal(KEY, (n, n))
+    spd = m @ m.T + n * jnp.eye(n)
+    L = cholesky.cholesky(spd, interpret=True)
+    np.testing.assert_allclose(L @ L.T, spd, rtol=2e-4, atol=5e-3)
+    np.testing.assert_allclose(L, jnp.tril(L), atol=0)
+    want = ref.cholesky(spd)
+    np.testing.assert_allclose(L, want, rtol=2e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("H,W", [(64, 96), (96, 64)])
+@pytest.mark.parametrize("thr", [10.0, 25.0])
+def test_fast_score_sweep(H, W, thr):
+    img = jax.random.uniform(KEY, (H, W)) * 255
+    got = fast_detect.fast_score(img, thr, interpret=True)
+    want = ref.fast_score(img, thr)
+    np.testing.assert_allclose(got[16:-16, 16:-16], want[16:-16, 16:-16],
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_tri_solve_both_modes():
+    n = 24
+    m = jax.random.normal(KEY, (n, n))
+    L = jnp.tril(m) + n * jnp.eye(n)
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (n, 3))
+    x1 = ref.tri_solve(L, b, lower=True)
+    np.testing.assert_allclose(L @ x1, b, rtol=1e-4, atol=1e-4)
+    x2 = ref.tri_solve(L, b, lower=True, trans=True)
+    np.testing.assert_allclose(L.T @ x2, b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.backend import matrix_blocks as mb
+from repro.core.scheduler import RegressionModel
+from repro.distributed.sharding import DEFAULT_RULES, LogicalRules
+from repro.models import layers as L
+from repro.models.model import cross_entropy
+from repro.optim.compression import dequantize, quantize_int8
+
+import tests.test_sharding as ts
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64),
+       st.sampled_from(list(DEFAULT_RULES)))
+def test_spec_for_always_valid(d0, d1, ax):
+    """Any shape + any logical axes gives a spec with (a) no mesh axis used
+    twice, (b) every sharded dim divisible (unless forced)."""
+    r = LogicalRules(ts.fake_mesh())
+    spec = r.spec_for((d0, d1), (ax, "embed"))
+    mesh_sizes = {"data": 4, "model": 2}
+    used = []
+    for dim, part in zip((d0, d1), spec):
+        if part is None:
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        used += list(parts)
+        total = int(np.prod([mesh_sizes[p] for p in parts]))
+        assert dim % total == 0
+    assert len(used) == len(set(used))
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3), min_size=4, max_size=64))
+def test_quantize_error_bound(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q, scale = quantize_int8(x)
+    err = jnp.abs(dequantize(q, scale) - x)
+    assert float(jnp.max(err)) <= float(scale) * 0.5 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_error_feedback_conserves_signal(seed):
+    """quantized + residual == original exactly (error feedback identity)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32,))
+    q, scale = quantize_int8(x)
+    approx = dequantize(q, scale)
+    np.testing.assert_allclose(approx + (x - approx), x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 16))
+def test_rope_preserves_norm(seed, pairs):
+    """Rotary embedding is a rotation: per-pair norms are invariant."""
+    hd = 2 * pairs
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 5, 2, hd))
+    pos = jnp.arange(5)
+    y = L.rope(x, pos, theta=10_000.0)
+    nx = jnp.linalg.norm(x, axis=-1)
+    ny = jnp.linalg.norm(y, axis=-1)
+    np.testing.assert_allclose(nx, ny, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rms_norm_scale_invariance(seed):
+    """rms_norm(c*x) == rms_norm(x) for c>0 (scale invariance)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 16)) + 0.1
+    s = jnp.ones(16)
+    a = L.rms_norm(x, s)
+    b = L.rms_norm(x * 7.3, s)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 24))
+def test_cholesky_solve_roundtrip(seed, n):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    s = m @ m.T + n * jnp.eye(n)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 2))
+    x = mb.solve_spd(s, b)
+    np.testing.assert_allclose(s @ x, b, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8))
+def test_cross_entropy_bounds(seed, v):
+    """CE >= 0 and CE(uniform logits) == log(V)."""
+    labels = jax.random.randint(jax.random.PRNGKey(seed), (4, 6), 0, v)
+    uniform = jnp.zeros((4, 6, v))
+    ce = cross_entropy(uniform, labels, z_loss=0.0)
+    np.testing.assert_allclose(ce, np.log(v), rtol=1e-5)
+    logits = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 6, v))
+    assert float(cross_entropy(logits, labels, z_loss=0.0)) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.floats(1e-8, 1e-4), st.floats(0.0, 1e-3))
+def test_regression_monotone_prediction(a, b):
+    sizes = np.linspace(10, 1000, 20)
+    times = a * sizes + b
+    m = RegressionModel(1).fit(sizes, times)
+    assert m.r2 > 0.99
+    assert m.predict(2000) >= m.predict(100) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_token_stream_deterministic_and_bounded(seed):
+    from repro.data.tokens import TokenStream
+    s1 = TokenStream(100, 4, 16, seed=seed)
+    s2 = TokenStream(100, 4, 16, seed=seed)
+    b1 = s1.batch_at(5)["tokens"]
+    b2 = s2.batch_at(5)["tokens"]
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.min() >= 0 and b1.max() < 100
+    assert not np.array_equal(b1, s1.batch_at(6)["tokens"])

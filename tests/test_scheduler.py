@@ -1,0 +1,62 @@
+"""Runtime scheduler (paper Sec. VI-B): regression fit quality + offload
+decision structure."""
+import numpy as np
+
+from repro.core.scheduler import (KERNEL_MODELS, LatencyModels,
+                                  RegressionModel, VariationTracker)
+
+
+def test_linear_fit_r2():
+    sizes = np.linspace(100, 4000, 40)
+    times = 2e-6 * sizes + 1e-4 + np.random.RandomState(0).randn(40) * 5e-5
+    m = RegressionModel(1).fit(sizes, times)
+    assert m.r2 > 0.9
+    assert abs(m.predict(2000) - (2e-6 * 2000 + 1e-4)) < 3e-4
+
+
+def test_quadratic_fit_r2():
+    sizes = np.linspace(50, 600, 40)
+    times = 3e-8 * sizes ** 2 + 1e-4
+    times += np.random.RandomState(0).randn(40) * np.ptp(times) * 0.02
+    m = RegressionModel(2).fit(sizes, times)
+    assert m.r2 > 0.95, "paper reports R^2 = 0.82-0.98"
+
+
+def test_offload_decision_crossover():
+    """Small matrices stay on host (transfer dominates); large offload."""
+    lm = LatencyModels(transfer_bw=1e9, fixed_overhead_s=1e-3)
+    sizes = np.linspace(50, 2000, 30)
+    host = 5e-9 * sizes ** 2          # host quadratic
+    accel = 2e-10 * sizes ** 2        # accel 25x faster
+    lm.fit_kernel("kalman_gain", sizes, host, accel)
+    assert not lm.should_offload("kalman_gain", 60, transfer_bytes=10_000)
+    assert lm.should_offload("kalman_gain", 2000, transfer_bytes=10_000)
+
+
+def test_offload_monotone_in_transfer():
+    lm = LatencyModels(transfer_bw=1e9, fixed_overhead_s=0.0)
+    sizes = np.linspace(50, 2000, 30)
+    lm.fit_kernel("projection", sizes, 1e-6 * sizes, 1e-8 * sizes)
+    assert lm.should_offload("projection", 1000, transfer_bytes=0)
+    assert not lm.should_offload("projection", 1000,
+                                 transfer_bytes=10 ** 9)
+
+
+def test_default_offload_without_model():
+    assert LatencyModels().should_offload("marginalization", 100)
+
+
+def test_variation_tracker():
+    t = VariationTracker()
+    for x in [0.01, 0.012, 0.011, 0.04]:
+        t.add(x)
+    s = t.stats()
+    assert s["worst_over_best"] > 3.0
+    assert 0 < s["rsd"] < 1.0
+
+
+def test_kernel_model_degrees_match_paper():
+    # Fig. 16: projection linear; kalman gain / marginalization quadratic
+    assert KERNEL_MODELS["projection"] == 1
+    assert KERNEL_MODELS["kalman_gain"] == 2
+    assert KERNEL_MODELS["marginalization"] == 2

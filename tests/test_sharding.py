@@ -1,0 +1,108 @@
+"""Sharding rules: divisibility guarantees, ZeRO specs, multi-device
+behavior (subprocess with forced host device count)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (LogicalRules, default_rules,
+                                        opt_state_spec)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def fake_mesh(shape=(4, 2), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[:int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+class TestSpecFor:
+    def test_divisible_dims_shard(self):
+        r = LogicalRules(fake_mesh())
+        assert r.spec_for((8, 16), ("batch", "mlp")) == P("data", "model")
+
+    def test_non_divisible_falls_back(self):
+        r = LogicalRules(fake_mesh())
+        # 7 not divisible by any axis -> replicated
+        assert r.spec_for((7, 16), ("batch", "mlp")) == P(None, "model")
+
+    def test_no_axis_reuse(self):
+        r = LogicalRules(fake_mesh())
+        spec = r.spec_for((8, 8), ("mlp", "vocab"))   # both want "model"
+        used = [s for s in spec if s is not None]
+        assert len(used) == len(set(used)) == 1
+
+    def test_force_shard_uneven(self):
+        r = LogicalRules(fake_mesh())
+        spec = r.spec_for((3, 8), ("kv_heads!", "embed"))
+        assert spec[0] == "model"        # forced despite 3 % 2 != 0
+
+    def test_fsdp_rules(self):
+        r = default_rules(fake_mesh(), fsdp=True)
+        spec = r.spec_for((16, 8), ("embed", "mlp"))
+        assert spec == P("data", "model")
+
+    def test_multi_axis_batch(self):
+        mesh = fake_mesh((2, 2, 2), ("pod", "data", "model"))
+        r = LogicalRules(mesh)
+        assert r.spec_for((8, 4), ("batch", None)) == P(("pod", "data"), None)
+
+
+class TestOptStateSpec:
+    def test_adds_data_axis(self):
+        mesh = fake_mesh()
+        spec = opt_state_spec(P(None, "model"), (16, 8), mesh)
+        assert spec == P("data", "model")
+
+    def test_respects_existing_data(self):
+        mesh = fake_mesh()
+        spec = opt_state_spec(P("data", "model"), (16, 8), mesh)
+        assert spec == P("data", "model")
+
+    def test_skips_indivisible(self):
+        mesh = fake_mesh()
+        spec = opt_state_spec(P(None, "model"), (7, 8), mesh)
+        assert spec == P(None, "model")
+
+
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.sharding import LogicalRules, sharding_context, shard
+    from repro.optim.compression import make_compressed_grad_reduce
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = LogicalRules(mesh)
+
+    # activation constraint inside jit
+    def f(x):
+        with sharding_context(rules):
+            return shard(x * 2.0, "batch", "embed")
+    x = jnp.ones((8, 16))
+    y = jax.jit(f)(x)
+    np.testing.assert_allclose(y, 2.0)
+
+    # compressed all-reduce over a 2-way pod axis
+    mesh2 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    red = make_compressed_grad_reduce(mesh2, axis="pod")
+    g = {"w": jnp.ones((4, 4)) * 0.5}
+    e = {"w": jnp.zeros((4, 4))}
+    gm, e2 = red(g, e)
+    np.testing.assert_allclose(gm["w"], 0.5, atol=0.02)
+    print("MULTIDEV_OK")
+""")
+
+
+def test_multidevice_subprocess():
+    out = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=300)
+    assert "MULTIDEV_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,80 @@
+"""End-to-end behaviour of the paper's system: mode selection (Fig. 2),
+full localization runs per mode, variation tracking, map handoff."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.eudoxus import EDX_DRONE
+from repro.core.environment import Environment, Mode, select_mode
+from repro.core.localizer import Localizer
+
+
+def test_mode_taxonomy_matches_fig2():
+    assert select_mode(Environment(False, False)) == Mode.SLAM
+    assert select_mode(Environment(False, True)) == Mode.REGISTRATION
+    assert select_mode(Environment(True, False)) == Mode.VIO
+    assert select_mode(Environment(True, True)) == Mode.VIO
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=120, width=160,
+                             max_features=128)
+    return dataclasses.replace(EDX_DRONE, frontend=fe)
+
+
+def run_sequence(seq, cfg, env, n_frames=None, with_map=None, window=8):
+    loc = Localizer(cfg, seq.cam, window=window)
+    if with_map is not None:
+        loc.map = with_map
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    ipf = seq.imu_per_frame
+    n = n_frames or len(seq.images_left)
+    for i in range(n):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        gps = seq.gps[i] if env.gps_available else None
+        st = loc.step(st, seq.images_left[i], seq.images_right[i],
+                      a, g, gps, env, seq.dt / ipf)
+    return loc
+
+
+def test_vio_gps_mode(synthetic_sequence, small_cfg):
+    """Outdoor (paper Fig. 3c/d): VIO+GPS should be decimeter-accurate."""
+    env = Environment(gps_available=True, map_available=False)
+    loc = run_sequence(synthetic_sequence, small_cfg, env, n_frames=10)
+    rmse = loc.rmse(synthetic_sequence.poses[:, :3, 3])
+    assert rmse < 0.25, f"VIO+GPS rmse {rmse}"
+    assert len(loc.variation[Mode.VIO].samples) == 10
+
+
+def test_slam_builds_map_and_localizes(synthetic_sequence, small_cfg):
+    """Indoor unknown (Fig. 3a): SLAM localizes and produces a map."""
+    env = Environment(gps_available=False, map_available=False)
+    loc = run_sequence(synthetic_sequence, small_cfg, env, n_frames=10)
+    rmse = loc.rmse(synthetic_sequence.poses[:, :3, 3])
+    assert rmse < 1.0, f"SLAM rmse {rmse}"
+    assert loc.map is not None and loc.map.valid.sum() >= 50
+    assert loc.map.keyframe_hists.shape[0] >= 5
+
+
+def test_registration_with_slam_map(synthetic_sequence, small_cfg):
+    """Indoor known (Fig. 3b): registration against the persisted map —
+    the paper's SLAM -> map -> registration handoff."""
+    env_slam = Environment(False, False)
+    loc_slam = run_sequence(synthetic_sequence, small_cfg, env_slam,
+                            n_frames=10)
+    env_reg = Environment(False, True)
+    loc_reg = run_sequence(synthetic_sequence, small_cfg, env_reg,
+                           n_frames=10, with_map=loc_slam.map)
+    rmse = loc_reg.rmse(synthetic_sequence.poses[:, :3, 3])
+    assert rmse < 1.0, f"registration rmse {rmse}"
+
+
+def test_variation_tracked_per_mode(synthetic_sequence, small_cfg):
+    env = Environment(True, False)
+    loc = run_sequence(synthetic_sequence, small_cfg, env, n_frames=6)
+    stats = loc.variation[Mode.VIO].stats()
+    assert stats["mean"] > 0 and stats["worst_over_best"] >= 1.0
