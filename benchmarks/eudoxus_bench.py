@@ -19,7 +19,8 @@ import numpy as np
 from repro.configs.eudoxus import EDX_DRONE
 from repro.core import scheduler as sched
 from repro.core.backend import mapping, matrix_blocks as mb, msckf, tracking
-from repro.core.environment import Environment, Mode
+from repro.core.environment import MODE_VIO, Environment, Mode
+from repro.core.fleet import FleetLocalizer
 from repro.core.localizer import Localizer
 from repro.data import frames
 
@@ -247,6 +248,146 @@ def fig17_18_speedup() -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# Tentpole: fused single-dispatch step vs the seed kernel-by-kernel path,
+# and vmap fleet batching (per-robot amortized latency)
+# ---------------------------------------------------------------------------
+
+def _warm_skip(samples):
+    """Drop up to 2 compile-dominated warmup samples, keeping >= 1."""
+    return samples[min(2, max(len(samples) - 1, 0)):]
+
+
+def _drive_once(loc, seq, n, step) -> list:
+    """Drive n frames from a fresh state; returns per-frame seconds."""
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    env = Environment(True, False)
+    ipf = seq.imu_per_frame
+    ts = []
+    for i in range(n):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        t0 = time.perf_counter()
+        st = step(st, seq.images_left[i], seq.images_right[i], a, g,
+                  seq.gps[i], env, seq.dt / ipf)
+        ts.append(time.perf_counter() - t0)
+    return ts
+
+
+def _frame_samples(loc, seq, n, step) -> np.ndarray:
+    """Per-frame wall-clock (s) for n frames; compile frames excluded."""
+    return np.asarray(_warm_skip(_drive_once(loc, seq, n, step)))
+
+
+def fused_vs_seed(n_frames: int = 12) -> List[Row]:
+    """Per-frame VIO latency: fused single-dispatch step vs the seed's
+    5+ dispatches with host track bookkeeping (mean and p99 — the
+    paper's latency-variation axis).
+
+    Embedded-class workload (48x64, window 4), measured two ways:
+
+    * deployment run — a fresh boot localizing the sequence. Frames 0-1
+      (initial program compile) are dropped for BOTH paths; after that
+      the fused program is fully resident, while the seed path keeps
+      hitting data-dependent jit compiles mid-run (the MSCKF update
+      first fires around frame 3) — the latency spikes behind the
+      paper's variation story. This is where fusion wins big.
+    * steady state — both paths fully compiled, interleaved measurement
+      rounds (host-load drift hits both equally). On CPU the remaining
+      per-frame dispatch overhead is small vs compute, so expect ~1x
+      here; the structural win (1 dispatch vs 5+, no host round-trip)
+      shows up in the deployment numbers and on real accelerators."""
+    window = 4
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    cfg = dataclasses.replace(EDX_DRONE, frontend=fe)
+    seq = frames.generate(n_frames=n_frames + 2, H=48, W=64,
+                          n_landmarks=200, accel_sigma=0.5, gyro_sigma=0.02)
+    loc_seed = Localizer(cfg, seq.cam, window=window)
+    loc_fused = Localizer(cfg, seq.cam, window=window)
+
+    # deployment run: the seed's late-firing kernels compile mid-run
+    seed_s = _warm_skip(_drive_once(loc_seed, seq, n_frames,
+                                    loc_seed.step_reference))
+    fused_s = _warm_skip(_drive_once(loc_fused, seq, n_frames,
+                                     loc_fused.step))
+    seed_mean = float(np.mean(seed_s)) * 1e6
+    seed_p99 = float(np.percentile(seed_s, 99)) * 1e6
+    fused_mean = float(np.mean(fused_s)) * 1e6
+    fused_p99 = float(np.percentile(fused_s, 99)) * 1e6
+
+    # steady state: everything above is now compiled; interleave rounds
+    seed_l, fused_l = [], []
+    for _ in range(3):
+        seed_l += _drive_once(loc_seed, seq, n_frames,
+                              loc_seed.step_reference)[1:]
+        fused_l += _drive_once(loc_fused, seq, n_frames, loc_fused.step)[1:]
+    ss_seed = float(np.mean(seed_l)) * 1e6
+    ss_fused = float(np.mean(fused_l)) * 1e6
+
+    return [
+        ("fused/seed_frame_us", seed_mean,
+         f"p99={seed_p99:.0f}us,dispatches/frame>=5"),
+        ("fused/fused_frame_us", fused_mean,
+         f"p99={fused_p99:.0f}us,dispatches/frame=1,"
+         f"traces={loc_fused.fused_trace_count()}"),
+        ("fused/speedup", 0.0,
+         f"mean={seed_mean / fused_mean:.2f}x,p99={seed_p99 / fused_p99:.2f}x"),
+        ("fused/steady_state_us", ss_fused,
+         f"seed={ss_seed:.0f}us,ratio={ss_seed / ss_fused:.2f}x"),
+    ]
+
+
+def fleet_scaling(n_frames: int = 6, batch: int = 8) -> List[Row]:
+    """B robots per dispatch: amortized per-robot latency vs the
+    single-robot fused step on the same frames.
+
+    Embedded-class fleet workload (48x64, 48 features, window 4): the
+    batching win is amortized per-dispatch host/launch/sync overhead,
+    which dominates at fleet-serving frame sizes."""
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    cfg = dataclasses.replace(EDX_DRONE, frontend=fe)
+    seq = frames.generate(n_frames=n_frames + 2, H=48, W=64,
+                          n_landmarks=200, accel_sigma=0.5, gyro_sigma=0.02)
+    # single robot fused baseline on the same workload (median, as below)
+    loc = Localizer(cfg, seq.cam, window=4)
+    single = float(np.median(
+        _frame_samples(loc, seq, n_frames, loc.step))) * 1e6
+
+    fleet = FleetLocalizer(cfg, seq.cam, batch=batch, window=4)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    states = fleet.init_state(p0=np.tile(seq.poses[0][:3, 3], (batch, 1)),
+                              v0=np.tile(v0, (batch, 1)))
+    mode_ids = np.full(batch, MODE_VIO, np.int32)
+    ipf = seq.imu_per_frame
+    ts = []
+    for i in range(n_frames):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        il = np.tile(seq.images_left[i][None], (batch, 1, 1))
+        ir = np.tile(seq.images_right[i][None], (batch, 1, 1))
+        t0 = time.perf_counter()
+        states, _ = fleet.step(states, il, ir,
+                               np.tile(a[None], (batch, 1, 1)),
+                               np.tile(g[None], (batch, 1, 1)),
+                               np.tile(seq.gps[i][None], (batch, 1)),
+                               mode_ids, seq.dt / ipf)
+        jax.block_until_ready(states.filt.p)
+        ts.append(time.perf_counter() - t0)
+    # median on both sides for a like-for-like amortization ratio
+    per_dispatch = float(np.median(_warm_skip(ts))) * 1e6  # compile excluded
+    per_robot = per_dispatch / batch
+    return [
+        ("fleet/single_robot_us", single, "fused_single"),
+        (f"fleet/batch{batch}_dispatch_us", per_dispatch,
+         f"traces={fleet.fused_trace_count()}"),
+        (f"fleet/batch{batch}_per_robot_us", per_robot,
+         f"amortization={single / per_robot:.2f}x"),
+    ]
+
+
+# ---------------------------------------------------------------------------
 # Tbl. I / II: building-block composition + sharing economics
 # ---------------------------------------------------------------------------
 
@@ -286,5 +427,39 @@ def tbl2_sharing() -> List[Row]:
 
 
 ALL = [fig3_accuracy_tradeoff, fig5_latency_split, fig9_11_variation,
-       fig16_kernel_scaling, fig17_18_speedup, tbl1_building_blocks,
-       tbl2_sharing]
+       fig16_kernel_scaling, fig17_18_speedup, fused_vs_seed, fleet_scaling,
+       tbl1_building_blocks, tbl2_sharing]
+
+
+def main() -> None:
+    """Hot-path benchmark entry point (CI smoke: --frames 5).
+
+        PYTHONPATH=src python benchmarks/eudoxus_bench.py --frames 5
+        PYTHONPATH=src python benchmarks/eudoxus_bench.py --all
+
+    Default runs the fused-vs-seed and fleet suites (the dispatch-count /
+    perf regression guards); --all adds every paper figure/table suite.
+    """
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=12,
+                    help="frames per benchmark run")
+    ap.add_argument("--batch", type=int, default=8, help="fleet size B")
+    ap.add_argument("--all", action="store_true",
+                    help="also run the paper figure/table suites")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    suites = [lambda: fused_vs_seed(args.frames),
+              lambda: fleet_scaling(min(args.frames, 6), args.batch)]
+    if args.all:
+        suites += [fig3_accuracy_tradeoff, fig5_latency_split,
+                   fig9_11_variation, fig16_kernel_scaling,
+                   fig17_18_speedup, tbl1_building_blocks, tbl2_sharing]
+    for fn in suites:
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

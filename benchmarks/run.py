@@ -51,6 +51,8 @@ def _register_suites():
         "fig9_11": eudoxus_bench.fig9_11_variation,
         "fig16": eudoxus_bench.fig16_kernel_scaling,
         "fig17_18": eudoxus_bench.fig17_18_speedup,
+        "fused": eudoxus_bench.fused_vs_seed,
+        "fleet": eudoxus_bench.fleet_scaling,
         "tbl1": eudoxus_bench.tbl1_building_blocks,
         "tbl2": eudoxus_bench.tbl2_sharing,
         "sbV-C": sb_sizing.sb_sizing_rows,

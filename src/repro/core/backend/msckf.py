@@ -80,9 +80,13 @@ def init_state(window: int, p0=None, q0=None, v0=None) -> MsckfState:
     d = 15 + 6 * window
     # honest initial uncertainty: tight attitude/position (known start),
     # loose velocity/biases
+    # explicit dtype: a weakly-typed P would retrace the fused step once
+    # the first jitted call returns strongly-typed state
     diag = jnp.concatenate([
-        jnp.full(3, 1e-4), jnp.full(3, 1e-4), jnp.full(3, 0.25),
-        jnp.full(3, 1e-4), jnp.full(3, 1e-2), jnp.full(6 * window, 1e-4)])
+        jnp.full(3, 1e-4, jnp.float32), jnp.full(3, 1e-4, jnp.float32),
+        jnp.full(3, 0.25, jnp.float32), jnp.full(3, 1e-4, jnp.float32),
+        jnp.full(3, 1e-2, jnp.float32),
+        jnp.full(6 * window, 1e-4, jnp.float32)])
     P = jnp.diag(diag)
     return MsckfState(
         q=q0 if q0 is not None else jnp.array([1.0, 0, 0, 0]),
@@ -192,14 +196,13 @@ def triangulate(obs_uv: jax.Array, obs_valid: jax.Array, clones_q, clones_p,
         d_w = R @ d_c
         return d_w / jnp.maximum(jnp.linalg.norm(d_w), 1e-9)
 
-    A = jnp.zeros((3, 3))
-    b = jnp.zeros(3)
-    for i in range(W):
-        d = ray(i)
-        Pm = jnp.eye(3) - jnp.outer(d, d)
-        w = obs_valid[i].astype(jnp.float32)
-        A = A + w * Pm
-        b = b + w * (Pm @ clones_p[i])
+    # vectorized normal-equation accumulation (scan/vmap-friendly: no
+    # Python-unrolled loop over the window)
+    rays = jax.vmap(ray)(jnp.arange(W))                      # (W,3)
+    Pm = jnp.eye(3)[None] - rays[:, :, None] * rays[:, None, :]
+    w = obs_valid.astype(jnp.float32)
+    A = jnp.sum(w[:, None, None] * Pm, axis=0)
+    b = jnp.sum(w[:, None] * jnp.einsum("wij,wj->wi", Pm, clones_p), axis=0)
     n_obs = jnp.sum(obs_valid)
     reg = 1e-9 * jnp.trace(A) + 1e-9
     pw0 = mb.solve_spd(A + reg * jnp.eye(3), b[:, None])[:, 0]
@@ -274,10 +277,10 @@ def feature_jacobians(pw, clones_q, clones_p, obs_uv, obs_valid,
 
     rs, Hts, Hps, Hfs = jax.vmap(per_clone)(jnp.arange(W))
     r = rs.reshape(2 * W)
-    Hx = jnp.zeros((2 * W, 6 * W))
-    for i in range(W):
-        Hx = Hx.at[2 * i:2 * i + 2, 6 * i:6 * i + 3].set(Hts[i])
-        Hx = Hx.at[2 * i:2 * i + 2, 6 * i + 3:6 * i + 6].set(Hps[i])
+    # block-diagonal Hx via one vectorized scatter (no Python loop)
+    blocks = jnp.concatenate([Hts, Hps], axis=-1)            # (W,2,6)
+    Hx = jnp.zeros((W, 2, W, 6)).at[
+        jnp.arange(W), :, jnp.arange(W), :].set(blocks).reshape(2 * W, 6 * W)
     Hf = Hfs.reshape(2 * W, 3)
     return r, Hx, Hf
 

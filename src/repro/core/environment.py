@@ -13,11 +13,29 @@ from __future__ import annotations
 import enum
 from dataclasses import dataclass
 
+import jax.numpy as jnp
+
 
 class Mode(enum.Enum):
     REGISTRATION = "registration"
     VIO = "vio"
     SLAM = "slam"
+
+
+# integer mode ids: the fused step dispatches its backend via
+# ``lax.switch(mode_id, ...)`` so one compiled program serves every
+# operating environment (and a vmapped batch can mix modes per robot).
+MODE_VIO = 0
+MODE_SLAM = 1
+MODE_REGISTRATION = 2
+
+MODE_TO_ID = {Mode.VIO: MODE_VIO, Mode.SLAM: MODE_SLAM,
+              Mode.REGISTRATION: MODE_REGISTRATION}
+ID_TO_MODE = {v: k for k, v in MODE_TO_ID.items()}
+
+
+def mode_id(mode: Mode) -> int:
+    return MODE_TO_ID[mode]
 
 
 @dataclass(frozen=True)
@@ -38,3 +56,14 @@ def select_mode(env: Environment) -> Mode:
     if env.map_available:
         return Mode.REGISTRATION   # indoor known: best error at higher FPS (Fig.3b)
     return Mode.SLAM               # indoor unknown: lowest error (Fig.3a)
+
+
+def select_mode_id(gps_available, map_available) -> jnp.ndarray:
+    """Traceable Fig. 2 taxonomy: same decision as ``select_mode`` on
+    int32 ids. Accepts scalars or (B,) boolean arrays, so a vmapped fleet
+    resolves each robot's backend inside the batched dispatch."""
+    gps = jnp.asarray(gps_available, bool)
+    mp = jnp.asarray(map_available, bool)
+    return jnp.where(gps, MODE_VIO,
+                     jnp.where(mp, MODE_REGISTRATION, MODE_SLAM)
+                     ).astype(jnp.int32)

@@ -1,0 +1,155 @@
+"""vmap fleet batching: localize B independent robots in ONE dispatch.
+
+The ROADMAP's scaling axis — serving heavy traffic from many machines —
+falls out of the fused per-frame step: because ``localize_step`` is a
+pure function of fixed-shape arrays, ``jax.vmap`` turns it into a batched
+program that advances B robots per device dispatch. Each robot keeps its
+own filter, track ring buffer and operating mode; mode dispatch happens
+INSIDE the batch (``lax.switch`` on a per-robot int32 mode id), so one
+compiled program serves a fleet whose members are simultaneously in VIO,
+SLAM and Registration environments. SLAM/Registration robots get their
+dynamically-sized map work in a per-robot host stage after the dispatch,
+mirroring the single-robot ``Localizer.step``.
+
+State buffers are donated, so fleet covariances and track SRAM-analogue
+buffers update in place across frames.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.eudoxus import EudoxusConfig
+from repro.core import scheduler as sched, tracks
+from repro.core.environment import MODE_SLAM, MODE_VIO, select_mode_id
+from repro.core.frontend.pipeline import FrontendResult
+from repro.core.localizer import (Localizer, LocalizerState, TracedStep,
+                                  init_localizer_state)
+
+
+class FleetLocalizer:
+    """Batched localizer: B robots, one fused dispatch per frame.
+
+    VIO robots are fully served by the batched dispatch. SLAM /
+    Registration robots additionally get a per-robot host map stage after
+    the dispatch (maps are dynamically sized and persist across frames),
+    backed by a lazily-created ``Localizer`` per robot — see ``maps`` /
+    ``robot_host(b)``.
+    """
+
+    def __init__(self, cfg: EudoxusConfig, cam, batch: int,
+                 window: Optional[int] = None,
+                 scheduler: Optional[sched.LatencyModels] = None):
+        self.cfg = cfg
+        self.cam = cam
+        self.batch = batch
+        self.window = window or cfg.backend.msckf_window
+        self.scheduler = scheduler or sched.LatencyModels()
+        self.dispatch_count = 0
+        self._offload_plan = self.scheduler.plan_frame(
+            self.window, tracks.MAX_UPDATES)
+        # host-stage state (SLAM keyframes/map, Registration map) is
+        # created lazily per robot on first non-VIO frame, sharing one
+        # BoW vocab device array — an all-VIO fleet allocates nothing
+        self._robots = {}
+        self._shared_vocab = None
+        # batch over state + per-frame inputs; the offload plan and IMU dt
+        # are fleet-wide scalars
+        self._traced = TracedStep(cfg, cam)
+        self._fused_fleet = jax.jit(
+            jax.vmap(self._traced, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None)),
+            donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def init_state(self, p0=None, v0=None, q0=None) -> LocalizerState:
+        """Stacked (B, ...) state. p0/v0/q0: optional (B,3)/(B,3)/(B,4)
+        per-robot initial conditions."""
+        def one(b):
+            return init_localizer_state(
+                self.cfg, self.window,
+                p0=None if p0 is None else p0[b],
+                v0=None if v0 is None else v0[b],
+                q0=None if q0 is None else q0[b])
+
+        states = [one(b) for b in range(self.batch)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+    def fused_trace_count(self) -> int:
+        return self._traced.traces
+
+    def robot_host(self, b: int) -> Localizer:
+        """Host-stage handler for robot b (maps, keyframes), created on
+        first use."""
+        if b not in self._robots:
+            loc = Localizer(self.cfg, self.cam, window=self.window,
+                            scheduler=self.scheduler,
+                            vocab=self._shared_vocab)
+            self._shared_vocab = loc.vocab
+            self._robots[b] = loc
+        return self._robots[b]
+
+    @property
+    def maps(self):
+        """Per-robot maps; None for robots whose host stage never ran."""
+        return [self._robots[b].map if b in self._robots else None
+                for b in range(self.batch)]
+
+    # ------------------------------------------------------------------
+    def step(self, states: LocalizerState, imgs_l, imgs_r, imu_accel,
+             imu_gyro, gps, mode_ids, dt_imu: float
+             ) -> Tuple[LocalizerState, FrontendResult]:
+        """Advance every robot one frame in a single batched dispatch.
+
+        imgs_l/imgs_r: (B,H,W); imu_accel/gyro: (B,K,3); gps: (B,3) with
+        NaN rows where unavailable; mode_ids: (B,) int32 (see
+        ``environment.select_mode_id``).
+        """
+        states, frs = self._fused_fleet(
+            states,
+            jnp.asarray(imgs_l, jnp.float32),
+            jnp.asarray(imgs_r, jnp.float32),
+            jnp.asarray(imu_accel, jnp.float32),
+            jnp.asarray(imu_gyro, jnp.float32),
+            jnp.asarray(gps, jnp.float32),
+            jnp.asarray(mode_ids, jnp.int32),
+            jnp.asarray(self._offload_plan.kalman_gain),
+            jnp.float32(dt_imu))
+        self.dispatch_count += 1
+        states = self._host_map_stage(states, frs, np.asarray(mode_ids))
+        return states, frs
+
+    def _host_map_stage(self, states: LocalizerState, frs,
+                        mode_ids: np.ndarray) -> LocalizerState:
+        """Per-robot SLAM/Registration map work after the batched
+        dispatch (no-op for an all-VIO fleet)."""
+        for b in np.nonzero(mode_ids != MODE_VIO)[0]:
+            st_b = jax.tree_util.tree_map(lambda x: x[b], states)
+            fr_b = jax.tree_util.tree_map(lambda x: x[b], frs)
+            if mode_ids[b] == MODE_SLAM:
+                self.robot_host(b)._slam_step(st_b, fr_b)
+            else:
+                new_b = self.robot_host(b)._registration_step(st_b, fr_b)
+                if new_b is not st_b:   # registration fused a pose fix
+                    states = states._replace(filt=jax.tree_util.tree_map(
+                        lambda batch, one: batch.at[b].set(one),
+                        states.filt, new_b.filt))
+        return states
+
+    def step_envs(self, states, imgs_l, imgs_r, imu_accel, imu_gyro, gps,
+                  gps_available, map_available, dt_imu: float):
+        """Convenience wrapper taking the Fig. 2 environment booleans
+        ((B,) arrays) instead of pre-resolved mode ids."""
+        mode_ids = select_mode_id(gps_available, map_available)
+        gps = np.asarray(gps, np.float32).copy()
+        gps[~np.asarray(gps_available, bool)] = np.nan
+        return self.step(states, imgs_l, imgs_r, imu_accel, imu_gyro, gps,
+                         mode_ids, dt_imu)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def positions(states: LocalizerState) -> np.ndarray:
+        """(B,3) current position estimates (host copy)."""
+        return np.asarray(states.filt.p)

@@ -81,6 +81,16 @@ def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
         prev_yx=prev_yx, track_valid=track_valid)
 
 
+def empty_prev_features(n: int) -> fast.Features:
+    """All-invalid previous-frame features, used to initialize the fused
+    localizer state: the tracking frontend runs with fixed shapes even on
+    frame 0 (LK output is masked off because every source feature is
+    invalid, so every track slot reseeds from detections)."""
+    return fast.Features(yx=jnp.zeros((n, 2), jnp.int32),
+                         score=jnp.zeros((n,), jnp.float32),
+                         valid=jnp.zeros((n,), bool))
+
+
 @functools.partial(jax.jit, static_argnums=(4,))
 def run_frontend_jit(img_l, img_r, prev_img_l, prev_yx_valid, cfg):
     prev_feats = fast.Features(

@@ -9,26 +9,37 @@ Per frame (paper Fig. 4):
        Registration — BoW place recognition + projection + PnP vs the map
   3. runtime scheduler decides kernel offload; variation tracked per frame.
 
-Maintains fixed-shape feature tracks across the MSCKF window (the FPGA's
-on-chip track SRAM analogue) and a persistable map (SLAM -> Registration
-handoff, the paper's "map persisted offline" path).
+The per-frame hot path is ONE fused, buffer-donated jitted program
+(``localize_step``): frontend, the fixed-shape track ring buffer (the
+FPGA's on-chip track SRAM analogue), consumed-track selection, MSCKF
+propagate/augment/update and the mode-dispatched fusion stage all execute
+in a single device dispatch with no host round-trip. Backend modes are
+selected by ``lax.switch`` on an integer mode id, so one compiled program
+serves every operating environment. The seed's kernel-by-kernel path is
+kept as ``step_reference`` — the baseline the benchmarks compare against.
+
+SLAM map growth and Registration place-recognition run host-side after
+the fused dispatch (they touch the dynamically-sized persistent map, the
+paper's "map persisted offline" path).
 """
 from __future__ import annotations
 
+import functools
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.eudoxus import EudoxusConfig
-from repro.core import scheduler as sched
-from repro.core.backend import fusion, mapping, matrix_blocks as mb, msckf, tracking
-from repro.core.environment import Environment, Mode, select_mode
+from repro.core import scheduler as sched, tracks
+from repro.core.backend import fusion, mapping, msckf, tracking
+from repro.core.environment import Environment, Mode, mode_id, select_mode
 from repro.core.frontend import fast
-from repro.core.frontend.pipeline import run_frontend
+from repro.core.frontend.pipeline import (FrontendResult,
+                                          empty_prev_features, run_frontend)
 
 
 @dataclass
@@ -40,30 +51,143 @@ class MapData:
     keyframe_poses: np.ndarray  # (K,4,4)
 
 
-@dataclass
-class LocalizerState:
+class LocalizerState(NamedTuple):
+    """Device-resident per-robot state — a pure pytree threaded through
+    the donated fused step (covariance and track buffers update in
+    place)."""
     filt: msckf.MsckfState
-    prev_img: Optional[jnp.ndarray] = None
-    prev_feats: Optional[fast.Features] = None
-    # track buffer: (N, W, 2) uv observations across the window + validity
-    tracks_uv: Optional[np.ndarray] = None
-    tracks_valid: Optional[np.ndarray] = None
-    frame_idx: int = 0
+    tracks_uv: jax.Array     # (N, W, 2) uv observations across the window
+    tracks_valid: jax.Array  # (N, W) bool
+    prev_img: jax.Array      # (H, W) previous left image (LK source)
+    prev_yx: jax.Array       # (N, 2) int32 previous frame's features
+    prev_valid: jax.Array    # (N,) bool
+    frame_idx: jax.Array     # () int32
+
+
+def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
+                  accel: jax.Array, gyro: jax.Array, gps: jax.Array,
+                  mode: jax.Array, offload_kalman: jax.Array,
+                  dt_imu: jax.Array, *, cfg,
+                  fx: float, fy: float, cx: float, cy: float
+                  ) -> Tuple[LocalizerState, FrontendResult]:
+    """One fused frame: frontend -> track ring buffer -> lax.switch
+    backend -> new state. Pure function of fixed-shape arrays; jitted
+    with ``donate_argnums=(0,)`` by the Localizer.
+
+    gps: (3,) world position, NaN when unavailable. mode: () int32 mode
+    id. offload_kalman: () bool, the scheduler's pre-resolved decision.
+    """
+    prev_feats = fast.Features(
+        yx=state.prev_yx,
+        score=jnp.zeros(state.prev_valid.shape, jnp.float32),
+        valid=state.prev_valid)
+    fr = run_frontend(img_l, img_r, cfg, state.prev_img, prev_feats)
+
+    # --- track bookkeeping (fixed-shape ring buffer over the window);
+    # frame 0 falls out naturally: prev_valid is all-False so every slot
+    # reseeds from this frame's detections
+    tracks_uv, tracks_valid = tracks.roll_and_update(
+        state.tracks_uv, state.tracks_valid, fr.yx, fr.valid,
+        fr.prev_yx, fr.track_valid)
+
+    # --- MSCKF propagate/augment (frame 0 defines the start pose)
+    filt = jax.lax.cond(
+        state.frame_idx > 0,
+        lambda f: msckf.propagate(f, accel, gyro, dt=dt_imu),
+        lambda f: f, state.filt)
+    filt = msckf.augment(filt)
+
+    # --- MSCKF update on CONSUMED tracks only (ended this frame, or at
+    # full window length) — each observation is used exactly once, the
+    # MSCKF consistency requirement
+    uv, vd, count, consumed = tracks.select_consumed(tracks_uv, tracks_valid)
+    do_consume = (count >= tracks.MIN_UPDATE_TRACKS) & (state.frame_idx >= 3)
+    filt = jax.lax.cond(
+        do_consume & offload_kalman,
+        lambda f: msckf.update(f, uv, vd, fx=fx, fy=fy, cx=cx, cy=cy)[0],
+        lambda f: f, filt)
+    tracks_valid = jnp.where(do_consume,
+                             tracks.consume(tracks_valid, consumed),
+                             tracks_valid)
+
+    # --- mode dispatch (paper Fig. 2 -> one resident program per mode):
+    # VIO fuses GPS on-device (gps_update is NaN-safe: invalid fixes get
+    # zero weight); SLAM / Registration defer their map work to the host
+    # stage (the map is dynamically sized)
+    filt = jax.lax.switch(jnp.clip(mode, 0, 2),
+                          [lambda f: fusion.gps_update(f, gps)[0],
+                           lambda f: f, lambda f: f], filt)
+
+    new_state = LocalizerState(
+        filt=filt, tracks_uv=tracks_uv, tracks_valid=tracks_valid,
+        prev_img=img_l, prev_yx=fr.yx, prev_valid=fr.valid,
+        frame_idx=state.frame_idx + 1)
+    return new_state, fr
+
+
+def init_localizer_state(cfg: EudoxusConfig, window: int, p0=None, v0=None,
+                         q0=None) -> LocalizerState:
+    """Fresh device-resident state for one robot."""
+    n = cfg.frontend.max_features
+    H, W = cfg.frontend.height, cfg.frontend.width
+    prev = empty_prev_features(n)    # frame 0: LK masked off, all reseed
+    return LocalizerState(
+        filt=msckf.init_state(
+            window,
+            p0=None if p0 is None else jnp.asarray(p0, jnp.float32),
+            v0=None if v0 is None else jnp.asarray(v0, jnp.float32),
+            q0=None if q0 is None else jnp.asarray(q0, jnp.float32)),
+        tracks_uv=jnp.zeros((n, window, 2), jnp.float32),
+        tracks_valid=jnp.zeros((n, window), bool),
+        prev_img=jnp.zeros((H, W), jnp.float32),
+        prev_yx=prev.yx,
+        prev_valid=prev.valid,
+        frame_idx=jnp.int32(0))
+
+
+class TracedStep:
+    """``localize_step`` bound to a config/camera, counting traces.
+
+    The wrapper body runs once per jit trace, so ``traces`` counts
+    compilations without relying on private JAX cache APIs. Shared by
+    ``Localizer`` (jitted directly) and ``FleetLocalizer`` (vmapped)."""
+
+    def __init__(self, cfg: EudoxusConfig, cam):
+        self._step = functools.partial(localize_step, cfg=cfg.frontend,
+                                       fx=cam.fx, fy=cam.fy,
+                                       cx=cam.cx, cy=cam.cy)
+        self.traces = 0
+
+    def __call__(self, *args):
+        self.traces += 1
+        return self._step(*args)
 
 
 class Localizer:
     def __init__(self, cfg: EudoxusConfig, cam, window: Optional[int] = None,
-                 scheduler: Optional[sched.LatencyModels] = None):
+                 scheduler: Optional[sched.LatencyModels] = None,
+                 vocab: Optional[jax.Array] = None):
+        """vocab: optional pre-built BoW vocabulary — lets a fleet share
+        one device copy across robots instead of rebuilding per robot."""
         self.cfg = cfg
         self.cam = cam
         self.window = window or cfg.backend.msckf_window
         self.scheduler = scheduler or sched.LatencyModels()
-        self.vocab = jnp.asarray(tracking.make_vocab(cfg.backend.bow_vocab_size))
+        self.vocab = (vocab if vocab is not None else
+                      jnp.asarray(tracking.make_vocab(cfg.backend.bow_vocab_size)))
         self.variation = {m: sched.VariationTracker() for m in Mode}
         self.map: Optional[MapData] = None
         self._slam_keyframes: List[Dict] = []
         self.trajectory: List[np.ndarray] = []
-        # jitted hot paths (fixed shapes => compile once per run)
+        self.dispatch_count = 0      # device dispatches issued by step()
+        # offload decisions depend only on static shapes -> resolve once;
+        # call refresh_offload_plan() after fitting new latency models
+        self._offload_plan = self.scheduler.plan_frame(
+            self.window, tracks.MAX_UPDATES)
+        # the fused hot path: one compiled program, donated state buffers
+        self._traced = TracedStep(cfg, cam)
+        self._fused_step = jax.jit(self._traced, donate_argnums=(0,))
+        # seed-style kernel-by-kernel dispatches (step_reference + tests)
         self._propagate = jax.jit(msckf.propagate,
                                   static_argnames=("dt", "sigma_a", "sigma_g"))
         self._augment = jax.jit(msckf.augment)
@@ -77,122 +201,128 @@ class Localizer:
     def init_state(self, p0=None, v0=None, q0=None) -> LocalizerState:
         """p0/v0/q0: known start pose/velocity (e.g. first GPS fixes or a
         calibrated launch pad) — standard for autonomous machines."""
-        n = self.cfg.frontend.max_features
-        return LocalizerState(
-            filt=msckf.init_state(
-                self.window,
-                p0=None if p0 is None else jnp.asarray(p0, jnp.float32),
-                v0=None if v0 is None else jnp.asarray(v0, jnp.float32),
-                q0=None if q0 is None else jnp.asarray(q0, jnp.float32)),
-            tracks_uv=np.zeros((n, self.window, 2), np.float32),
-            tracks_valid=np.zeros((n, self.window), bool),
-        )
+        return init_localizer_state(self.cfg, self.window, p0=p0, v0=v0,
+                                    q0=q0)
+
+    def fused_trace_count(self) -> int:
+        """Number of distinct compilations of the fused step (steady
+        state: exactly 1 — fixed shapes, no data-dependent retraces)."""
+        return self._traced.traces
+
+    def refresh_offload_plan(self) -> sched.OffloadPlan:
+        """Re-resolve offload decisions (after fitting latency models)."""
+        self._offload_plan = self.scheduler.plan_frame(
+            self.window, tracks.MAX_UPDATES)
+        return self._offload_plan
 
     # ------------------------------------------------------------------
     def step(self, state: LocalizerState, img_l, img_r, imu_accel, imu_gyro,
              gps, env: Environment, dt_imu: float) -> LocalizerState:
-        """One frame. imu_accel/gyro must cover the interval ENDING at this
+        """One frame through the fused path: a single jitted dispatch in
+        VIO mode. imu_accel/gyro must cover the interval ENDING at this
         frame's timestamp (clone/observation alignment)."""
         t0 = time.perf_counter()
         mode = select_mode(env)
-        img_l = jnp.asarray(img_l, jnp.float32)
-        img_r = jnp.asarray(img_r, jnp.float32)
+        gps_arr = (np.full(3, np.nan, np.float32) if gps is None
+                   else np.asarray(gps, np.float32))
+        plan = self._offload_plan
 
-        fr = self._frontend(img_l, img_r, self.cfg.frontend,
-                            state.prev_img, state.prev_feats)
+        state, fr = self._fused_step(
+            state, jnp.asarray(img_l, jnp.float32),
+            jnp.asarray(img_r, jnp.float32),
+            jnp.asarray(imu_accel, jnp.float32),
+            jnp.asarray(imu_gyro, jnp.float32),
+            jnp.asarray(gps_arr), jnp.int32(mode_id(mode)),
+            jnp.asarray(plan.kalman_gain), jnp.float32(dt_imu))
+        self.dispatch_count += 1
 
-        # --- track bookkeeping (fixed-shape ring buffer over the window)
-        self._update_tracks(state, fr)
-
-        # --- backend dispatch
-        if mode == Mode.VIO:
-            self._vio_step(state, imu_accel, imu_gyro, gps, dt_imu)
-        elif mode == Mode.SLAM:
-            self._vio_step(state, imu_accel, imu_gyro, None, dt_imu)
-            self._slam_step(state, fr)
-        else:  # REGISTRATION
-            self._vio_step(state, imu_accel, imu_gyro, None, dt_imu)
-            self._registration_step(state, fr)
+        # host stage: dynamically-sized map bookkeeping (SLAM/Registration)
+        if mode == Mode.SLAM:
+            state = self._slam_step(state, fr)
+        elif mode == Mode.REGISTRATION:
+            state = self._registration_step(state, fr)
 
         self.trajectory.append(np.asarray(state.filt.p))
         self.variation[mode].add(time.perf_counter() - t0)
-        state.prev_img = img_l
-        state.prev_feats = fast.Features(yx=fr.yx, score=fr.score,
-                                         valid=fr.valid)
-        state.frame_idx += 1
         return state
 
     # ------------------------------------------------------------------
-    def _update_tracks(self, state: LocalizerState, fr):
-        """Shift the window; continue tracks via LK correspondence, start
-        new tracks at fresh detections."""
-        n, W = state.tracks_valid.shape
-        state.tracks_uv = np.roll(state.tracks_uv, -1, axis=1)
-        state.tracks_valid = np.roll(state.tracks_valid, -1, axis=1)
-        state.tracks_uv[:, -1] = 0
-        state.tracks_valid[:, -1] = False
+    # seed baseline: one dispatch per kernel + host NumPy bookkeeping
+    # ------------------------------------------------------------------
+    def step_reference(self, state: LocalizerState, img_l, img_r, imu_accel,
+                       imu_gyro, gps, env: Environment,
+                       dt_imu: float) -> LocalizerState:
+        """The seed's unfused frame path (5+ dispatches with a
+        device->host->device round-trip for track bookkeeping). Kept as
+        the benchmark baseline and the equivalence-test oracle."""
+        t0 = time.perf_counter()
+        mode = select_mode(env)
+        frame_idx = int(state.frame_idx)
+        img_l = jnp.asarray(img_l, jnp.float32)
+        img_r = jnp.asarray(img_r, jnp.float32)
 
-        if state.frame_idx == 0 or state.prev_feats is None:
-            yx = np.asarray(fr.yx, np.float32)
-            state.tracks_uv[:, -1, 0] = yx[:, 1]
-            state.tracks_uv[:, -1, 1] = yx[:, 0]
-            state.tracks_valid[:, -1] = np.asarray(fr.valid)
-            return
+        if frame_idx > 0:
+            prev_feats = fast.Features(
+                yx=state.prev_yx,
+                score=jnp.zeros(state.prev_valid.shape, jnp.float32),
+                valid=state.prev_valid)
+            fr = self._frontend(img_l, img_r, self.cfg.frontend,
+                                state.prev_img, prev_feats)
+        else:
+            fr = self._frontend(img_l, img_r, self.cfg.frontend, None, None)
 
-        tracked = np.asarray(fr.prev_yx)        # prev features in new frame
-        tvalid = np.asarray(fr.track_valid)
-        cont = tvalid & state.tracks_valid[:, -2]
-        state.tracks_uv[cont, -1, 0] = tracked[cont, 1]
-        state.tracks_uv[cont, -1, 1] = tracked[cont, 0]
-        state.tracks_valid[cont, -1] = True
-        # re-seed dead slots with fresh detections
-        dead = ~cont
-        yx = np.asarray(fr.yx, np.float32)
-        fv = np.asarray(fr.valid)
-        state.tracks_uv[dead, :, :] = 0
-        state.tracks_valid[dead, :] = False
-        state.tracks_uv[dead, -1, 0] = yx[dead, 1]
-        state.tracks_uv[dead, -1, 1] = yx[dead, 0]
-        state.tracks_valid[dead, -1] = fv[dead]
+        # host round-trip: track ring buffer mutated in NumPy
+        uv_np, vd_np = tracks.roll_and_update_np(
+            np.asarray(state.tracks_uv), np.asarray(state.tracks_valid),
+            np.asarray(fr.yx), np.asarray(fr.valid),
+            np.asarray(fr.prev_yx), np.asarray(fr.track_valid),
+            first_frame=frame_idx == 0)
+
+        filt = state.filt
+        if frame_idx > 0:
+            filt = self._propagate(filt, jnp.asarray(imu_accel),
+                                   jnp.asarray(imu_gyro), dt=float(dt_imu))
+        filt = self._augment(filt)
+
+        obs_count = vd_np.sum(axis=1)
+        ended = (~vd_np[:, -1]) & (obs_count >= tracks.MIN_TRACK_OBS)
+        full = vd_np.all(axis=1)
+        use = np.nonzero(ended | full)[0][:tracks.MAX_UPDATES]
+        if use.size >= tracks.MIN_UPDATE_TRACKS and frame_idx >= 3:
+            uv_buf = np.zeros((tracks.MAX_UPDATES, self.window, 2), np.float32)
+            vd_buf = np.zeros((tracks.MAX_UPDATES, self.window), bool)
+            uv_buf[:use.size] = uv_np[use]
+            vd_buf[:use.size] = vd_np[use]
+            # same pre-resolved decision as the fused path, so this stays
+            # a valid equivalence oracle once latency models are fitted
+            if self._offload_plan.kalman_gain:
+                filt, _ = self._update(
+                    filt, jnp.asarray(uv_buf), jnp.asarray(vd_buf),
+                    fx=self.cam.fx, fy=self.cam.fy,
+                    cx=self.cam.cx, cy=self.cam.cy)
+            vd_np[use, :-1] = False
+        if (mode == Mode.VIO and gps is not None
+                and np.all(np.isfinite(gps))):
+            filt, _ = self._gps_update(filt, jnp.asarray(gps, jnp.float32))
+
+        state = LocalizerState(
+            filt=filt, tracks_uv=jnp.asarray(uv_np),
+            tracks_valid=jnp.asarray(vd_np), prev_img=img_l,
+            prev_yx=fr.yx, prev_valid=fr.valid,
+            frame_idx=jnp.int32(frame_idx + 1))
+
+        if mode == Mode.SLAM:
+            state = self._slam_step(state, fr)
+        elif mode == Mode.REGISTRATION:
+            state = self._registration_step(state, fr)
+
+        self.trajectory.append(np.asarray(state.filt.p))
+        self.variation[mode].add(time.perf_counter() - t0)
+        return state
 
     # ------------------------------------------------------------------
-    def _vio_step(self, state, accel, gyro, gps, dt_imu):
-        cam = self.cam
-        if state.frame_idx > 0:      # frame 0 defines the start pose
-            state.filt = self._propagate(state.filt, jnp.asarray(accel),
-                                         jnp.asarray(gyro), dt=float(dt_imu))
-        state.filt = self._augment(state.filt)
-
-        # MSCKF update on CONSUMED tracks only (ended this frame, or at full
-        # window length) — each observation is used exactly once, the MSCKF
-        # consistency requirement.
-        obs_count = state.tracks_valid.sum(axis=1)
-        ended = (~state.tracks_valid[:, -1]) & (obs_count >= 4)
-        full = state.tracks_valid.all(axis=1)
-        use = np.nonzero(ended | full)[0][:24]
-        if use.size >= 4 and state.frame_idx >= 3:
-            # fixed-shape update batch (pad to 24) => one compile
-            uv_buf = np.zeros((24, self.window, 2), np.float32)
-            vd_buf = np.zeros((24, self.window), bool)
-            uv_buf[:use.size] = state.tracks_uv[use]
-            vd_buf[:use.size] = state.tracks_valid[use]
-            uv = jnp.asarray(uv_buf)
-            vd = jnp.asarray(vd_buf)
-            h_height = int(use.size * 2 * self.window)
-            if self.scheduler.should_offload("kalman_gain", h_height,
-                                             uv.size * 4):
-                state.filt, _ = self._update(
-                    state.filt, uv, vd, fx=cam.fx, fy=cam.fy,
-                    cx=cam.cx, cy=cam.cy)
-            # consume: restart used tracks from their latest observation
-            state.tracks_valid[use, :-1] = False
-        if gps is not None and np.all(np.isfinite(gps)):
-            state.filt, _ = self._gps_update(state.filt, jnp.asarray(gps))
-
-    # ------------------------------------------------------------------
-    def _slam_step(self, state, fr):
+    def _slam_step(self, state: LocalizerState, fr) -> LocalizerState:
         """Windowed BA over recent keyframes; extend the map."""
-        cam = self.cam
         kf = {
             "pose_R": np.asarray(msckf.quat_to_rot(state.filt.q)),
             "pose_p": np.asarray(state.filt.p),
@@ -205,9 +335,11 @@ class Localizer:
         }
         self._slam_keyframes.append(kf)
         K = self.cfg.backend.ba_window
-        if len(self._slam_keyframes) >= 3 and state.frame_idx % 2 == 0:
+        frame_idx = int(state.frame_idx) - 1    # this frame's index
+        if len(self._slam_keyframes) >= 3 and frame_idx % 2 == 0:
             self._run_ba(self._slam_keyframes[-K:])
         self._extend_map(kf)
+        return state
 
     def _run_ba(self, kfs):
         cam = self.cam
@@ -274,9 +406,9 @@ class Localizer:
         m.keyframe_poses = np.concatenate([m.keyframe_poses, pose[None]])
 
     # ------------------------------------------------------------------
-    def _registration_step(self, state, fr):
+    def _registration_step(self, state: LocalizerState, fr) -> LocalizerState:
         if self.map is None or not self.map.valid.any():
-            return
+            return state
         cam = self.cam
         m = self.map
         hist = tracking.bow_histogram(fr.desc, fr.valid, self.vocab)
@@ -301,8 +433,10 @@ class Localizer:
             R_new, p_new, _ = tracking.pnp_gauss_newton(
                 mp, obs, ok, jnp.asarray(R), jnp.asarray(p), intr)
             # fuse the registration pose as a position observation
-            state.filt, _ = fusion.gps_update(state.filt, p_new,
-                                              sigma_gps=0.08)
+            # (through the jitted wrapper — same compile as VIO's fusion)
+            filt, _ = self._gps_update(state.filt, p_new, sigma_gps=0.08)
+            state = state._replace(filt=filt)
+        return state
 
     def cam_matrix(self, R, p):
         K = self.cam.K

@@ -52,6 +52,17 @@ KERNEL_MODELS = {
 }
 
 
+@dataclass(frozen=True)
+class OffloadPlan:
+    """Per-frame offload decisions resolved BEFORE the fused dispatch.
+
+    The fused step is one jitted program; deciding offload from device
+    data mid-frame would force a device->host sync. All sizes the models
+    need (update-batch budget x window) are static shapes, so the plan is
+    computed host-side up front and passed in as a traced boolean."""
+    kalman_gain: bool = True
+
+
 @dataclass
 class LatencyModels:
     host: Dict[str, RegressionModel] = field(default_factory=dict)
@@ -78,6 +89,19 @@ class LatencyModels:
 
     def r2_report(self) -> Dict[str, float]:
         return {k: m.r2 for k, m in self.host.items()}
+
+    def plan_frame(self, window: int, max_updates: int,
+                   transfer_bytes: Optional[int] = None) -> OffloadPlan:
+        """Pre-resolve this frame's offload decisions from static shapes
+        only (the fused update batch is padded to max_updates tracks, so
+        H height = max_updates * 2 * window regardless of device data).
+        transfer_bytes defaults to the padded float32 uv buffer size."""
+        h_height = max_updates * 2 * window
+        if transfer_bytes is None:
+            transfer_bytes = max_updates * window * 2 * 4
+        return OffloadPlan(
+            kalman_gain=self.should_offload("kalman_gain", h_height,
+                                            transfer_bytes))
 
 
 def profile_fn(fn: Callable, reps: int = 3) -> float:

@@ -1,0 +1,139 @@
+"""Fixed-shape feature-track ring buffer — the FPGA track-SRAM analogue.
+
+The localizer keeps one slot per feature budget entry, each holding W
+(u,v) observations across the MSCKF window plus a validity mask. All
+operations are pure fixed-shape JAX so the whole per-frame bookkeeping
+lives inside the fused jitted step (no host round-trip):
+
+  roll_and_update   shift the window, continue tracks via LK matches,
+                    reseed dead slots from fresh detections
+  select_consumed   pick the <= max_updates tracks that are consumed this
+                    frame (ended with enough observations, or full-window)
+                    into fixed-size update buffers
+  consume           one-shot semantics: clear the history of consumed
+                    tracks so each observation feeds the filter at most once
+
+``roll_and_update_np`` is the seed's host-NumPy reference implementation,
+kept for the unfused baseline path and for equivalence tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# update-batch budget: at most this many tracks are consumed per frame
+# (pad-to-fixed-shape => one compile of the MSCKF update)
+MAX_UPDATES = 24
+# a track must span at least this many frames to constrain the filter
+MIN_TRACK_OBS = 4
+# skip the MSCKF update unless at least this many tracks are consumed
+# (too few constraints aren't worth a filter update)
+MIN_UPDATE_TRACKS = 4
+
+
+def roll_and_update(tracks_uv: jax.Array, tracks_valid: jax.Array,
+                    det_yx: jax.Array, det_valid: jax.Array,
+                    tracked_yx: jax.Array, tracked_valid: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Shift the window left; continue tracks whose feature was re-found
+    by LK, clear + reseed the rest from this frame's detections.
+
+    tracks_uv: (N,W,2) float32, tracks_valid: (N,W) bool.
+    det_yx/tracked_yx are (N,2) in (row, col) order; the buffer stores
+    (u,v) = (col, row).
+    """
+    uv = jnp.concatenate(
+        [tracks_uv[:, 1:], jnp.zeros_like(tracks_uv[:, :1])], axis=1)
+    vd = jnp.concatenate(
+        [tracks_valid[:, 1:], jnp.zeros_like(tracks_valid[:, :1])], axis=1)
+
+    # continued: LK found the feature AND the slot was alive last frame
+    cont = tracked_valid & vd[:, -2]
+    dead = ~cont
+    uv = jnp.where(dead[:, None, None], 0.0, uv)
+    vd = jnp.where(dead[:, None], False, vd)
+
+    tracked_uv = jnp.stack(
+        [tracked_yx[:, 1], tracked_yx[:, 0]], axis=-1).astype(jnp.float32)
+    det_uv = jnp.stack(
+        [det_yx[:, 1], det_yx[:, 0]], axis=-1).astype(jnp.float32)
+    uv = uv.at[:, -1].set(jnp.where(cont[:, None], tracked_uv, det_uv))
+    vd = vd.at[:, -1].set(jnp.where(cont, True, det_valid))
+    return uv, vd
+
+
+def select_consumed(tracks_uv: jax.Array, tracks_valid: jax.Array,
+                    max_updates: int = MAX_UPDATES
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fixed-shape selection of the tracks consumed this frame.
+
+    A track is consumed when it just ended with >= MIN_TRACK_OBS
+    observations, or when it spans the full window (MSCKF consistency:
+    each observation updates the filter exactly once).
+
+    Returns (uv, valid, count, consumed_mask) where uv/valid are the
+    first max_updates consumed tracks padded with zeros, count is the
+    number of real rows, and consumed_mask (N,) flags the selected slots.
+    """
+    obs_count = jnp.sum(tracks_valid, axis=1)
+    ended = (~tracks_valid[:, -1]) & (obs_count >= MIN_TRACK_OBS)
+    full = jnp.all(tracks_valid, axis=1)
+    mask = ended | full
+    rank = jnp.cumsum(mask) - 1
+    consumed = mask & (rank < max_updates)
+    count = jnp.sum(consumed)
+
+    # stable sort puts selected slots first in original order
+    order = jnp.argsort(~mask, stable=True)[:max_updates]
+    take = mask[order]
+    uv = jnp.where(take[:, None, None], tracks_uv[order], 0.0)
+    vd = jnp.where(take[:, None], tracks_valid[order], False)
+    return uv, vd, count, consumed
+
+
+def consume(tracks_valid: jax.Array, consumed: jax.Array) -> jax.Array:
+    """Clear all but the newest observation of consumed tracks. Ended
+    tracks go fully dead (reseeded next frame); full-window tracks
+    restart from their latest observation."""
+    W = tracks_valid.shape[1]
+    clear = jnp.arange(W) < (W - 1)
+    return jnp.where(consumed[:, None] & clear[None, :], False, tracks_valid)
+
+
+# --------------------------------------------------------------------------
+# host-NumPy reference (the seed's behaviour, one mutation per frame)
+# --------------------------------------------------------------------------
+
+def roll_and_update_np(tracks_uv: np.ndarray, tracks_valid: np.ndarray,
+                       det_yx: np.ndarray, det_valid: np.ndarray,
+                       tracked_yx: np.ndarray, tracked_valid: np.ndarray,
+                       first_frame: bool) -> Tuple[np.ndarray, np.ndarray]:
+    uv = np.roll(tracks_uv, -1, axis=1)
+    vd = np.roll(tracks_valid, -1, axis=1)
+    uv[:, -1] = 0
+    vd[:, -1] = False
+
+    if first_frame:
+        yx = np.asarray(det_yx, np.float32)
+        uv[:, -1, 0] = yx[:, 1]
+        uv[:, -1, 1] = yx[:, 0]
+        vd[:, -1] = np.asarray(det_valid)
+        return uv, vd
+
+    tracked = np.asarray(tracked_yx)
+    cont = np.asarray(tracked_valid) & vd[:, -2]
+    uv[cont, -1, 0] = tracked[cont, 1]
+    uv[cont, -1, 1] = tracked[cont, 0]
+    vd[cont, -1] = True
+    dead = ~cont
+    yx = np.asarray(det_yx, np.float32)
+    fv = np.asarray(det_valid)
+    uv[dead, :, :] = 0
+    vd[dead, :] = False
+    uv[dead, -1, 0] = yx[dead, 1]
+    uv[dead, -1, 1] = yx[dead, 0]
+    vd[dead, -1] = fv[dead]
+    return uv, vd

@@ -20,9 +20,6 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
-_FORCE = os.environ.get("REPRO_KERNELS", "auto")  # auto | pallas | xla
-
-
 def _on_tpu() -> bool:
     try:
         return jax.devices()[0].platform == "tpu"
@@ -31,9 +28,14 @@ def _on_tpu() -> bool:
 
 
 def use_pallas(op: str, *shape_args) -> bool:
-    if _FORCE == "pallas":
+    # REPRO_KERNELS is read per call (not at import), so tests and
+    # benchmarks can toggle the dispatch path without re-importing.
+    # Note: inside already-compiled jitted functions the decision is
+    # baked in at trace time.
+    force = os.environ.get("REPRO_KERNELS", "auto")  # auto | pallas | xla
+    if force == "pallas":
         return True
-    if _FORCE == "xla":
+    if force == "xla":
         return False
     return _on_tpu()
 

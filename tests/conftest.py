@@ -23,3 +23,14 @@ def synthetic_sequence():
     return frames.generate(n_frames=14, H=120, W=160, n_landmarks=240,
                            gps_available=True, accel_sigma=0.5,
                            gyro_sigma=0.02, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    """The shared 120x160/128-feature localization config (matches
+    synthetic_sequence's frame size)."""
+    import dataclasses
+    from repro.configs.eudoxus import EDX_DRONE
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=120, width=160,
+                             max_features=128)
+    return dataclasses.replace(EDX_DRONE, frontend=fe)

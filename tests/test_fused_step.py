@@ -1,0 +1,117 @@
+"""The fused per-frame hot path: single-dispatch guarantee, no
+retraces, device-resident track buffers, and numerical equivalence with
+the seed's kernel-by-kernel reference path."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.environment import Environment, Mode
+from repro.core.localizer import Localizer
+from repro.data import frames
+
+
+def _drive(loc, seq, env, n, step=None):
+    step = step or loc.step
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    ipf = seq.imu_per_frame
+    for i in range(n):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        gps = seq.gps[i] if env.gps_available else None
+        st = step(st, seq.images_left[i], seq.images_right[i], a, g,
+                  gps, env, seq.dt / ipf)
+    return st
+
+
+def test_vio_single_dispatch_per_frame(synthetic_sequence, small_cfg):
+    """The tentpole guarantee: a VIO frame is ONE jitted dispatch, traced
+    exactly once, with the track ring buffer living on device."""
+    loc = Localizer(small_cfg, synthetic_sequence.cam, window=8)
+    env = Environment(gps_available=True, map_available=False)
+    st = _drive(loc, synthetic_sequence, env, 8)
+    assert loc.dispatch_count == 8
+    assert loc.fused_trace_count() == 1, \
+        "fused step retraced: data-dependent shapes leaked into the trace"
+    # no host NumPy mutation of the track buffers
+    assert isinstance(st.tracks_uv, jax.Array)
+    assert isinstance(st.tracks_valid, jax.Array)
+    assert int(st.frame_idx) == 8
+
+
+def test_no_retrace_when_gps_drops_out(synthetic_sequence, small_cfg):
+    """GPS outages arrive as NaN, not as a different trace."""
+    loc = Localizer(small_cfg, synthetic_sequence.cam, window=8)
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    ipf = seq.imu_per_frame
+    for i in range(6):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        gps = seq.gps[i] if i % 2 == 0 else None     # intermittent fix
+        st = loc.step(st, seq.images_left[i], seq.images_right[i], a, g,
+                      gps, env, seq.dt / ipf)
+    assert loc.fused_trace_count() == 1
+    assert np.all(np.isfinite(np.asarray(st.filt.p)))
+
+
+def test_fused_matches_reference_vio(synthetic_sequence, small_cfg):
+    """Fused single-dispatch path == seed kernel-by-kernel path."""
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    loc_f = Localizer(small_cfg, seq.cam, window=8)
+    st_f = _drive(loc_f, seq, env, 10)
+    loc_r = Localizer(small_cfg, seq.cam, window=8)
+    st_r = _drive(loc_r, seq, env, 10, step=loc_r.step_reference)
+
+    tj_f = np.asarray(loc_f.trajectory)
+    tj_r = np.asarray(loc_r.trajectory)
+    np.testing.assert_allclose(tj_f, tj_r, atol=5e-3)
+    np.testing.assert_array_equal(np.asarray(st_f.tracks_valid),
+                                  np.asarray(st_r.tracks_valid))
+    np.testing.assert_allclose(np.asarray(st_f.tracks_uv),
+                               np.asarray(st_r.tracks_uv), atol=1e-2)
+
+
+def test_fused_matches_reference_slam(synthetic_sequence, small_cfg):
+    """SLAM mode: fused on-device stage + host map stage reproduces the
+    seed path (map contents included)."""
+    seq = synthetic_sequence
+    env = Environment(False, False)
+    loc_f = Localizer(small_cfg, seq.cam, window=8)
+    _drive(loc_f, seq, env, 8)
+    loc_r = Localizer(small_cfg, seq.cam, window=8)
+    _drive(loc_r, seq, env, 8, step=loc_r.step_reference)
+    np.testing.assert_allclose(np.asarray(loc_f.trajectory),
+                               np.asarray(loc_r.trajectory), atol=5e-3)
+    assert loc_f.map is not None and loc_r.map is not None
+    assert loc_f.map.valid.sum() == loc_r.map.valid.sum()
+
+
+def test_offload_plan_gates_kalman_update(synthetic_sequence, small_cfg):
+    """The pre-resolved scheduler plan is honoured inside the fused step:
+    with the Kalman-gain offload forced off, the MSCKF update never runs
+    and the covariance stays larger."""
+    import repro.core.scheduler as sched
+
+    class NeverOffload(sched.LatencyModels):
+        def should_offload(self, name, size, transfer_bytes=0):
+            return False
+
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    # window 4: tracks reach full-window length fast, so the MSCKF update
+    # (and therefore the offload decision) actually fires in a short run
+    loc_on = Localizer(small_cfg, seq.cam, window=4)
+    st_on = _drive(loc_on, seq, env, 10)
+    loc_off = Localizer(small_cfg, seq.cam, window=4,
+                        scheduler=NeverOffload())
+    st_off = _drive(loc_off, seq, env, 10)
+    assert loc_off.fused_trace_count() == 1      # a flag, not a retrace
+    # same program, different decision: filter uncertainty must differ
+    tr_on = float(np.trace(np.asarray(st_on.filt.P)[:15, :15]))
+    tr_off = float(np.trace(np.asarray(st_off.filt.P)[:15, :15]))
+    assert tr_off > tr_on * 1.01, \
+        "skipping the Kalman update should leave more uncertainty"

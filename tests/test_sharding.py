@@ -103,6 +103,10 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 def test_multidevice_subprocess():
     out = subprocess.run(
         [sys.executable, "-c", MULTIDEV_SCRIPT],
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        # force the CPU platform: the test is about forced host device
+        # count, and without this an installed TPU plugin stalls on
+        # instance-metadata probing in the stripped environment
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=300)
     assert "MULTIDEV_OK" in out.stdout, out.stdout + out.stderr

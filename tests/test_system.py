@@ -1,11 +1,8 @@
 """End-to-end behaviour of the paper's system: mode selection (Fig. 2),
 full localization runs per mode, variation tracking, map handoff."""
-import dataclasses
-
 import numpy as np
 import pytest
 
-from repro.configs.eudoxus import EDX_DRONE
 from repro.core.environment import Environment, Mode, select_mode
 from repro.core.localizer import Localizer
 
@@ -15,13 +12,6 @@ def test_mode_taxonomy_matches_fig2():
     assert select_mode(Environment(False, True)) == Mode.REGISTRATION
     assert select_mode(Environment(True, False)) == Mode.VIO
     assert select_mode(Environment(True, True)) == Mode.VIO
-
-
-@pytest.fixture(scope="module")
-def small_cfg():
-    fe = dataclasses.replace(EDX_DRONE.frontend, height=120, width=160,
-                             max_features=128)
-    return dataclasses.replace(EDX_DRONE, frontend=fe)
 
 
 def run_sequence(seq, cfg, env, n_frames=None, with_map=None, window=8):

@@ -1,0 +1,117 @@
+"""Track ring buffer: the fused JAX ops must reproduce the seed's host
+NumPy behaviour — rolling, LK continuation, dead-slot reseeding, and
+consumed-track one-shot semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import tracks
+
+
+def _random_frame(rs, n):
+    det_yx = rs.randint(0, 120, size=(n, 2)).astype(np.int32)
+    det_valid = rs.rand(n) < 0.8
+    tracked_yx = (rs.rand(n, 2) * 120).astype(np.float32)
+    tracked_valid = rs.rand(n) < 0.6
+    return det_yx, det_valid, tracked_yx, tracked_valid
+
+
+def test_roll_and_update_matches_numpy_reference():
+    rs = np.random.RandomState(0)
+    n, W = 32, 6
+    uv_np = np.zeros((n, W, 2), np.float32)
+    vd_np = np.zeros((n, W), bool)
+    uv_j = jnp.asarray(uv_np)
+    vd_j = jnp.asarray(vd_np)
+    for frame in range(10):
+        det_yx, det_valid, tracked_yx, tracked_valid = _random_frame(rs, n)
+        uv_np, vd_np = tracks.roll_and_update_np(
+            uv_np, vd_np, det_yx, det_valid, tracked_yx, tracked_valid,
+            first_frame=frame == 0)
+        uv_j, vd_j = tracks.roll_and_update(
+            uv_j, vd_j, jnp.asarray(det_yx), jnp.asarray(det_valid),
+            jnp.asarray(tracked_yx), jnp.asarray(tracked_valid))
+        np.testing.assert_array_equal(np.asarray(vd_j), vd_np,
+                                      err_msg=f"frame {frame} valid")
+        np.testing.assert_allclose(np.asarray(uv_j), uv_np, atol=1e-6,
+                                   err_msg=f"frame {frame} uv")
+
+
+def test_continuation_appends_tracked_position():
+    n, W = 4, 5
+    uv = jnp.zeros((n, W, 2))
+    vd = jnp.zeros((n, W), bool).at[0, -1].set(True).at[1, -1].set(True)
+    det_yx = jnp.full((n, 2), 7, jnp.int32)
+    det_valid = jnp.ones(n, bool)
+    tracked_yx = jnp.asarray([[10.5, 20.5]] * n, jnp.float32)
+    tracked_valid = jnp.asarray([True, False, True, False])
+    uv2, vd2 = tracks.roll_and_update(uv, vd, det_yx, det_valid,
+                                      tracked_yx, tracked_valid)
+    # slot 0: alive + tracked -> continued at the LK position (u=x, v=y)
+    assert bool(vd2[0, -2]) and bool(vd2[0, -1])
+    np.testing.assert_allclose(np.asarray(uv2[0, -1]), [20.5, 10.5])
+    # slot 1: alive but LK lost it -> reseeded from the detection
+    assert not bool(vd2[1, -2])
+    np.testing.assert_allclose(np.asarray(uv2[1, -1]), [7.0, 7.0])
+    # slot 2: tracked but was dead -> reseed (continuation needs history)
+    assert not bool(vd2[2, -2]) and bool(vd2[2, -1])
+    np.testing.assert_allclose(np.asarray(uv2[2, -1]), [7.0, 7.0])
+
+
+def test_dead_slot_reseed_clears_history():
+    n, W = 2, 4
+    uv = jnp.ones((n, W, 2)) * 3.0
+    vd = jnp.ones((n, W), bool)
+    det_yx = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    det_valid = jnp.asarray([True, False])
+    tracked_valid = jnp.zeros(n, bool)          # LK lost everything
+    uv2, vd2 = tracks.roll_and_update(uv, vd, det_yx, det_valid,
+                                      jnp.zeros((n, 2)), tracked_valid)
+    # all history cleared, only the fresh detection (if valid) remains
+    np.testing.assert_array_equal(np.asarray(vd2[:, :-1]), False)
+    assert bool(vd2[0, -1]) and not bool(vd2[1, -1])
+    np.testing.assert_array_equal(np.asarray(uv2[:, :-1]), 0.0)
+
+
+def test_select_consumed_matches_seed_selection():
+    rs = np.random.RandomState(1)
+    n, W = 64, 6
+    vd = rs.rand(n, W) < 0.55
+    uv = rs.rand(n, W, 2).astype(np.float32)
+    obs = vd.sum(1)
+    ended = (~vd[:, -1]) & (obs >= tracks.MIN_TRACK_OBS)
+    full = vd.all(1)
+    use = np.nonzero(ended | full)[0][:tracks.MAX_UPDATES]
+
+    uv_s, vd_s, count, consumed = tracks.select_consumed(
+        jnp.asarray(uv), jnp.asarray(vd))
+    assert int(count) == use.size
+    np.testing.assert_array_equal(np.nonzero(np.asarray(consumed))[0], use)
+    np.testing.assert_allclose(np.asarray(uv_s[:use.size]), uv[use])
+    np.testing.assert_array_equal(np.asarray(vd_s[:use.size]), vd[use])
+    # padding rows are fully masked
+    np.testing.assert_array_equal(np.asarray(vd_s[use.size:]), False)
+
+
+def test_consume_is_one_shot():
+    """Each observation feeds the filter at most once: consuming keeps
+    only the newest column, so a full-window track restarts with one
+    observation and an ended track goes completely dead."""
+    n, W = 3, 5
+    vd = jnp.asarray([
+        [True] * W,                          # full window -> consumed
+        [True, True, True, True, False],     # ended (4 obs) -> consumed
+        [False, False, False, True, True],   # young -> untouched
+    ])
+    uv = jnp.zeros((n, W, 2))
+    _, _, count, consumed = tracks.select_consumed(uv, vd)
+    assert int(count) == 2
+    vd2 = tracks.consume(vd, consumed)
+    np.testing.assert_array_equal(
+        np.asarray(vd2),
+        [[False, False, False, False, True],
+         [False, False, False, False, False],
+         [False, False, False, True, True]])
+    # consuming again selects nothing: the one-shot guarantee
+    _, _, count2, _ = tracks.select_consumed(uv, vd2)
+    assert int(count2) == 0
