@@ -338,6 +338,80 @@ def fused_vs_seed(n_frames: int = 12) -> List[Row]:
     ]
 
 
+def chunked_pipeline(n_frames: int = 32, ks=(1, 4, 8),
+                     out_json: str = "BENCH_chunked.json") -> List[Row]:
+    """K-frame chunk pipeline (lax.scan) vs per-frame dispatch: mean and
+    p99 per-frame latency for each chunk size K, demonstrating dispatch
+    overhead amortized over the chunk (one Python->device round trip per
+    K frames instead of per frame). Writes the report to ``out_json``.
+
+    Embedded-class VIO workload (48x64, 48 features, window 4) — the
+    regime where per-dispatch host/launch overhead is a visible share of
+    the frame budget. K=1 runs through the same scan program, so the
+    comparison isolates amortization, not code differences. Each K gets
+    a compile pass (fresh state, trace cached on the localizer) and a
+    measured pass; per-frame samples come from the localizer's own
+    variation tracker (chunk wall time / frames)."""
+    window = 4
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    cfg = dataclasses.replace(EDX_DRONE, frontend=fe)
+    seq = frames.generate(n_frames=n_frames, H=48, W=64, n_landmarks=200,
+                          accel_sigma=0.5, gyro_sigma=0.02)
+    ipf = seq.imu_per_frame
+    accel = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(n_frames)])
+    gyro = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                     for i in range(n_frames)])
+    env = Environment(True, False)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+
+    rows: List[Row] = []
+    report = {"n_frames": n_frames, "workload": "vio_48x64_w4", "ks": {}}
+    means = {}
+    rounds = 3
+    locs = {K: Localizer(cfg, seq.cam, window=window) for K in ks}
+
+    def one_pass(K):
+        loc = locs[K]
+        st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+        loc.run(st, seq.images_left[:n_frames],
+                seq.images_right[:n_frames], accel, gyro,
+                seq.gps[:n_frames], env, seq.dt / ipf, chunk=K)
+
+    for K in ks:                                      # compile pass per K
+        one_pass(K)
+    n_warm = {K: len(locs[K].variation[Mode.VIO].samples) for K in ks}
+    for _ in range(rounds):                           # interleaved rounds:
+        for K in ks:                                  # host-load drift hits
+            one_pass(K)                               # every K equally
+    for K in ks:
+        loc = locs[K]
+        s = np.asarray(loc.variation[Mode.VIO].samples[n_warm[K]:])
+        mean_us = float(s.mean()) * 1e6
+        p99_us = float(np.percentile(s, 99)) * 1e6
+        means[K] = mean_us
+        dispatches = loc.dispatch_count // (rounds + 1)   # per pass
+        report["ks"][str(K)] = {
+            "mean_us_per_frame": mean_us, "p99_us_per_frame": p99_us,
+            "dispatches_per_pass": dispatches,
+            "traces": loc.chunk_trace_count(),
+        }
+        rows.append((f"chunked/K{K}_frame_us", mean_us,
+                     f"p99={p99_us:.0f}us,dispatches={dispatches},"
+                     f"traces={loc.chunk_trace_count()}"))
+    k0, k_max = min(ks), max(ks)
+    ratio = means[k0] / max(means[k_max], 1e-9)
+    report["amortization_mean_K1_over_Kmax"] = ratio
+    rows.append(("chunked/amortization", 0.0,
+                 f"K{k0}/K{k_max}_mean={ratio:.2f}x"))
+    if out_json:
+        import json
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return rows
+
+
 def fleet_scaling(n_frames: int = 6, batch: int = 8) -> List[Row]:
     """B robots per dispatch: amortized per-robot latency vs the
     single-robot fused step on the same frames.
@@ -427,24 +501,29 @@ def tbl2_sharing() -> List[Row]:
 
 
 ALL = [fig3_accuracy_tradeoff, fig5_latency_split, fig9_11_variation,
-       fig16_kernel_scaling, fig17_18_speedup, fused_vs_seed, fleet_scaling,
-       tbl1_building_blocks, tbl2_sharing]
+       fig16_kernel_scaling, fig17_18_speedup, fused_vs_seed,
+       chunked_pipeline, fleet_scaling, tbl1_building_blocks, tbl2_sharing]
 
 
 def main() -> None:
     """Hot-path benchmark entry point (CI smoke: --frames 5).
 
         PYTHONPATH=src python benchmarks/eudoxus_bench.py --frames 5
+        PYTHONPATH=src python benchmarks/eudoxus_bench.py --frames 32 --chunk 8
         PYTHONPATH=src python benchmarks/eudoxus_bench.py --all
 
     Default runs the fused-vs-seed and fleet suites (the dispatch-count /
-    perf regression guards); --all adds every paper figure/table suite.
+    perf regression guards); --chunk K adds the chunked-scan pipeline
+    suite (K in {1, 4, K}, writes BENCH_chunked.json); --all adds every
+    paper figure/table suite.
     """
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=12,
                     help="frames per benchmark run")
     ap.add_argument("--batch", type=int, default=8, help="fleet size B")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="run the chunked pipeline suite with this max K")
     ap.add_argument("--all", action="store_true",
                     help="also run the paper figure/table suites")
     args = ap.parse_args()
@@ -452,6 +531,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     suites = [lambda: fused_vs_seed(args.frames),
               lambda: fleet_scaling(min(args.frames, 6), args.batch)]
+    if args.chunk:
+        # sweep K=1 and the midpoint 4 but never exceed the user's cap
+        ks = tuple(sorted({k for k in (1, 4, args.chunk)
+                           if k <= args.chunk}))
+        suites.append(lambda: chunked_pipeline(max(args.frames, 8), ks))
     if args.all:
         suites += [fig3_accuracy_tradeoff, fig5_latency_split,
                    fig9_11_variation, fig16_kernel_scaling,

@@ -52,6 +52,8 @@ def _register_suites():
         "fig16": eudoxus_bench.fig16_kernel_scaling,
         "fig17_18": eudoxus_bench.fig17_18_speedup,
         "fused": eudoxus_bench.fused_vs_seed,
+        "chunked": lambda: eudoxus_bench.chunked_pipeline(
+            n_frames=32, ks=(1, 4, 8)),
         "fleet": eudoxus_bench.fleet_scaling,
         "tbl1": eudoxus_bench.tbl1_building_blocks,
         "tbl2": eudoxus_bench.tbl2_sharing,

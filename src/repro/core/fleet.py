@@ -24,10 +24,12 @@ import numpy as np
 
 from repro.configs.eudoxus import EudoxusConfig
 from repro.core import scheduler as sched, tracks
-from repro.core.environment import MODE_SLAM, MODE_VIO, select_mode_id
+from repro.core.environment import (MODE_REGISTRATION, MODE_SLAM, MODE_VIO,
+                                    select_mode_id)
 from repro.core.frontend.pipeline import FrontendResult
-from repro.core.localizer import (Localizer, LocalizerState, TracedStep,
-                                  init_localizer_state)
+from repro.core.localizer import (BA_LANDMARKS, Localizer, LocalizerState,
+                                  TracedStep, init_localizer_state)
+from repro.core.step import FrameInputs, FrameOutputs, TracedChunk
 
 
 class FleetLocalizer:
@@ -62,6 +64,12 @@ class FleetLocalizer:
         self._fused_fleet = jax.jit(
             jax.vmap(self._traced, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None)),
             donate_argnums=(0,))
+        # chunk x fleet: lax.scan over K frames of the vmapped transition
+        # — one dispatch advances B robots K frames (steady state: one
+        # trace per chunk size)
+        self._traced_chunk = TracedChunk(cfg, cam, fleet=True)
+        self._fused_fleet_chunk = jax.jit(self._traced_chunk,
+                                          donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     def init_state(self, p0=None, v0=None, q0=None) -> LocalizerState:
@@ -137,6 +145,101 @@ class FleetLocalizer:
                         lambda batch, one: batch.at[b].set(one),
                         states.filt, new_b.filt))
         return states
+
+    # ------------------------------------------------------------------
+    # chunked fleet pipeline: K frames x B robots in one dispatch
+    # ------------------------------------------------------------------
+    def step_chunk(self, states: LocalizerState, imgs_l, imgs_r, imu_accel,
+                   imu_gyro, gps, mode_ids, dt_imu: float,
+                   active=None) -> Tuple[LocalizerState, FrameOutputs]:
+        """Advance every robot K frames in ONE batched scan dispatch
+        (``core.step.fleet_chunk``): chunk x fleet amortization of launch
+        overhead on both axes.
+
+        imgs_l/imgs_r: (K,B,H,W); imu_accel/gyro: (K,B,ipf,3); gps:
+        (K,B,3) with NaN rows where unavailable; mode_ids: (B,) per-robot
+        modes held for the chunk; active: optional (K,) bool padding mask
+        for trailing partial chunks (keeps K static -> one trace).
+
+        VIO robots are exact. SLAM robots get their (feedback-free) host
+        map growth replayed in frame order after the chunk. Registration
+        robots' host-stage pose fix is applied once at the END of the
+        chunk — chunk-granularity feedback; use K=1 (``step``) when
+        per-frame registration feedback matters.
+        """
+        K = np.asarray(imgs_l).shape[0]
+        mode_np = np.asarray(mode_ids, np.int32)
+        if active is None:
+            act = np.ones((K, self.batch), bool)
+            n_real = K
+        else:
+            act1d = np.asarray(active, bool)
+            n_real = int(act1d.sum())
+            # the host stage maps scan slot j to filter frame base+j,
+            # which is only correct when the real frames form a prefix
+            # (trailing padding) — reject gap masks instead of silently
+            # skewing SLAM keyframe indices / dropping registration fixes
+            if not act1d[:n_real].all():
+                raise ValueError(
+                    "active mask must be a contiguous prefix "
+                    f"(got {act1d.tolist()})")
+            act = np.broadcast_to(act1d[:, None], (K, self.batch)).copy()
+        base_idx = np.asarray(states.frame_idx)      # pre-chunk, per robot
+
+        inputs = FrameInputs(
+            img_l=jnp.asarray(imgs_l, jnp.float32),
+            img_r=jnp.asarray(imgs_r, jnp.float32),
+            accel=jnp.asarray(imu_accel, jnp.float32),
+            gyro=jnp.asarray(imu_gyro, jnp.float32),
+            gps=jnp.asarray(gps, jnp.float32),
+            mode=jnp.asarray(np.broadcast_to(mode_np, (K, self.batch))),
+            active=jnp.asarray(act))
+        plan = self.scheduler.plan_chunk(
+            self.window, tracks.MAX_UPDATES, max(n_real, 1),
+            map_points=self.cfg.backend.max_map_points,
+            ba_landmarks=BA_LANDMARKS)
+        states, outs = self._fused_fleet_chunk(
+            states, inputs, jnp.asarray(plan.kalman_gain),
+            jnp.float32(dt_imu))
+        self.dispatch_count += 1
+
+        if (mode_np != MODE_VIO).any():
+            states = self._host_chunk_stage(states, outs, mode_np, act,
+                                            base_idx)
+        return states, outs
+
+    def _host_chunk_stage(self, states, outs, mode_np, act, base_idx):
+        """Ordered per-frame host replay for SLAM robots; chunk-end
+        registration fix for Registration robots."""
+        K = act.shape[0]
+        p_np = np.asarray(outs.p)        # (K, B, 3)
+        q_np = np.asarray(outs.q)
+        # one device->host transfer for the chunk's frontend outputs
+        # (per-robot per-leaf slicing would sync K x B x leaves times)
+        fr_np = jax.device_get(outs.fr)
+        for j in range(K):
+            for b in np.nonzero(mode_np == MODE_SLAM)[0]:
+                if not act[j, b]:
+                    continue
+                fr_b = jax.tree_util.tree_map(lambda x: x[j][b], fr_np)
+                self.robot_host(b)._slam_frame(
+                    q_np[j, b], p_np[j, b], int(base_idx[b]) + j, fr_b)
+        last = np.maximum(act.sum(axis=0) - 1, 0)    # last active frame
+        for b in np.nonzero(mode_np == MODE_REGISTRATION)[0]:
+            j = int(last[b])
+            if not act[j, b]:
+                continue
+            st_b = jax.tree_util.tree_map(lambda x: x[b], states)
+            fr_b = jax.tree_util.tree_map(lambda x: x[j][b], fr_np)
+            new_b = self.robot_host(b)._registration_step(st_b, fr_b)
+            if new_b is not st_b:       # registration fused a pose fix
+                states = states._replace(filt=jax.tree_util.tree_map(
+                    lambda batch, one: batch.at[b].set(one),
+                    states.filt, new_b.filt))
+        return states
+
+    def chunk_trace_count(self) -> int:
+        return self._traced_chunk.traces
 
     def step_envs(self, states, imgs_l, imgs_r, imu_accel, imu_gyro, gps,
                   gps_available, map_available, dt_imu: float):

@@ -14,7 +14,7 @@ exactly what the paper ships to the backend.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +79,39 @@ def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
         yx=fl.yx, score=fl.score, valid=fl.valid, desc=dl,
         disparity=m.disparity, stereo_valid=m.valid & fl.valid,
         prev_yx=prev_yx, track_valid=track_valid)
+
+
+class FrontendCarry(NamedTuple):
+    """Frontend state threaded frame-to-frame as a fixed-shape scan
+    carry: the previous left image (LK source) and the previous frame's
+    features. Frame 0 uses the all-invalid init carry, so LK output is
+    masked off and every track slot reseeds from detections — the same
+    program serves the first frame and steady state."""
+    prev_img: jax.Array   # (H, W) float32
+    prev_yx: jax.Array    # (N, 2) int32
+    prev_valid: jax.Array  # (N,) bool
+
+
+def init_carry(cfg) -> FrontendCarry:
+    """Fresh carry for one robot (frame 0 semantics, fixed shapes)."""
+    feats = empty_prev_features(cfg.max_features)
+    return FrontendCarry(
+        prev_img=jnp.zeros((cfg.height, cfg.width), jnp.float32),
+        prev_yx=feats.yx, prev_valid=feats.valid)
+
+
+def step_carry(carry: FrontendCarry, img_l: jax.Array, img_r: jax.Array,
+               cfg) -> Tuple[FrontendCarry, FrontendResult]:
+    """One frontend stage of the scan body: run the full frontend from
+    the carried previous frame, then advance the carry."""
+    prev_feats = fast.Features(
+        yx=carry.prev_yx,
+        score=jnp.zeros(carry.prev_valid.shape, jnp.float32),
+        valid=carry.prev_valid)
+    fr = run_frontend(img_l, img_r, cfg, carry.prev_img, prev_feats)
+    new_carry = FrontendCarry(prev_img=img_l, prev_yx=fr.yx,
+                              prev_valid=fr.valid)
+    return new_carry, fr
 
 
 def empty_prev_features(n: int) -> fast.Features:

@@ -9,25 +9,34 @@ Per frame (paper Fig. 4):
        Registration — BoW place recognition + projection + PnP vs the map
   3. runtime scheduler decides kernel offload; variation tracked per frame.
 
-The per-frame hot path is ONE fused, buffer-donated jitted program
-(``localize_step``): frontend, the fixed-shape track ring buffer (the
-FPGA's on-chip track SRAM analogue), consumed-track selection, MSCKF
-propagate/augment/update and the mode-dispatched fusion stage all execute
-in a single device dispatch with no host round-trip. Backend modes are
-selected by ``lax.switch`` on an integer mode id, so one compiled program
-serves every operating environment. The seed's kernel-by-kernel path is
-kept as ``step_reference`` — the baseline the benchmarks compare against.
+State threading lives in ``core.step`` (pure, scan-able functions of
+fixed-shape arrays); this module is the orchestration half: the
+``Localizer`` drives those functions, owns the dynamically-sized
+persistent map (the paper's "map persisted offline" path), resolves
+scheduler offload plans, and records latency variation.
 
-SLAM map growth and Registration place-recognition run host-side after
-the fused dispatch (they touch the dynamically-sized persistent map, the
-paper's "map persisted offline" path).
+Two hot paths:
+
+* ``step`` — one frame, one fused buffer-donated jitted dispatch
+  (``core.step.localize_step``), as in PR 1.
+* ``run`` — a whole sequence in K-frame chunks: ``lax.scan`` drives the
+  frame transition inside ONE dispatch per chunk
+  (``core.step.localize_chunk``), amortizing the Python->device round
+  trip. Offload plans are resolved per chunk. Mode switching stays
+  inside the scan via ``lax.switch``; SLAM map growth is deferred to an
+  order-preserving host stage after the chunk (map growth never feeds
+  back into the filter), and Registration frames terminate their chunk
+  so their host-stage pose fix reaches the next frame — keeping chunked
+  execution numerically equivalent to the per-frame fused path.
+
+The seed's kernel-by-kernel path is kept as ``step_reference`` — the
+baseline the benchmarks compare against.
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +49,16 @@ from repro.core.environment import Environment, Mode, mode_id, select_mode
 from repro.core.frontend import fast
 from repro.core.frontend.pipeline import (FrontendResult,
                                           empty_prev_features, run_frontend)
+# re-exported: the pure state-threading layer (kept importable from here
+# for existing callers/tests)
+from repro.core.step import (FrameInputs, FrameOutputs,  # noqa: F401
+                             LocalizerState, TracedChunk, TracedStep,
+                             init_localizer_state, localize_chunk,
+                             localize_step)
+
+# BA landmark budget per window (padded buffer in _run_ba; also the
+# static size feature the marginalization offload plan is resolved from)
+BA_LANDMARKS = 64
 
 
 @dataclass
@@ -49,118 +68,6 @@ class MapData:
     valid: np.ndarray           # (M,) bool
     keyframe_hists: np.ndarray  # (K,V) BoW histograms
     keyframe_poses: np.ndarray  # (K,4,4)
-
-
-class LocalizerState(NamedTuple):
-    """Device-resident per-robot state — a pure pytree threaded through
-    the donated fused step (covariance and track buffers update in
-    place)."""
-    filt: msckf.MsckfState
-    tracks_uv: jax.Array     # (N, W, 2) uv observations across the window
-    tracks_valid: jax.Array  # (N, W) bool
-    prev_img: jax.Array      # (H, W) previous left image (LK source)
-    prev_yx: jax.Array       # (N, 2) int32 previous frame's features
-    prev_valid: jax.Array    # (N,) bool
-    frame_idx: jax.Array     # () int32
-
-
-def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
-                  accel: jax.Array, gyro: jax.Array, gps: jax.Array,
-                  mode: jax.Array, offload_kalman: jax.Array,
-                  dt_imu: jax.Array, *, cfg,
-                  fx: float, fy: float, cx: float, cy: float
-                  ) -> Tuple[LocalizerState, FrontendResult]:
-    """One fused frame: frontend -> track ring buffer -> lax.switch
-    backend -> new state. Pure function of fixed-shape arrays; jitted
-    with ``donate_argnums=(0,)`` by the Localizer.
-
-    gps: (3,) world position, NaN when unavailable. mode: () int32 mode
-    id. offload_kalman: () bool, the scheduler's pre-resolved decision.
-    """
-    prev_feats = fast.Features(
-        yx=state.prev_yx,
-        score=jnp.zeros(state.prev_valid.shape, jnp.float32),
-        valid=state.prev_valid)
-    fr = run_frontend(img_l, img_r, cfg, state.prev_img, prev_feats)
-
-    # --- track bookkeeping (fixed-shape ring buffer over the window);
-    # frame 0 falls out naturally: prev_valid is all-False so every slot
-    # reseeds from this frame's detections
-    tracks_uv, tracks_valid = tracks.roll_and_update(
-        state.tracks_uv, state.tracks_valid, fr.yx, fr.valid,
-        fr.prev_yx, fr.track_valid)
-
-    # --- MSCKF propagate/augment (frame 0 defines the start pose)
-    filt = jax.lax.cond(
-        state.frame_idx > 0,
-        lambda f: msckf.propagate(f, accel, gyro, dt=dt_imu),
-        lambda f: f, state.filt)
-    filt = msckf.augment(filt)
-
-    # --- MSCKF update on CONSUMED tracks only (ended this frame, or at
-    # full window length) — each observation is used exactly once, the
-    # MSCKF consistency requirement
-    uv, vd, count, consumed = tracks.select_consumed(tracks_uv, tracks_valid)
-    do_consume = (count >= tracks.MIN_UPDATE_TRACKS) & (state.frame_idx >= 3)
-    filt = jax.lax.cond(
-        do_consume & offload_kalman,
-        lambda f: msckf.update(f, uv, vd, fx=fx, fy=fy, cx=cx, cy=cy)[0],
-        lambda f: f, filt)
-    tracks_valid = jnp.where(do_consume,
-                             tracks.consume(tracks_valid, consumed),
-                             tracks_valid)
-
-    # --- mode dispatch (paper Fig. 2 -> one resident program per mode):
-    # VIO fuses GPS on-device (gps_update is NaN-safe: invalid fixes get
-    # zero weight); SLAM / Registration defer their map work to the host
-    # stage (the map is dynamically sized)
-    filt = jax.lax.switch(jnp.clip(mode, 0, 2),
-                          [lambda f: fusion.gps_update(f, gps)[0],
-                           lambda f: f, lambda f: f], filt)
-
-    new_state = LocalizerState(
-        filt=filt, tracks_uv=tracks_uv, tracks_valid=tracks_valid,
-        prev_img=img_l, prev_yx=fr.yx, prev_valid=fr.valid,
-        frame_idx=state.frame_idx + 1)
-    return new_state, fr
-
-
-def init_localizer_state(cfg: EudoxusConfig, window: int, p0=None, v0=None,
-                         q0=None) -> LocalizerState:
-    """Fresh device-resident state for one robot."""
-    n = cfg.frontend.max_features
-    H, W = cfg.frontend.height, cfg.frontend.width
-    prev = empty_prev_features(n)    # frame 0: LK masked off, all reseed
-    return LocalizerState(
-        filt=msckf.init_state(
-            window,
-            p0=None if p0 is None else jnp.asarray(p0, jnp.float32),
-            v0=None if v0 is None else jnp.asarray(v0, jnp.float32),
-            q0=None if q0 is None else jnp.asarray(q0, jnp.float32)),
-        tracks_uv=jnp.zeros((n, window, 2), jnp.float32),
-        tracks_valid=jnp.zeros((n, window), bool),
-        prev_img=jnp.zeros((H, W), jnp.float32),
-        prev_yx=prev.yx,
-        prev_valid=prev.valid,
-        frame_idx=jnp.int32(0))
-
-
-class TracedStep:
-    """``localize_step`` bound to a config/camera, counting traces.
-
-    The wrapper body runs once per jit trace, so ``traces`` counts
-    compilations without relying on private JAX cache APIs. Shared by
-    ``Localizer`` (jitted directly) and ``FleetLocalizer`` (vmapped)."""
-
-    def __init__(self, cfg: EudoxusConfig, cam):
-        self._step = functools.partial(localize_step, cfg=cfg.frontend,
-                                       fx=cam.fx, fy=cam.fy,
-                                       cx=cam.cx, cy=cam.cy)
-        self.traces = 0
-
-    def __call__(self, *args):
-        self.traces += 1
-        return self._step(*args)
 
 
 class Localizer:
@@ -179,14 +86,16 @@ class Localizer:
         self.map: Optional[MapData] = None
         self._slam_keyframes: List[Dict] = []
         self.trajectory: List[np.ndarray] = []
-        self.dispatch_count = 0      # device dispatches issued by step()
+        self.dispatch_count = 0      # device dispatches issued by step()/run()
         # offload decisions depend only on static shapes -> resolve once;
         # call refresh_offload_plan() after fitting new latency models
-        self._offload_plan = self.scheduler.plan_frame(
-            self.window, tracks.MAX_UPDATES)
-        # the fused hot path: one compiled program, donated state buffers
+        self._offload_plan = self._plan(chunk=1)
+        # the fused hot paths: one compiled program each, donated state
+        # buffers. The chunk program is traced per distinct K.
         self._traced = TracedStep(cfg, cam)
         self._fused_step = jax.jit(self._traced, donate_argnums=(0,))
+        self._traced_chunk = TracedChunk(cfg, cam)
+        self._fused_chunk = jax.jit(self._traced_chunk, donate_argnums=(0,))
         # seed-style kernel-by-kernel dispatches (step_reference + tests)
         self._propagate = jax.jit(msckf.propagate,
                                   static_argnames=("dt", "sigma_a", "sigma_g"))
@@ -209,10 +118,31 @@ class Localizer:
         state: exactly 1 — fixed shapes, no data-dependent retraces)."""
         return self._traced.traces
 
+    def chunk_trace_count(self) -> int:
+        """Number of distinct compilations of the chunked scan program
+        (steady state: exactly 1 per chunk size K — padding keeps K
+        static across partial chunks)."""
+        return self._traced_chunk.traces
+
+    def _plan(self, chunk: int) -> sched.OffloadPlan:
+        """All-kernel offload plan from static shapes (paper Fig. 16
+        decisions via the fitted latency models in ``self.scheduler``)."""
+        mp = self.cfg.backend.max_map_points
+        px = self.cfg.frontend.height * self.cfg.frontend.width
+        if chunk <= 1:
+            return self.scheduler.plan_frame(
+                self.window, tracks.MAX_UPDATES,
+                map_points=mp, ba_landmarks=BA_LANDMARKS, frame_pixels=px)
+        return self.scheduler.plan_chunk(
+            self.window, tracks.MAX_UPDATES, chunk,
+            map_points=mp, ba_landmarks=BA_LANDMARKS, frame_pixels=px)
+
     def refresh_offload_plan(self) -> sched.OffloadPlan:
-        """Re-resolve offload decisions (after fitting latency models)."""
-        self._offload_plan = self.scheduler.plan_frame(
-            self.window, tracks.MAX_UPDATES)
+        """Re-resolve the per-frame offload decisions (after fitting
+        latency models). The instance plan always reflects the per-frame
+        dispatch pattern; chunk-amortized plans are resolved locally by
+        ``run`` so they never leak into ``step``."""
+        self._offload_plan = self._plan(chunk=1)
         return self._offload_plan
 
     # ------------------------------------------------------------------
@@ -244,6 +174,132 @@ class Localizer:
 
         self.trajectory.append(np.asarray(state.filt.p))
         self.variation[mode].add(time.perf_counter() - t0)
+        return state
+
+    # ------------------------------------------------------------------
+    # chunked pipeline: K frames per dispatch via lax.scan
+    # ------------------------------------------------------------------
+    def run(self, state: LocalizerState, imgs_l, imgs_r, imu_accel,
+            imu_gyro, gps, envs: Union[Environment, Sequence[Environment]],
+            dt_imu: float, chunk: int = 8) -> LocalizerState:
+        """Localize a T-frame sequence in K-frame chunks — ONE device
+        dispatch per chunk (``chunk=1`` degenerates to the per-frame
+        fused path's dispatch pattern).
+
+        imgs_l/imgs_r: (T,H,W); imu_accel/imu_gyro: (T,ipf,3) per-frame
+        IMU slices ENDING at each frame; gps: (T,3) or None; envs: one
+        Environment for the whole run or a length-T sequence (mixed-mode
+        runs switch backends inside the scan via ``lax.switch``).
+
+        Chunking policy (exact equivalence with the per-frame path):
+        Registration frames terminate their chunk, because their
+        host-stage pose fix must reach the following frame; SLAM host
+        map growth never feeds back into the filter, so it is replayed
+        in frame order after each chunk from the scan's per-frame
+        outputs.
+        """
+        T = len(imgs_l)
+        if isinstance(envs, Environment):
+            envs = [envs] * T
+        assert len(envs) == T, (len(envs), T)
+        chunk = max(int(chunk), 1)
+        modes = [select_mode(e) for e in envs]
+
+        gps_seq = np.full((T, 3), np.nan, np.float32)
+        if gps is not None:
+            g = np.asarray(gps, np.float32)
+            for i, e in enumerate(envs):
+                if e.gps_available:
+                    gps_seq[i] = g[i]
+
+        # segment the sequence: flush at K frames or after a Registration
+        # frame (its host-stage feedback must precede the next frame)
+        segments: List[List[int]] = []
+        cur: List[int] = []
+        for i in range(T):
+            cur.append(i)
+            if len(cur) == chunk or modes[i] == Mode.REGISTRATION:
+                segments.append(cur)
+                cur = []
+        if cur:
+            segments.append(cur)
+
+        # per-chunk resolution, local to this run: the chunk-amortized
+        # kalman decision must not leak into later per-frame step() calls
+        # (host-stage projection/marginalization decisions are identical
+        # between the frame and chunk plans and keep using the
+        # instance plan)
+        plan = self._plan(chunk)
+        for seg in segments:
+            state = self._run_segment(state, seg, imgs_l, imgs_r,
+                                      imu_accel, imu_gyro, gps_seq, modes,
+                                      dt_imu, chunk, plan)
+        return state
+
+    def _run_segment(self, state: LocalizerState, idxs: List[int],
+                     imgs_l, imgs_r, imu_accel, imu_gyro, gps_seq,
+                     modes: List[Mode], dt_imu: float, chunk: int,
+                     plan: sched.OffloadPlan) -> LocalizerState:
+        """One padded K-frame chunk dispatch + the ordered host stage."""
+        t0 = time.perf_counter()
+        n = len(idxs)
+        pad = chunk - n
+        base_idx = int(state.frame_idx)      # frame index of idxs[0]
+
+        def stack(per_frame, dtype, pad_shape):
+            arr = np.stack([np.asarray(per_frame[i], dtype) for i in idxs])
+            if pad:
+                arr = np.concatenate(
+                    [arr, np.zeros((pad,) + pad_shape, dtype)])
+            return jnp.asarray(arr)
+
+        ipf = np.asarray(imu_accel[idxs[0]]).shape[0]
+        H, W = np.asarray(imgs_l[idxs[0]]).shape
+        inputs = FrameInputs(
+            img_l=stack(imgs_l, np.float32, (H, W)),
+            img_r=stack(imgs_r, np.float32, (H, W)),
+            accel=stack(imu_accel, np.float32, (ipf, 3)),
+            gyro=stack(imu_gyro, np.float32, (ipf, 3)),
+            gps=stack(gps_seq, np.float32, (3,)),
+            mode=jnp.asarray(np.concatenate(
+                [np.asarray([mode_id(modes[i]) for i in idxs], np.int32),
+                 np.zeros(pad, np.int32)])),
+            active=jnp.asarray(np.concatenate(
+                [np.ones(n, bool), np.zeros(pad, bool)])))
+
+        state, outs = self._fused_chunk(
+            state, inputs, jnp.asarray(plan.kalman_gain),
+            jnp.float32(dt_imu))
+        self.dispatch_count += 1
+
+        # ordered host stage from the scan's per-frame outputs
+        outs_np_p = np.asarray(outs.p)
+        outs_np_q = np.asarray(outs.q)
+        # one device->host transfer for the whole chunk's frontend
+        # outputs (per-frame per-leaf slicing would sync K x leaves
+        # times); skipped entirely for all-VIO chunks
+        fr_np = (jax.device_get(outs.fr)
+                 if any(modes[i] != Mode.VIO for i in idxs) else None)
+        for j, i in enumerate(idxs):
+            mode = modes[i]
+            if mode == Mode.SLAM:
+                fr_j = jax.tree_util.tree_map(lambda x: x[j], fr_np)
+                self._slam_frame(outs_np_q[j], outs_np_p[j],
+                                 base_idx + j, fr_j)
+                self.trajectory.append(outs_np_p[j].copy())
+            elif mode == Mode.REGISTRATION:
+                # chunk-terminal by construction: the post-chunk state IS
+                # this frame's state, so the pose fix lands before the
+                # next chunk begins
+                assert j == len(idxs) - 1, "registration frame mid-chunk"
+                fr_j = jax.tree_util.tree_map(lambda x: x[j], fr_np)
+                state = self._registration_step(state, fr_j)
+                self.trajectory.append(np.asarray(state.filt.p))
+            else:
+                self.trajectory.append(outs_np_p[j].copy())
+        per_frame = (time.perf_counter() - t0) / n
+        for i in idxs:
+            self.variation[modes[i]].add(per_frame)
         return state
 
     # ------------------------------------------------------------------
@@ -322,10 +378,20 @@ class Localizer:
 
     # ------------------------------------------------------------------
     def _slam_step(self, state: LocalizerState, fr) -> LocalizerState:
-        """Windowed BA over recent keyframes; extend the map."""
+        """Per-frame entry: SLAM host stage from the full state."""
+        self._slam_frame(np.asarray(state.filt.q), np.asarray(state.filt.p),
+                         int(state.frame_idx) - 1, fr)
+        return state
+
+    def _slam_frame(self, q: np.ndarray, p: np.ndarray, frame_idx: int,
+                    fr) -> None:
+        """Windowed BA over recent keyframes; extend the map. Takes the
+        post-frame pose (q, p) and THIS frame's index explicitly so the
+        chunked path can replay deferred SLAM frames from scan outputs
+        (map growth never feeds back into the filter)."""
         kf = {
-            "pose_R": np.asarray(msckf.quat_to_rot(state.filt.q)),
-            "pose_p": np.asarray(state.filt.p),
+            "pose_R": np.asarray(msckf.quat_to_rot(jnp.asarray(q))),
+            "pose_p": np.asarray(p),
             "yx": np.asarray(fr.yx, np.float32),
             "disparity": np.asarray(fr.disparity),
             "svalid": np.asarray(fr.stereo_valid),
@@ -335,11 +401,9 @@ class Localizer:
         }
         self._slam_keyframes.append(kf)
         K = self.cfg.backend.ba_window
-        frame_idx = int(state.frame_idx) - 1    # this frame's index
         if len(self._slam_keyframes) >= 3 and frame_idx % 2 == 0:
             self._run_ba(self._slam_keyframes[-K:])
         self._extend_map(kf)
-        return state
 
     def _run_ba(self, kfs):
         cam = self.cam
@@ -347,7 +411,7 @@ class Localizer:
         # landmarks: this window's stereo points from the newest keyframe
         ref = kfs[-1]
         pts, valid = stereo_points_world(ref, cam)
-        M = min(64, pts.shape[0])
+        M = min(BA_LANDMARKS, pts.shape[0])
         sel = np.argsort(~valid)[:M]
         lms = pts[sel]
         intr = jnp.asarray([cam.fx, cam.fy, cam.cx, cam.cy])
@@ -362,9 +426,9 @@ class Localizer:
             obs[k, :, 0] = u
             obs[k, :, 1] = v
             ov[k] = valid[sel] & (pc[:, 2] > 0.3)
-        size = int(valid[sel].sum())
-        if not self.scheduler.should_offload("marginalization", size,
-                                             obs.nbytes):
+        # pre-resolved plan decision (fitted latency models, static
+        # padded size) — the paper's per-kernel offload gate
+        if not self._offload_plan.marginalization:
             return
         prob = mapping.BAProblem(
             poses_R=jnp.asarray(np.stack([k_["pose_R"] for k_ in kfs])),
@@ -415,14 +479,18 @@ class Localizer:
         kf_idx, score = tracking.place_recognition(
             hist, jnp.asarray(m.keyframe_hists))
 
-        # projection kernel (scheduler-gated, Fig. 16a)
+        # projection kernel (Fig. 16a), gated by the pre-resolved plan:
+        # accel path = jitted device projection, host path = NumPy —
+        # both registered impls of the kernel registry
+        from repro.kernels import registry as kreg
         R = np.asarray(msckf.quat_to_rot(state.filt.q))
         p = np.asarray(state.filt.p)
-        n_pts = int(m.valid.sum())
-        self.scheduler.should_offload("projection", n_pts, m.points.nbytes)
         Xh = np.concatenate([m.points.T, np.ones((1, m.points.shape[0]))], 0)
         P34 = self.cam_matrix(R, p)
-        uv = tracking.project(jnp.asarray(P34), jnp.asarray(Xh))
+        proj_spec = kreg.REGISTRY["projection"]
+        proj = (proj_spec.pallas if self._offload_plan.projection
+                else proj_spec.xla)
+        uv = proj(jnp.asarray(P34), jnp.asarray(Xh, jnp.float32))
         idx, ok = tracking.associate(
             uv, jnp.asarray(m.valid), fr.yx, fr.valid,
             feat_desc=fr.desc, map_desc=jnp.asarray(m.descriptors))

@@ -30,37 +30,78 @@ class RegressionModel:
     r2: float = 0.0
 
     def fit(self, sizes: np.ndarray, times: np.ndarray) -> "RegressionModel":
-        sizes = np.asarray(sizes, np.float64)
-        times = np.asarray(times, np.float64)
+        sizes = np.asarray(sizes, np.float64).ravel()
+        times = np.asarray(times, np.float64).ravel()
+        finite = np.isfinite(sizes) & np.isfinite(times)
+        sizes, times = sizes[finite], times[finite]
+        # no usable samples at all: stay unfitted (coeffs None) so the
+        # offload-by-default path applies — a constant-0 model would
+        # silently pin every decision to the host
+        if times.size == 0:
+            self.coeffs = None
+            self.r2 = 0.0
+            return self
+        # degenerate profiles (too few samples to constrain the
+        # polynomial, or a single repeated size) collapse to a constant
+        # model with r2 = 0 instead of a rank-deficient polyfit whose
+        # R^2 is -inf/NaN
+        if sizes.size < self.degree + 2 or np.ptp(sizes) == 0.0:
+            self.coeffs = np.asarray([float(times.mean())], np.float64)
+            self.r2 = 0.0
+            return self
         self.coeffs = np.polyfit(sizes, times, self.degree)
         pred = np.polyval(self.coeffs, sizes)
         ss_res = float(np.sum((times - pred) ** 2))
         ss_tot = float(np.sum((times - times.mean()) ** 2))
-        self.r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+        if ss_tot < 1e-24:      # constant observations: perfect or useless
+            self.r2 = 1.0 if ss_res < 1e-24 else 0.0
+        else:
+            self.r2 = 1.0 - ss_res / ss_tot
         return self
+
+    @property
+    def fitted(self) -> bool:
+        return self.coeffs is not None
 
     def predict(self, size: float) -> float:
         assert self.coeffs is not None, "model not fitted"
         return float(np.polyval(self.coeffs, size))
 
 
-# paper kernel -> (size feature, model degree)
+# paper kernel -> latency-model polynomial degree (Fig. 16)
 KERNEL_MODELS = {
     "projection": 1,        # linear in #map points (Fig. 16a)
     "kalman_gain": 2,       # quadratic in H height (Fig. 16b)
     "marginalization": 2,   # quadratic in #features (Fig. 16c)
+    # frontend / building-block ops (registry-dispatched): latency is
+    # linear in the element count each size feature reports
+    "conv2d": 1,
+    "hamming": 1,
+    "matmul": 1,
+    "cholesky": 2,
+    "flash": 1,
 }
 
 
 @dataclass(frozen=True)
 class OffloadPlan:
-    """Per-frame offload decisions resolved BEFORE the fused dispatch.
+    """Offload decisions resolved BEFORE the fused dispatch.
 
-    The fused step is one jitted program; deciding offload from device
-    data mid-frame would force a device->host sync. All sizes the models
-    need (update-batch budget x window) are static shapes, so the plan is
-    computed host-side up front and passed in as a traced boolean."""
-    kalman_gain: bool = True
+    The fused step/chunk is one jitted program; deciding offload from
+    device data mid-frame would force a device->host sync. All sizes the
+    models need (update-batch budget x window, padded map/BA buffers) are
+    static shapes, so the plan is computed host-side up front — once per
+    chunk, not per frame — and its in-dispatch decisions are passed into
+    the jit as traced booleans. Covers all three paper kernels (Fig. 16)
+    plus the frontend op block."""
+    kalman_gain: bool = True       # MSCKF update (inside the fused dispatch)
+    projection: bool = True        # Registration map projection (host stage)
+    marginalization: bool = True   # SLAM BA + marginalization (host stage)
+    # FE ops accel path at the frame's pixel count. Advisory: the ops
+    # themselves dispatch per-call through kernels.registry (same models,
+    # same comparison) at trace time; this field is the plan's
+    # consolidated record of that decision for the configured frame size.
+    frontend: bool = True
 
 
 @dataclass
@@ -71,37 +112,84 @@ class LatencyModels:
     fixed_overhead_s: float = 2e-4  # launch/DMA setup
 
     def fit_kernel(self, name: str, sizes, host_times, accel_times):
-        deg = KERNEL_MODELS[name]
+        deg = KERNEL_MODELS.get(name, 1)
         self.host[name] = RegressionModel(deg).fit(sizes, host_times)
         self.accel[name] = RegressionModel(deg).fit(sizes, accel_times)
 
+    def fitted(self, name: str) -> bool:
+        """Both sides of the kernel's latency model are usable."""
+        return (name in self.host and self.host[name].fitted
+                and name in self.accel and self.accel[name].fitted)
+
     def should_offload(self, name: str, size: float,
-                       transfer_bytes: int = 0) -> bool:
+                       transfer_bytes: int = 0,
+                       overhead_s: Optional[float] = None) -> bool:
         """The paper's decision: offload iff predicted accel time
-        (+ transfer + overhead) < predicted host time."""
-        if name not in self.host or name not in self.accel:
+        (+ transfer + overhead) < predicted host time. Unfitted (or
+        half-fitted / degenerate) models default to offloading — there is
+        no evidence the host is faster. overhead_s overrides the fixed
+        launch overhead (e.g. its per-frame share once a chunk dispatch
+        amortizes it)."""
+        if not self.fitted(name):
             return True      # no model yet: offload by default
         t_host = self.host[name].predict(size)
         t_accel = (self.accel[name].predict(size)
-                   + transfer_bytes / self.transfer_bw
-                   + self.fixed_overhead_s)
+                   + (self.fixed_overhead_s if overhead_s is None
+                      else overhead_s))
+        if transfer_bytes and self.transfer_bw > 0:
+            t_accel += transfer_bytes / self.transfer_bw
+        if not (np.isfinite(t_host) and np.isfinite(t_accel)):
+            return True      # degenerate extrapolation: keep the default
         return t_accel < t_host
 
     def r2_report(self) -> Dict[str, float]:
         return {k: m.r2 for k, m in self.host.items()}
 
     def plan_frame(self, window: int, max_updates: int,
-                   transfer_bytes: Optional[int] = None) -> OffloadPlan:
-        """Pre-resolve this frame's offload decisions from static shapes
-        only (the fused update batch is padded to max_updates tracks, so
-        H height = max_updates * 2 * window regardless of device data).
+                   transfer_bytes: Optional[int] = None,
+                   map_points: int = 0, ba_landmarks: int = 0,
+                   frame_pixels: int = 0) -> OffloadPlan:
+        """Pre-resolve offload decisions from static shapes only (the
+        fused update batch is padded to max_updates tracks, so H height =
+        max_updates * 2 * window regardless of device data; the map /
+        BA-landmark buffers are padded to their configured capacity).
         transfer_bytes defaults to the padded float32 uv buffer size."""
         h_height = max_updates * 2 * window
         if transfer_bytes is None:
             transfer_bytes = max_updates * window * 2 * 4
         return OffloadPlan(
             kalman_gain=self.should_offload("kalman_gain", h_height,
-                                            transfer_bytes))
+                                            transfer_bytes),
+            projection=self.should_offload(
+                "projection", max(map_points, 1), map_points * 4 * 4),
+            marginalization=self.should_offload(
+                "marginalization", max(ba_landmarks, 1),
+                ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4),
+            frontend=self.should_offload(
+                "conv2d", max(frame_pixels, 1), frame_pixels * 4))
+
+    def plan_chunk(self, window: int, max_updates: int, chunk: int,
+                   map_points: int = 0, ba_landmarks: int = 0,
+                   frame_pixels: int = 0) -> OffloadPlan:
+        """Per-chunk plan: identical decision structure to ``plan_frame``
+        (same ``should_offload``, same guards) except the fixed launch
+        overhead of the in-dispatch kernel is amortized over the K frames
+        the scan executes in one dispatch; per-frame transfer volume is
+        unchanged (the scan ships K frames of inputs either way)."""
+        chunk = max(int(chunk), 1)
+        plan = self.plan_frame(window, max_updates,
+                               map_points=map_points,
+                               ba_landmarks=ba_landmarks,
+                               frame_pixels=frame_pixels)
+        h_height = max_updates * 2 * window
+        per_frame_bytes = max_updates * window * 2 * 4
+        kalman = self.should_offload("kalman_gain", h_height,
+                                     per_frame_bytes,
+                                     overhead_s=self.fixed_overhead_s / chunk)
+        return OffloadPlan(kalman_gain=kalman,
+                           projection=plan.projection,
+                           marginalization=plan.marginalization,
+                           frontend=plan.frontend)
 
 
 def profile_fn(fn: Callable, reps: int = 3) -> float:
@@ -130,9 +218,16 @@ class VariationTracker:
         self.samples.append(seconds)
 
     def stats(self) -> Dict[str, float]:
-        a = np.asarray(self.samples)
+        a = np.asarray(self.samples, np.float64)
+        a = a[np.isfinite(a)]        # a NaN sample must not poison the run
         if a.size == 0:
             return {"mean": 0.0, "sd": 0.0, "rsd": 0.0, "worst_over_best": 0.0}
+        if a.size == 1:
+            # one sample carries no spread information: report the mean
+            # and neutral variation instead of SD=0 masquerading as "no
+            # variation measured over many frames"
+            return {"mean": float(a[0]), "sd": 0.0, "rsd": 0.0,
+                    "worst_over_best": 1.0}
         return {
             "mean": float(a.mean()),
             "sd": float(a.std()),

@@ -1,0 +1,265 @@
+"""Pure state threading for the localization hot path.
+
+This module is the functional half of the localizer split: everything
+here is a pure function of fixed-shape arrays — no host state, no maps,
+no timing. ``core.localizer.Localizer`` owns orchestration (host map
+stages, scheduling, stats) and drives these functions.
+
+Three granularities, all one compiled program each:
+
+  ``localize_step``      one frame -> one dispatch (PR 1's fused step;
+                         the K=1 special case)
+  ``localize_chunk``     K frames -> one dispatch: ``lax.scan`` of the
+                         frame transition over a chunk, amortizing the
+                         Python->device round trip (the paper's frame
+                         pipelining, Sec. VI-B)
+  ``fleet_chunk``        K frames x B robots -> one dispatch (scan of
+                         the vmapped transition)
+
+Mode switching stays inside the scan body via the int-id ``lax.switch``,
+so one compiled chunk program serves every operating environment; the
+scheduler's offload decisions are resolved host-side per chunk and enter
+as traced booleans. Chunks are padded to a fixed K with ``active=False``
+frames (the transition passes state through unchanged), so every chunk —
+including the trailing partial one — reuses the same trace.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.eudoxus import EudoxusConfig
+from repro.core import tracks
+from repro.core.backend import fusion, msckf
+from repro.core.frontend import orb, pipeline
+from repro.core.frontend.pipeline import FrontendResult
+
+
+class LocalizerState(NamedTuple):
+    """Device-resident per-robot state — a pure pytree threaded through
+    the donated fused step / chunk scan (covariance and track buffers
+    update in place). Composes the frontend and track scan carries."""
+    filt: msckf.MsckfState
+    tracks_uv: jax.Array     # (N, W, 2) uv observations across the window
+    tracks_valid: jax.Array  # (N, W) bool
+    prev_img: jax.Array      # (H, W) previous left image (LK source)
+    prev_yx: jax.Array       # (N, 2) int32 previous frame's features
+    prev_valid: jax.Array    # (N,) bool
+    frame_idx: jax.Array     # () int32
+
+
+class FrameInputs(NamedTuple):
+    """One frame's inputs. For a K-frame chunk every leaf gains a
+    leading (K,) axis and becomes the ``xs`` of the scan; ``active``
+    marks padding frames (state passes through untouched) so partial
+    chunks reuse the fixed-K trace."""
+    img_l: jax.Array   # (H, W) float32
+    img_r: jax.Array   # (H, W) float32
+    accel: jax.Array   # (ipf, 3) float32 IMU accel ending at this frame
+    gyro: jax.Array    # (ipf, 3) float32
+    gps: jax.Array     # (3,) float32, NaN when unavailable
+    mode: jax.Array    # () int32 backend mode id (environment.MODE_*)
+    active: jax.Array  # () bool; False = padding frame
+
+
+class FrameOutputs(NamedTuple):
+    """Per-frame scan outputs: what the host stage needs after the chunk
+    returns (SLAM keyframes / Registration association need the frontend
+    result and the post-frame pose)."""
+    fr: FrontendResult
+    p: jax.Array       # (3,) post-frame position
+    q: jax.Array       # (4,) post-frame orientation quaternion
+
+
+def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
+                  accel: jax.Array, gyro: jax.Array, gps: jax.Array,
+                  mode: jax.Array, offload_kalman: jax.Array,
+                  dt_imu: jax.Array, *, cfg,
+                  fx: float, fy: float, cx: float, cy: float
+                  ) -> Tuple[LocalizerState, FrontendResult]:
+    """One fused frame: frontend -> track ring buffer -> lax.switch
+    backend -> new state. Pure function of fixed-shape arrays; jitted
+    with ``donate_argnums=(0,)`` by the Localizer (and the body of the
+    chunk scan below — the K=1 special case IS this function).
+
+    gps: (3,) world position, NaN when unavailable. mode: () int32 mode
+    id. offload_kalman: () bool, the scheduler's pre-resolved decision.
+    """
+    fe_carry = pipeline.FrontendCarry(prev_img=state.prev_img,
+                                      prev_yx=state.prev_yx,
+                                      prev_valid=state.prev_valid)
+    fe_carry, fr = pipeline.step_carry(fe_carry, img_l, img_r, cfg)
+
+    # --- track bookkeeping (fixed-shape ring buffer over the window);
+    # frame 0 falls out naturally: prev_valid is all-False so every slot
+    # reseeds from this frame's detections
+    tracks_uv, tracks_valid = tracks.roll_and_update(
+        state.tracks_uv, state.tracks_valid, fr.yx, fr.valid,
+        fr.prev_yx, fr.track_valid)
+
+    # --- MSCKF propagate/augment (frame 0 defines the start pose)
+    filt = jax.lax.cond(
+        state.frame_idx > 0,
+        lambda f: msckf.propagate(f, accel, gyro, dt=dt_imu),
+        lambda f: f, state.filt)
+    filt = msckf.augment(filt)
+
+    # --- MSCKF update on CONSUMED tracks only (ended this frame, or at
+    # full window length) — each observation is used exactly once, the
+    # MSCKF consistency requirement. offload_kalman=False skips the
+    # update in-dispatch (trading accuracy for latency, paper Fig. 17's
+    # host-bound operating point): a host-path update mid-program would
+    # force the device->host sync the fused/chunked pipeline exists to
+    # avoid. See ROADMAP "Open items" for the host-fallback follow-on.
+    uv, vd, count, consumed = tracks.select_consumed(tracks_uv, tracks_valid)
+    do_consume = (count >= tracks.MIN_UPDATE_TRACKS) & (state.frame_idx >= 3)
+    filt = jax.lax.cond(
+        do_consume & offload_kalman,
+        lambda f: msckf.update(f, uv, vd, fx=fx, fy=fy, cx=cx, cy=cy)[0],
+        lambda f: f, filt)
+    tracks_valid = jnp.where(do_consume,
+                             tracks.consume(tracks_valid, consumed),
+                             tracks_valid)
+
+    # --- mode dispatch (paper Fig. 2 -> one resident program per mode):
+    # VIO fuses GPS on-device (gps_update is NaN-safe: invalid fixes get
+    # zero weight); SLAM / Registration defer their map work to the host
+    # stage (the map is dynamically sized)
+    filt = jax.lax.switch(jnp.clip(mode, 0, 2),
+                          [lambda f: fusion.gps_update(f, gps)[0],
+                           lambda f: f, lambda f: f], filt)
+
+    new_state = LocalizerState(
+        filt=filt, tracks_uv=tracks_uv, tracks_valid=tracks_valid,
+        prev_img=fe_carry.prev_img, prev_yx=fe_carry.prev_yx,
+        prev_valid=fe_carry.prev_valid,
+        frame_idx=state.frame_idx + 1)
+    return new_state, fr
+
+
+def _zero_frontend_result(state: LocalizerState) -> FrontendResult:
+    """Shape/dtype-matched placeholder for padding frames (the inactive
+    branch of the chunk transition must return the same pytree)."""
+    n = state.prev_valid.shape[0]
+    return FrontendResult(
+        yx=jnp.zeros((n, 2), jnp.int32),
+        score=jnp.zeros((n,), jnp.float32),
+        valid=jnp.zeros((n,), bool),
+        desc=jnp.zeros((n, orb.N_BITS), bool),
+        disparity=jnp.zeros((n,), jnp.float32),
+        stereo_valid=jnp.zeros((n,), bool),
+        prev_yx=jnp.zeros((n, 2), jnp.float32),
+        track_valid=jnp.zeros((n,), bool))
+
+
+def frame_transition(state: LocalizerState, inp: FrameInputs,
+                     offload_kalman: jax.Array, dt_imu: jax.Array, *,
+                     cfg, fx: float, fy: float, cx: float, cy: float
+                     ) -> Tuple[LocalizerState, FrameOutputs]:
+    """The scan-able FrameState -> FrameState transition: one frame of
+    ``localize_step`` gated by ``inp.active`` (padding frames pass state
+    through so a fixed-K chunk serves any sequence length)."""
+    def live(st):
+        return localize_step(st, inp.img_l, inp.img_r, inp.accel,
+                             inp.gyro, inp.gps, inp.mode, offload_kalman,
+                             dt_imu, cfg=cfg, fx=fx, fy=fy, cx=cx, cy=cy)
+
+    def skip(st):
+        return st, _zero_frontend_result(st)
+
+    state, fr = jax.lax.cond(inp.active, live, skip, state)
+    return state, FrameOutputs(fr=fr, p=state.filt.p, q=state.filt.q)
+
+
+def localize_chunk(state: LocalizerState, inputs: FrameInputs,
+                   offload_kalman: jax.Array, dt_imu: jax.Array, *,
+                   cfg, fx: float, fy: float, cx: float, cy: float
+                   ) -> Tuple[LocalizerState, FrameOutputs]:
+    """K frames in ONE dispatch: ``lax.scan`` of the frame transition.
+
+    inputs: FrameInputs with (K, ...) leaves. Returns the post-chunk
+    state and per-frame FrameOutputs stacked along K. The offload plan
+    and IMU dt are chunk-wide scalars (resolved by the scheduler per
+    chunk, not per frame)."""
+    def body(st, x):
+        return frame_transition(st, x, offload_kalman, dt_imu, cfg=cfg,
+                                fx=fx, fy=fy, cx=cx, cy=cy)
+
+    return jax.lax.scan(body, state, inputs)
+
+
+def fleet_chunk(states: LocalizerState, inputs: FrameInputs,
+                offload_kalman: jax.Array, dt_imu: jax.Array, *,
+                cfg, fx: float, fy: float, cx: float, cy: float
+                ) -> Tuple[LocalizerState, FrameOutputs]:
+    """K frames x B robots in ONE dispatch: scan over the chunk axis of
+    the vmapped transition. states: (B, ...) pytree; inputs: FrameInputs
+    with (K, B, ...) leaves (per-robot modes/activity inside the batch).
+    """
+    def vbody(sts, x):
+        return jax.vmap(
+            lambda st, xi: frame_transition(st, xi, offload_kalman, dt_imu,
+                                            cfg=cfg, fx=fx, fy=fy,
+                                            cx=cx, cy=cy))(sts, x)
+
+    return jax.lax.scan(vbody, states, inputs)
+
+
+def init_localizer_state(cfg: EudoxusConfig, window: int, p0=None, v0=None,
+                         q0=None) -> LocalizerState:
+    """Fresh device-resident state for one robot, composed from the
+    frontend and track scan carries."""
+    n = cfg.frontend.max_features
+    fe = pipeline.init_carry(cfg.frontend)
+    tr = tracks.init_carry(n, window)
+    return LocalizerState(
+        filt=msckf.init_state(
+            window,
+            p0=None if p0 is None else jnp.asarray(p0, jnp.float32),
+            v0=None if v0 is None else jnp.asarray(v0, jnp.float32),
+            q0=None if q0 is None else jnp.asarray(q0, jnp.float32)),
+        tracks_uv=tr.uv,
+        tracks_valid=tr.valid,
+        prev_img=fe.prev_img,
+        prev_yx=fe.prev_yx,
+        prev_valid=fe.prev_valid,
+        frame_idx=jnp.int32(0))
+
+
+class TracedStep:
+    """``localize_step`` bound to a config/camera, counting traces.
+
+    The wrapper body runs once per jit trace, so ``traces`` counts
+    compilations without relying on private JAX cache APIs. Shared by
+    ``Localizer`` (jitted directly) and ``FleetLocalizer`` (vmapped)."""
+
+    def __init__(self, cfg: EudoxusConfig, cam):
+        self._step = functools.partial(localize_step, cfg=cfg.frontend,
+                                       fx=cam.fx, fy=cam.fy,
+                                       cx=cam.cx, cy=cam.cy)
+        self.traces = 0
+
+    def __call__(self, *args):
+        self.traces += 1
+        return self._step(*args)
+
+
+class TracedChunk:
+    """``localize_chunk`` (or ``fleet_chunk`` when ``fleet=True``) bound
+    to a config/camera, counting traces. Steady state: exactly one trace
+    — chunk padding keeps K static and ``active`` masking keeps shapes
+    data-independent."""
+
+    def __init__(self, cfg: EudoxusConfig, cam, fleet: bool = False):
+        fn = fleet_chunk if fleet else localize_chunk
+        self._chunk = functools.partial(fn, cfg=cfg.frontend,
+                                        fx=cam.fx, fy=cam.fy,
+                                        cx=cam.cx, cy=cam.cy)
+        self.traces = 0
+
+    def __call__(self, state, inputs, offload_kalman, dt_imu):
+        self.traces += 1
+        return self._chunk(state, inputs, offload_kalman, dt_imu)

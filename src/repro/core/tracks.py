@@ -18,7 +18,7 @@ kept for the unfused baseline path and for equivalence tests.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,20 @@ MIN_TRACK_OBS = 4
 # skip the MSCKF update unless at least this many tracks are consumed
 # (too few constraints aren't worth a filter update)
 MIN_UPDATE_TRACKS = 4
+
+
+class TrackCarry(NamedTuple):
+    """The track buffer as a scan carry: fixed-shape leaves threaded
+    through ``lax.scan`` (and composed into the localizer's frame
+    carry), so a K-frame chunk keeps all bookkeeping on device."""
+    uv: jax.Array     # (N, W, 2) float32 uv observations across the window
+    valid: jax.Array  # (N, W) bool
+
+
+def init_carry(n: int, window: int) -> TrackCarry:
+    """Empty device-resident track buffer for one robot."""
+    return TrackCarry(uv=jnp.zeros((n, window, 2), jnp.float32),
+                      valid=jnp.zeros((n, window), bool))
 
 
 def roll_and_update(tracks_uv: jax.Array, tracks_valid: jax.Array,

@@ -1,43 +1,112 @@
 """Jitted dispatch wrappers over the Pallas kernels.
 
-This layer is the paper's runtime-scheduler decision point (Sec. VI-B):
-each op picks the accelerator path (Pallas TPU kernel) or the host/XLA
-path (ref.py) based on platform, shape thresholds, and — when a
-``core.scheduler.LatencyModels`` is installed — predicted latency, the
-same linear/quadratic regression models as paper Fig. 16.
+This layer is a thin facade over ``repro.kernels.registry`` — the
+paper's runtime-scheduler decision point (Sec. VI-B). Each op routes
+through ``registry.dispatch``, which picks the accelerator path (Pallas
+TPU kernel) or the host/XLA path (ref.py) by, in order: tiling
+compatibility, the REPRO_KERNELS=auto|pallas|xla override, and — when a
+``core.scheduler.LatencyModels`` has been installed via
+``registry.install_models`` (e.g. by ``registry.calibrate``) — the
+predicted-latency comparison of the fitted linear/quadratic regression
+models, exactly as in paper Fig. 16.
 
 On this CPU container the Pallas path runs in interpret mode and is used
-by the kernel tests; the scheduler keeps production dispatch on XLA.
+by the kernel tests; uncalibrated production dispatch stays on XLA.
 """
 from __future__ import annotations
 
-import functools
 import os
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, registry
+
+# canonical tiling predicate lives in the registry; kept under the old
+# name because the building-block layer and tests reference it here
+def _tileable(sa, sb) -> bool:
+    return registry.tileable_matmul(sa, sb)
+
 
 def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:
-        return False
+    return registry._on_tpu()
 
 
 def use_pallas(op: str, *shape_args) -> bool:
-    # REPRO_KERNELS is read per call (not at import), so tests and
-    # benchmarks can toggle the dispatch path without re-importing.
-    # Note: inside already-compiled jitted functions the decision is
-    # baked in at trace time.
+    """Shape-only preview of the dispatch decision (decision-only entry
+    point for callers whose host fallback is not the registry's XLA impl,
+    e.g. models/attention.py's chunked attention; the ops below go
+    through ``registry.dispatch``, which sees the actual operands).
+    Same precedence as ``registry.decide_path``: shape support first,
+    then the REPRO_KERNELS override, then installed latency models,
+    then platform.
+
+    REPRO_KERNELS is read per call (not at import), so tests and
+    benchmarks can toggle the dispatch path without re-importing; inside
+    already-compiled jitted functions the decision is baked in at trace
+    time.
+    """
+    if not _shape_supports(op, shape_args):
+        return False
     force = os.environ.get("REPRO_KERNELS", "auto")  # auto | pallas | xla
     if force == "pallas":
         return True
     if force == "xla":
         return False
+    models = registry.installed_models()
+    if models is not None and models.fitted(op):
+        size = _shape_size(op, shape_args)
+        if size is not None:
+            return models.should_offload(op, size)
     return _on_tpu()
+
+
+def _shape_supports(op: str, shapes) -> bool:
+    """Shape-tuple analogue of the registry specs' ``supports`` (tiling
+    compatibility must outrank any override, as in ``decide_path``).
+    Unknown ops or partial shape info default to supported."""
+    try:
+        if op == "matmul" and len(shapes) >= 2:
+            return _tileable(shapes[0], shapes[1])
+        if op == "cholesky":
+            return len(shapes[0]) == 2 and shapes[0][-1] % 128 == 0
+        if op == "conv2d":
+            return len(shapes[0]) == 2
+        if op == "hamming" and len(shapes) >= 2:
+            return len(shapes[0]) == 2 and len(shapes[1]) == 2
+        if op == "flash":
+            return len(shapes[0]) == 4
+    except (IndexError, TypeError):
+        return False
+    return True
+
+
+def _shape_size(op: str, shapes) -> float:
+    """Latency-model size feature derived from shape tuples alone,
+    matching the registry specs' ``size_feature`` so a model fitted
+    through the registry is queried on the same scale here."""
+    try:
+        if op == "matmul":
+            (m, k), (_, n) = shapes[0], shapes[1]
+            return float(m) * k * n
+        if op == "cholesky":
+            return float(shapes[0][-1])
+        if op == "conv2d":
+            h, w = shapes[0][:2]
+            return float(h) * w
+        if op == "hamming":
+            return float(shapes[0][0]) * shapes[1][0]
+        if op == "flash":
+            # registry feature: q elements x kv length. Only q's shape is
+            # available here; kv length == q length for the LM's
+            # self-attention callers
+            q = shapes[0]
+            size = 1.0
+            for d in q:
+                size *= d
+            return size * q[1]
+    except (IndexError, TypeError, ValueError):
+        pass
+    return None
 
 
 # --------------------------------------------------------------------------
@@ -45,22 +114,11 @@ def use_pallas(op: str, *shape_args) -> bool:
 # --------------------------------------------------------------------------
 
 def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
-    if use_pallas("matmul", a.shape, b.shape) and _tileable(a.shape, b.shape):
-        from repro.kernels import blocked_matmul
-        return blocked_matmul.matmul(a, b)
-    return ref.matmul(a, b)
-
-
-def _tileable(sa, sb) -> bool:
-    return (len(sa) == 2 and len(sb) == 2
-            and sa[0] % 8 == 0 and sa[1] % 128 == 0 and sb[1] % 128 == 0)
+    return registry.dispatch("matmul", a, b)
 
 
 def cholesky(a: jax.Array) -> jax.Array:
-    if use_pallas("cholesky", a.shape) and a.shape[-1] % 128 == 0:
-        from repro.kernels import cholesky as chol_k
-        return chol_k.cholesky(a)
-    return ref.cholesky(a)
+    return registry.dispatch("cholesky", a)
 
 
 def tri_solve(l: jax.Array, b: jax.Array, *, lower: bool = True,
@@ -73,17 +131,11 @@ def tri_solve(l: jax.Array, b: jax.Array, *, lower: bool = True,
 # --------------------------------------------------------------------------
 
 def conv2d_3x3(img: jax.Array, k: jax.Array) -> jax.Array:
-    if use_pallas("conv2d", img.shape):
-        from repro.kernels import conv2d
-        return conv2d.conv2d_3x3(img, k)
-    return ref.conv2d_3x3(img, k)
+    return registry.dispatch("conv2d", img, k)
 
 
 def hamming_distance(dl: jax.Array, dr: jax.Array) -> jax.Array:
-    if use_pallas("hamming", dl.shape, dr.shape):
-        from repro.kernels import stereo_hamming
-        return stereo_hamming.hamming_distance(dl, dr)
-    return ref.hamming_distance(dl, dr)
+    return registry.dispatch("hamming", dl, dr)
 
 
 # --------------------------------------------------------------------------
@@ -91,7 +143,4 @@ def hamming_distance(dl: jax.Array, dr: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------------
 
 def flash_attention(q, k, v, causal: bool = True):
-    if use_pallas("flash", q.shape):
-        from repro.kernels import flash_attention as fa
-        return fa.flash_attention(q, k, v, causal=causal)
-    return ref.flash_attention(q, k, v, causal=causal)
+    return registry.dispatch("flash", q, k, v, causal=causal)

@@ -85,6 +85,50 @@ def test_fleet_single_dispatch_mixed_modes(synthetic_sequence, small_cfg):
     assert fleet.maps[0] is None
 
 
+def test_fleet_chunked_matches_per_frame(synthetic_sequence, small_cfg):
+    """Chunk x fleet: one scan-of-vmapped-step dispatch per K frames
+    reproduces the per-frame fleet exactly (VIO + SLAM robots; SLAM host
+    map growth replayed in order after each chunk)."""
+    seq = synthetic_sequence
+    B, n, K = 2, 8, 4
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    mode_ids = np.array([MODE_VIO, MODE_SLAM], np.int32)
+
+    def gps_for(i):
+        gps = np.tile(seq.gps[i][None], (B, 1)).astype(np.float32)
+        gps[mode_ids != MODE_VIO] = np.nan
+        return gps
+
+    f1 = FleetLocalizer(small_cfg, seq.cam, batch=B, window=8)
+    s1 = f1.init_state(p0=np.tile(seq.poses[0][:3, 3], (B, 1)),
+                       v0=np.tile(v0, (B, 1)))
+    for i in range(n):
+        il, ir, a, g, _ = _fleet_inputs(seq, i, B)
+        s1, _ = f1.step(s1, il, ir, a, g, gps_for(i), mode_ids,
+                        seq.dt / seq.imu_per_frame)
+
+    f2 = FleetLocalizer(small_cfg, seq.cam, batch=B, window=8)
+    s2 = f2.init_state(p0=np.tile(seq.poses[0][:3, 3], (B, 1)),
+                       v0=np.tile(v0, (B, 1)))
+    for c0 in range(0, n, K):
+        per = [_fleet_inputs(seq, i, B) for i in range(c0, c0 + K)]
+        s2, _ = f2.step_chunk(
+            s2, np.stack([p[0] for p in per]), np.stack([p[1] for p in per]),
+            np.stack([p[2] for p in per]), np.stack([p[3] for p in per]),
+            np.stack([gps_for(i) for i in range(c0, c0 + K)]),
+            mode_ids, seq.dt / seq.imu_per_frame)
+
+    np.testing.assert_array_equal(np.asarray(s1.filt.p),
+                                  np.asarray(s2.filt.p))
+    np.testing.assert_array_equal(np.asarray(s1.tracks_valid),
+                                  np.asarray(s2.tracks_valid))
+    assert f2.dispatch_count == n // K
+    assert f2.chunk_trace_count() == 1
+    # SLAM robot's deferred host stage saw every frame, in order
+    assert len(f1._robots[1]._slam_keyframes) == n
+    assert len(f2._robots[1]._slam_keyframes) == n
+
+
 def test_fleet_diverging_trajectories(synthetic_sequence, small_cfg):
     """Robots given different GPS observations diverge — state really is
     per-robot, not shared through the batch."""

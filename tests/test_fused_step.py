@@ -90,6 +90,129 @@ def test_fused_matches_reference_slam(synthetic_sequence, small_cfg):
     assert loc_f.map.valid.sum() == loc_r.map.valid.sum()
 
 
+def _chunk_args(seq, n):
+    """Per-frame stacked inputs for Localizer.run."""
+    ipf = seq.imu_per_frame
+    accel = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(n)])
+    gyro = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                     for i in range(n)])
+    return (seq.images_left[:n], seq.images_right[:n], accel, gyro,
+            seq.gps[:n])
+
+
+def test_chunked_matches_per_frame_vio(synthetic_sequence, small_cfg):
+    """lax.scan chunk pipeline == per-frame fused path, bitwise, while
+    issuing one dispatch per K frames."""
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    n, K = 10, 4
+    loc_f = Localizer(small_cfg, seq.cam, window=8)
+    st_f = _drive(loc_f, seq, env, n)
+
+    loc_c = Localizer(small_cfg, seq.cam, window=8)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st_c = loc_c.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    il, ir, a, g, gps = _chunk_args(seq, n)
+    st_c = loc_c.run(st_c, il, ir, a, g, gps, env,
+                     seq.dt / seq.imu_per_frame, chunk=K)
+
+    np.testing.assert_array_equal(np.asarray(loc_f.trajectory),
+                                  np.asarray(loc_c.trajectory))
+    np.testing.assert_array_equal(np.asarray(st_f.tracks_valid),
+                                  np.asarray(st_c.tracks_valid))
+    np.testing.assert_array_equal(np.asarray(st_f.tracks_uv),
+                                  np.asarray(st_c.tracks_uv))
+    assert loc_c.dispatch_count == -(-n // K)    # ceil: one per chunk
+    assert int(st_c.frame_idx) == n
+
+
+def test_chunked_single_dispatch_single_trace(synthetic_sequence, small_cfg):
+    """The chunk program traces exactly once even when the trailing
+    chunk is partial (padding keeps K static) and modes vary (lax.switch
+    flags, not retraces)."""
+    seq = synthetic_sequence
+    n, K = 10, 4
+    envs = ([Environment(False, False)] * 4       # SLAM
+            + [Environment(True, False)] * 6)     # VIO
+    loc = Localizer(small_cfg, seq.cam, window=8)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    il, ir, a, g, gps = _chunk_args(seq, n)
+    st = loc.run(st, il, ir, a, g, gps, envs,
+                 seq.dt / seq.imu_per_frame, chunk=K)
+    assert loc.dispatch_count == 3               # 4 + 4 + 2(padded)
+    assert loc.chunk_trace_count() == 1, \
+        "chunk scan retraced: padding/masking leaked a dynamic shape"
+    assert isinstance(st.tracks_uv, jax.Array)
+    assert int(st.frame_idx) == n                # padding frames inert
+
+
+def test_chunked_matches_per_frame_mixed_modes(synthetic_sequence,
+                                               small_cfg):
+    """Mixed-mode sequence (SLAM map-building -> Registration against
+    that map -> VIO): the chunked path must reproduce the per-frame
+    fused path exactly — including host map stages, whose SLAM replay is
+    deferred to chunk end and whose Registration pose feedback forces a
+    chunk flush."""
+    seq = synthetic_sequence
+    n, K = 12, 4
+    envs = ([Environment(False, False)] * 5       # SLAM: build the map
+            + [Environment(False, True)] * 3      # Registration
+            + [Environment(True, False)] * 4)     # VIO
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    ipf = seq.imu_per_frame
+
+    loc_f = Localizer(small_cfg, seq.cam, window=8)
+    st_f = loc_f.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    for i in range(n):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        gps = seq.gps[i] if envs[i].gps_available else None
+        st_f = loc_f.step(st_f, seq.images_left[i], seq.images_right[i],
+                          a, g, gps, envs[i], seq.dt / ipf)
+
+    loc_c = Localizer(small_cfg, seq.cam, window=8)
+    st_c = loc_c.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    il, ir, a, g, gps = _chunk_args(seq, n)
+    st_c = loc_c.run(st_c, il, ir, a, g, gps, envs, seq.dt / ipf, chunk=K)
+
+    np.testing.assert_allclose(np.asarray(loc_f.trajectory),
+                               np.asarray(loc_c.trajectory), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(st_f.tracks_valid),
+                                  np.asarray(st_c.tracks_valid))
+    assert loc_c.chunk_trace_count() == 1
+    # identical SLAM host stages -> identical maps
+    assert (loc_f.map is None) == (loc_c.map is None)
+    if loc_f.map is not None:
+        assert loc_f.map.valid.sum() == loc_c.map.valid.sum()
+        assert (loc_f.map.keyframe_hists.shape
+                == loc_c.map.keyframe_hists.shape)
+    # registration frames flushed their chunks: 5 dispatches, not 3
+    assert loc_c.dispatch_count == 5
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 8])
+def test_chunk_sizes_equivalent(synthetic_sequence, small_cfg, chunk):
+    """K=1..8 all reproduce the same trajectory (K=1 degenerates to the
+    per-frame dispatch pattern through the same scan program)."""
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    n = 8
+    loc_f = Localizer(small_cfg, seq.cam, window=8)
+    _drive(loc_f, seq, env, n)
+
+    loc_c = Localizer(small_cfg, seq.cam, window=8)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc_c.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    il, ir, a, g, gps = _chunk_args(seq, n)
+    loc_c.run(st, il, ir, a, g, gps, env, seq.dt / seq.imu_per_frame,
+              chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(loc_f.trajectory),
+                                  np.asarray(loc_c.trajectory))
+    assert loc_c.dispatch_count == -(-n // chunk)
+
+
 def test_offload_plan_gates_kalman_update(synthetic_sequence, small_cfg):
     """The pre-resolved scheduler plan is honoured inside the fused step:
     with the Kalman-gain offload forced off, the MSCKF update never runs

@@ -1,0 +1,203 @@
+"""Kernel registry: the single dispatch entry point (REPRO_KERNELS
+override precedence, fitted-model latency decisions, calibration fit +
+JSON persistence)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import scheduler as sched
+from repro.kernels import ops, ref, registry
+
+
+@pytest.fixture(autouse=True)
+def _clean_models():
+    """Dispatch decisions must not leak installed models across tests."""
+    registry.install_models(None)
+    yield
+    registry.install_models(None)
+
+
+def _models(accel_fast: bool) -> sched.LatencyModels:
+    """Fitted models where the accel path is uniformly faster (or
+    uniformly slower) than the host path."""
+    lm = sched.LatencyModels(transfer_bw=1e12, fixed_overhead_s=0.0)
+    sizes = np.linspace(64, 4096, 16)
+    host = 1e-6 * sizes
+    accel = host * (0.1 if accel_fast else 10.0)
+    for name in ("matmul", "conv2d", "hamming", "projection"):
+        lm.fit_kernel(name, sizes, host, accel)
+    return lm
+
+
+# --------------------------------------------------------------------------
+# forced-path precedence
+# --------------------------------------------------------------------------
+
+def test_forced_xla(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "xla")
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "xla"
+
+
+def test_forced_pallas_tileable(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "pallas"
+
+
+def test_forced_pallas_untileable_falls_back(monkeypatch):
+    """Tiling compatibility outranks the override: shapes the 8x128
+    layout can't host must not reach the Pallas kernel."""
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    a = jnp.ones((7, 128), jnp.float32)      # sublane not multiple of 8
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "xla"
+    # inner dim of b incompatible with sublane tiling
+    a2 = jnp.ones((8, 100), jnp.float32)
+    b2 = jnp.ones((100, 128), jnp.float32)
+    assert registry.decide_path("matmul", a2, b2) == "xla"
+
+
+def test_tileable_requires_inner_dims():
+    """The satellite fix: b's sublane dim must be 8-aligned too."""
+    assert registry.tileable_matmul((8, 128), (128, 128))
+    assert not registry.tileable_matmul((8, 128), (12, 128))
+    assert not ops._tileable((8, 128), (12, 128))
+
+
+def test_auto_unfitted_cpu_is_xla(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "auto")
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "xla"
+
+
+# --------------------------------------------------------------------------
+# fitted-model dispatch (the paper's predicted-latency comparison)
+# --------------------------------------------------------------------------
+
+def test_auto_fitted_accel_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "auto")
+    registry.install_models(_models(accel_fast=True))
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "pallas"
+
+
+def test_auto_fitted_host_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "auto")
+    registry.install_models(_models(accel_fast=False))
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "xla"
+
+
+def test_force_overrides_fitted_models(monkeypatch):
+    registry.install_models(_models(accel_fast=True))
+    monkeypatch.setenv("REPRO_KERNELS", "xla")
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "xla"
+
+
+def test_use_pallas_consults_fitted_models(monkeypatch):
+    """Satellite fix: the ops-layer decision now really consults the
+    installed latency models (the old docstring promised, never did)."""
+    monkeypatch.setenv("REPRO_KERNELS", "auto")
+    registry.install_models(_models(accel_fast=True))
+    assert ops.use_pallas("matmul", (8, 128), (128, 128))
+    registry.install_models(_models(accel_fast=False))
+    assert not ops.use_pallas("matmul", (8, 128), (128, 128))
+
+
+# --------------------------------------------------------------------------
+# numerical agreement across dispatch paths
+# --------------------------------------------------------------------------
+
+def test_dispatch_paths_agree_matmul(monkeypatch):
+    rs = np.random.RandomState(0)
+    a = jnp.asarray(rs.randn(8, 128), jnp.float32)
+    b = jnp.asarray(rs.randn(128, 128), jnp.float32)
+    monkeypatch.setenv("REPRO_KERNELS", "xla")
+    out_x = ops.matmul(a, b)
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    out_p = ops.matmul(a, b)          # interpret mode on CPU
+    np.testing.assert_allclose(np.asarray(out_x), np.asarray(out_p),
+                               atol=1e-4)
+
+
+def test_paper_kernel_paths_agree():
+    """Host and accel impls of the composite paper kernels match."""
+    spec = registry.REGISTRY["projection"]
+    c, x = registry._proj_inputs(256)
+    np.testing.assert_allclose(np.asarray(spec.xla(c, x)),
+                               np.asarray(spec.pallas(c, x)), atol=1e-3)
+    spec = registry.REGISTRY["kalman_gain"]
+    p, h, r = registry._kalman_inputs(32)
+    np.testing.assert_allclose(np.asarray(spec.xla(p, h, r)),
+                               np.asarray(spec.pallas(p, h, r)),
+                               atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# calibration + persistence
+# --------------------------------------------------------------------------
+
+def test_calibrate_fits_and_installs(tmp_path):
+    path = str(tmp_path / "models.json")
+    lm = registry.calibrate(kernels=("projection",),
+                            sizes={"projection": [128, 512, 1024, 2048]},
+                            reps=1, path=path)
+    assert registry.installed_models() is lm
+    assert lm.fitted("projection")
+    assert np.isfinite(lm.host["projection"].r2)
+    assert np.isfinite(lm.accel["projection"].r2)
+    # a decision is available for every queried size, no crashes
+    assert lm.should_offload("projection", 1000, 16_000) in (True, False)
+
+    loaded = registry.load_models(path)
+    assert loaded.fitted("projection")
+    for side in ("host", "accel"):
+        m0 = getattr(lm, side)["projection"]
+        m1 = getattr(loaded, side)["projection"]
+        assert m1.predict(1500) == pytest.approx(m0.predict(1500))
+        assert m1.r2 == pytest.approx(m0.r2)
+
+
+def test_calibrate_fits_on_dispatch_feature_scale():
+    """Models must be fitted against the spec's size feature — the scale
+    dispatch queries at — not the raw sweep parameter (for matmul those
+    differ by orders of magnitude: sweep n vs feature m*k*n)."""
+    lm = registry.calibrate(kernels=("matmul",),
+                            sizes={"matmul": [128, 256, 384]},
+                            reps=1, install=False)
+    spec = registry.REGISTRY["matmul"]
+    feat = spec.size_feature(*registry._matmul_inputs(256))
+    # querying inside the fitted domain must give a sane interpolated
+    # latency, not an orders-of-magnitude extrapolation
+    t = lm.host["matmul"].predict(feat)
+    assert 0.0 < t < 1.0
+
+
+def test_offload_plan_from_fitted_models():
+    """All three paper kernels' OffloadPlan fields flow from fitted
+    regression models (acceptance criterion)."""
+    lm = sched.LatencyModels(transfer_bw=1e12, fixed_overhead_s=0.0)
+    sizes = np.linspace(16, 4096, 16)
+    host = 1e-6 * sizes
+    # accel faster for kalman/projection, slower for marginalization
+    lm.fit_kernel("kalman_gain", sizes, host, host * 0.1)
+    lm.fit_kernel("projection", sizes, host, host * 0.1)
+    lm.fit_kernel("marginalization", sizes, host, host * 10.0)
+    plan = lm.plan_frame(window=8, max_updates=24,
+                         map_points=512, ba_landmarks=64)
+    assert plan.kalman_gain and plan.projection
+    assert not plan.marginalization
+    # chunked resolution amortizes launch overhead, never flips a clear
+    # winner
+    plan_c = lm.plan_chunk(window=8, max_updates=24, chunk=8,
+                           map_points=512, ba_landmarks=64)
+    assert plan_c.kalman_gain and not plan_c.marginalization

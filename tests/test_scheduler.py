@@ -1,6 +1,7 @@
 """Runtime scheduler (paper Sec. VI-B): regression fit quality + offload
 decision structure."""
 import numpy as np
+import pytest
 
 from repro.core.scheduler import (KERNEL_MODELS, LatencyModels,
                                   RegressionModel, VariationTracker)
@@ -60,3 +61,123 @@ def test_kernel_model_degrees_match_paper():
     assert KERNEL_MODELS["projection"] == 1
     assert KERNEL_MODELS["kalman_gain"] == 2
     assert KERNEL_MODELS["marginalization"] == 2
+
+
+# --------------------------------------------------------------------------
+# degenerate-input guards
+# --------------------------------------------------------------------------
+
+def test_fit_single_sample_is_nan_free():
+    """One profile point can't constrain a quadratic: the model must
+    degrade to a finite constant with r2 = 0, not a -inf/NaN polyfit."""
+    m = RegressionModel(2).fit(np.array([100.0]), np.array([1e-3]))
+    assert m.r2 == 0.0
+    assert np.isfinite(m.predict(50)) and np.isfinite(m.predict(5000))
+    assert m.predict(123) == 1e-3
+
+
+def test_fit_empty_profile_stays_unfitted():
+    """Zero usable samples (empty sweep, or all non-finite) must leave
+    the model unfitted so the offload-by-default path applies — not a
+    'fitted' constant-0 that pins every decision to the host."""
+    m = RegressionModel(1).fit(np.array([]), np.array([]))
+    assert not m.fitted and m.r2 == 0.0
+    m2 = RegressionModel(2).fit(np.array([np.nan, np.inf]),
+                                np.array([1e-4, 2e-4]))
+    assert not m2.fitted
+    lm = LatencyModels()
+    lm.host["projection"] = m
+    lm.accel["projection"] = m
+    assert not lm.fitted("projection")
+    assert lm.should_offload("projection", 100)
+
+
+def test_fit_repeated_size_is_nan_free():
+    """All samples at one size: zero spread, constant fallback."""
+    m = RegressionModel(1).fit(np.full(8, 64.0), np.linspace(1e-4, 2e-4, 8))
+    assert m.r2 == 0.0
+    assert np.isfinite(m.predict(64))
+
+
+def test_fit_constant_times_r2():
+    """Perfectly constant latency is a perfect (if trivial) fit, not a
+    0/0 explosion."""
+    m = RegressionModel(1).fit(np.linspace(10, 100, 10), np.full(10, 5e-4))
+    assert m.r2 == 1.0
+    assert m.predict(55) == pytest.approx(5e-4)
+
+
+def test_fit_drops_non_finite_samples():
+    sizes = np.array([10.0, 20.0, 30.0, 40.0, np.nan, 60.0])
+    times = np.array([1e-4, 2e-4, 3e-4, 4e-4, 5e-4, np.inf])
+    m = RegressionModel(1).fit(sizes, times)
+    assert np.isfinite(m.r2)
+    assert np.isfinite(m.predict(25))
+
+
+def test_should_offload_half_fitted_defaults_true():
+    """A kernel with only one side profiled (or a degenerate fit with no
+    coefficients) must take the unfitted default, not crash in
+    predict()."""
+    lm = LatencyModels()
+    lm.host["kalman_gain"] = RegressionModel(2)      # never .fit()
+    assert not lm.fitted("kalman_gain")
+    assert lm.should_offload("kalman_gain", 100, transfer_bytes=0)
+
+
+def test_should_offload_zero_transfer_unfitted():
+    assert LatencyModels().should_offload("projection", 10,
+                                          transfer_bytes=0)
+
+
+def test_should_offload_zero_bandwidth_guard():
+    """transfer_bw = 0 (unknown link) must not divide by zero."""
+    lm = LatencyModels(transfer_bw=0.0, fixed_overhead_s=0.0)
+    sizes = np.linspace(10, 100, 10)
+    lm.fit_kernel("projection", sizes, 1e-4 * sizes, 1e-6 * sizes)
+    assert lm.should_offload("projection", 50, transfer_bytes=1000)
+
+
+def test_variation_tracker_single_sample():
+    t = VariationTracker()
+    t.add(0.01)
+    s = t.stats()
+    assert s == {"mean": 0.01, "sd": 0.0, "rsd": 0.0,
+                 "worst_over_best": 1.0}
+    assert all(np.isfinite(v) for v in s.values())
+
+
+def test_variation_tracker_ignores_non_finite():
+    t = VariationTracker()
+    for x in [0.01, float("nan"), 0.02, float("inf")]:
+        t.add(x)
+    s = t.stats()
+    assert all(np.isfinite(v) for v in s.values())
+    assert s["mean"] == pytest.approx(0.015)
+
+
+# --------------------------------------------------------------------------
+# per-chunk plan resolution
+# --------------------------------------------------------------------------
+
+def test_plan_frame_covers_all_paper_kernels():
+    plan = LatencyModels().plan_frame(window=8, max_updates=24,
+                                      map_points=2048, ba_landmarks=64)
+    # unfitted models: offload-by-default on every kernel
+    assert plan.kalman_gain and plan.projection and plan.marginalization
+    assert plan.frontend
+
+
+def test_plan_chunk_amortizes_fixed_overhead():
+    """A kernel on the edge of profitability at K=1 (launch overhead
+    dominates) becomes profitable once the dispatch is amortized over a
+    chunk."""
+    lm = LatencyModels(transfer_bw=1e12, fixed_overhead_s=1e-3)
+    sizes = np.linspace(50, 2000, 30)
+    host = 1e-6 * sizes                      # 384us at the plan size
+    accel = 0.5e-6 * sizes                   # wins on compute...
+    lm.fit_kernel("kalman_gain", sizes, host, accel)
+    h = 24 * 2 * 8                           # plan size for window=8
+    # at K=1 the 1ms launch overhead swamps the ~0.2ms compute win
+    assert not lm.plan_frame(window=8, max_updates=24).kalman_gain
+    assert lm.plan_chunk(window=8, max_updates=24, chunk=8).kalman_gain
