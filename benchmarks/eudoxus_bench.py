@@ -341,17 +341,26 @@ def fused_vs_seed(n_frames: int = 12) -> List[Row]:
 def chunked_pipeline(n_frames: int = 32, ks=(1, 4, 8),
                      out_json: str = "BENCH_chunked.json") -> List[Row]:
     """K-frame chunk pipeline (lax.scan) vs per-frame dispatch: mean and
-    p99 per-frame latency for each chunk size K, demonstrating dispatch
-    overhead amortized over the chunk (one Python->device round trip per
-    K frames instead of per frame). Writes the report to ``out_json``.
+    p99 per-frame latency for each chunk size K, plus the async
+    double-buffered pipeline vs the synchronous stage->dispatch->drain
+    loop at each K (the ``overlap`` report section: host staging hidden
+    behind device execution). Writes the report to ``out_json``.
 
     Embedded-class VIO workload (48x64, 48 features, window 4) — the
     regime where per-dispatch host/launch overhead is a visible share of
     the frame budget. K=1 runs through the same scan program, so the
-    comparison isolates amortization, not code differences. Each K gets
-    a compile pass (fresh state, trace cached on the localizer) and a
-    measured pass; per-frame samples come from the localizer's own
-    variation tracker (chunk wall time / frames)."""
+    comparison isolates amortization, not code differences.
+
+    Measurement hygiene (the PR 2 K=4 p99 outlier was timing noise
+    leaking into a near-max percentile): every (K, overlap, partial-
+    chunk) combination gets a warmup pass before anything is timed, the
+    GC is disabled across the timed region (collected between phases),
+    and the sync/async phases are interleaved across K so host-load
+    drift hits every configuration equally. The ``ks`` section is
+    measured on the synchronous path — directly comparable with PR 2 —
+    from the localizer's own per-chunk variation samples; the
+    ``overlap`` section compares whole-pass wall time per frame."""
+    import gc
     window = 4
     fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
                              max_features=48)
@@ -367,31 +376,53 @@ def chunked_pipeline(n_frames: int = 32, ks=(1, 4, 8),
     v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
 
     rows: List[Row] = []
-    report = {"n_frames": n_frames, "workload": "vio_48x64_w4", "ks": {}}
+    report = {"n_frames": n_frames, "workload": "vio_48x64_w4",
+              "ks": {}, "overlap": {}}
     means = {}
-    rounds = 3
     locs = {K: Localizer(cfg, seq.cam, window=window) for K in ks}
 
-    def one_pass(K):
+    def one_pass(K, overlap, frames_n=n_frames):
         loc = locs[K]
         st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
-        loc.run(st, seq.images_left[:n_frames],
-                seq.images_right[:n_frames], accel, gyro,
-                seq.gps[:n_frames], env, seq.dt / ipf, chunk=K)
+        t0 = time.perf_counter()
+        loc.run(st, seq.images_left[:frames_n],
+                seq.images_right[:frames_n], accel[:frames_n],
+                gyro[:frames_n], seq.gps[:frames_n], env, seq.dt / ipf,
+                chunk=K, overlap=overlap)
+        return time.perf_counter() - t0
 
-    for K in ks:                                      # compile pass per K
-        one_pass(K)
-    n_warm = {K: len(locs[K].variation[Mode.VIO].samples) for K in ks}
-    for _ in range(rounds):                           # interleaved rounds:
-        for K in ks:                                  # host-load drift hits
-            one_pass(K)                               # every K equally
+    for K in ks:            # warm every (K, overlap, partial) trace/path
+        one_pass(K, False)
+        one_pass(K, True)
+        if n_frames % K:    # the padded partial-chunk flush
+            one_pass(K, True, frames_n=n_frames - n_frames % K + 1)
+
+    rounds = 5
+    sync_wall = {K: [] for K in ks}
+    async_wall = {K: [] for K in ks}
+    sync_samples = {K: [] for K in ks}
+    gc.collect()
+    gc.disable()
+    try:
+        # sync and async passes run BACK-TO-BACK per K per round, so
+        # host-load drift on this shared box hits both modes equally
+        for _ in range(rounds):
+            for K in ks:
+                tracker = locs[K].variation[Mode.VIO]
+                m0 = len(tracker.samples)
+                sync_wall[K].append(one_pass(K, False))
+                sync_samples[K] += tracker.samples[m0:]
+                async_wall[K].append(one_pass(K, True))
+    finally:
+        gc.enable()
+
     for K in ks:
         loc = locs[K]
-        s = np.asarray(loc.variation[Mode.VIO].samples[n_warm[K]:])
+        s = np.asarray(sync_samples[K])
         mean_us = float(s.mean()) * 1e6
         p99_us = float(np.percentile(s, 99)) * 1e6
         means[K] = mean_us
-        dispatches = loc.dispatch_count // (rounds + 1)   # per pass
+        dispatches = -(-n_frames // K)                    # per pass
         report["ks"][str(K)] = {
             "mean_us_per_frame": mean_us, "p99_us_per_frame": p99_us,
             "dispatches_per_pass": dispatches,
@@ -400,6 +431,24 @@ def chunked_pipeline(n_frames: int = 32, ks=(1, 4, 8),
         rows.append((f"chunked/K{K}_frame_us", mean_us,
                      f"p99={p99_us:.0f}us,dispatches={dispatches},"
                      f"traces={loc.chunk_trace_count()}"))
+        # async double-buffered pipeline vs the synchronous baseline:
+        # best-of-rounds (min) — the standard latency reducer; it
+        # measures the mechanism, not this shared container's load
+        sync_us = float(np.min(sync_wall[K])) / n_frames * 1e6
+        over_us = float(np.min(async_wall[K])) / n_frames * 1e6
+        stager = loc.last_stager
+        hidden_us = (stager.stage_seconds / max(stager.staged_chunks, 1)
+                     * 1e6)
+        report["overlap"][str(K)] = {
+            "sync_us_per_frame": sync_us,
+            "overlap_us_per_frame": over_us,
+            "speedup": sync_us / max(over_us, 1e-9),
+            "staging_us_per_chunk_hidden": hidden_us,
+        }
+        rows.append((f"chunked/K{K}_overlap_us", over_us,
+                     f"sync={sync_us:.0f}us,"
+                     f"speedup={sync_us / max(over_us, 1e-9):.3f}x,"
+                     f"staging_hidden={hidden_us:.0f}us/chunk"))
     k0, k_max = min(ks), max(ks)
     ratio = means[k0] / max(means[k_max], 1e-9)
     report["amortization_mean_K1_over_Kmax"] = ratio
@@ -524,11 +573,21 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8, help="fleet size B")
     ap.add_argument("--chunk", type=int, default=0,
                     help="run the chunked pipeline suite with this max K")
+    ap.add_argument("--models", type=str, default=None,
+                    help="calibration cache (models.json): load when the "
+                         "device fingerprint matches, else re-profile and "
+                         "refresh — deployment runs start calibrated")
     ap.add_argument("--all", action="store_true",
                     help="also run the paper figure/table suites")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    if args.models:
+        from repro.kernels import registry as kreg
+        kernels = kreg.PAPER_KERNELS + ("marg_schur",)
+        _, cached = kreg.load_or_refit(args.models, kernels=kernels)
+        print(f"calibration/models,0.0,"
+              f"{'cache_hit' if cached else 'refit'}:{args.models}")
     suites = [lambda: fused_vs_seed(args.frames),
               lambda: fleet_scaling(min(args.frames, 6), args.batch)]
     if args.chunk:

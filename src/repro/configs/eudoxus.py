@@ -39,6 +39,9 @@ class BackendConfig:
     bow_vocab_size: int = 4096    # bag-of-words vocabulary leaves
     bow_depth: int = 3
     ba_window: int = 10           # SLAM local bundle-adjustment keyframes
+    ba_landmarks: int = 64        # padded landmark budget per BA window
+    ba_every: int = 2             # BA trigger cadence (every Nth frame)
+    ba_min_keyframes: int = 3     # keyframes required before BA runs
     lm_iters: int = 10            # Levenberg-Marquardt iterations
     lm_lambda0: float = 1e-3
     marginalize_poses: int = 2    # poses dropped per marginalization

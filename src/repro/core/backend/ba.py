@@ -1,0 +1,197 @@
+"""In-scan windowed bundle adjustment + Schur marginalization.
+
+PR 2 left SLAM's BA/marginalization in the per-chunk host stage — the
+last heavy primitive off-device, and the round trip the paper's
+variation numbers blame (Sec. VI-A: marginalization dominates SLAM
+latency variation). This module makes the whole SLAM backend a pure
+function of fixed-shape arrays so it runs INSIDE the chunk scan body,
+behind the mode ``lax.switch``, like every other backend primitive.
+
+State layout (``BAState``, one per robot, threaded through the scan as
+part of ``LocalizerState``):
+
+    kf_R     (Kw, 3, 3)  window keyframe rotations (cam-to-world);
+    kf_p     (Kw, 3)     window keyframe positions.  Slot 0 is the
+                         OLDEST keyframe: the window fills front-to-back
+                         and shifts left once full, so the gauge anchor
+                         (slot 0) and the marginalized pose (slot 0) have
+                         the same meaning as the host path's list window.
+    kf_valid (Kw,)       which slots hold real keyframes
+    n_kf     ()          int32 keyframes pushed (saturates at Kw)
+    H_prior  (D, D)      marginalization prior over the Kw-1 kept poses,
+    b_prior  (D,)        D = 6*(Kw-1) — refreshed by every BA pass
+    last_cost ()         final LM cost of the latest BA pass
+
+Per SLAM frame the scan body pushes the post-frame pose as a keyframe
+and, on the host path's exact trigger (>= ``ba_min_keyframes`` pushed,
+frame index divisible by ``ba_every``), back-projects the frame's stereo
+features into a padded ``ba_landmarks`` budget, synthesizes the window's
+observations, runs the fixed-iteration LM loop (``mapping.lm_optimize``)
+and marginalizes the oldest pose via ``marginalize_schur`` — whose inner
+reduction dispatches to the blocked Pallas kernel or the XLA path on a
+traced flag resolved by the scheduler/registry per chunk
+(``kernels.registry`` entry ``marg_schur``).
+
+Like the host path it replaces, BA is feedback-free: results land in
+``BAState`` (prior + cost, surfaced per frame through the scan outputs)
+and never touch the filter, so chunked trajectories stay bitwise equal
+to the per-frame path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import mapping
+from repro.core.backend import matrix_blocks as mb
+
+
+class BAState(NamedTuple):
+    kf_R: jax.Array      # (Kw, 3, 3)
+    kf_p: jax.Array      # (Kw, 3)
+    kf_valid: jax.Array  # (Kw,) bool
+    n_kf: jax.Array      # () int32
+    H_prior: jax.Array   # (6*(Kw-1), 6*(Kw-1))
+    b_prior: jax.Array   # (6*(Kw-1),)
+    last_cost: jax.Array  # () float32
+
+
+def init_ba_state(ba_window: int) -> BAState:
+    d = 6 * (ba_window - 1)
+    return BAState(
+        kf_R=jnp.tile(jnp.eye(3, dtype=jnp.float32), (ba_window, 1, 1)),
+        kf_p=jnp.zeros((ba_window, 3), jnp.float32),
+        kf_valid=jnp.zeros((ba_window,), bool),
+        n_kf=jnp.int32(0),
+        H_prior=jnp.zeros((d, d), jnp.float32),
+        b_prior=jnp.zeros((d,), jnp.float32),
+        last_cost=jnp.float32(0.0))
+
+
+def push_keyframe(ba: BAState, R: jax.Array, p: jax.Array) -> BAState:
+    """Append a keyframe: fill front-to-back, then shift-left (slot 0
+    stays the oldest — the marginalization target / gauge anchor)."""
+    kw = ba.kf_valid.shape[0]
+    full = ba.n_kf >= kw
+
+    def place(buf, new):
+        shifted = jnp.where(full, jnp.roll(buf, -1, axis=0), buf)
+        return shifted.at[jnp.minimum(ba.n_kf, kw - 1)].set(new)
+
+    return ba._replace(
+        kf_R=place(ba.kf_R, R),
+        kf_p=place(ba.kf_p, p),
+        kf_valid=place(ba.kf_valid, True),
+        n_kf=jnp.minimum(ba.n_kf + 1, kw))
+
+
+def backproject_stereo(yx: jax.Array, disparity: jax.Array,
+                       stereo_valid: jax.Array, R: jax.Array, p: jax.Array,
+                       *, fx: float, fy: float, cx: float, cy: float,
+                       baseline: float) -> Tuple[jax.Array, jax.Array]:
+    """Stereo features -> world points (the traced twin of the host
+    stage's ``stereo_points_world``)."""
+    valid = stereo_valid & (disparity > 0.5)
+    z = fx * baseline / jnp.maximum(disparity, 1e-3)
+    u = yx[:, 1].astype(jnp.float32)
+    v = yx[:, 0].astype(jnp.float32)
+    x = (u - cx) / fx * z
+    y = (v - cy) / fy * z
+    pc = jnp.stack([x, y, z], axis=1)
+    pw = pc @ R.T + p
+    return pw.astype(jnp.float32), valid & (z < 60.0)
+
+
+def select_landmarks(pts: jax.Array, valid: jax.Array,
+                     budget: int) -> Tuple[jax.Array, jax.Array]:
+    """Pad/crop to the fixed landmark budget, valid points first (the
+    host path's ``argsort(~valid)[:M]`` selection, traced)."""
+    sel = jnp.argsort(~valid)[:budget]
+    return pts[sel], valid[sel]
+
+
+def window_problem(ba: BAState, lms: jax.Array, lm_valid: jax.Array,
+                   intr: jax.Array) -> mapping.BAProblem:
+    """Synthesize the window's observations by projecting the newest
+    keyframe's landmarks into every window pose (identical construction
+    to the host ``_run_ba``), masking invalid keyframe slots."""
+
+    def per_kf(R, p, kv):
+        pc = (lms - p) @ R
+        z = jnp.maximum(pc[:, 2], 1e-3)
+        u = intr[0] * pc[:, 0] / z + intr[2]
+        v = intr[1] * pc[:, 1] / z + intr[3]
+        ov = lm_valid & (pc[:, 2] > 0.3) & kv
+        return jnp.stack([u, v], axis=1), ov
+
+    obs, ov = jax.vmap(per_kf)(ba.kf_R, ba.kf_p, ba.kf_valid)
+    return mapping.BAProblem(poses_R=ba.kf_R, poses_p=ba.kf_p,
+                             landmarks=lms, obs_uv=obs, obs_valid=ov,
+                             intrinsics=intr)
+
+
+def marginalize_schur(Hpp, Hpl, Hll, bp, bl, use_pallas,
+                      jitter: float = 1e-4,
+                      allow_pallas: bool = True):
+    """Marginalize the oldest pose + all landmarks via the blocked Schur
+    reduction (numerically equivalent to ``mapping.marginalize``).
+
+    The landmark elimination collapses to Y = sum_m G_m A_m^{-1} G_m^T,
+    y = sum_m G_m A_m^{-1} b_m with G_m stacking every pose's coupling to
+    landmark m; ``use_pallas`` (a traced bool, resolved host-side from
+    the registry's ``marg_schur`` latency models per chunk) picks the
+    blocked Pallas kernel or the XLA path for that reduction.
+    ``allow_pallas=False`` statically drops the Pallas branch (callers
+    that can't embed the kernel, e.g. exotic batching setups).
+    """
+    from repro.kernels import marg_schur
+
+    k, m = Hpl.shape[0], Hpl.shape[1]
+    g = Hpl.transpose(1, 0, 2, 3).reshape(m, 6 * k, 3)
+    a = Hll + jitter * jnp.eye(3, dtype=Hll.dtype)[None]
+    if allow_pallas:
+        yy, yv = jax.lax.cond(
+            use_pallas,
+            lambda ops: marg_schur.accumulate(*ops),
+            lambda ops: marg_schur.accumulate_ref(*ops),
+            (g, a, bl))
+    else:
+        yy, yv = marg_schur.accumulate_ref(g, a, bl)
+
+    # Schur complement of the landmark block inside H_mm (6x6 algebra)
+    s_d = Hpp[0] + jitter * jnp.eye(6, dtype=Hpp.dtype) - yy[:6, :6]
+    s_d_inv = mb.inverse_spd(s_d, jitter=jitter)
+    u = yy[6:, :6]                                    # C A^{-1} B, stacked
+    h_keep = jax.scipy.linalg.block_diag(*[Hpp[i] for i in range(1, k)])
+    h_prior = h_keep - (yy[6:, 6:] + u @ s_d_inv @ u.T)
+    h_prior = 0.5 * (h_prior + h_prior.T)
+    y0 = s_d_inv @ (bp[0] - yv[:6])                   # marginal pose soln
+    b_prior = bp[1:].reshape(-1) - (yv[6:] - u @ y0)
+    return h_prior, b_prior
+
+
+def ba_round(ba: BAState, lms: jax.Array, lm_valid: jax.Array,
+             intr: jax.Array, *, lm_iters: int, lm_lambda0: float,
+             marg_pallas: jax.Array, allow_pallas: bool = True
+             ) -> BAState:
+    """One windowed BA + marginalization pass over the current window.
+
+    Mirrors the host ``_run_ba``: LM-optimize the window, linearize at
+    the optimum, build the blocked normal equations, marginalize the
+    oldest pose into (H_prior, b_prior). Window poses are treated as a
+    linearization window (results land in the prior + cost, never back
+    in the filter), matching the feedback-free host stage this replaces.
+    """
+    prob = window_problem(ba, lms, lm_valid, intr)
+    prob, costs = mapping.lm_optimize(prob, lm_iters, lm_lambda0)
+    kw, m = prob.obs_valid.shape
+    r, jx, jl = mapping.residuals(prob, jnp.zeros((kw, 6)),
+                                  jnp.zeros((m, 3)))
+    hpp, hpl, hll, bp, bl = mapping.build_normal_eqs(r, jx, jl)
+    h_prior, b_prior = marginalize_schur(hpp, hpl, hll, bp, bl,
+                                         marg_pallas,
+                                         allow_pallas=allow_pallas)
+    return ba._replace(H_prior=h_prior, b_prior=b_prior,
+                       last_cost=costs[-1].astype(jnp.float32))

@@ -7,12 +7,18 @@ program that advances B robots per device dispatch. Each robot keeps its
 own filter, track ring buffer and operating mode; mode dispatch happens
 INSIDE the batch (``lax.switch`` on a per-robot int32 mode id), so one
 compiled program serves a fleet whose members are simultaneously in VIO,
-SLAM and Registration environments. SLAM/Registration robots get their
-dynamically-sized map work in a per-robot host stage after the dispatch,
-mirroring the single-robot ``Localizer.step``.
+SLAM and Registration environments. SLAM robots get their windowed
+BA/marginalization inside the dispatch too (``core.backend.ba``); the
+per-robot host stage that remains is append-only map bookkeeping for
+SLAM and the dynamically-sized Registration fix.
 
 State buffers are donated, so fleet covariances and track SRAM-analogue
-buffers update in place across frames.
+buffers update in place across frames. ``run`` drives whole sequences
+through the chunked scan with the same async double-buffered input ring
+as the single-robot ``Localizer.run`` — chunk N+1 is staged while
+chunk N executes, and the host stage drains one chunk behind the
+dispatch front (unless a Registration robot needs its chunk-end pose
+fix applied before the next dispatch).
 """
 from __future__ import annotations
 
@@ -24,12 +30,14 @@ import numpy as np
 
 from repro.configs.eudoxus import EudoxusConfig
 from repro.core import scheduler as sched, tracks
+from repro.core.backend import tracking
 from repro.core.environment import (MODE_REGISTRATION, MODE_SLAM, MODE_VIO,
                                     select_mode_id)
-from repro.core.frontend.pipeline import FrontendResult
-from repro.core.localizer import (BA_LANDMARKS, Localizer, LocalizerState,
-                                  TracedStep, init_localizer_state)
-from repro.core.step import FrameInputs, FrameOutputs, TracedChunk
+from repro.core.localizer import (Localizer, LocalizerState, TracedStep,
+                                  _ChunkStager, init_localizer_state,
+                                  resolve_marg_kernel)
+from repro.core.step import (FrameInputs, FrameOutputs, TracedChunk,
+                             flags_from_plan)
 
 
 class FleetLocalizer:
@@ -51,25 +59,33 @@ class FleetLocalizer:
         self.window = window or cfg.backend.msckf_window
         self.scheduler = scheduler or sched.LatencyModels()
         self.dispatch_count = 0
-        self._offload_plan = self.scheduler.plan_frame(
-            self.window, tracks.MAX_UPDATES)
+        self.ba_runs = 0             # in-scan BA passes across the fleet
+        self.last_stager: Optional[_ChunkStager] = None
+        # one BoW vocabulary device array shared by the batched program
+        # and every robot's host stage
+        self.vocab = jnp.asarray(
+            tracking.make_vocab(cfg.backend.bow_vocab_size))
+        self._offload_plan = resolve_marg_kernel(
+            self.scheduler.plan_frame(
+                self.window, tracks.MAX_UPDATES,
+                map_points=cfg.backend.max_map_points,
+                ba_landmarks=cfg.backend.ba_landmarks), cfg)
         # host-stage state (SLAM keyframes/map, Registration map) is
-        # created lazily per robot on first non-VIO frame, sharing one
-        # BoW vocab device array — an all-VIO fleet allocates nothing
+        # created lazily per robot on first non-VIO frame — an all-VIO
+        # fleet allocates nothing
         self._robots = {}
-        self._shared_vocab = None
-        # batch over state + per-frame inputs; the offload plan and IMU dt
-        # are fleet-wide scalars
-        self._traced = TracedStep(cfg, cam)
+        # batch over state + per-frame inputs; the offload flags and IMU
+        # dt are fleet-wide scalars
+        self._traced = TracedStep(cfg, cam, self.vocab)
         self._fused_fleet = jax.jit(
             jax.vmap(self._traced, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None)),
             donate_argnums=(0,))
         # chunk x fleet: lax.scan over K frames of the vmapped transition
         # — one dispatch advances B robots K frames (steady state: one
-        # trace per chunk size)
-        self._traced_chunk = TracedChunk(cfg, cam, fleet=True)
+        # trace per chunk size); staged chunk inputs are donated back
+        self._traced_chunk = TracedChunk(cfg, cam, self.vocab, fleet=True)
         self._fused_fleet_chunk = jax.jit(self._traced_chunk,
-                                          donate_argnums=(0,))
+                                          donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
     def init_state(self, p0=None, v0=None, q0=None) -> LocalizerState:
@@ -92,11 +108,10 @@ class FleetLocalizer:
         """Host-stage handler for robot b (maps, keyframes), created on
         first use."""
         if b not in self._robots:
-            loc = Localizer(self.cfg, self.cam, window=self.window,
-                            scheduler=self.scheduler,
-                            vocab=self._shared_vocab)
-            self._shared_vocab = loc.vocab
-            self._robots[b] = loc
+            self._robots[b] = Localizer(self.cfg, self.cam,
+                                        window=self.window,
+                                        scheduler=self.scheduler,
+                                        vocab=self.vocab)
         return self._robots[b]
 
     @property
@@ -108,14 +123,14 @@ class FleetLocalizer:
     # ------------------------------------------------------------------
     def step(self, states: LocalizerState, imgs_l, imgs_r, imu_accel,
              imu_gyro, gps, mode_ids, dt_imu: float
-             ) -> Tuple[LocalizerState, FrontendResult]:
+             ) -> Tuple[LocalizerState, FrameOutputs]:
         """Advance every robot one frame in a single batched dispatch.
 
         imgs_l/imgs_r: (B,H,W); imu_accel/gyro: (B,K,3); gps: (B,3) with
         NaN rows where unavailable; mode_ids: (B,) int32 (see
         ``environment.select_mode_id``).
         """
-        states, frs = self._fused_fleet(
+        states, outs = self._fused_fleet(
             states,
             jnp.asarray(imgs_l, jnp.float32),
             jnp.asarray(imgs_r, jnp.float32),
@@ -123,21 +138,29 @@ class FleetLocalizer:
             jnp.asarray(imu_gyro, jnp.float32),
             jnp.asarray(gps, jnp.float32),
             jnp.asarray(mode_ids, jnp.int32),
-            jnp.asarray(self._offload_plan.kalman_gain),
+            flags_from_plan(
+                self._offload_plan,
+                slam_active=bool(
+                    (np.asarray(mode_ids) == MODE_SLAM).any())),
             jnp.float32(dt_imu))
         self.dispatch_count += 1
-        states = self._host_map_stage(states, frs, np.asarray(mode_ids))
-        return states, frs
+        states = self._host_map_stage(states, outs, np.asarray(mode_ids))
+        return states, outs
 
-    def _host_map_stage(self, states: LocalizerState, frs,
+    def _host_map_stage(self, states: LocalizerState, outs: FrameOutputs,
                         mode_ids: np.ndarray) -> LocalizerState:
         """Per-robot SLAM/Registration map work after the batched
         dispatch (no-op for an all-VIO fleet)."""
+        slam = mode_ids == MODE_SLAM
+        hist_np = np.asarray(outs.hist) if slam.any() else None
+        if slam.any():
+            self.ba_runs += int(np.asarray(outs.ba_ran)[slam].sum())
         for b in np.nonzero(mode_ids != MODE_VIO)[0]:
             st_b = jax.tree_util.tree_map(lambda x: x[b], states)
-            fr_b = jax.tree_util.tree_map(lambda x: x[b], frs)
+            fr_b = jax.tree_util.tree_map(lambda x: x[b], outs.fr)
             if mode_ids[b] == MODE_SLAM:
-                self.robot_host(b)._slam_step(st_b, fr_b)
+                self.robot_host(b)._slam_step(st_b, fr_b,
+                                              hist=hist_np[b])
             else:
                 new_b = self.robot_host(b)._registration_step(st_b, fr_b)
                 if new_b is not st_b:   # registration fused a pose fix
@@ -161,45 +184,24 @@ class FleetLocalizer:
         modes held for the chunk; active: optional (K,) bool padding mask
         for trailing partial chunks (keeps K static -> one trace).
 
-        VIO robots are exact. SLAM robots get their (feedback-free) host
-        map growth replayed in frame order after the chunk. Registration
-        robots' host-stage pose fix is applied once at the END of the
-        chunk — chunk-granularity feedback; use K=1 (``step``) when
-        per-frame registration feedback matters.
+        VIO and SLAM robots are exact (SLAM BA/marginalization run inside
+        the scan; map growth is replayed in frame order after the chunk).
+        Registration robots' host-stage pose fix is applied once at the
+        END of the chunk — chunk-granularity feedback; use K=1 (``step``)
+        when per-frame registration feedback matters.
         """
         K = np.asarray(imgs_l).shape[0]
         mode_np = np.asarray(mode_ids, np.int32)
-        if active is None:
-            act = np.ones((K, self.batch), bool)
-            n_real = K
-        else:
-            act1d = np.asarray(active, bool)
-            n_real = int(act1d.sum())
-            # the host stage maps scan slot j to filter frame base+j,
-            # which is only correct when the real frames form a prefix
-            # (trailing padding) — reject gap masks instead of silently
-            # skewing SLAM keyframe indices / dropping registration fixes
-            if not act1d[:n_real].all():
-                raise ValueError(
-                    "active mask must be a contiguous prefix "
-                    f"(got {act1d.tolist()})")
-            act = np.broadcast_to(act1d[:, None], (K, self.batch)).copy()
+        act, n_real = self._active_mask(K, active)
         base_idx = np.asarray(states.frame_idx)      # pre-chunk, per robot
 
-        inputs = FrameInputs(
-            img_l=jnp.asarray(imgs_l, jnp.float32),
-            img_r=jnp.asarray(imgs_r, jnp.float32),
-            accel=jnp.asarray(imu_accel, jnp.float32),
-            gyro=jnp.asarray(imu_gyro, jnp.float32),
-            gps=jnp.asarray(gps, jnp.float32),
-            mode=jnp.asarray(np.broadcast_to(mode_np, (K, self.batch))),
-            active=jnp.asarray(act))
-        plan = self.scheduler.plan_chunk(
-            self.window, tracks.MAX_UPDATES, max(n_real, 1),
-            map_points=self.cfg.backend.max_map_points,
-            ba_landmarks=BA_LANDMARKS)
+        inputs = jax.device_put(self._build_chunk(
+            imgs_l, imgs_r, imu_accel, imu_gyro, gps, mode_np, act))
+        plan = self._chunk_plan(n_real)
         states, outs = self._fused_fleet_chunk(
-            states, inputs, jnp.asarray(plan.kalman_gain),
+            states, inputs,
+            flags_from_plan(plan,
+                            slam_active=bool((mode_np == MODE_SLAM).any())),
             jnp.float32(dt_imu))
         self.dispatch_count += 1
 
@@ -208,24 +210,170 @@ class FleetLocalizer:
                                             base_idx)
         return states, outs
 
+    def _chunk_plan(self, n_real: int) -> sched.OffloadPlan:
+        """Per-chunk offload plan at the chunk's REAL frame count (the
+        launch-overhead amortization a trailing partial chunk actually
+        gets) — the single resolution point for step_chunk and both
+        run() modes, so their flags can never diverge."""
+        return resolve_marg_kernel(self.scheduler.plan_chunk(
+            self.window, tracks.MAX_UPDATES, max(n_real, 1),
+            map_points=self.cfg.backend.max_map_points,
+            ba_landmarks=self.cfg.backend.ba_landmarks), self.cfg)
+
+    def _active_mask(self, K: int, active) -> Tuple[np.ndarray, int]:
+        """(K,B) activity mask from an optional (K,) prefix mask."""
+        if active is None:
+            return np.ones((K, self.batch), bool), K
+        act1d = np.asarray(active, bool)
+        n_real = int(act1d.sum())
+        # the host stage maps scan slot j to filter frame base+j,
+        # which is only correct when the real frames form a prefix
+        # (trailing padding) — reject gap masks instead of silently
+        # skewing SLAM keyframe indices / dropping registration fixes
+        if not act1d[:n_real].all():
+            raise ValueError("active mask must be a contiguous prefix "
+                             f"(got {act1d.tolist()})")
+        return np.broadcast_to(act1d[:, None], (K, self.batch)).copy(), n_real
+
+    def _build_chunk(self, imgs_l, imgs_r, imu_accel, imu_gyro, gps,
+                     mode_np: np.ndarray, act: np.ndarray) -> FrameInputs:
+        """Pre-stack one (K,B) chunk as fresh host arrays (written once,
+        never mutated after device_put — see ``_ChunkStager``)."""
+        K = act.shape[0]
+        return FrameInputs(
+            img_l=np.asarray(imgs_l, np.float32),
+            img_r=np.asarray(imgs_r, np.float32),
+            accel=np.asarray(imu_accel, np.float32),
+            gyro=np.asarray(imu_gyro, np.float32),
+            gps=np.asarray(gps, np.float32),
+            mode=np.ascontiguousarray(
+                np.broadcast_to(mode_np, (K, self.batch))),
+            active=act)
+
+    def run(self, states: LocalizerState, imgs_l, imgs_r, imu_accel,
+            imu_gyro, gps, mode_ids, dt_imu: float, chunk: int = 8,
+            overlap: bool = True) -> LocalizerState:
+        """Drive a T-frame fleet sequence in K-frame chunks through the
+        async double-buffered pipeline: stage chunk N+1 (pre-stack +
+        device_put) while chunk N executes, drain host map stages one
+        chunk behind the dispatch front. imgs_l/imgs_r: (T,B,H,W);
+        imu_accel/gyro: (T,B,ipf,3); gps: (T,B,3); mode_ids: (B,).
+
+        When any robot is in Registration mode the drain happens before
+        the next dispatch (its chunk-end pose fix feeds the next chunk);
+        otherwise the pipeline keeps one completed chunk in flight.
+        ``overlap=False`` degenerates to sequential ``step_chunk`` calls.
+        """
+        T = np.asarray(imgs_l).shape[0]
+        chunk = max(int(chunk), 1)
+        mode_np = np.asarray(mode_ids, np.int32)
+        segments = [list(range(s, min(s + chunk, T)))
+                    for s in range(0, T, chunk)]
+        if not segments:                 # T == 0: nothing to localize
+            return states
+        slam_active = bool((mode_np == MODE_SLAM).any())
+        has_feedback = bool((mode_np == MODE_REGISTRATION).any())
+        dt = jnp.float32(dt_imu)
+        base_idx = np.asarray(states.frame_idx)
+
+        def build(seg):
+            """One padded segment's host-side FrameInputs + activity
+            mask (the single staging builder for both run() modes)."""
+            sl = slice(seg[0], seg[-1] + 1)
+            n = len(seg)
+            act, _ = self._active_mask(
+                chunk, None if n == chunk else np.arange(chunk) < n)
+
+            def take(a):
+                a = np.asarray(a, np.float32)[sl]
+                if n < chunk:
+                    a = np.concatenate(
+                        [a, np.zeros((chunk - n,) + a.shape[1:], a.dtype)])
+                return a
+
+            return FrameInputs(
+                img_l=take(imgs_l), img_r=take(imgs_r),
+                accel=take(imu_accel), gyro=take(imu_gyro),
+                gps=take(gps),
+                mode=np.ascontiguousarray(
+                    np.broadcast_to(mode_np, (chunk, self.batch))),
+                active=act), act
+
+        def seg_flags(seg):
+            # resolved at the chunk's REAL frame count — identical to
+            # step_chunk's resolution, so run()/step_chunk/overlap modes
+            # can never disagree on a partial chunk's decisions
+            return flags_from_plan(self._chunk_plan(len(seg)),
+                                   slam_active=slam_active)
+
+        if not overlap:
+            for seg in segments:
+                inputs_np, act = build(seg)
+                states, outs = self._fused_fleet_chunk(
+                    states, jax.device_put(inputs_np), seg_flags(seg), dt)
+                self.dispatch_count += 1
+                if (mode_np != MODE_VIO).any():
+                    states = self._host_chunk_stage(
+                        states, outs, mode_np, act,
+                        base_idx + np.int32(seg[0]))
+            return states
+
+        stager = _ChunkStager()
+        self.last_stager = stager
+        inputs_np, act0 = build(segments[0])
+        staged = stager.stage(inputs_np)
+        pending = None
+        for si, seg in enumerate(segments):
+            act = act0
+            states, outs = self._fused_fleet_chunk(states, staged.inputs,
+                                                   seg_flags(seg), dt)
+            staged.consumed = True
+            self.dispatch_count += 1
+            if si + 1 < len(segments):
+                inputs_np, act0 = build(segments[si + 1])
+                staged = stager.stage(inputs_np)
+            if pending is not None:
+                self._host_chunk_stage(None, *pending)
+                pending = None
+            if (mode_np != MODE_VIO).any():
+                args = (outs, mode_np, act,
+                        base_idx + np.int32(seg[0]))
+                if has_feedback:
+                    states = self._host_chunk_stage(states, *args)
+                else:
+                    pending = args
+        if pending is not None:
+            self._host_chunk_stage(None, *pending)
+        return states
+
     def _host_chunk_stage(self, states, outs, mode_np, act, base_idx):
-        """Ordered per-frame host replay for SLAM robots; chunk-end
-        registration fix for Registration robots."""
+        """Ordered per-frame host replay for SLAM robots (append-only
+        bookkeeping from scan outputs — no device work); chunk-end
+        registration fix for Registration robots (``states`` must be the
+        live post-chunk state; deferred drains pass None and carry no
+        Registration robots)."""
         K = act.shape[0]
         p_np = np.asarray(outs.p)        # (K, B, 3)
         q_np = np.asarray(outs.q)
         # one device->host transfer for the chunk's frontend outputs
         # (per-robot per-leaf slicing would sync K x B x leaves times)
         fr_np = jax.device_get(outs.fr)
+        slam = mode_np == MODE_SLAM
+        hist_np = np.asarray(outs.hist) if slam.any() else None
+        if slam.any():
+            self.ba_runs += int((np.asarray(outs.ba_ran)
+                                 & act)[:, slam].sum())
         for j in range(K):
-            for b in np.nonzero(mode_np == MODE_SLAM)[0]:
+            for b in np.nonzero(slam)[0]:
                 if not act[j, b]:
                     continue
                 fr_b = jax.tree_util.tree_map(lambda x: x[j][b], fr_np)
                 self.robot_host(b)._slam_frame(
-                    q_np[j, b], p_np[j, b], int(base_idx[b]) + j, fr_b)
+                    q_np[j, b], p_np[j, b], int(base_idx[b]) + j, fr_b,
+                    hist=hist_np[j, b])
         last = np.maximum(act.sum(axis=0) - 1, 0)    # last active frame
         for b in np.nonzero(mode_np == MODE_REGISTRATION)[0]:
+            assert states is not None, "registration drain deferred"
             j = int(last[b])
             if not act[j, b]:
                 continue

@@ -23,17 +23,29 @@ Two hot paths:
   frame transition inside ONE dispatch per chunk
   (``core.step.localize_chunk``), amortizing the Python->device round
   trip. Offload plans are resolved per chunk. Mode switching stays
-  inside the scan via ``lax.switch``; SLAM map growth is deferred to an
-  order-preserving host stage after the chunk (map growth never feeds
-  back into the filter), and Registration frames terminate their chunk
-  so their host-stage pose fix reaches the next frame — keeping chunked
-  execution numerically equivalent to the per-frame fused path.
+  inside the scan via ``lax.switch``; SLAM's windowed BA +
+  marginalization run INSIDE the scan (``core.backend.ba``), so the
+  per-chunk host stage is append-only map bookkeeping replayed from
+  scan outputs (map growth never feeds back into the filter), and
+  Registration frames terminate their chunk so their host-stage pose
+  fix reaches the next frame — keeping chunked execution numerically
+  equivalent to the per-frame fused path.
+
+  ``run`` is an asynchronous double-buffered pipeline by default: a
+  two-slot input ring (``_ChunkStager``) pre-stacks and ``device_put``s
+  chunk N+1 while chunk N executes on-device (JAX dispatch is async),
+  dispatches donate the consumed slot's buffers back to the runtime,
+  and the host stage is a consumer draining completed chunks in frame
+  order one chunk behind the dispatch front — it only ever blocks on
+  the scan outputs it actually reads. ``overlap=False`` keeps the PR 2
+  synchronous stage-dispatch-drain loop (the benchmark baseline).
 
 The seed's kernel-by-kernel path is kept as ``step_reference`` — the
 baseline the benchmarks compare against.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Union
@@ -52,13 +64,86 @@ from repro.core.frontend.pipeline import (FrontendResult,
 # re-exported: the pure state-threading layer (kept importable from here
 # for existing callers/tests)
 from repro.core.step import (FrameInputs, FrameOutputs,  # noqa: F401
-                             LocalizerState, TracedChunk, TracedStep,
+                             LocalizerState, PlanFlags, TracedChunk,
+                             TracedStep, flags_from_plan,
                              init_localizer_state, localize_chunk,
                              localize_step)
 
-# BA landmark budget per window (padded buffer in _run_ba; also the
-# static size feature the marginalization offload plan is resolved from)
+# default BA landmark budget (kept as a module constant for callers that
+# predate ``BackendConfig.ba_landmarks``; the config value wins)
 BA_LANDMARKS = 64
+
+
+def resolve_marg_kernel(plan: sched.OffloadPlan,
+                        cfg: EudoxusConfig) -> sched.OffloadPlan:
+    """Fill ``plan.marg_schur`` from the kernel registry's decision for
+    the blocked in-scan Schur reduction at this config's padded BA
+    shapes (honours REPRO_KERNELS forcing, fitted latency models, and
+    the platform fallback — same precedence as every dispatched
+    kernel)."""
+    from repro.kernels import registry as kreg
+    l = cfg.backend.ba_landmarks
+    kw = cfg.backend.ba_window
+    g = np.empty((l, 6 * kw, 3), np.float32)
+    a = np.empty((l, 3, 3), np.float32)
+    b = np.empty((l, 3), np.float32)
+    use_pallas = kreg.decide_path("marg_schur", g, a, b) == "pallas"
+    return dataclasses.replace(plan, marg_schur=use_pallas)
+
+
+def np_quat_to_rot(q: np.ndarray) -> np.ndarray:
+    """NumPy twin of ``msckf.quat_to_rot`` — keeps the chunked SLAM host
+    stage free of device dispatches."""
+    w, x, y, z = (float(v) for v in q)
+    return np.array([
+        [1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y)],
+        [2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x)],
+        [2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y)],
+    ], np.float32)
+
+
+class _StagedChunk:
+    """One staged chunk: device-side FrameInputs plus the ring-slot
+    consumption flag (set when its dispatch donates the buffers)."""
+
+    __slots__ = ("inputs", "consumed")
+
+    def __init__(self, inputs: FrameInputs):
+        self.inputs = inputs
+        self.consumed = False
+
+
+class _ChunkStager:
+    """Two-slot host->device input ring for the async chunk pipeline.
+
+    ``stage`` pre-stacks a chunk's padded host arrays and ships them
+    with one ``jax.device_put`` while the previous chunk executes. Each
+    staged buffer is written exactly once and never mutated afterwards
+    (``device_put`` may alias host memory on CPU, so in-place slot reuse
+    would corrupt an in-flight chunk); the two slots instead bound how
+    many chunks are in flight, and a slot may only be restaged after its
+    previous occupant's dispatch consumed (donated) the buffers —
+    enforced by assertion."""
+
+    def __init__(self):
+        self._slots: List[Optional[_StagedChunk]] = [None, None]
+        self._next = 0
+        self.staged_chunks = 0
+        self.stage_seconds = 0.0     # host time spent staging (hidden
+        #                              behind device execution when the
+        #                              pipeline overlaps)
+
+    def stage(self, inputs_np: FrameInputs) -> _StagedChunk:
+        t0 = time.perf_counter()
+        prev = self._slots[self._next]
+        assert prev is None or prev.consumed, \
+            "input ring overrun: slot restaged while its chunk is in flight"
+        staged = _StagedChunk(jax.device_put(inputs_np))
+        self._slots[self._next] = staged
+        self._next ^= 1
+        self.staged_chunks += 1
+        self.stage_seconds += time.perf_counter() - t0
+        return staged
 
 
 @dataclass
@@ -87,15 +172,20 @@ class Localizer:
         self._slam_keyframes: List[Dict] = []
         self.trajectory: List[np.ndarray] = []
         self.dispatch_count = 0      # device dispatches issued by step()/run()
+        self.ba_runs = 0             # in-scan BA+marginalization passes
+        self.last_stager: Optional[_ChunkStager] = None   # run() staging stats
         # offload decisions depend only on static shapes -> resolve once;
         # call refresh_offload_plan() after fitting new latency models
         self._offload_plan = self._plan(chunk=1)
         # the fused hot paths: one compiled program each, donated state
-        # buffers. The chunk program is traced per distinct K.
-        self._traced = TracedStep(cfg, cam)
+        # buffers. The chunk program is traced per distinct K; chunk
+        # dispatches also donate their staged inputs (the ring slot is
+        # handed back to the runtime once consumed).
+        self._traced = TracedStep(cfg, cam, self.vocab)
         self._fused_step = jax.jit(self._traced, donate_argnums=(0,))
-        self._traced_chunk = TracedChunk(cfg, cam)
-        self._fused_chunk = jax.jit(self._traced_chunk, donate_argnums=(0,))
+        self._traced_chunk = TracedChunk(cfg, cam, self.vocab)
+        self._fused_chunk = jax.jit(self._traced_chunk,
+                                    donate_argnums=(0, 1))
         # seed-style kernel-by-kernel dispatches (step_reference + tests)
         self._propagate = jax.jit(msckf.propagate,
                                   static_argnames=("dt", "sigma_a", "sigma_g"))
@@ -126,16 +216,21 @@ class Localizer:
 
     def _plan(self, chunk: int) -> sched.OffloadPlan:
         """All-kernel offload plan from static shapes (paper Fig. 16
-        decisions via the fitted latency models in ``self.scheduler``)."""
+        decisions via the fitted latency models in ``self.scheduler``),
+        plus the registry's Pallas-vs-XLA pick for the in-scan
+        marginalization kernel."""
         mp = self.cfg.backend.max_map_points
         px = self.cfg.frontend.height * self.cfg.frontend.width
+        bl = self.cfg.backend.ba_landmarks
         if chunk <= 1:
-            return self.scheduler.plan_frame(
+            plan = self.scheduler.plan_frame(
                 self.window, tracks.MAX_UPDATES,
-                map_points=mp, ba_landmarks=BA_LANDMARKS, frame_pixels=px)
-        return self.scheduler.plan_chunk(
-            self.window, tracks.MAX_UPDATES, chunk,
-            map_points=mp, ba_landmarks=BA_LANDMARKS, frame_pixels=px)
+                map_points=mp, ba_landmarks=bl, frame_pixels=px)
+        else:
+            plan = self.scheduler.plan_chunk(
+                self.window, tracks.MAX_UPDATES, chunk,
+                map_points=mp, ba_landmarks=bl, frame_pixels=px)
+        return resolve_marg_kernel(plan, self.cfg)
 
     def refresh_offload_plan(self) -> sched.OffloadPlan:
         """Re-resolve the per-frame offload decisions (after fitting
@@ -157,20 +252,24 @@ class Localizer:
                    else np.asarray(gps, np.float32))
         plan = self._offload_plan
 
-        state, fr = self._fused_step(
+        state, outs = self._fused_step(
             state, jnp.asarray(img_l, jnp.float32),
             jnp.asarray(img_r, jnp.float32),
             jnp.asarray(imu_accel, jnp.float32),
             jnp.asarray(imu_gyro, jnp.float32),
             jnp.asarray(gps_arr), jnp.int32(mode_id(mode)),
-            jnp.asarray(plan.kalman_gain), jnp.float32(dt_imu))
+            flags_from_plan(plan, slam_active=mode == Mode.SLAM),
+            jnp.float32(dt_imu))
         self.dispatch_count += 1
 
-        # host stage: dynamically-sized map bookkeeping (SLAM/Registration)
+        # host stage: dynamically-sized map bookkeeping (SLAM/Registration;
+        # SLAM's BA/marginalization already ran inside the dispatch)
         if mode == Mode.SLAM:
-            state = self._slam_step(state, fr)
+            self.ba_runs += int(np.asarray(outs.ba_ran))
+            state = self._slam_step(state, outs.fr,
+                                    hist=np.asarray(outs.hist))
         elif mode == Mode.REGISTRATION:
-            state = self._registration_step(state, fr)
+            state = self._registration_step(state, outs.fr)
 
         self.trajectory.append(np.asarray(state.filt.p))
         self.variation[mode].add(time.perf_counter() - t0)
@@ -181,7 +280,8 @@ class Localizer:
     # ------------------------------------------------------------------
     def run(self, state: LocalizerState, imgs_l, imgs_r, imu_accel,
             imu_gyro, gps, envs: Union[Environment, Sequence[Environment]],
-            dt_imu: float, chunk: int = 8) -> LocalizerState:
+            dt_imu: float, chunk: int = 8,
+            overlap: bool = True) -> LocalizerState:
         """Localize a T-frame sequence in K-frame chunks — ONE device
         dispatch per chunk (``chunk=1`` degenerates to the per-frame
         fused path's dispatch pattern).
@@ -197,6 +297,13 @@ class Localizer:
         map growth never feeds back into the filter, so it is replayed
         in frame order after each chunk from the scan's per-frame
         outputs.
+
+        ``overlap=True`` (default) runs the async double-buffered
+        pipeline: chunk N+1 is staged (and, when no Registration fix is
+        pending, dispatched) while chunk N executes, and the host stage
+        drains completed chunks one behind the dispatch front — frame
+        order and numerics are identical to ``overlap=False``, which
+        keeps the synchronous stage->dispatch->drain loop per chunk.
         """
         T = len(imgs_l)
         if isinstance(envs, Environment):
@@ -223,81 +330,173 @@ class Localizer:
                 cur = []
         if cur:
             segments.append(cur)
+        if not segments:                 # T == 0: nothing to localize
+            return state
 
         # per-chunk resolution, local to this run: the chunk-amortized
-        # kalman decision must not leak into later per-frame step() calls
-        # (host-stage projection/marginalization decisions are identical
-        # between the frame and chunk plans and keep using the
-        # instance plan)
+        # in-dispatch decisions must not leak into later per-frame
+        # step() calls
         plan = self._plan(chunk)
-        for seg in segments:
-            state = self._run_segment(state, seg, imgs_l, imgs_r,
-                                      imu_accel, imu_gyro, gps_seq, modes,
-                                      dt_imu, chunk, plan)
+        flags = flags_from_plan(
+            plan, slam_active=any(m == Mode.SLAM for m in modes))
+        dt = jnp.float32(dt_imu)
+        seq = (imgs_l, imgs_r, imu_accel, imu_gyro, gps_seq)
+        base0 = int(state.frame_idx)     # the run's first absolute frame
+        #                                  (the only pre-pipeline sync)
+
+        # per-frame latency samples come from consecutive drain
+        # completions (mark-to-mark), so the samples tile the run's wall
+        # time without overlap even when the pipeline keeps a chunk in
+        # flight — sum(samples) == run wall time on both paths
+        mark = [time.perf_counter()]
+
+        if not overlap:
+            # PR 2's synchronous loop, kept verbatim as the benchmark
+            # baseline: per-frame list-stack staging on the critical
+            # path, dispatch, then a blocking drain before the next
+            # chunk is touched
+            for seg in segments:
+                inputs = jax.device_put(
+                    self._build_chunk_reference(seg, seq, modes, chunk))
+                state, outs = self._fused_chunk(state, inputs, flags, dt)
+                self.dispatch_count += 1
+                state = self._drain_chunk(state, outs, seg, modes,
+                                          base0 + seg[0], mark)
+            return state
+
+        # --- async double-buffered pipeline ---
+        stager = _ChunkStager()
+        self.last_stager = stager
+        staged = stager.stage(self._build_chunk(segments[0], seq, modes,
+                                                chunk))
+        pending = None        # one completed-but-undrained chunk
+        for si, seg in enumerate(segments):
+            state, outs = self._fused_chunk(state, staged.inputs, flags, dt)
+            staged.consumed = True       # buffers donated to the dispatch
+            self.dispatch_count += 1
+            if si + 1 < len(segments):
+                # overlapped with chunk N's device execution
+                staged = stager.stage(self._build_chunk(
+                    segments[si + 1], seq, modes, chunk))
+            if pending is not None:
+                self._drain_chunk(None, *pending)
+                pending = None
+            if modes[seg[-1]] == Mode.REGISTRATION:
+                # the host pose fix must land before the next dispatch:
+                # drain now (a pipeline bubble, inherent to feedback)
+                state = self._drain_chunk(state, outs, seg, modes,
+                                          base0 + seg[0], mark)
+            else:
+                pending = (outs, seg, modes, base0 + seg[0], mark)
+        if pending is not None:
+            self._drain_chunk(None, *pending)
         return state
 
-    def _run_segment(self, state: LocalizerState, idxs: List[int],
-                     imgs_l, imgs_r, imu_accel, imu_gyro, gps_seq,
-                     modes: List[Mode], dt_imu: float, chunk: int,
-                     plan: sched.OffloadPlan) -> LocalizerState:
-        """One padded K-frame chunk dispatch + the ordered host stage."""
-        t0 = time.perf_counter()
+    def _build_chunk(self, idxs: List[int], seq, modes: List[Mode],
+                     chunk: int) -> FrameInputs:
+        """Pre-stack one padded K-frame chunk as fresh host arrays (the
+        staging half of the pipeline). Buffers are written once and
+        never mutated after ``device_put`` — see ``_ChunkStager``."""
+        imgs_l, imgs_r, imu_accel, imu_gyro, gps_seq = seq
         n = len(idxs)
         pad = chunk - n
-        base_idx = int(state.frame_idx)      # frame index of idxs[0]
+        sl = slice(idxs[0], idxs[-1] + 1)    # segments are contiguous
+
+        def take(per_frame, dtype, pad_shape):
+            arr = np.asarray(per_frame[sl], dtype)
+            if pad:
+                arr = np.concatenate(
+                    [arr, np.zeros((pad,) + pad_shape, dtype)])
+            return arr
+
+        ipf = np.asarray(imu_accel[idxs[0]]).shape[0]
+        H, W = np.asarray(imgs_l[idxs[0]]).shape
+        return FrameInputs(
+            img_l=take(imgs_l, np.float32, (H, W)),
+            img_r=take(imgs_r, np.float32, (H, W)),
+            accel=take(imu_accel, np.float32, (ipf, 3)),
+            gyro=take(imu_gyro, np.float32, (ipf, 3)),
+            gps=take(gps_seq, np.float32, (3,)),
+            mode=np.concatenate(
+                [np.asarray([mode_id(modes[i]) for i in idxs], np.int32),
+                 np.zeros(pad, np.int32)]),
+            active=np.concatenate(
+                [np.ones(n, bool), np.zeros(pad, bool)]))
+
+    def _build_chunk_reference(self, idxs: List[int], seq,
+                               modes: List[Mode],
+                               chunk: int) -> FrameInputs:
+        """PR 2's staging, preserved for the synchronous baseline: stack
+        each frame individually through a Python loop (the host cost the
+        async ring replaces with contiguous slices + prefetch)."""
+        imgs_l, imgs_r, imu_accel, imu_gyro, gps_seq = seq
+        n = len(idxs)
+        pad = chunk - n
 
         def stack(per_frame, dtype, pad_shape):
             arr = np.stack([np.asarray(per_frame[i], dtype) for i in idxs])
             if pad:
                 arr = np.concatenate(
                     [arr, np.zeros((pad,) + pad_shape, dtype)])
-            return jnp.asarray(arr)
+            return arr
 
         ipf = np.asarray(imu_accel[idxs[0]]).shape[0]
         H, W = np.asarray(imgs_l[idxs[0]]).shape
-        inputs = FrameInputs(
+        return FrameInputs(
             img_l=stack(imgs_l, np.float32, (H, W)),
             img_r=stack(imgs_r, np.float32, (H, W)),
             accel=stack(imu_accel, np.float32, (ipf, 3)),
             gyro=stack(imu_gyro, np.float32, (ipf, 3)),
             gps=stack(gps_seq, np.float32, (3,)),
-            mode=jnp.asarray(np.concatenate(
+            mode=np.concatenate(
                 [np.asarray([mode_id(modes[i]) for i in idxs], np.int32),
-                 np.zeros(pad, np.int32)])),
-            active=jnp.asarray(np.concatenate(
-                [np.ones(n, bool), np.zeros(pad, bool)])))
+                 np.zeros(pad, np.int32)]),
+            active=np.concatenate(
+                [np.ones(n, bool), np.zeros(pad, bool)]))
 
-        state, outs = self._fused_chunk(
-            state, inputs, jnp.asarray(plan.kalman_gain),
-            jnp.float32(dt_imu))
-        self.dispatch_count += 1
-
-        # ordered host stage from the scan's per-frame outputs
+    def _drain_chunk(self, state: Optional[LocalizerState],
+                     outs: FrameOutputs, idxs: List[int],
+                     modes: List[Mode], abs_base: int,
+                     mark: List[float]) -> Optional[LocalizerState]:
+        """Ordered host-stage drain of one completed chunk. Blocks only
+        on the outputs it reads: poses always; frontend leaves + BoW
+        histograms only when the chunk held SLAM/Registration frames.
+        SLAM bookkeeping is append-only replay (no device work — BA and
+        marginalization already ran inside the scan); Registration
+        applies its pose fix to ``state`` (deferred drains pass None:
+        their chunks contain no Registration frame by construction)."""
+        n = len(idxs)
         outs_np_p = np.asarray(outs.p)
         outs_np_q = np.asarray(outs.q)
         # one device->host transfer for the whole chunk's frontend
         # outputs (per-frame per-leaf slicing would sync K x leaves
         # times); skipped entirely for all-VIO chunks
-        fr_np = (jax.device_get(outs.fr)
-                 if any(modes[i] != Mode.VIO for i in idxs) else None)
+        non_vio = any(modes[i] != Mode.VIO for i in idxs)
+        fr_np = jax.device_get(outs.fr) if non_vio else None
+        hist_np = np.asarray(outs.hist) if non_vio else None
         for j, i in enumerate(idxs):
             mode = modes[i]
             if mode == Mode.SLAM:
                 fr_j = jax.tree_util.tree_map(lambda x: x[j], fr_np)
                 self._slam_frame(outs_np_q[j], outs_np_p[j],
-                                 base_idx + j, fr_j)
+                                 abs_base + j, fr_j, hist=hist_np[j])
                 self.trajectory.append(outs_np_p[j].copy())
             elif mode == Mode.REGISTRATION:
                 # chunk-terminal by construction: the post-chunk state IS
                 # this frame's state, so the pose fix lands before the
                 # next chunk begins
                 assert j == len(idxs) - 1, "registration frame mid-chunk"
+                assert state is not None, "registration drain deferred"
                 fr_j = jax.tree_util.tree_map(lambda x: x[j], fr_np)
                 state = self._registration_step(state, fr_j)
                 self.trajectory.append(np.asarray(state.filt.p))
             else:
                 self.trajectory.append(outs_np_p[j].copy())
-        per_frame = (time.perf_counter() - t0) / n
+        if non_vio:
+            self.ba_runs += int(np.asarray(outs.ba_ran).sum())
+        now = time.perf_counter()
+        per_frame = (now - mark[0]) / n
+        mark[0] = now
         for i in idxs:
             self.variation[modes[i]].add(per_frame)
         return state
@@ -365,10 +564,10 @@ class Localizer:
             filt=filt, tracks_uv=jnp.asarray(uv_np),
             tracks_valid=jnp.asarray(vd_np), prev_img=img_l,
             prev_yx=fr.yx, prev_valid=fr.valid,
-            frame_idx=jnp.int32(frame_idx + 1))
+            frame_idx=jnp.int32(frame_idx + 1), ba=state.ba)
 
         if mode == Mode.SLAM:
-            state = self._slam_step(state, fr)
+            state = self._slam_step(state, fr, host_ba=True)
         elif mode == Mode.REGISTRATION:
             state = self._registration_step(state, fr)
 
@@ -377,42 +576,57 @@ class Localizer:
         return state
 
     # ------------------------------------------------------------------
-    def _slam_step(self, state: LocalizerState, fr) -> LocalizerState:
+    def _slam_step(self, state: LocalizerState, fr, hist=None,
+                   host_ba: bool = False) -> LocalizerState:
         """Per-frame entry: SLAM host stage from the full state."""
         self._slam_frame(np.asarray(state.filt.q), np.asarray(state.filt.p),
-                         int(state.frame_idx) - 1, fr)
+                         int(state.frame_idx) - 1, fr, hist=hist,
+                         host_ba=host_ba)
         return state
 
     def _slam_frame(self, q: np.ndarray, p: np.ndarray, frame_idx: int,
-                    fr) -> None:
-        """Windowed BA over recent keyframes; extend the map. Takes the
-        post-frame pose (q, p) and THIS frame's index explicitly so the
-        chunked path can replay deferred SLAM frames from scan outputs
-        (map growth never feeds back into the filter)."""
+                    fr, hist=None, host_ba: bool = False) -> None:
+        """Append-only SLAM map bookkeeping: record the keyframe and
+        extend the map. Takes the post-frame pose (q, p) and THIS
+        frame's index explicitly so the chunked path can replay deferred
+        SLAM frames from scan outputs (map growth never feeds back into
+        the filter). With ``hist`` provided (from the scan outputs) the
+        stage performs no device work at all — BA/marginalization run
+        inside the scan since PR 3. ``host_ba=True`` is the seed
+        reference path: BoW + windowed BA on the host, as before."""
         kf = {
-            "pose_R": np.asarray(msckf.quat_to_rot(jnp.asarray(q))),
+            "pose_R": np_quat_to_rot(np.asarray(q)),
             "pose_p": np.asarray(p),
             "yx": np.asarray(fr.yx, np.float32),
             "disparity": np.asarray(fr.disparity),
             "svalid": np.asarray(fr.stereo_valid),
             "desc": np.asarray(fr.desc),
-            "hist": np.asarray(tracking.bow_histogram(
-                fr.desc, fr.valid, self.vocab)),
+            "hist": (np.asarray(hist) if hist is not None
+                     else np.asarray(tracking.bow_histogram(
+                         jnp.asarray(np.asarray(fr.desc)),
+                         jnp.asarray(np.asarray(fr.valid)), self.vocab))),
         }
         self._slam_keyframes.append(kf)
-        K = self.cfg.backend.ba_window
-        if len(self._slam_keyframes) >= 3 and frame_idx % 2 == 0:
-            self._run_ba(self._slam_keyframes[-K:])
+        be = self.cfg.backend
+        if (host_ba
+                and len(self._slam_keyframes) >= be.ba_min_keyframes
+                and frame_idx % be.ba_every == 0):
+            self._run_ba(self._slam_keyframes[-be.ba_window:])
         self._extend_map(kf)
 
     def _run_ba(self, kfs):
+        """The seed's host-stage windowed BA + marginalization (kept as
+        the ``step_reference`` baseline and the oracle the in-scan
+        ``core.backend.ba`` round is equivalence-tested against)."""
         cam = self.cam
         K = len(kfs)
         # landmarks: this window's stereo points from the newest keyframe
         ref = kfs[-1]
         pts, valid = stereo_points_world(ref, cam)
-        M = min(BA_LANDMARKS, pts.shape[0])
-        sel = np.argsort(~valid)[:M]
+        M = min(self.cfg.backend.ba_landmarks, pts.shape[0])
+        # stable sort: same valid-first tie order as the in-scan
+        # ba.select_landmarks (jnp.argsort is stable)
+        sel = np.argsort(~valid, kind="stable")[:M]
         lms = pts[sel]
         intr = jnp.asarray([cam.fx, cam.fy, cam.cx, cam.cy])
         obs = np.zeros((K, M, 2), np.float32)

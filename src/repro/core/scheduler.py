@@ -73,6 +73,7 @@ KERNEL_MODELS = {
     "projection": 1,        # linear in #map points (Fig. 16a)
     "kalman_gain": 2,       # quadratic in H height (Fig. 16b)
     "marginalization": 2,   # quadratic in #features (Fig. 16c)
+    "marg_schur": 1,        # blocked Schur reduction: linear in landmarks
     # frontend / building-block ops (registry-dispatched): latency is
     # linear in the element count each size feature reports
     "conv2d": 1,
@@ -96,7 +97,22 @@ class OffloadPlan:
     plus the frontend op block."""
     kalman_gain: bool = True       # MSCKF update (inside the fused dispatch)
     projection: bool = True        # Registration map projection (host stage)
-    marginalization: bool = True   # SLAM BA + marginalization (host stage)
+    marginalization: bool = True   # SLAM windowed BA + marginalization
+    #                                (inside the fused dispatch since PR 3).
+    #                                False SKIPS the BA round entirely —
+    #                                the same accuracy-for-latency skip
+    #                                the host stage implemented, codified
+    #                                by test_offload_plan_gates_inscan_ba.
+    #                                Note the frame and chunk plans can
+    #                                legitimately disagree near the model
+    #                                boundary (chunk amortizes launch
+    #                                overhead), like kalman_gain.
+    # which impl of the in-scan blocked Schur reduction the traced flag
+    # selects: Pallas kernel (True) vs XLA path. Resolved by the
+    # localizer through kernels.registry.decide_path("marg_schur", ...)
+    # so REPRO_KERNELS forcing / fitted models / platform fallback all
+    # apply — the scheduler only carries the decision into the dispatch.
+    marg_schur: bool = True
     # FE ops accel path at the frame's pixel count. Advisory: the ops
     # themselves dispatch per-call through kernels.registry (same models,
     # same comparison) at trace time; this field is the plan's
@@ -173,9 +189,11 @@ class LatencyModels:
                    frame_pixels: int = 0) -> OffloadPlan:
         """Per-chunk plan: identical decision structure to ``plan_frame``
         (same ``should_offload``, same guards) except the fixed launch
-        overhead of the in-dispatch kernel is amortized over the K frames
-        the scan executes in one dispatch; per-frame transfer volume is
-        unchanged (the scan ships K frames of inputs either way)."""
+        overhead of the in-dispatch kernels (Kalman gain and the SLAM
+        BA/marginalization, both of which execute inside the scan) is
+        amortized over the K frames the scan executes in one dispatch;
+        per-frame transfer volume is unchanged (the scan ships K frames
+        of inputs either way)."""
         chunk = max(int(chunk), 1)
         plan = self.plan_frame(window, max_updates,
                                map_points=map_points,
@@ -183,12 +201,15 @@ class LatencyModels:
                                frame_pixels=frame_pixels)
         h_height = max_updates * 2 * window
         per_frame_bytes = max_updates * window * 2 * 4
+        amortized = self.fixed_overhead_s / chunk
         kalman = self.should_offload("kalman_gain", h_height,
-                                     per_frame_bytes,
-                                     overhead_s=self.fixed_overhead_s / chunk)
+                                     per_frame_bytes, overhead_s=amortized)
+        marg = self.should_offload("marginalization", max(ba_landmarks, 1),
+                                   ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4,
+                                   overhead_s=amortized)
         return OffloadPlan(kalman_gain=kalman,
                            projection=plan.projection,
-                           marginalization=plan.marginalization,
+                           marginalization=marg,
                            frontend=plan.frontend)
 
 

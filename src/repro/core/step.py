@@ -17,11 +17,15 @@ Three granularities, all one compiled program each:
                          the vmapped transition)
 
 Mode switching stays inside the scan body via the int-id ``lax.switch``,
-so one compiled chunk program serves every operating environment; the
-scheduler's offload decisions are resolved host-side per chunk and enter
-as traced booleans. Chunks are padded to a fixed K with ``active=False``
-frames (the transition passes state through unchanged), so every chunk —
-including the trailing partial one — reuses the same trace.
+so one compiled chunk program serves every operating environment — and
+since PR 3 that includes SLAM's windowed BA + Schur marginalization
+(``core.backend.ba``), which run in-scan behind the switch with the
+blocked ``marg_schur`` Pallas/XLA kernel selected by the scheduler's
+traced ``PlanFlags``. The scheduler's offload decisions are resolved
+host-side per chunk and enter as traced booleans. Chunks are padded to
+a fixed K with ``active=False`` frames (the transition passes state
+through unchanged), so every chunk — including the trailing partial one
+— reuses the same trace.
 """
 from __future__ import annotations
 
@@ -33,7 +37,9 @@ import jax.numpy as jnp
 
 from repro.configs.eudoxus import EudoxusConfig
 from repro.core import tracks
-from repro.core.backend import fusion, msckf
+from repro.core.backend import ba as ba_mod
+from repro.core.backend import fusion, msckf, tracking
+from repro.core.environment import MODE_SLAM
 from repro.core.frontend import orb, pipeline
 from repro.core.frontend.pipeline import FrontendResult
 
@@ -41,7 +47,8 @@ from repro.core.frontend.pipeline import FrontendResult
 class LocalizerState(NamedTuple):
     """Device-resident per-robot state — a pure pytree threaded through
     the donated fused step / chunk scan (covariance and track buffers
-    update in place). Composes the frontend and track scan carries."""
+    update in place). Composes the frontend, track and windowed-BA scan
+    carries."""
     filt: msckf.MsckfState
     tracks_uv: jax.Array     # (N, W, 2) uv observations across the window
     tracks_valid: jax.Array  # (N, W) bool
@@ -49,6 +56,31 @@ class LocalizerState(NamedTuple):
     prev_yx: jax.Array       # (N, 2) int32 previous frame's features
     prev_valid: jax.Array    # (N,) bool
     frame_idx: jax.Array     # () int32
+    ba: ba_mod.BAState       # SLAM keyframe window + marginalization prior
+
+
+class PlanFlags(NamedTuple):
+    """The scheduler's pre-resolved offload decisions that enter the
+    fused dispatch as traced booleans (one compiled program serves every
+    decision; see ``scheduler.OffloadPlan``)."""
+    kalman: jax.Array       # () bool — run the MSCKF update in-dispatch
+    marg: jax.Array         # () bool — run SLAM BA+marginalization in-scan
+    marg_pallas: jax.Array  # () bool — blocked Schur kernel: Pallas vs XLA
+    # () bool — any SLAM frame in this dispatch. Always a SCALAR (never
+    # batched), so the cond it gates survives vmap as a real branch: an
+    # all-VIO fleet/chunk skips the whole SLAM block at runtime instead
+    # of executing both sides of a batched select.
+    slam: jax.Array
+
+
+def flags_from_plan(plan, slam_active: bool = True) -> PlanFlags:
+    """OffloadPlan -> the traced in-dispatch flag bundle. ``slam_active``
+    is the host's knowledge of whether any frame in the dispatch runs
+    the SLAM backend (conservative default: True)."""
+    return PlanFlags(kalman=jnp.asarray(plan.kalman_gain),
+                     marg=jnp.asarray(plan.marginalization),
+                     marg_pallas=jnp.asarray(plan.marg_schur),
+                     slam=jnp.asarray(slam_active))
 
 
 class FrameInputs(NamedTuple):
@@ -67,26 +99,35 @@ class FrameInputs(NamedTuple):
 
 class FrameOutputs(NamedTuple):
     """Per-frame scan outputs: what the host stage needs after the chunk
-    returns (SLAM keyframes / Registration association need the frontend
-    result and the post-frame pose)."""
+    returns. SLAM map bookkeeping replays from ``fr``/``hist``/``p``/``q``
+    without touching the device (append-only); ``ba_cost``/``ba_ran``
+    surface the in-scan BA passes for observability."""
     fr: FrontendResult
-    p: jax.Array       # (3,) post-frame position
-    q: jax.Array       # (4,) post-frame orientation quaternion
+    p: jax.Array        # (3,) post-frame position
+    q: jax.Array        # (4,) post-frame orientation quaternion
+    hist: jax.Array     # (V,) BoW histogram — SLAM frames only (zeros
+    #                     otherwise; Registration queries compute theirs
+    #                     in the host stage against the live map)
+    ba_cost: jax.Array  # () float32 latest windowed-BA cost
+    ba_ran: jax.Array   # () bool — BA+marginalization executed this frame
 
 
 def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
                   accel: jax.Array, gyro: jax.Array, gps: jax.Array,
-                  mode: jax.Array, offload_kalman: jax.Array,
-                  dt_imu: jax.Array, *, cfg,
-                  fx: float, fy: float, cx: float, cy: float
-                  ) -> Tuple[LocalizerState, FrontendResult]:
+                  mode: jax.Array, flags: PlanFlags,
+                  dt_imu: jax.Array, *, cfg, be_cfg,
+                  fx: float, fy: float, cx: float, cy: float,
+                  baseline: float, vocab: jax.Array,
+                  allow_pallas_marg: bool = True
+                  ) -> Tuple[LocalizerState, FrameOutputs]:
     """One fused frame: frontend -> track ring buffer -> lax.switch
-    backend -> new state. Pure function of fixed-shape arrays; jitted
-    with ``donate_argnums=(0,)`` by the Localizer (and the body of the
-    chunk scan below — the K=1 special case IS this function).
+    backend (with SLAM's windowed BA/marginalization in-scan) -> new
+    state. Pure function of fixed-shape arrays; jitted with
+    ``donate_argnums=(0,)`` by the Localizer (and the body of the chunk
+    scan below — the K=1 special case IS this function).
 
     gps: (3,) world position, NaN when unavailable. mode: () int32 mode
-    id. offload_kalman: () bool, the scheduler's pre-resolved decision.
+    id. flags: the scheduler's pre-resolved decisions as traced bools.
     """
     fe_carry = pipeline.FrontendCarry(prev_img=state.prev_img,
                                       prev_yx=state.prev_yx,
@@ -117,7 +158,7 @@ def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
     uv, vd, count, consumed = tracks.select_consumed(tracks_uv, tracks_valid)
     do_consume = (count >= tracks.MIN_UPDATE_TRACKS) & (state.frame_idx >= 3)
     filt = jax.lax.cond(
-        do_consume & offload_kalman,
+        do_consume & flags.kalman,
         lambda f: msckf.update(f, uv, vd, fx=fx, fy=fy, cx=cx, cy=cy)[0],
         lambda f: f, filt)
     tracks_valid = jnp.where(do_consume,
@@ -126,18 +167,66 @@ def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
 
     # --- mode dispatch (paper Fig. 2 -> one resident program per mode):
     # VIO fuses GPS on-device (gps_update is NaN-safe: invalid fixes get
-    # zero weight); SLAM / Registration defer their map work to the host
-    # stage (the map is dynamically sized)
+    # zero weight); SLAM / Registration defer their dynamically-sized map
+    # growth to the host stage
     filt = jax.lax.switch(jnp.clip(mode, 0, 2),
                           [lambda f: fusion.gps_update(f, gps)[0],
                            lambda f: f, lambda f: f], filt)
+
+    # --- SLAM windowed BA + marginalization, in-scan (paper Sec. VI-A's
+    # variation-dominating kernel): push the post-frame pose as a
+    # keyframe, compute the BoW histogram the host map stage replays
+    # (keyframe appends), and on the host path's exact trigger run the
+    # fixed-shape BA round. Feedback-free by construction (results live
+    # in BAState / the scan outputs), so VIO/Registration frames and the
+    # trajectory are untouched. The outer cond is gated by the SCALAR
+    # ``flags.slam`` so all-VIO dispatches skip it even under vmap; the
+    # inner per-frame/per-robot cond gates on the (possibly batched)
+    # mode id.
+    n_hist = 2 ** vocab.shape[0]
+
+    def slam_branch(ba_in):
+        hist = tracking.bow_histogram(fr.desc, fr.valid, vocab)
+        R = msckf.quat_to_rot(filt.q)
+        ba2 = ba_mod.push_keyframe(ba_in, R, filt.p)
+        trigger = ((ba2.n_kf >= be_cfg.ba_min_keyframes)
+                   & (state.frame_idx % be_cfg.ba_every == 0)
+                   & flags.marg)
+
+        def run_ba(b):
+            pts, pv = ba_mod.backproject_stereo(
+                fr.yx, fr.disparity, fr.stereo_valid, R, filt.p,
+                fx=fx, fy=fy, cx=cx, cy=cy, baseline=baseline)
+            lms, lmv = ba_mod.select_landmarks(pts, pv,
+                                               be_cfg.ba_landmarks)
+            intr = jnp.asarray([fx, fy, cx, cy], jnp.float32)
+            return ba_mod.ba_round(
+                b, lms, lmv, intr, lm_iters=be_cfg.lm_iters,
+                lm_lambda0=be_cfg.lm_lambda0,
+                marg_pallas=flags.marg_pallas,
+                allow_pallas=allow_pallas_marg)
+
+        ba3 = jax.lax.cond(trigger, run_ba, lambda b: b, ba2)
+        return ba3, trigger, hist
+
+    def not_slam(ba_in):
+        return (ba_in, jnp.bool_(False),
+                jnp.zeros((n_hist,), jnp.float32))
+
+    ba_state, ba_ran, hist = jax.lax.cond(
+        flags.slam,
+        lambda b: jax.lax.cond(mode == MODE_SLAM, slam_branch,
+                               not_slam, b),
+        not_slam, state.ba)
 
     new_state = LocalizerState(
         filt=filt, tracks_uv=tracks_uv, tracks_valid=tracks_valid,
         prev_img=fe_carry.prev_img, prev_yx=fe_carry.prev_yx,
         prev_valid=fe_carry.prev_valid,
-        frame_idx=state.frame_idx + 1)
-    return new_state, fr
+        frame_idx=state.frame_idx + 1, ba=ba_state)
+    outs = FrameOutputs(fr=fr, p=filt.p, q=filt.q, hist=hist,
+                        ba_cost=ba_state.last_cost, ba_ran=ba_ran)
+    return new_state, outs
 
 
 def _zero_frontend_result(state: LocalizerState) -> FrontendResult:
@@ -155,28 +244,42 @@ def _zero_frontend_result(state: LocalizerState) -> FrontendResult:
         track_valid=jnp.zeros((n,), bool))
 
 
+def _zero_outputs(state: LocalizerState, vocab: jax.Array,
+                  fr: FrontendResult) -> FrameOutputs:
+    """Shape-matched FrameOutputs for padding frames."""
+    return FrameOutputs(fr=fr, p=state.filt.p, q=state.filt.q,
+                        hist=jnp.zeros((2 ** vocab.shape[0],), jnp.float32),
+                        ba_cost=state.ba.last_cost,
+                        ba_ran=jnp.bool_(False))
+
+
 def frame_transition(state: LocalizerState, inp: FrameInputs,
-                     offload_kalman: jax.Array, dt_imu: jax.Array, *,
-                     cfg, fx: float, fy: float, cx: float, cy: float
+                     flags: PlanFlags, dt_imu: jax.Array, *,
+                     cfg, be_cfg, fx: float, fy: float, cx: float,
+                     cy: float, baseline: float, vocab: jax.Array,
+                     allow_pallas_marg: bool = True
                      ) -> Tuple[LocalizerState, FrameOutputs]:
     """The scan-able FrameState -> FrameState transition: one frame of
     ``localize_step`` gated by ``inp.active`` (padding frames pass state
     through so a fixed-K chunk serves any sequence length)."""
     def live(st):
         return localize_step(st, inp.img_l, inp.img_r, inp.accel,
-                             inp.gyro, inp.gps, inp.mode, offload_kalman,
-                             dt_imu, cfg=cfg, fx=fx, fy=fy, cx=cx, cy=cy)
+                             inp.gyro, inp.gps, inp.mode, flags,
+                             dt_imu, cfg=cfg, be_cfg=be_cfg, fx=fx, fy=fy,
+                             cx=cx, cy=cy, baseline=baseline, vocab=vocab,
+                             allow_pallas_marg=allow_pallas_marg)
 
     def skip(st):
-        return st, _zero_frontend_result(st)
+        return st, _zero_outputs(st, vocab, _zero_frontend_result(st))
 
-    state, fr = jax.lax.cond(inp.active, live, skip, state)
-    return state, FrameOutputs(fr=fr, p=state.filt.p, q=state.filt.q)
+    return jax.lax.cond(inp.active, live, skip, state)
 
 
 def localize_chunk(state: LocalizerState, inputs: FrameInputs,
-                   offload_kalman: jax.Array, dt_imu: jax.Array, *,
-                   cfg, fx: float, fy: float, cx: float, cy: float
+                   flags: PlanFlags, dt_imu: jax.Array, *,
+                   cfg, be_cfg, fx: float, fy: float, cx: float, cy: float,
+                   baseline: float, vocab: jax.Array,
+                   allow_pallas_marg: bool = True
                    ) -> Tuple[LocalizerState, FrameOutputs]:
     """K frames in ONE dispatch: ``lax.scan`` of the frame transition.
 
@@ -185,15 +288,19 @@ def localize_chunk(state: LocalizerState, inputs: FrameInputs,
     and IMU dt are chunk-wide scalars (resolved by the scheduler per
     chunk, not per frame)."""
     def body(st, x):
-        return frame_transition(st, x, offload_kalman, dt_imu, cfg=cfg,
-                                fx=fx, fy=fy, cx=cx, cy=cy)
+        return frame_transition(st, x, flags, dt_imu, cfg=cfg,
+                                be_cfg=be_cfg, fx=fx, fy=fy, cx=cx, cy=cy,
+                                baseline=baseline, vocab=vocab,
+                                allow_pallas_marg=allow_pallas_marg)
 
     return jax.lax.scan(body, state, inputs)
 
 
 def fleet_chunk(states: LocalizerState, inputs: FrameInputs,
-                offload_kalman: jax.Array, dt_imu: jax.Array, *,
-                cfg, fx: float, fy: float, cx: float, cy: float
+                flags: PlanFlags, dt_imu: jax.Array, *,
+                cfg, be_cfg, fx: float, fy: float, cx: float, cy: float,
+                baseline: float, vocab: jax.Array,
+                allow_pallas_marg: bool = True
                 ) -> Tuple[LocalizerState, FrameOutputs]:
     """K frames x B robots in ONE dispatch: scan over the chunk axis of
     the vmapped transition. states: (B, ...) pytree; inputs: FrameInputs
@@ -201,9 +308,10 @@ def fleet_chunk(states: LocalizerState, inputs: FrameInputs,
     """
     def vbody(sts, x):
         return jax.vmap(
-            lambda st, xi: frame_transition(st, xi, offload_kalman, dt_imu,
-                                            cfg=cfg, fx=fx, fy=fy,
-                                            cx=cx, cy=cy))(sts, x)
+            lambda st, xi: frame_transition(
+                st, xi, flags, dt_imu, cfg=cfg, be_cfg=be_cfg, fx=fx,
+                fy=fy, cx=cx, cy=cy, baseline=baseline, vocab=vocab,
+                allow_pallas_marg=allow_pallas_marg))(sts, x)
 
     return jax.lax.scan(vbody, states, inputs)
 
@@ -211,7 +319,7 @@ def fleet_chunk(states: LocalizerState, inputs: FrameInputs,
 def init_localizer_state(cfg: EudoxusConfig, window: int, p0=None, v0=None,
                          q0=None) -> LocalizerState:
     """Fresh device-resident state for one robot, composed from the
-    frontend and track scan carries."""
+    frontend, track and windowed-BA scan carries."""
     n = cfg.frontend.max_features
     fe = pipeline.init_carry(cfg.frontend)
     tr = tracks.init_carry(n, window)
@@ -226,20 +334,28 @@ def init_localizer_state(cfg: EudoxusConfig, window: int, p0=None, v0=None,
         prev_img=fe.prev_img,
         prev_yx=fe.prev_yx,
         prev_valid=fe.prev_valid,
-        frame_idx=jnp.int32(0))
+        frame_idx=jnp.int32(0),
+        ba=ba_mod.init_ba_state(cfg.backend.ba_window))
+
+
+def _bind(fn, cfg: EudoxusConfig, cam, vocab: jax.Array):
+    """Close a step/chunk function over its static configuration (the
+    frozen configs and camera intrinsics) and the shared BoW vocabulary
+    (a device constant baked into the trace)."""
+    return functools.partial(fn, cfg=cfg.frontend, be_cfg=cfg.backend,
+                             fx=cam.fx, fy=cam.fy, cx=cam.cx, cy=cam.cy,
+                             baseline=cam.baseline, vocab=vocab)
 
 
 class TracedStep:
-    """``localize_step`` bound to a config/camera, counting traces.
+    """``localize_step`` bound to a config/camera/vocab, counting traces.
 
     The wrapper body runs once per jit trace, so ``traces`` counts
     compilations without relying on private JAX cache APIs. Shared by
     ``Localizer`` (jitted directly) and ``FleetLocalizer`` (vmapped)."""
 
-    def __init__(self, cfg: EudoxusConfig, cam):
-        self._step = functools.partial(localize_step, cfg=cfg.frontend,
-                                       fx=cam.fx, fy=cam.fy,
-                                       cx=cam.cx, cy=cam.cy)
+    def __init__(self, cfg: EudoxusConfig, cam, vocab: jax.Array):
+        self._step = _bind(localize_step, cfg, cam, vocab)
         self.traces = 0
 
     def __call__(self, *args):
@@ -249,17 +365,16 @@ class TracedStep:
 
 class TracedChunk:
     """``localize_chunk`` (or ``fleet_chunk`` when ``fleet=True``) bound
-    to a config/camera, counting traces. Steady state: exactly one trace
-    — chunk padding keeps K static and ``active`` masking keeps shapes
-    data-independent."""
+    to a config/camera/vocab, counting traces. Steady state: exactly one
+    trace — chunk padding keeps K static and ``active`` masking keeps
+    shapes data-independent."""
 
-    def __init__(self, cfg: EudoxusConfig, cam, fleet: bool = False):
+    def __init__(self, cfg: EudoxusConfig, cam, vocab: jax.Array,
+                 fleet: bool = False):
         fn = fleet_chunk if fleet else localize_chunk
-        self._chunk = functools.partial(fn, cfg=cfg.frontend,
-                                        fx=cam.fx, fy=cam.fy,
-                                        cx=cam.cx, cy=cam.cy)
+        self._chunk = _bind(fn, cfg, cam, vocab)
         self.traces = 0
 
-    def __call__(self, state, inputs, offload_kalman, dt_imu):
+    def __call__(self, state, inputs, flags, dt_imu):
         self.traces += 1
-        return self._chunk(state, inputs, offload_kalman, dt_imu)
+        return self._chunk(state, inputs, flags, dt_imu)

@@ -210,6 +210,21 @@ def _marginalize_host(Hpp, Hpl, Hll, bp, bl):
         return mapping.marginalize(Hpp, Hpl, Hll, bp, bl)
 
 
+# --- blocked Schur accumulation (the in-scan marginalization unit): a
+# real Pallas kernel vs the unblocked XLA reduction. Both are traced into
+# the chunk program behind a lax.cond; decide_path picks which branch the
+# traced flag selects (see core.backend.ba.marginalize_schur).
+
+def _marg_schur_xla(g, a, b):
+    from repro.kernels import marg_schur
+    return marg_schur.accumulate_ref(g, a, b)
+
+
+def _marg_schur_pallas(g, a, b):
+    from repro.kernels import marg_schur
+    return marg_schur.accumulate(g, a, b)
+
+
 # --------------------------------------------------------------------------
 # calibration input generators (synthetic, deterministic)
 # --------------------------------------------------------------------------
@@ -235,6 +250,15 @@ def _marg_inputs(M: int):
             jnp.asarray(np.tile(np.eye(3) * 4, (M, 1, 1)), jnp.float32),
             jnp.asarray(rs.randn(K, 6), jnp.float32),
             jnp.asarray(rs.randn(M, 3), jnp.float32))
+
+
+def _marg_schur_inputs(m: int):
+    rs = np.random.RandomState(6)
+    kw = 4
+    g = jnp.asarray(rs.randn(m, 6 * kw, 3) * 0.1, jnp.float32)
+    a = jnp.asarray(np.tile(np.eye(3) * 4, (m, 1, 1)), jnp.float32)
+    b = jnp.asarray(rs.randn(m, 3), jnp.float32)
+    return g, a, b
 
 
 def _conv_inputs(h: int):
@@ -323,6 +347,13 @@ _register(KernelSpec(
     supports=lambda *args: True,
     calibrate_inputs=_marg_inputs, calibrate_sizes=(16, 32, 64)))
 
+_register(KernelSpec(
+    name="marg_schur", xla=_marg_schur_xla, pallas=_marg_schur_pallas,
+    size_feature=lambda g, a, b: float(g.shape[0]),    # landmark count
+    transfer_bytes=lambda g, a, b: _nbytes(g, a, b),
+    supports=lambda g, a, b: g.ndim == 3 and g.shape[-1] == 3,
+    calibrate_inputs=_marg_schur_inputs, calibrate_sizes=(16, 32, 64)))
+
 
 # --------------------------------------------------------------------------
 # dispatch
@@ -401,24 +432,67 @@ def calibrate(models: Optional[sched.LatencyModels] = None,
     return models
 
 
+# Calibration files are only valid on the hardware they were profiled on
+# (the paper's models are per-platform by construction). The JSON schema
+# is versioned and stamped with a device fingerprint; loading a file from
+# different hardware (or an old unversioned file) refuses by default —
+# ``load_or_refit`` turns that refusal into a fresh calibration pass.
+SCHEMA_VERSION = 2
+
+
+class CalibrationMismatch(RuntimeError):
+    """Calibration file is unusable here: wrong schema version or a
+    profile taken on different hardware."""
+
+
+def device_fingerprint() -> Dict[str, str]:
+    """Identity of the hardware/runtime a latency profile is valid on."""
+    try:
+        dev = jax.devices()[0]
+        platform, kind = dev.platform, dev.device_kind
+    except Exception:                          # pragma: no cover
+        platform, kind = "unknown", "unknown"
+    return {"platform": platform, "device_kind": kind,
+            "jax": jax.__version__}
+
+
 def save_models(models: sched.LatencyModels, path: str) -> None:
-    """Persist fitted models (coefficients + fit quality) as JSON."""
+    """Persist fitted models (coefficients + fit quality) as versioned,
+    fingerprinted JSON."""
     def side(d):
         return {k: {"degree": m.degree,
                     "coeffs": None if m.coeffs is None
                     else np.asarray(m.coeffs).tolist(),
                     "r2": m.r2}
                 for k, m in d.items()}
-    blob = {"transfer_bw": models.transfer_bw,
+    blob = {"schema_version": SCHEMA_VERSION,
+            "fingerprint": device_fingerprint(),
+            "transfer_bw": models.transfer_bw,
             "fixed_overhead_s": models.fixed_overhead_s,
             "host": side(models.host), "accel": side(models.accel)}
     with open(path, "w") as f:
         json.dump(blob, f, indent=1, sort_keys=True)
 
 
-def load_models(path: str) -> sched.LatencyModels:
+def load_models(path: str, *,
+                allow_mismatch: bool = False) -> sched.LatencyModels:
+    """Load persisted models, refusing stale schemas / foreign hardware
+    unless ``allow_mismatch`` (the profile would silently mispredict)."""
     with open(path) as f:
         blob = json.load(f)
+    if not allow_mismatch:
+        version = blob.get("schema_version", 1)
+        if version != SCHEMA_VERSION:
+            raise CalibrationMismatch(
+                f"{path}: calibration schema v{version}, expected "
+                f"v{SCHEMA_VERSION} — recalibrate (or load with "
+                "allow_mismatch=True)")
+        here = device_fingerprint()
+        there = blob.get("fingerprint", {})
+        if there != here:
+            raise CalibrationMismatch(
+                f"{path}: profiled on {there}, running on {here} — "
+                "latency models don't transfer across hardware")
     models = sched.LatencyModels(
         transfer_bw=blob.get("transfer_bw", 7.9e9),
         fixed_overhead_s=blob.get("fixed_overhead_s", 2e-4))
@@ -431,3 +505,18 @@ def load_models(path: str) -> sched.LatencyModels:
             rm.r2 = m["r2"]
             side[k] = rm
     return models
+
+
+def load_or_refit(path: str, *, install: bool = True,
+                  **calibrate_kw) -> Tuple[sched.LatencyModels, bool]:
+    """Deployment entry point: reuse a cached calibration when it was
+    taken on THIS hardware, otherwise re-profile and refresh the file.
+    Returns (models, loaded_from_cache)."""
+    try:
+        models = load_models(path)
+    except (FileNotFoundError, CalibrationMismatch, json.JSONDecodeError):
+        models = calibrate(path=path, install=install, **calibrate_kw)
+        return models, False
+    if install:
+        install_models(models)
+    return models, True

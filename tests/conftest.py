@@ -28,9 +28,13 @@ def synthetic_sequence():
 @pytest.fixture(scope="session")
 def small_cfg():
     """The shared 120x160/128-feature localization config (matches
-    synthetic_sequence's frame size)."""
+    synthetic_sequence's frame size). The in-scan BA window/budget is
+    shrunk to keep per-test compile time down — BA numerics have their
+    own full-size tests in test_ba.py."""
     import dataclasses
     from repro.configs.eudoxus import EDX_DRONE
     fe = dataclasses.replace(EDX_DRONE.frontend, height=120, width=160,
                              max_features=128)
-    return dataclasses.replace(EDX_DRONE, frontend=fe)
+    be = dataclasses.replace(EDX_DRONE.backend, ba_window=5,
+                             ba_landmarks=16, lm_iters=3)
+    return dataclasses.replace(EDX_DRONE, frontend=fe, backend=be)

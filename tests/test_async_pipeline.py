@@ -1,0 +1,235 @@
+"""The async double-buffered chunk pipeline: frame-order equivalence
+with the synchronous path and the per-frame oracle, input-ring staging
+discipline (no stale-buffer reuse, donation of consumed slots), and the
+bookkeeping-only guarantee of the chunked SLAM host stage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.environment import Environment
+from repro.core.fleet import FleetLocalizer
+from repro.core.localizer import Localizer, _ChunkStager
+from repro.core.step import FrameInputs
+
+
+def _chunk_args(seq, n):
+    ipf = seq.imu_per_frame
+    accel = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(n)])
+    gyro = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                     for i in range(n)])
+    return (seq.images_left[:n], seq.images_right[:n], accel, gyro,
+            seq.gps[:n])
+
+
+def _run(loc, seq, envs, n, chunk, overlap):
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    il, ir, a, g, gps = _chunk_args(seq, n)
+    return loc.run(st, il, ir, a, g, gps, envs,
+                   seq.dt / seq.imu_per_frame, chunk=chunk,
+                   overlap=overlap)
+
+
+def test_async_matches_sync_mixed_modes(synthetic_sequence, small_cfg):
+    """Mixed-mode sequence (SLAM map-building -> Registration against
+    that map -> VIO): the overlapped pipeline reproduces the synchronous
+    path bitwise — same trajectory, same maps, same chunk flushes at
+    Registration frames."""
+    seq = synthetic_sequence
+    n, K = 12, 4
+    envs = ([Environment(False, False)] * 5       # SLAM
+            + [Environment(False, True)] * 3      # Registration
+            + [Environment(True, False)] * 4)     # VIO
+
+    loc_s = Localizer(small_cfg, seq.cam, window=8)
+    st_s = _run(loc_s, seq, envs, n, K, overlap=False)
+    loc_a = Localizer(small_cfg, seq.cam, window=8)
+    st_a = _run(loc_a, seq, envs, n, K, overlap=True)
+
+    np.testing.assert_array_equal(np.asarray(loc_s.trajectory),
+                                  np.asarray(loc_a.trajectory))
+    np.testing.assert_array_equal(np.asarray(st_s.tracks_valid),
+                                  np.asarray(st_a.tracks_valid))
+    np.testing.assert_array_equal(np.asarray(st_s.filt.p),
+                                  np.asarray(st_a.filt.p))
+    # registration frames flushed their chunks on both paths
+    assert loc_s.dispatch_count == loc_a.dispatch_count == 5
+    assert loc_a.chunk_trace_count() == 1
+    assert loc_s.ba_runs == loc_a.ba_runs
+    assert (loc_s.map is None) == (loc_a.map is None)
+    if loc_s.map is not None:
+        assert loc_s.map.valid.sum() == loc_a.map.valid.sum()
+    # the async run staged every chunk through the two-slot ring
+    assert loc_a.last_stager.staged_chunks == loc_a.dispatch_count
+
+
+def test_async_partial_final_chunk(synthetic_sequence, small_cfg):
+    """A trailing partial chunk drains in frame order through the
+    deferred-consumer path and reuses the fixed-K trace."""
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    n, K = 10, 4
+    loc_s = Localizer(small_cfg, seq.cam, window=8)
+    st_s = _run(loc_s, seq, env, n, K, overlap=False)
+    loc_a = Localizer(small_cfg, seq.cam, window=8)
+    st_a = _run(loc_a, seq, env, n, K, overlap=True)
+    np.testing.assert_array_equal(np.asarray(loc_s.trajectory),
+                                  np.asarray(loc_a.trajectory))
+    assert int(st_a.frame_idx) == n == int(st_s.frame_idx)
+    assert loc_a.chunk_trace_count() == 1
+    assert loc_a.dispatch_count == -(-n // K)
+    assert len(loc_a.trajectory) == n
+
+
+def test_input_ring_never_mutates_staged_buffers():
+    """device_put may alias host memory (zero-copy on CPU): a staged
+    chunk's device values must survive later stagings — the ring stages
+    into fresh buffers instead of recycling host memory in place."""
+    stager = _ChunkStager()
+
+    def inputs(fill):
+        return FrameInputs(
+            img_l=np.full((2, 4, 4), fill, np.float32),
+            img_r=np.full((2, 4, 4), fill, np.float32),
+            accel=np.full((2, 3, 3), fill, np.float32),
+            gyro=np.full((2, 3, 3), fill, np.float32),
+            gps=np.full((2, 3), fill, np.float32),
+            mode=np.zeros(2, np.int32),
+            active=np.ones(2, bool))
+
+    first = stager.stage(inputs(1.0))
+    second = stager.stage(inputs(2.0))
+    first.consumed = True       # pretend chunk 1 dispatched
+    third = stager.stage(inputs(3.0))
+    np.testing.assert_array_equal(np.asarray(first.inputs.img_l),
+                                  np.full((2, 4, 4), 1.0, np.float32))
+    np.testing.assert_array_equal(np.asarray(second.inputs.img_l),
+                                  np.full((2, 4, 4), 2.0, np.float32))
+    # ring discipline: a slot whose chunk is still in flight (second was
+    # never consumed) must refuse restaging
+    with pytest.raises(AssertionError):
+        stager.stage(inputs(4.0))
+    del third
+
+
+def test_chunk_dispatch_donates_staged_inputs(synthetic_sequence,
+                                              small_cfg):
+    """The dispatch consumes the staged slot: its buffers are invalidated
+    (donated back), so stale reuse of a consumed slot is impossible."""
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    n, K = 8, 4
+    loc = Localizer(small_cfg, seq.cam, window=8)
+    _run(loc, seq, env, n, K, overlap=True)
+    stager = loc.last_stager
+    assert stager is not None and stager.staged_chunks == 2
+    for slot in stager._slots:
+        assert slot is not None and slot.consumed
+        # donation is requested for every staged leaf; the runtime
+        # consumes the ones it can alias to an output (e.g. the (K,3)
+        # gps buffer onto the (K,3) pose output). At least one leaf per
+        # slot must have been donated-and-invalidated — proof the ring
+        # hands consumed slots back rather than keeping stale aliases.
+        leaves = jax.tree_util.tree_leaves(slot.inputs)
+        assert any(leaf.is_deleted() for leaf in leaves), \
+            "no staged input buffer was donated back to the runtime"
+    # a consumed (donated) buffer cannot be silently reused: reading the
+    # donated leaf raises instead of returning stale data
+    donated = [leaf for leaf in jax.tree_util.tree_leaves(
+        stager._slots[0].inputs) if leaf.is_deleted()]
+    with pytest.raises(RuntimeError):
+        np.asarray(donated[0])
+
+
+def test_chunked_slam_host_stage_is_bookkeeping_only(synthetic_sequence,
+                                                     small_cfg,
+                                                     monkeypatch):
+    """Acceptance: chunked SLAM runs with zero mid-chunk host syncs —
+    BA/marginalization/BoW all execute inside the scan, so a second run
+    (warm trace) never re-enters their host-side entry points."""
+    from repro.core.backend import mapping, tracking
+
+    seq = synthetic_sequence
+    envs = [Environment(False, False)] * 8        # all SLAM
+    n, K = 8, 4
+    loc = Localizer(small_cfg, seq.cam, window=8)
+    _run(loc, seq, envs, n, K, overlap=True)      # compile + first pass
+    assert loc.ba_runs > 0
+
+    def boom(name):
+        def _raise(*a, **k):
+            raise AssertionError(
+                f"{name} called from the chunked host stage — the stage "
+                "must be append-only bookkeeping")
+        return _raise
+
+    monkeypatch.setattr(mapping, "lm_optimize", boom("lm_optimize"))
+    monkeypatch.setattr(mapping, "marginalize", boom("marginalize"))
+    monkeypatch.setattr(mapping, "residuals", boom("residuals"))
+    monkeypatch.setattr(tracking, "bow_histogram", boom("bow_histogram"))
+    dispatches = loc.dispatch_count
+    _run(loc, seq, envs, n, K, overlap=True)      # warm trace: no host BA
+    assert loc.dispatch_count == dispatches + 2   # one dispatch per chunk
+    assert loc.chunk_trace_count() == 1
+
+
+def test_fleet_run_matches_step_chunk(synthetic_sequence, small_cfg):
+    """The fleet's async run() == sequential step_chunk calls (VIO +
+    SLAM robots: the deferred-drain path, no registration feedback),
+    including a trailing partial chunk — run() must resolve the partial
+    chunk's offload plan at its REAL frame count exactly like
+    step_chunk does."""
+    from repro.core.environment import MODE_SLAM, MODE_VIO
+
+    seq = synthetic_sequence
+    B, n, K = 2, 7, 4
+    mode_ids = np.array([MODE_VIO, MODE_SLAM], np.int32)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+
+    def fleet_inputs(i):
+        ipf = seq.imu_per_frame
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        gps = np.tile(seq.gps[i][None], (B, 1)).astype(np.float32)
+        gps[1] = np.nan
+        return (np.tile(seq.images_left[i][None], (B, 1, 1)),
+                np.tile(seq.images_right[i][None], (B, 1, 1)),
+                np.tile(a[None], (B, 1, 1)), np.tile(g[None], (B, 1, 1)),
+                gps)
+
+    per = [fleet_inputs(i) for i in range(n)]
+    stacked = [np.stack([p[j] for p in per]) for j in range(5)]
+
+    f1 = FleetLocalizer(small_cfg, seq.cam, batch=B, window=8)
+    s1 = f1.init_state(p0=np.tile(seq.poses[0][:3, 3], (B, 1)),
+                       v0=np.tile(v0, (B, 1)))
+    for c0 in range(0, n, K):
+        m = min(K, n - c0)
+        sliced = [a[c0:c0 + K] for a in stacked]
+        if m < K:                    # pad the trailing partial chunk
+            sliced = [np.concatenate(
+                [a, np.zeros((K - m,) + a.shape[1:], a.dtype)])
+                for a in sliced]
+        s1, _ = f1.step_chunk(
+            s1, *sliced, mode_ids, seq.dt / seq.imu_per_frame,
+            active=None if m == K else np.arange(K) < m)
+
+    f2 = FleetLocalizer(small_cfg, seq.cam, batch=B, window=8)
+    s2 = f2.init_state(p0=np.tile(seq.poses[0][:3, 3], (B, 1)),
+                       v0=np.tile(v0, (B, 1)))
+    s2 = f2.run(s2, *stacked, mode_ids, seq.dt / seq.imu_per_frame,
+                chunk=K)
+
+    np.testing.assert_array_equal(np.asarray(s1.filt.p),
+                                  np.asarray(s2.filt.p))
+    np.testing.assert_array_equal(np.asarray(s1.tracks_valid),
+                                  np.asarray(s2.tracks_valid))
+    assert f1.ba_runs == f2.ba_runs > 0
+    assert f2.dispatch_count == -(-n // K)
+    kf1 = f1._robots[1]._slam_keyframes
+    kf2 = f2._robots[1]._slam_keyframes
+    assert len(kf1) == len(kf2) == n
+    np.testing.assert_allclose(kf1[-1]["hist"], kf2[-1]["hist"],
+                               atol=1e-6)

@@ -201,3 +201,87 @@ def test_offload_plan_from_fitted_models():
     plan_c = lm.plan_chunk(window=8, max_updates=24, chunk=8,
                            map_points=512, ba_landmarks=64)
     assert plan_c.kalman_gain and not plan_c.marginalization
+
+
+# --------------------------------------------------------------------------
+# calibration schema versioning + hardware fingerprint
+# --------------------------------------------------------------------------
+
+def _fitted_models():
+    lm = sched.LatencyModels()
+    sizes = np.linspace(64, 1024, 8)
+    lm.fit_kernel("projection", sizes, 1e-6 * sizes, 1e-7 * sizes)
+    return lm
+
+
+def test_save_models_stamps_schema_and_fingerprint(tmp_path):
+    import json
+    path = str(tmp_path / "models.json")
+    registry.save_models(_fitted_models(), path)
+    with open(path) as f:
+        blob = json.load(f)
+    assert blob["schema_version"] == registry.SCHEMA_VERSION
+    fp = blob["fingerprint"]
+    assert fp == registry.device_fingerprint()
+    assert {"platform", "device_kind", "jax"} <= set(fp)
+
+
+def test_load_models_rejects_foreign_hardware(tmp_path):
+    import json
+    path = str(tmp_path / "models.json")
+    registry.save_models(_fitted_models(), path)
+    with open(path) as f:
+        blob = json.load(f)
+    blob["fingerprint"]["device_kind"] = "EDX-CAR FPGA"
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    with pytest.raises(registry.CalibrationMismatch):
+        registry.load_models(path)
+    # explicit escape hatch still loads the coefficients
+    lm = registry.load_models(path, allow_mismatch=True)
+    assert lm.fitted("projection")
+
+
+def test_load_models_rejects_unversioned_schema(tmp_path):
+    import json
+    path = str(tmp_path / "models.json")
+    registry.save_models(_fitted_models(), path)
+    with open(path) as f:
+        blob = json.load(f)
+    del blob["schema_version"]                  # a PR 2-era file
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    with pytest.raises(registry.CalibrationMismatch):
+        registry.load_models(path)
+
+
+def test_load_or_refit_cache_hit(tmp_path):
+    path = str(tmp_path / "models.json")
+    registry.save_models(_fitted_models(), path)
+    lm, cached = registry.load_or_refit(path, install=True,
+                                        kernels=("projection",),
+                                        sizes={"projection": [128, 256]},
+                                        reps=1)
+    assert cached
+    assert registry.installed_models() is lm
+    assert lm.fitted("projection")
+
+
+def test_load_or_refit_refits_on_mismatch(tmp_path):
+    import json
+    path = str(tmp_path / "models.json")
+    registry.save_models(_fitted_models(), path)
+    with open(path) as f:
+        blob = json.load(f)
+    blob["fingerprint"]["platform"] = "fpga"
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    lm, cached = registry.load_or_refit(path, install=False,
+                                        kernels=("projection",),
+                                        sizes={"projection": [128, 256]},
+                                        reps=1)
+    assert not cached                           # re-profiled on this host
+    assert lm.fitted("projection")
+    # the file was refreshed with a matching fingerprint
+    reloaded = registry.load_models(path)
+    assert reloaded.fitted("projection")
