@@ -293,12 +293,14 @@ def nullspace_project(r, Hx, Hf):
     return A.T @ r, A.T @ Hx
 
 
-def update(state: MsckfState, tracks_uv: jax.Array, tracks_valid: jax.Array,
-           fx: float, fy: float, cx: float, cy: float,
-           sigma_px: float = 1.0) -> Tuple[MsckfState, jax.Array]:
-    """MSCKF update from F feature tracks. tracks_uv: (F, W, 2)."""
+def update_residuals(state: MsckfState, tracks_uv: jax.Array,
+                     tracks_valid: jax.Array, fx: float, fy: float,
+                     cx: float, cy: float) -> Tuple[jax.Array, jax.Array]:
+    """Stacked nullspace-projected residuals and Jacobian for an MSCKF
+    update from F feature tracks — the measurement half of ``update``,
+    split out so the chunk-boundary host fallback can pair it with the
+    registry's host Kalman-gain path. tracks_uv: (F, W, 2)."""
     W = state.clones_q.shape[0]
-    F_n = tracks_uv.shape[0]
     d = 15 + 6 * W
 
     def one(feat_uv, feat_valid):
@@ -318,8 +320,16 @@ def update(state: MsckfState, tracks_uv: jax.Array, tracks_valid: jax.Array,
     r_stack = r_all.reshape(m)
     H_stack = jnp.zeros((m, d))
     H_stack = H_stack.at[:, 15:].set(H_all.reshape(m, 6 * W))
+    return r_stack, H_stack
 
-    K = mb.kalman_gain(state.P, H_stack, sigma_px ** 2)   # (d, m)
+
+def apply_gain(state: MsckfState, r_stack: jax.Array, H_stack: jax.Array,
+               K: jax.Array, sigma_px: float = 1.0
+               ) -> Tuple[MsckfState, jax.Array]:
+    """Apply a precomputed Kalman gain K (d, m) with the Joseph-form
+    covariance update — the correction half of ``update``, usable with
+    either the in-program gain or the registry's host-path gain."""
+    d = state.P.shape[0]
     dx = K @ r_stack
     ikh = jnp.eye(d) - mb.matmul(K, H_stack)
     P_new = mb.matmul(mb.matmul(ikh, state.P), mb.transpose(ikh)) \
@@ -327,6 +337,16 @@ def update(state: MsckfState, tracks_uv: jax.Array, tracks_valid: jax.Array,
     P_new = 0.5 * (P_new + P_new.T)
     new_state = apply_correction(state, dx)._replace(P=P_new)
     return new_state, jnp.linalg.norm(dx[:15])
+
+
+def update(state: MsckfState, tracks_uv: jax.Array, tracks_valid: jax.Array,
+           fx: float, fy: float, cx: float, cy: float,
+           sigma_px: float = 1.0) -> Tuple[MsckfState, jax.Array]:
+    """MSCKF update from F feature tracks. tracks_uv: (F, W, 2)."""
+    r_stack, H_stack = update_residuals(state, tracks_uv, tracks_valid,
+                                        fx, fy, cx, cy)
+    K = mb.kalman_gain(state.P, H_stack, sigma_px ** 2)   # (d, m)
+    return apply_gain(state, r_stack, H_stack, K, sigma_px)
 
 
 def apply_correction(state: MsckfState, dx: jax.Array) -> MsckfState:

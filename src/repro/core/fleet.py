@@ -1,4 +1,4 @@
-"""vmap fleet batching: localize B independent robots in ONE dispatch.
+"""Sharded fleet batching: B robots across a ``robots`` device mesh.
 
 The ROADMAP's scaling axis — serving heavy traffic from many machines —
 falls out of the fused per-frame step: because ``localize_step`` is a
@@ -12,13 +12,27 @@ BA/marginalization inside the dispatch too (``core.backend.ba``); the
 per-robot host stage that remains is append-only map bookkeeping for
 SLAM and the dynamically-sized Registration fix.
 
+Since PR 4 the fleet axis is *placed* explicitly instead of living on
+device 0: pass a ``robots`` mesh (``repro.distributed.fleet_mesh``) and
+the batched step/chunk programs are wrapped in ``jax.shard_map`` over
+the B axis — each device scans its local fleet slice (K x B/D
+robot-frames per dispatch), the scheduler's OffloadPlan enters as
+replicated scalars (one plan is valid on every shard: its inputs are
+per-robot static shapes), and the async input ring ``device_put``s each
+staged chunk pre-sharded so host->device copies overlap per device.
+When B does not divide the device count the fleet is padded with
+inactive robots (``active=False``, the partial-chunk trick); a 1-device
+mesh is bitwise-equal to the unsharded path. ``mesh=None`` (default)
+keeps the single-device execution exactly as before.
+
 State buffers are donated, so fleet covariances and track SRAM-analogue
 buffers update in place across frames. ``run`` drives whole sequences
 through the chunked scan with the same async double-buffered input ring
 as the single-robot ``Localizer.run`` — chunk N+1 is staged while
 chunk N executes, and the host stage drains one chunk behind the
-dispatch front (unless a Registration robot needs its chunk-end pose
-fix applied before the next dispatch).
+dispatch front with a PER-ROBOT flush policy: only Registration robots'
+chunk-end slices sync before the next dispatch (their pose fix is
+feedback); SLAM robots' append-only replay always defers one chunk.
 """
 from __future__ import annotations
 
@@ -34,32 +48,62 @@ from repro.core.backend import tracking
 from repro.core.environment import (MODE_REGISTRATION, MODE_SLAM, MODE_VIO,
                                     select_mode_id)
 from repro.core.localizer import (Localizer, LocalizerState, TracedStep,
-                                  _ChunkStager, init_localizer_state,
-                                  resolve_marg_kernel)
+                                  _ChunkStager, host_kalman_update,
+                                  init_localizer_state, resolve_marg_kernel)
 from repro.core.step import (FrameInputs, FrameOutputs, TracedChunk,
                              flags_from_plan)
+# NB: import names directly — the package re-exports the ``fleet_mesh``
+# factory under the module's own name, shadowing the submodule attribute
+from repro.distributed.fleet_mesh import (chunk_sharding, fleet_mesh,
+                                          mesh_shards, padded_batch,
+                                          robot_sharding, shard_fleet_chunk,
+                                          shard_fleet_step, shard_states)
 
 
 class FleetLocalizer:
-    """Batched localizer: B robots, one fused dispatch per frame.
+    """Batched localizer: B robots, one fused dispatch per frame/chunk,
+    optionally sharded over a ``robots`` device mesh.
 
     VIO robots are fully served by the batched dispatch. SLAM /
     Registration robots additionally get a per-robot host map stage after
     the dispatch (maps are dynamically sized and persist across frames),
     backed by a lazily-created ``Localizer`` per robot — see ``maps`` /
     ``robot_host(b)``.
+
+    ``mesh`` (or ``devices``, a device list shorthand) turns on sharded
+    execution: the B axis is split across the mesh with ``shard_map``;
+    ``batch`` is padded up to a multiple of the shard count with
+    inactive robots that are dispatched but never read back. INPUTS
+    always use the real batch size B (padding happens here); the state
+    pytree and raw FrameOutputs returned by step/step_chunk/run carry
+    the padded batch (rows ``batch:`` are inert pad robots — slice with
+    ``[:fleet.batch]``, or use ``positions()``/``maps`` which strip
+    them).
     """
 
     def __init__(self, cfg: EudoxusConfig, cam, batch: int,
                  window: Optional[int] = None,
-                 scheduler: Optional[sched.LatencyModels] = None):
+                 scheduler: Optional[sched.LatencyModels] = None,
+                 mesh=None, devices=None,
+                 host_kalman_fallback: bool = True):
+        if mesh is not None and devices is not None:
+            raise ValueError("pass mesh or devices, not both")
         self.cfg = cfg
         self.cam = cam
         self.batch = batch
+        self.mesh = fleet_mesh(devices) if devices is not None else mesh
+        self.n_shards = mesh_shards(self.mesh)
+        # pad the fleet so B divides the shard count; pad robots are
+        # inactive (chunk path) or compute-and-discard (per-frame path)
+        self.padded = padded_batch(batch, self.mesh)
+        self._pad = self.padded - batch
         self.window = window or cfg.backend.msckf_window
         self.scheduler = scheduler or sched.LatencyModels()
+        self.host_kalman_fallback = host_kalman_fallback
+        self.host_kalman_fixes = 0   # chunk-boundary host updates applied
         self.dispatch_count = 0
         self.ba_runs = 0             # in-scan BA passes across the fleet
+        self.deferred_drains = 0     # SLAM replays drained a chunk late
         self.last_stager: Optional[_ChunkStager] = None
         # one BoW vocabulary device array shared by the batched program
         # and every robot's host stage
@@ -77,29 +121,49 @@ class FleetLocalizer:
         # batch over state + per-frame inputs; the offload flags and IMU
         # dt are fleet-wide scalars
         self._traced = TracedStep(cfg, cam, self.vocab)
-        self._fused_fleet = jax.jit(
-            jax.vmap(self._traced, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None)),
-            donate_argnums=(0,))
+        vstep = jax.vmap(self._traced,
+                         in_axes=(0, 0, 0, 0, 0, 0, 0, None, None))
         # chunk x fleet: lax.scan over K frames of the vmapped transition
         # — one dispatch advances B robots K frames (steady state: one
         # trace per chunk size); staged chunk inputs are donated back
         self._traced_chunk = TracedChunk(cfg, cam, self.vocab, fleet=True)
-        self._fused_fleet_chunk = jax.jit(self._traced_chunk,
-                                          donate_argnums=(0, 1))
+        if self.mesh is None:
+            self._fused_fleet = jax.jit(vstep, donate_argnums=(0,))
+            self._fused_fleet_chunk = jax.jit(self._traced_chunk,
+                                              donate_argnums=(0, 1))
+            self._state_sharding = None
+            self._frame_in_sharding = None
+            self._chunk_in_sharding = None
+        else:
+            # shard_map over the robots axis: each device runs the SAME
+            # per-shard program on its local B/D slice — no cross-robot
+            # collectives exist, so a 1-device mesh is bitwise-equal to
+            # the unsharded path above
+            self._fused_fleet = jax.jit(
+                shard_fleet_step(vstep, self.mesh), donate_argnums=(0,))
+            self._fused_fleet_chunk = jax.jit(
+                shard_fleet_chunk(self._traced_chunk, self.mesh),
+                donate_argnums=(0, 1))
+            self._state_sharding = robot_sharding(self.mesh)
+            self._frame_in_sharding = robot_sharding(self.mesh)
+            self._chunk_in_sharding = chunk_sharding(self.mesh)
 
     # ------------------------------------------------------------------
     def init_state(self, p0=None, v0=None, q0=None) -> LocalizerState:
-        """Stacked (B, ...) state. p0/v0/q0: optional (B,3)/(B,3)/(B,4)
-        per-robot initial conditions."""
+        """Stacked (B_padded, ...) state placed across the robots mesh.
+        p0/v0/q0: optional (B,3)/(B,3)/(B,4) per-robot initial conditions
+        for the REAL batch; pad robots start from defaults."""
         def one(b):
+            real = b < self.batch
             return init_localizer_state(
                 self.cfg, self.window,
-                p0=None if p0 is None else p0[b],
-                v0=None if v0 is None else v0[b],
-                q0=None if q0 is None else q0[b])
+                p0=None if (p0 is None or not real) else p0[b],
+                v0=None if (v0 is None or not real) else v0[b],
+                q0=None if (q0 is None or not real) else q0[b])
 
-        states = [one(b) for b in range(self.batch)]
-        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+        states = [one(b) for b in range(self.padded)]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+        return shard_states(stacked, self.mesh)
 
     def fused_trace_count(self) -> int:
         return self._traced.traces
@@ -121,40 +185,81 @@ class FleetLocalizer:
                 for b in range(self.batch)]
 
     # ------------------------------------------------------------------
+    # batch-axis padding helpers (inactive robots make B divide shards)
+    # ------------------------------------------------------------------
+    def _pad0(self, a, dtype, fill=0.0) -> np.ndarray:
+        """Pad a per-frame (B, ...) array to (B_padded, ...)."""
+        a = np.asarray(a, dtype)
+        if self._pad == 0:
+            return a
+        return np.concatenate(
+            [a, np.full((self._pad,) + a.shape[1:], fill, dtype)])
+
+    def _pad1(self, a, dtype, fill=0.0) -> np.ndarray:
+        """Pad a chunk (K, B, ...) array to (K, B_padded, ...)."""
+        a = np.asarray(a, dtype)
+        if self._pad == 0:
+            return a
+        pad_shape = (a.shape[0], self._pad) + a.shape[2:]
+        return np.concatenate([a, np.full(pad_shape, fill, dtype)], axis=1)
+
+    def _padded_modes(self, mode_np: np.ndarray) -> np.ndarray:
+        """(B_padded,) mode ids — pad robots ride as VIO (no host
+        stage, no SLAM block)."""
+        return np.concatenate(
+            [np.asarray(mode_np, np.int32),
+             np.full(self._pad, MODE_VIO, np.int32)])
+
+    def _put(self, tree, sharding):
+        """Ship a host pytree to the device(s): pre-sharded across the
+        robots mesh when one is configured, default placement when
+        ``sharding`` is None (the single placement point for all
+        non-ring dispatch inputs; the async ring's equivalent lives in
+        ``_ChunkStager.stage``)."""
+        return jax.device_put(tree, sharding)
+
+    # ------------------------------------------------------------------
     def step(self, states: LocalizerState, imgs_l, imgs_r, imu_accel,
              imu_gyro, gps, mode_ids, dt_imu: float
              ) -> Tuple[LocalizerState, FrameOutputs]:
-        """Advance every robot one frame in a single batched dispatch.
+        """Advance every robot one frame in a single batched dispatch
+        (sharded over the robots mesh when one is configured).
 
         imgs_l/imgs_r: (B,H,W); imu_accel/gyro: (B,K,3); gps: (B,3) with
         NaN rows where unavailable; mode_ids: (B,) int32 (see
-        ``environment.select_mode_id``).
+        ``environment.select_mode_id``). B is the REAL batch; padding to
+        the mesh width happens here (pad robots see NaN GPS and zero
+        frames, and are never read back).
         """
+        mode_np = np.asarray(mode_ids, np.int32)
+        args = (self._pad0(imgs_l, np.float32),
+                self._pad0(imgs_r, np.float32),
+                self._pad0(imu_accel, np.float32),
+                self._pad0(imu_gyro, np.float32),
+                self._pad0(gps, np.float32, fill=np.nan),
+                self._padded_modes(mode_np))
+        if self._frame_in_sharding is not None:
+            args = self._put(args, self._frame_in_sharding)
         states, outs = self._fused_fleet(
-            states,
-            jnp.asarray(imgs_l, jnp.float32),
-            jnp.asarray(imgs_r, jnp.float32),
-            jnp.asarray(imu_accel, jnp.float32),
-            jnp.asarray(imu_gyro, jnp.float32),
-            jnp.asarray(gps, jnp.float32),
-            jnp.asarray(mode_ids, jnp.int32),
+            states, *args,
             flags_from_plan(
                 self._offload_plan,
-                slam_active=bool(
-                    (np.asarray(mode_ids) == MODE_SLAM).any())),
+                slam_active=bool((mode_np == MODE_SLAM).any())),
             jnp.float32(dt_imu))
         self.dispatch_count += 1
-        states = self._host_map_stage(states, outs, np.asarray(mode_ids))
+        states = self._host_map_stage(states, outs, mode_np)
         return states, outs
 
     def _host_map_stage(self, states: LocalizerState, outs: FrameOutputs,
                         mode_ids: np.ndarray) -> LocalizerState:
         """Per-robot SLAM/Registration map work after the batched
-        dispatch (no-op for an all-VIO fleet)."""
+        dispatch (no-op for an all-VIO fleet; pad robots are VIO by
+        construction and never enter)."""
         slam = mode_ids == MODE_SLAM
         hist_np = np.asarray(outs.hist) if slam.any() else None
         if slam.any():
-            self.ba_runs += int(np.asarray(outs.ba_ran)[slam].sum())
+            self.ba_runs += int(np.asarray(outs.ba_ran)
+                                [:len(mode_ids)][slam].sum())
         for b in np.nonzero(mode_ids != MODE_VIO)[0]:
             st_b = jax.tree_util.tree_map(lambda x: x[b], states)
             fr_b = jax.tree_util.tree_map(lambda x: x[b], outs.fr)
@@ -176,8 +281,9 @@ class FleetLocalizer:
                    imu_gyro, gps, mode_ids, dt_imu: float,
                    active=None) -> Tuple[LocalizerState, FrameOutputs]:
         """Advance every robot K frames in ONE batched scan dispatch
-        (``core.step.fleet_chunk``): chunk x fleet amortization of launch
-        overhead on both axes.
+        (``core.step.fleet_chunk``, shard_mapped over the robots mesh
+        when one is configured): chunk x fleet amortization of launch
+        overhead on both axes, split across devices.
 
         imgs_l/imgs_r: (K,B,H,W); imu_accel/gyro: (K,B,ipf,3); gps:
         (K,B,3) with NaN rows where unavailable; mode_ids: (B,) per-robot
@@ -195,8 +301,9 @@ class FleetLocalizer:
         act, n_real = self._active_mask(K, active)
         base_idx = np.asarray(states.frame_idx)      # pre-chunk, per robot
 
-        inputs = jax.device_put(self._build_chunk(
-            imgs_l, imgs_r, imu_accel, imu_gyro, gps, mode_np, act))
+        inputs_np = self._build_chunk(imgs_l, imgs_r, imu_accel, imu_gyro,
+                                      gps, mode_np, act)
+        inputs = self._put(inputs_np, self._chunk_in_sharding)
         plan = self._chunk_plan(n_real)
         states, outs = self._fused_fleet_chunk(
             states, inputs,
@@ -205,6 +312,8 @@ class FleetLocalizer:
             jnp.float32(dt_imu))
         self.dispatch_count += 1
 
+        if self.host_kalman_fallback and not plan.kalman_gain:
+            states = self._host_kalman_fix(states, outs, act)
         if (mode_np != MODE_VIO).any():
             states = self._host_chunk_stage(states, outs, mode_np, act,
                                             base_idx)
@@ -214,40 +323,55 @@ class FleetLocalizer:
         """Per-chunk offload plan at the chunk's REAL frame count (the
         launch-overhead amortization a trailing partial chunk actually
         gets) — the single resolution point for step_chunk and both
-        run() modes, so their flags can never diverge."""
-        return resolve_marg_kernel(self.scheduler.plan_chunk(
+        run() modes, so their flags can never diverge. On a mesh it is
+        resolved ONCE for all shards (``plan_fleet_chunk``): every model
+        input is a per-robot static shape and the amortization uses the
+        per-shard local batch, so the plan is identical on every shard
+        and enters the sharded dispatch as replicated scalars. With
+        ``mesh=None`` the amortization stays the pre-mesh ``plan_chunk``
+        behavior (over K only) so the unsharded path's decisions are
+        untouched by this refactor."""
+        return resolve_marg_kernel(self.scheduler.plan_fleet_chunk(
             self.window, tracks.MAX_UPDATES, max(n_real, 1),
+            batch=self.padded if self.mesh is not None else 1,
+            shards=self.n_shards,
             map_points=self.cfg.backend.max_map_points,
             ba_landmarks=self.cfg.backend.ba_landmarks), self.cfg)
 
     def _active_mask(self, K: int, active) -> Tuple[np.ndarray, int]:
-        """(K,B) activity mask from an optional (K,) prefix mask."""
+        """(K, B_padded) activity mask from an optional (K,) prefix
+        mask; pad-robot columns are always inactive."""
         if active is None:
-            return np.ones((K, self.batch), bool), K
-        act1d = np.asarray(active, bool)
-        n_real = int(act1d.sum())
-        # the host stage maps scan slot j to filter frame base+j,
-        # which is only correct when the real frames form a prefix
-        # (trailing padding) — reject gap masks instead of silently
-        # skewing SLAM keyframe indices / dropping registration fixes
-        if not act1d[:n_real].all():
-            raise ValueError("active mask must be a contiguous prefix "
-                             f"(got {act1d.tolist()})")
-        return np.broadcast_to(act1d[:, None], (K, self.batch)).copy(), n_real
+            act1d = np.ones(K, bool)
+            n_real = K
+        else:
+            act1d = np.asarray(active, bool)
+            n_real = int(act1d.sum())
+            # the host stage maps scan slot j to filter frame base+j,
+            # which is only correct when the real frames form a prefix
+            # (trailing padding) — reject gap masks instead of silently
+            # skewing SLAM keyframe indices / dropping registration fixes
+            if not act1d[:n_real].all():
+                raise ValueError("active mask must be a contiguous prefix "
+                                 f"(got {act1d.tolist()})")
+        act = np.broadcast_to(act1d[:, None], (K, self.padded)).copy()
+        act[:, self.batch:] = False
+        return act, n_real
 
     def _build_chunk(self, imgs_l, imgs_r, imu_accel, imu_gyro, gps,
                      mode_np: np.ndarray, act: np.ndarray) -> FrameInputs:
-        """Pre-stack one (K,B) chunk as fresh host arrays (written once,
-        never mutated after device_put — see ``_ChunkStager``)."""
+        """Pre-stack one (K, B_padded) chunk as fresh host arrays
+        (written once, never mutated after device_put — see
+        ``_ChunkStager``)."""
         K = act.shape[0]
         return FrameInputs(
-            img_l=np.asarray(imgs_l, np.float32),
-            img_r=np.asarray(imgs_r, np.float32),
-            accel=np.asarray(imu_accel, np.float32),
-            gyro=np.asarray(imu_gyro, np.float32),
-            gps=np.asarray(gps, np.float32),
-            mode=np.ascontiguousarray(
-                np.broadcast_to(mode_np, (K, self.batch))),
+            img_l=self._pad1(imgs_l, np.float32),
+            img_r=self._pad1(imgs_r, np.float32),
+            accel=self._pad1(imu_accel, np.float32),
+            gyro=self._pad1(imu_gyro, np.float32),
+            gps=self._pad1(gps, np.float32, fill=np.nan),
+            mode=np.ascontiguousarray(np.broadcast_to(
+                self._padded_modes(mode_np), (K, self.padded))),
             active=act)
 
     def run(self, states: LocalizerState, imgs_l, imgs_r, imu_accel,
@@ -255,14 +379,19 @@ class FleetLocalizer:
             overlap: bool = True) -> LocalizerState:
         """Drive a T-frame fleet sequence in K-frame chunks through the
         async double-buffered pipeline: stage chunk N+1 (pre-stack +
-        device_put) while chunk N executes, drain host map stages one
-        chunk behind the dispatch front. imgs_l/imgs_r: (T,B,H,W);
-        imu_accel/gyro: (T,B,ipf,3); gps: (T,B,3); mode_ids: (B,).
+        per-shard device_put) while chunk N executes, drain host map
+        stages one chunk behind the dispatch front. imgs_l/imgs_r:
+        (T,B,H,W); imu_accel/gyro: (T,B,ipf,3); gps: (T,B,3);
+        mode_ids: (B,).
 
-        When any robot is in Registration mode the drain happens before
-        the next dispatch (its chunk-end pose fix feeds the next chunk);
-        otherwise the pipeline keeps one completed chunk in flight.
-        ``overlap=False`` degenerates to sequential ``step_chunk`` calls.
+        PER-ROBOT flush policy: Registration robots' chunk-end pose
+        fixes are applied before the next dispatch (feedback — but only
+        THEIR output slices sync, a per-robot ragged drain at each
+        robot's last active frame); SLAM robots' append-only replay
+        always defers one chunk, so a mixed fleet keeps the pipeline
+        full instead of draining fleet-wide whenever any robot is in
+        Registration. ``overlap=False`` degenerates to sequential
+        ``step_chunk`` calls.
         """
         T = np.asarray(imgs_l).shape[0]
         chunk = max(int(chunk), 1)
@@ -272,7 +401,7 @@ class FleetLocalizer:
         if not segments:                 # T == 0: nothing to localize
             return states
         slam_active = bool((mode_np == MODE_SLAM).any())
-        has_feedback = bool((mode_np == MODE_REGISTRATION).any())
+        has_reg = bool((mode_np == MODE_REGISTRATION).any())
         dt = jnp.float32(dt_imu)
         base_idx = np.asarray(states.frame_idx)
 
@@ -284,34 +413,38 @@ class FleetLocalizer:
             act, _ = self._active_mask(
                 chunk, None if n == chunk else np.arange(chunk) < n)
 
-            def take(a):
+            def take(a, fill=0.0):
                 a = np.asarray(a, np.float32)[sl]
                 if n < chunk:
                     a = np.concatenate(
                         [a, np.zeros((chunk - n,) + a.shape[1:], a.dtype)])
-                return a
+                return self._pad1(a, np.float32, fill=fill)
 
             return FrameInputs(
                 img_l=take(imgs_l), img_r=take(imgs_r),
                 accel=take(imu_accel), gyro=take(imu_gyro),
-                gps=take(gps),
-                mode=np.ascontiguousarray(
-                    np.broadcast_to(mode_np, (chunk, self.batch))),
+                gps=take(gps, fill=np.nan),
+                mode=np.ascontiguousarray(np.broadcast_to(
+                    self._padded_modes(mode_np), (chunk, self.padded))),
                 active=act), act
 
-        def seg_flags(seg):
+        def seg_plan(seg):
             # resolved at the chunk's REAL frame count — identical to
             # step_chunk's resolution, so run()/step_chunk/overlap modes
             # can never disagree on a partial chunk's decisions
-            return flags_from_plan(self._chunk_plan(len(seg)),
-                                   slam_active=slam_active)
+            return self._chunk_plan(len(seg))
 
         if not overlap:
             for seg in segments:
                 inputs_np, act = build(seg)
+                inputs = self._put(inputs_np, self._chunk_in_sharding)
+                plan = seg_plan(seg)
                 states, outs = self._fused_fleet_chunk(
-                    states, jax.device_put(inputs_np), seg_flags(seg), dt)
+                    states, inputs,
+                    flags_from_plan(plan, slam_active=slam_active), dt)
                 self.dispatch_count += 1
+                if self.host_kalman_fallback and not plan.kalman_gain:
+                    states = self._host_kalman_fix(states, outs, act)
                 if (mode_np != MODE_VIO).any():
                     states = self._host_chunk_stage(
                         states, outs, mode_np, act,
@@ -321,48 +454,66 @@ class FleetLocalizer:
         stager = _ChunkStager()
         self.last_stager = stager
         inputs_np, act0 = build(segments[0])
-        staged = stager.stage(inputs_np)
-        pending = None
+        staged = stager.stage(inputs_np, self._chunk_in_sharding)
+        pending = None               # one deferred SLAM replay
         for si, seg in enumerate(segments):
             act = act0
-            states, outs = self._fused_fleet_chunk(states, staged.inputs,
-                                                   seg_flags(seg), dt)
+            plan = seg_plan(seg)
+            states, outs = self._fused_fleet_chunk(
+                states, staged.inputs,
+                flags_from_plan(plan, slam_active=slam_active), dt)
             staged.consumed = True
             self.dispatch_count += 1
             if si + 1 < len(segments):
                 inputs_np, act0 = build(segments[si + 1])
-                staged = stager.stage(inputs_np)
+                staged = stager.stage(inputs_np, self._chunk_in_sharding)
+            if self.host_kalman_fallback and not plan.kalman_gain:
+                # feedback: the boundary update must reach the next
+                # dispatch (a bubble, only at the host-Kalman operating
+                # point)
+                states = self._host_kalman_fix(states, outs, act)
             if pending is not None:
-                self._host_chunk_stage(None, *pending)
+                self._slam_replay(*pending)
                 pending = None
-            if (mode_np != MODE_VIO).any():
-                args = (outs, mode_np, act,
-                        base_idx + np.int32(seg[0]))
-                if has_feedback:
-                    states = self._host_chunk_stage(states, *args)
-                else:
-                    pending = args
+            if has_reg:
+                # per-robot ragged flush: sync ONLY the Registration
+                # robots' last-active-frame slices before the next
+                # dispatch; everything else stays pipelined
+                states = self._registration_fix(states, outs, mode_np, act)
+            if slam_active:
+                pending = (outs, mode_np, act, base_idx + np.int32(seg[0]))
+                self.deferred_drains += 1
         if pending is not None:
-            self._host_chunk_stage(None, *pending)
+            self._slam_replay(*pending)
         return states
 
+    # ------------------------------------------------------------------
+    # host stages (per-robot, after a chunk dispatch)
+    # ------------------------------------------------------------------
     def _host_chunk_stage(self, states, outs, mode_np, act, base_idx):
-        """Ordered per-frame host replay for SLAM robots (append-only
-        bookkeeping from scan outputs — no device work); chunk-end
-        registration fix for Registration robots (``states`` must be the
-        live post-chunk state; deferred drains pass None and carry no
-        Registration robots)."""
+        """Synchronous drain of one completed chunk: ordered SLAM replay
+        then Registration chunk-end fixes (the overlap pipeline calls the
+        two halves separately — SLAM deferred, Registration immediate)."""
+        self._slam_replay(outs, mode_np, act, base_idx)
+        return self._registration_fix(states, outs, mode_np, act)
+
+    def _slam_replay(self, outs, mode_np, act, base_idx) -> None:
+        """Ordered per-frame host replay for SLAM robots: append-only
+        bookkeeping from scan outputs — no device work, no ``states``
+        dependency, so the overlap pipeline can run it a chunk late."""
+        slam = mode_np == MODE_SLAM
+        if not slam.any():
+            return
         K = act.shape[0]
-        p_np = np.asarray(outs.p)        # (K, B, 3)
+        B = len(mode_np)
+        p_np = np.asarray(outs.p)        # (K, B_padded, 3)
         q_np = np.asarray(outs.q)
         # one device->host transfer for the chunk's frontend outputs
         # (per-robot per-leaf slicing would sync K x B x leaves times)
         fr_np = jax.device_get(outs.fr)
-        slam = mode_np == MODE_SLAM
-        hist_np = np.asarray(outs.hist) if slam.any() else None
-        if slam.any():
-            self.ba_runs += int((np.asarray(outs.ba_ran)
-                                 & act)[:, slam].sum())
+        hist_np = np.asarray(outs.hist)
+        self.ba_runs += int((np.asarray(outs.ba_ran)
+                             & act)[:, :B][:, slam].sum())
         for j in range(K):
             for b in np.nonzero(slam)[0]:
                 if not act[j, b]:
@@ -371,19 +522,61 @@ class FleetLocalizer:
                 self.robot_host(b)._slam_frame(
                     q_np[j, b], p_np[j, b], int(base_idx[b]) + j, fr_b,
                     hist=hist_np[j, b])
+
+    def _registration_fix(self, states, outs, mode_np, act):
+        """Chunk-end registration pose fixes, per robot: each
+        Registration robot syncs only ITS last active frame's frontend
+        slice (ragged across robots), runs place recognition + PnP on
+        the host, and fuses the fix back into the batched filter state.
+        ``states`` must be the live post-chunk state."""
+        reg = np.nonzero(mode_np == MODE_REGISTRATION)[0]
+        if reg.size == 0:
+            return states
+        assert states is not None, "registration drain deferred"
         last = np.maximum(act.sum(axis=0) - 1, 0)    # last active frame
-        for b in np.nonzero(mode_np == MODE_REGISTRATION)[0]:
-            assert states is not None, "registration drain deferred"
+        for b in reg:
             j = int(last[b])
             if not act[j, b]:
                 continue
             st_b = jax.tree_util.tree_map(lambda x: x[b], states)
-            fr_b = jax.tree_util.tree_map(lambda x: x[j][b], fr_np)
+            fr_b = jax.tree_util.tree_map(
+                lambda x: np.asarray(x[j, b]), outs.fr)
             new_b = self.robot_host(b)._registration_step(st_b, fr_b)
             if new_b is not st_b:       # registration fused a pose fix
                 states = states._replace(filt=jax.tree_util.tree_map(
                     lambda batch, one: batch.at[b].set(one),
                     states.filt, new_b.filt))
+        return states
+
+    def _host_kalman_fix(self, states, outs, act):
+        """Chunk-boundary host Kalman fallback, per robot: when the scan
+        skipped the in-program MSCKF update (``offload_kalman=False``),
+        apply the registry's host-path update for each robot whose LAST
+        active frame consumed tracks (only that frame's clone window
+        matches the boundary state — see ``Localizer._host_kalman_fix``).
+        """
+        skipped = np.asarray(outs.upd_skipped)       # (K, B_padded)
+        last = np.maximum(act.sum(axis=0) - 1, 0)
+        fixed_b, fixed_filt = [], []
+        for b in range(self.batch):
+            j = int(last[b])
+            if not act[j, b] or not skipped[j, b]:
+                continue
+            filt_b = jax.tree_util.tree_map(lambda x: x[b], states.filt)
+            fixed_b.append(b)
+            fixed_filt.append(host_kalman_update(
+                filt_b, np.asarray(outs.upd_uv[j, b]),
+                np.asarray(outs.upd_valid[j, b]), self.cam))
+            self.host_kalman_fixes += 1
+        if fixed_b:
+            # one batched scatter for all fixed robots (a per-robot
+            # .at[b].set would copy every (B, d, d) covariance leaf B
+            # times over)
+            idx = jnp.asarray(fixed_b)
+            upd = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *fixed_filt)
+            states = states._replace(filt=jax.tree_util.tree_map(
+                lambda batch, u: batch.at[idx].set(u), states.filt, upd))
         return states
 
     def chunk_trace_count(self) -> int:
@@ -400,7 +593,7 @@ class FleetLocalizer:
                          mode_ids, dt_imu)
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def positions(states: LocalizerState) -> np.ndarray:
-        """(B,3) current position estimates (host copy)."""
-        return np.asarray(states.filt.p)
+    def positions(self, states: LocalizerState) -> np.ndarray:
+        """(B,3) current position estimates for the REAL batch (host
+        copy; pad robots stripped)."""
+        return np.asarray(states.filt.p)[:self.batch]

@@ -102,6 +102,27 @@ def np_quat_to_rot(q: np.ndarray) -> np.ndarray:
     ], np.float32)
 
 
+def host_kalman_update(filt, uv: np.ndarray, vd: np.ndarray, cam,
+                       sigma_px: float = 1.0):
+    """Chunk-boundary MSCKF update on the host path: residuals/Jacobian
+    from the scan's consumed-track buffers, Kalman gain through the
+    registry's ``kalman_gain`` HOST implementation (the operating point
+    where ``offload_kalman=False`` — the fitted models predicted the
+    host solve beats accelerator launch + DMA), correction applied to
+    the boundary filter state. Used by ``Localizer.run`` and the fleet
+    when the scheduler gates the in-scan update off: the consumed
+    observations still feed the filter exactly once, between chunks,
+    instead of being dropped."""
+    from repro.kernels import registry as kreg
+    r_stack, h_stack = msckf.update_residuals(
+        filt, jnp.asarray(uv, jnp.float32), jnp.asarray(vd, bool),
+        fx=cam.fx, fy=cam.fy, cx=cam.cx, cy=cam.cy)
+    gain = kreg.REGISTRY["kalman_gain"].xla(
+        np.asarray(filt.P), np.asarray(h_stack), sigma_px ** 2)
+    new_filt, _ = msckf.apply_gain(filt, r_stack, h_stack, gain, sigma_px)
+    return new_filt
+
+
 class _StagedChunk:
     """One staged chunk: device-side FrameInputs plus the ring-slot
     consumption flag (set when its dispatch donates the buffers)."""
@@ -123,7 +144,13 @@ class _ChunkStager:
     would corrupt an in-flight chunk); the two slots instead bound how
     many chunks are in flight, and a slot may only be restaged after its
     previous occupant's dispatch consumed (donated) the buffers —
-    enforced by assertion."""
+    enforced by assertion.
+
+    ``sharding`` (a ``NamedSharding`` over the robots mesh, or None for
+    the single-device path) makes the ``device_put`` split each staged
+    buffer across the fleet shards up front, so the ring overlaps the
+    PER-DEVICE host->device copies with the previous chunk's execution
+    and every shard's dispatch consumes (donates) its local slice."""
 
     def __init__(self):
         self._slots: List[Optional[_StagedChunk]] = [None, None]
@@ -133,12 +160,15 @@ class _ChunkStager:
         #                              behind device execution when the
         #                              pipeline overlaps)
 
-    def stage(self, inputs_np: FrameInputs) -> _StagedChunk:
+    def stage(self, inputs_np: FrameInputs,
+              sharding=None) -> _StagedChunk:
         t0 = time.perf_counter()
         prev = self._slots[self._next]
         assert prev is None or prev.consumed, \
             "input ring overrun: slot restaged while its chunk is in flight"
-        staged = _StagedChunk(jax.device_put(inputs_np))
+        # device_put treats sharding=None as default placement, so the
+        # unsharded path is the same call
+        staged = _StagedChunk(jax.device_put(inputs_np, sharding))
         self._slots[self._next] = staged
         self._next ^= 1
         self.staged_chunks += 1
@@ -158,13 +188,21 @@ class MapData:
 class Localizer:
     def __init__(self, cfg: EudoxusConfig, cam, window: Optional[int] = None,
                  scheduler: Optional[sched.LatencyModels] = None,
-                 vocab: Optional[jax.Array] = None):
+                 vocab: Optional[jax.Array] = None,
+                 host_kalman_fallback: bool = True):
         """vocab: optional pre-built BoW vocabulary — lets a fleet share
-        one device copy across robots instead of rebuilding per robot."""
+        one device copy across robots instead of rebuilding per robot.
+        host_kalman_fallback: when the scheduler gates the in-scan MSCKF
+        update off (``offload_kalman=False``), ``run`` applies the
+        registry's host-path Kalman update between chunks instead of
+        dropping the consumed observations (see ``host_kalman_update``);
+        False restores the pure accuracy-for-latency skip."""
         self.cfg = cfg
         self.cam = cam
         self.window = window or cfg.backend.msckf_window
         self.scheduler = scheduler or sched.LatencyModels()
+        self.host_kalman_fallback = host_kalman_fallback
+        self.host_kalman_fixes = 0   # chunk-boundary host updates applied
         self.vocab = (vocab if vocab is not None else
                       jnp.asarray(tracking.make_vocab(cfg.backend.bow_vocab_size)))
         self.variation = {m: sched.VariationTracker() for m in Mode}
@@ -339,6 +377,10 @@ class Localizer:
         plan = self._plan(chunk)
         flags = flags_from_plan(
             plan, slam_active=any(m == Mode.SLAM for m in modes))
+        # chunk-boundary host Kalman fallback: only live at the
+        # offload_kalman=False operating point — a feedback path, so it
+        # (like Registration) must land before the next dispatch
+        kalman_fb = self.host_kalman_fallback and not plan.kalman_gain
         dt = jnp.float32(dt_imu)
         seq = (imgs_l, imgs_r, imu_accel, imu_gyro, gps_seq)
         base0 = int(state.frame_idx)     # the run's first absolute frame
@@ -360,6 +402,8 @@ class Localizer:
                     self._build_chunk_reference(seg, seq, modes, chunk))
                 state, outs = self._fused_chunk(state, inputs, flags, dt)
                 self.dispatch_count += 1
+                if kalman_fb:
+                    state = self._host_kalman_fix(state, outs, len(seg))
                 state = self._drain_chunk(state, outs, seg, modes,
                                           base0 + seg[0], mark)
             return state
@@ -378,6 +422,11 @@ class Localizer:
                 # overlapped with chunk N's device execution
                 staged = stager.stage(self._build_chunk(
                     segments[si + 1], seq, modes, chunk))
+            if kalman_fb:
+                # feedback: the boundary update must reach the next
+                # dispatch — an inherent pipeline bubble, taken only
+                # when the scheduler chose the host Kalman path
+                state = self._host_kalman_fix(state, outs, len(seg))
             if pending is not None:
                 self._drain_chunk(None, *pending)
                 pending = None
@@ -453,6 +502,28 @@ class Localizer:
                  np.zeros(pad, np.int32)]),
             active=np.concatenate(
                 [np.ones(n, bool), np.zeros(pad, bool)]))
+
+    def _host_kalman_fix(self, state: LocalizerState, outs: FrameOutputs,
+                         n_real: int) -> LocalizerState:
+        """Apply the chunk-boundary host Kalman update for the chunk's
+        LAST real frame when the scan skipped it (``flags.kalman``
+        False). Only the final frame is recoverable — its post-frame
+        clone window IS the boundary state's window; earlier skipped
+        frames' clones have rolled on, so their consumed observations
+        stay dropped (the accuracy-vs-K dial: K=1 recovers every
+        update). Ordering caveat: the in-program update runs BEFORE the
+        frame's GPS fusion, the fallback necessarily after it, so with a
+        valid GPS fix on the boundary frame the update linearizes at a
+        slightly different state — a tolerance-level difference, which
+        is why the equivalence gate is tolerance-based (exact
+        linearization match only without a fix on that frame)."""
+        j = n_real - 1
+        if not bool(np.asarray(outs.upd_skipped)[j]):
+            return state
+        filt = host_kalman_update(state.filt, np.asarray(outs.upd_uv)[j],
+                                  np.asarray(outs.upd_valid)[j], self.cam)
+        self.host_kalman_fixes += 1
+        return state._replace(filt=filt)
 
     def _drain_chunk(self, state: Optional[LocalizerState],
                      outs: FrameOutputs, idxs: List[int],

@@ -186,14 +186,17 @@ class LatencyModels:
 
     def plan_chunk(self, window: int, max_updates: int, chunk: int,
                    map_points: int = 0, ba_landmarks: int = 0,
-                   frame_pixels: int = 0) -> OffloadPlan:
+                   frame_pixels: int = 0,
+                   dispatch_frames: Optional[int] = None) -> OffloadPlan:
         """Per-chunk plan: identical decision structure to ``plan_frame``
         (same ``should_offload``, same guards) except the fixed launch
         overhead of the in-dispatch kernels (Kalman gain and the SLAM
         BA/marginalization, both of which execute inside the scan) is
         amortized over the K frames the scan executes in one dispatch;
         per-frame transfer volume is unchanged (the scan ships K frames
-        of inputs either way)."""
+        of inputs either way). ``dispatch_frames`` overrides the
+        robot-frame count amortizing one launch (default: the chunk
+        length) — a batched fleet dispatch covers K x B_local frames."""
         chunk = max(int(chunk), 1)
         plan = self.plan_frame(window, max_updates,
                                map_points=map_points,
@@ -201,7 +204,7 @@ class LatencyModels:
                                frame_pixels=frame_pixels)
         h_height = max_updates * 2 * window
         per_frame_bytes = max_updates * window * 2 * 4
-        amortized = self.fixed_overhead_s / chunk
+        amortized = self.fixed_overhead_s / max(dispatch_frames or chunk, 1)
         kalman = self.should_offload("kalman_gain", h_height,
                                      per_frame_bytes, overhead_s=amortized)
         marg = self.should_offload("marginalization", max(ba_landmarks, 1),
@@ -211,6 +214,26 @@ class LatencyModels:
                            projection=plan.projection,
                            marginalization=marg,
                            frontend=plan.frontend)
+
+    def plan_fleet_chunk(self, window: int, max_updates: int, chunk: int,
+                         batch: int = 1, shards: int = 1,
+                         map_points: int = 0, ba_landmarks: int = 0,
+                         frame_pixels: int = 0) -> OffloadPlan:
+        """ONE plan for a sharded fleet chunk dispatch, valid on every
+        shard by construction: all model inputs (window, update budget,
+        padded map/BA buffers) are per-robot static shapes, identical
+        across shards — only the launch-overhead amortization sees the
+        fleet, and it uses the LOCAL robot-frame count each shard
+        executes per dispatch (K x ceil(B / shards)), which is again the
+        same on every shard (B is padded to a multiple of the shard
+        count). The resulting OffloadPlan is passed into the sharded
+        program as replicated scalars. ``batch=1, shards=1`` degenerates
+        exactly to ``plan_chunk``."""
+        local_batch = -(-max(batch, 1) // max(shards, 1))
+        return self.plan_chunk(
+            window, max_updates, chunk, map_points=map_points,
+            ba_landmarks=ba_landmarks, frame_pixels=frame_pixels,
+            dispatch_frames=max(chunk, 1) * local_batch)
 
 
 def profile_fn(fn: Callable, reps: int = 3) -> float:

@@ -101,7 +101,11 @@ class FrameOutputs(NamedTuple):
     """Per-frame scan outputs: what the host stage needs after the chunk
     returns. SLAM map bookkeeping replays from ``fr``/``hist``/``p``/``q``
     without touching the device (append-only); ``ba_cost``/``ba_ran``
-    surface the in-scan BA passes for observability."""
+    surface the in-scan BA passes for observability. ``upd_*`` carry the
+    consumed-track update buffers OUT of the scan when the scheduler
+    skipped the in-program MSCKF update (``flags.kalman`` False) so the
+    host can apply a chunk-boundary Kalman fallback instead of dropping
+    the observations entirely (zeros whenever the update ran in-scan)."""
     fr: FrontendResult
     p: jax.Array        # (3,) post-frame position
     q: jax.Array        # (4,) post-frame orientation quaternion
@@ -110,6 +114,10 @@ class FrameOutputs(NamedTuple):
     #                     in the host stage against the live map)
     ba_cost: jax.Array  # () float32 latest windowed-BA cost
     ba_ran: jax.Array   # () bool — BA+marginalization executed this frame
+    upd_uv: jax.Array      # (max_updates, W, 2) consumed tracks, or zeros
+    upd_valid: jax.Array   # (max_updates, W) bool
+    upd_skipped: jax.Array  # () bool — tracks were consumed but the
+    #                         in-scan update was gated off this frame
 
 
 def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
@@ -164,6 +172,13 @@ def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
     tracks_valid = jnp.where(do_consume,
                              tracks.consume(tracks_valid, consumed),
                              tracks_valid)
+    # consumed observations leave the buffer whether or not the update
+    # ran (one-shot MSCKF semantics); when the scheduler gated the
+    # in-scan update off, ship them out so the chunk-boundary host
+    # fallback can still feed them to the filter exactly once
+    upd_skipped = do_consume & ~flags.kalman
+    upd_uv = jnp.where(upd_skipped, uv, 0.0)
+    upd_valid = jnp.where(upd_skipped, vd, False)
 
     # --- mode dispatch (paper Fig. 2 -> one resident program per mode):
     # VIO fuses GPS on-device (gps_update is NaN-safe: invalid fixes get
@@ -225,7 +240,9 @@ def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
         prev_valid=fe_carry.prev_valid,
         frame_idx=state.frame_idx + 1, ba=ba_state)
     outs = FrameOutputs(fr=fr, p=filt.p, q=filt.q, hist=hist,
-                        ba_cost=ba_state.last_cost, ba_ran=ba_ran)
+                        ba_cost=ba_state.last_cost, ba_ran=ba_ran,
+                        upd_uv=upd_uv, upd_valid=upd_valid,
+                        upd_skipped=upd_skipped)
     return new_state, outs
 
 
@@ -247,10 +264,15 @@ def _zero_frontend_result(state: LocalizerState) -> FrontendResult:
 def _zero_outputs(state: LocalizerState, vocab: jax.Array,
                   fr: FrontendResult) -> FrameOutputs:
     """Shape-matched FrameOutputs for padding frames."""
+    w = state.tracks_uv.shape[1]
     return FrameOutputs(fr=fr, p=state.filt.p, q=state.filt.q,
                         hist=jnp.zeros((2 ** vocab.shape[0],), jnp.float32),
                         ba_cost=state.ba.last_cost,
-                        ba_ran=jnp.bool_(False))
+                        ba_ran=jnp.bool_(False),
+                        upd_uv=jnp.zeros((tracks.MAX_UPDATES, w, 2),
+                                         jnp.float32),
+                        upd_valid=jnp.zeros((tracks.MAX_UPDATES, w), bool),
+                        upd_skipped=jnp.bool_(False))
 
 
 def frame_transition(state: LocalizerState, inp: FrameInputs,

@@ -147,3 +147,28 @@ def generate(n_frames: int = 30, H: int = 120, W: int = 160,
     return Sequence(images_left=il, images_right=ir, poses=poses,
                     imu_accel=accel, imu_gyro=gyro, gps=gps, landmarks=lms,
                     cam=cam, dt=dt, imu_per_frame=imu_per_frame)
+
+
+def tile_fleet_sequence(seq: Sequence, batch: int, n_frames: int):
+    """Tile one sequence into (T, B, ...) fleet inputs: every robot sees
+    the same frame stream (the benchmark/test workload for batched and
+    sharded fleet execution). Returns (imgs_l, imgs_r, imu_accel,
+    imu_gyro, gps) with shapes (T,B,H,W) x2, (T,B,ipf,3) x2, (T,B,3);
+    the per-frame IMU slices END at each frame (clone/observation
+    alignment, frame 0 reuses the first interval like the single-robot
+    drivers)."""
+    ipf = seq.imu_per_frame
+    B, T = batch, n_frames
+    il = np.stack([np.tile(seq.images_left[i][None], (B, 1, 1))
+                   for i in range(T)])
+    ir = np.stack([np.tile(seq.images_right[i][None], (B, 1, 1))
+                   for i in range(T)])
+    ac = np.stack([np.tile(
+        seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf][None],
+        (B, 1, 1)) for i in range(T)])
+    gy = np.stack([np.tile(
+        seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf][None],
+        (B, 1, 1)) for i in range(T)])
+    gps = np.stack([np.tile(seq.gps[i][None], (B, 1))
+                    for i in range(T)]).astype(np.float32)
+    return il, ir, ac, gy, gps

@@ -1,4 +1,23 @@
-from repro.distributed.sharding import (
-    LogicalRules, default_rules, spec_for, named_sharding, shard,
-    sharding_context, opt_state_spec, tree_specs,
+"""Distribution layer of the localization system: the robots mesh.
+
+Public surface is ``fleet_mesh`` — a 1-D ``robots`` mesh plus the
+``shard_map`` wrappers the FleetLocalizer shards its batch axis with.
+
+The seed's LLM-era logical-axis rule table (``sharding.py``) and the
+elastic train-fleet machinery (``elastic.py``) are quarantined leftovers
+serving only the ``repro.models``/``repro.launch`` stack; they are NOT
+re-exported here — import ``repro.distributed.sharding`` /
+``repro.distributed.elastic`` explicitly if you really want them. The
+localization fleet has no logical-axis table: one axis, ``robots``.
+"""
+from repro.distributed.fleet_mesh import (
+    ROBOTS_AXIS, chunk_sharding, fleet_mesh, mesh_shards, padded_batch,
+    replicated, robot_sharding, shard_fleet_chunk, shard_fleet_step,
+    shard_states,
 )
+
+__all__ = [
+    "ROBOTS_AXIS", "chunk_sharding", "fleet_mesh", "mesh_shards",
+    "padded_batch", "replicated", "robot_sharding", "shard_fleet_chunk",
+    "shard_fleet_step", "shard_states",
+]

@@ -1,0 +1,120 @@
+"""Robots mesh: the fleet's explicit device-placement abstraction.
+
+The fleet batch axis B (one entry per autonomous machine) is the
+scaling axis of the whole system — and it is embarrassingly parallel:
+robots never exchange data inside the localization hot path. This
+module maps that axis onto however many devices exist as a 1-D JAX mesh
+with a single ``"robots"`` axis, and wraps the fleet's batched programs
+in ``shard_map`` so each device runs the identical per-shard scan over
+its local slice of the fleet:
+
+    devices:   d0          d1          d2          d3
+    mesh:      +---------- robots axis (size D) ----------+
+    states:    robots 0..1 | 2..3      | 4..5      | 6..7      (B=8, D=4)
+    inputs:    (K, B, ...) sharded over axis 1, replicated over K
+    flags/dt:  replicated scalars (ONE scheduler plan serves all shards)
+
+Capacity then scales with device count: a chunk dispatch executes
+K x (B/D) robot-frames per device instead of K x B on device 0. When B
+does not divide D the fleet is padded with inactive robots (the same
+``active=False`` trick partial chunks use) — pad robots ride along in
+the batch and are never read.
+
+No cross-robot collectives exist in the scan body, so ``shard_map``
+needs no replication bookkeeping (``check_rep=False``) and a 1-device
+mesh compiles to the exact program the unsharded path runs — the
+refactor is behavior-preserving by construction (bitwise-tested).
+
+This module replaces the seed's LLM-oriented logical-axis rule table
+(``repro.distributed.sharding``) as the distribution layer of the
+localization system; that file is quarantined for the leftover
+``repro.models`` stack only.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# the one mesh axis of the localization system: fleet members
+ROBOTS_AXIS = "robots"
+
+
+def fleet_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """1-D ``robots`` mesh over ``devices`` (default: every local device).
+
+    Device-count-agnostic by design: the same FleetLocalizer code runs
+    on a 1-device laptop mesh and an N-device pod mesh."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if not devs:
+        raise ValueError("fleet_mesh needs at least one device")
+    return Mesh(np.asarray(devs), (ROBOTS_AXIS,))
+
+
+def mesh_shards(mesh: Optional[Mesh]) -> int:
+    """Number of fleet shards (1 for the unsharded/no-mesh path)."""
+    return int(mesh.devices.size) if mesh is not None else 1
+
+
+def padded_batch(batch: int, mesh: Optional[Mesh]) -> int:
+    """Smallest batch >= ``batch`` divisible by the shard count. The
+    extra rows are inactive pad robots (never read back)."""
+    d = mesh_shards(mesh)
+    return -(-batch // d) * d
+
+
+def robot_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for per-robot leaves with a leading (B, ...) axis:
+    fleet state pytrees and per-frame (B, ...) inputs/outputs."""
+    return NamedSharding(mesh, P(ROBOTS_AXIS))
+
+
+def chunk_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for chunk leaves with (K, B, ...) axes: the scan axis is
+    replicated (every shard walks all K frames), the fleet axis is
+    split."""
+    return NamedSharding(mesh, P(None, ROBOTS_AXIS))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated sharding (scalars: PlanFlags, dt)."""
+    return NamedSharding(mesh, P())
+
+
+def shard_states(states, mesh: Optional[Mesh]):
+    """Place a (B, ...) state pytree across the robots mesh (default
+    placement when there is no mesh), so the first dispatch starts
+    sharded instead of resharding on entry."""
+    return jax.device_put(
+        states, None if mesh is None else robot_sharding(mesh))
+
+
+def shard_fleet_step(step_fn: Callable, mesh: Mesh) -> Callable:
+    """Wrap the vmapped per-frame fleet transition
+    ``(states, il, ir, accel, gyro, gps, mode, flags, dt)`` in a
+    ``shard_map`` over the robots axis. The first seven arguments carry
+    a leading (B,) axis and are split; flags/dt are replicated — one
+    scheduler plan is valid on every shard because offload decisions
+    depend only on per-robot static shapes."""
+    b = P(ROBOTS_AXIS)
+    return shard_map(
+        step_fn, mesh=mesh,
+        in_specs=(b, b, b, b, b, b, b, P(), P()),
+        out_specs=(b, b),
+        check_rep=False)
+
+
+def shard_fleet_chunk(chunk_fn: Callable, mesh: Mesh) -> Callable:
+    """Wrap ``core.step.fleet_chunk``-shaped programs
+    ``(states, inputs, flags, dt) -> (states, outs)`` in a ``shard_map``
+    over the robots axis: states are (B, ...), chunk inputs/outputs are
+    (K, B, ...). Each shard scans its local fleet slice — K x B/D
+    robot-frames per device per dispatch, no collectives."""
+    return shard_map(
+        chunk_fn, mesh=mesh,
+        in_specs=(P(ROBOTS_AXIS), P(None, ROBOTS_AXIS), P(), P()),
+        out_specs=(P(ROBOTS_AXIS), P(None, ROBOTS_AXIS)),
+        check_rep=False)

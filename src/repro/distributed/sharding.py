@@ -1,4 +1,14 @@
-"""Logical-axis sharding rules (MaxText-style) with divisibility guards.
+"""QUARANTINED seed leftover — LLM logical-axis sharding rules.
+
+This module serves only the seed's ``repro.models`` LLM stack and the
+``repro.launch`` dry-run machinery; nothing in the localization system
+imports it, and it is deliberately NOT re-exported from
+``repro.distributed``. The localization fleet's distribution layer is
+``repro.distributed.fleet_mesh`` (one ``robots`` axis, shard_map over
+the fleet batch). Kept only because the quarantined model files still
+compile against it.
+
+Logical-axis sharding rules (MaxText-style) with divisibility guards.
 
 Every parameter / activation is annotated with *logical* axis names; a
 ``LogicalRules`` object maps those to mesh axes at lower time. A dimension

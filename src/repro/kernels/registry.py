@@ -446,14 +446,22 @@ class CalibrationMismatch(RuntimeError):
 
 
 def device_fingerprint() -> Dict[str, str]:
-    """Identity of the hardware/runtime a latency profile is valid on."""
+    """Identity of the hardware/runtime a latency profile is valid on.
+
+    Records the visible device COUNT as well as the kind: a sharded
+    fleet dispatch amortizes launch overhead over per-shard work and
+    contends for host cores per device, so a profile taken on a
+    1-device process does not transfer to an N-device mesh (e.g. a
+    forced ``--xla_force_host_platform_device_count=N`` run) — loading
+    refuses and ``load_or_refit`` re-profiles at the deployed count."""
     try:
-        dev = jax.devices()[0]
-        platform, kind = dev.platform, dev.device_kind
+        devs = jax.devices()
+        platform, kind, count = (devs[0].platform, devs[0].device_kind,
+                                 len(devs))
     except Exception:                          # pragma: no cover
-        platform, kind = "unknown", "unknown"
+        platform, kind, count = "unknown", "unknown", 0
     return {"platform": platform, "device_kind": kind,
-            "jax": jax.__version__}
+            "device_count": str(count), "jax": jax.__version__}
 
 
 def save_models(models: sched.LatencyModels, path: str) -> None:

@@ -1,1 +1,10 @@
+"""QUARANTINED seed leftover — LM architecture stack.
+
+These model files (and the LM configs under ``repro.configs``) are the
+seed repo's LLM pool, kept only because their smoke tests pin the
+shared kernel substrate (``repro.kernels``). Nothing in the Eudoxus
+localization system imports them, and their sharding layer
+(``repro.distributed.sharding``) is likewise quarantined — the
+localization fleet uses ``repro.distributed.fleet_mesh``.
+"""
 from repro.models import model

@@ -38,3 +38,18 @@ def small_cfg():
     be = dataclasses.replace(EDX_DRONE.backend, ba_window=5,
                              ba_landmarks=16, lm_iters=3)
     return dataclasses.replace(EDX_DRONE, frontend=fe, backend=be)
+
+
+@pytest.fixture()
+def no_kalman_offload_scheduler():
+    """LatencyModels forcing the kalman_gain kernel onto the host path
+    (offload_kalman=False) while every other kernel offloads — shared by
+    the host-Kalman-fallback tests."""
+    import repro.core.scheduler as sched
+
+    class NoKalmanOffload(sched.LatencyModels):
+        def should_offload(self, name, size, transfer_bytes=0,
+                           overhead_s=None):
+            return name != "kalman_gain"
+
+    return NoKalmanOffload

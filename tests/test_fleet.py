@@ -145,3 +145,44 @@ def test_fleet_diverging_trajectories(synthetic_sequence, small_cfg):
                                seq.dt / seq.imu_per_frame)
     ps = fleet.positions(states)
     assert np.linalg.norm(ps[0] - ps[1]) > 0.05
+
+
+def test_fleet_host_kalman_fallback(synthetic_sequence, small_cfg,
+                                    no_kalman_offload_scheduler):
+    """Fleet chunk path honours the chunk-boundary host Kalman fallback
+    per robot: with the kalman offload gated off, boundary fixes fire
+    for every consuming robot and keep the batched filter close to the
+    in-program update."""
+    NoKalmanOffload = no_kalman_offload_scheduler
+    seq = synthetic_sequence
+    B, n, K = 2, 10, 1
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    mode_ids = np.full(B, MODE_VIO, np.int32)
+    nan_gps = np.full((B, 3), np.nan, np.float32)   # VIO without fixes
+
+    def drive(scheduler=None, fallback=True):
+        fleet = FleetLocalizer(small_cfg, seq.cam, batch=B, window=4,
+                               scheduler=scheduler,
+                               host_kalman_fallback=fallback)
+        states = fleet.init_state(p0=np.tile(seq.poses[0][:3, 3], (B, 1)),
+                                  v0=np.tile(v0, (B, 1)))
+        for c0 in range(0, n, K):
+            per = [_fleet_inputs(seq, i, B) for i in range(c0, c0 + K)]
+            states, _ = fleet.step_chunk(
+                states, np.stack([p[0] for p in per]),
+                np.stack([p[1] for p in per]),
+                np.stack([p[2] for p in per]),
+                np.stack([p[3] for p in per]),
+                np.stack([nan_gps] * K), mode_ids,
+                seq.dt / seq.imu_per_frame)
+        return fleet, states
+
+    f_on, s_on = drive()
+    f_fb, s_fb = drive(NoKalmanOffload(), True)
+    f_skip, s_skip = drive(NoKalmanOffload(), False)
+    assert f_fb.host_kalman_fixes > 0        # fired per consuming robot
+    assert f_fb.host_kalman_fixes % B == 0   # both robots, same stream
+    assert f_skip.host_kalman_fixes == 0
+    tr = lambda s: np.trace(np.asarray(s.filt.P)[0][:15, :15])  # noqa: E731
+    assert abs(tr(s_fb) - tr(s_on)) < 1e-3 * max(tr(s_on), 1.0)
+    assert tr(s_skip) > tr(s_on) * 1.01

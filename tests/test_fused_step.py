@@ -238,3 +238,70 @@ def test_offload_plan_gates_kalman_update(synthetic_sequence, small_cfg):
     tr_off = float(np.trace(np.asarray(st_off.filt.P)[:15, :15]))
     assert tr_off > tr_on * 1.01, \
         "skipping the Kalman update should leave more uncertainty"
+
+
+def test_host_kalman_fallback_between_chunks(synthetic_sequence, small_cfg,
+                                             no_kalman_offload_scheduler):
+    """Chunk-boundary host Kalman fallback (offload_kalman=False): the
+    scan ships the consumed-track buffers out, `run` applies the
+    registry's host-path update between chunks, and the filter tracks
+    the in-program update within tolerance instead of drifting with the
+    pure skip."""
+    NoKalmanOffload = no_kalman_offload_scheduler
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    n = 10
+    il, ir, a, g, _ = _chunk_args(seq, n)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+
+    def drive(scheduler=None, fallback=True, chunk=1):
+        # gps=None: VIO without fixes, so the only difference between
+        # the three runs is how the MSCKF update is executed
+        loc = Localizer(small_cfg, seq.cam, window=4, scheduler=scheduler,
+                        host_kalman_fallback=fallback)
+        st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+        st = loc.run(st, il, ir, a, g, None, env, seq.dt /
+                     seq.imu_per_frame, chunk=chunk)
+        return loc, st
+
+    loc_on, st_on = drive()                             # in-program update
+    loc_fb, st_fb = drive(NoKalmanOffload(), True)      # host fallback
+    loc_skip, st_skip = drive(NoKalmanOffload(), False)  # pure skip
+    assert loc_fb.host_kalman_fixes > 0
+    assert loc_skip.host_kalman_fixes == 0
+
+    # tolerance-based equivalence with the in-program update: at K=1
+    # every skipped update is recovered at its own boundary, so the
+    # filter uncertainty matches tightly and the pose stays close,
+    # while the pure skip visibly drifts
+    tr_on = float(np.trace(np.asarray(st_on.filt.P)[:15, :15]))
+    tr_fb = float(np.trace(np.asarray(st_fb.filt.P)[:15, :15]))
+    tr_skip = float(np.trace(np.asarray(st_skip.filt.P)[:15, :15]))
+    assert abs(tr_fb - tr_on) < 1e-3 * max(tr_on, 1.0)
+    assert tr_skip > tr_on * 1.01
+    err_fb = float(np.linalg.norm(
+        np.asarray(st_fb.filt.p) - np.asarray(st_on.filt.p)))
+    err_skip = float(np.linalg.norm(
+        np.asarray(st_skip.filt.p) - np.asarray(st_on.filt.p)))
+    assert err_fb < err_skip, (err_fb, err_skip)
+    assert err_fb < 1.0
+
+
+def test_host_kalman_fallback_chunk_granularity(synthetic_sequence,
+                                                small_cfg,
+                                                no_kalman_offload_scheduler):
+    """At K>1 only the chunk's LAST frame is recoverable (its clone
+    window matches the boundary state) — the fallback applies once per
+    consuming chunk, not per frame."""
+    NoKalmanOffload = no_kalman_offload_scheduler
+    seq = synthetic_sequence
+    env = Environment(True, False)
+    n, K = 10, 5
+    il, ir, a, g, _ = _chunk_args(seq, n)
+    loc = Localizer(small_cfg, seq.cam, window=4,
+                    scheduler=NoKalmanOffload())
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+    st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+    loc.run(st, il, ir, a, g, None, env, seq.dt / seq.imu_per_frame,
+            chunk=K)
+    assert 0 < loc.host_kalman_fixes <= -(-n // K)
