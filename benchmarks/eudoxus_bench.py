@@ -461,6 +461,143 @@ def chunked_pipeline(n_frames: int = 32, ks=(1, 4, 8),
     return rows
 
 
+def _env_for_spec(spec) -> Environment:
+    """Derive the Environment that resolves to ``spec`` from its own
+    EnvRule (works for user-registered scenarios too)."""
+    rule = spec.env_rule
+    return Environment(
+        gps_available=bool(rule.gps) if rule.gps is not None else False,
+        map_available=bool(rule.map) if rule.map is not None else False,
+        gps_degraded=bool(rule.degraded) if rule.degraded is not None
+        else False,
+        airborne=bool(rule.airborne) if rule.airborne is not None
+        else False)
+
+
+def scenario_latency(n_frames: int = 16, chunk: int = 8, rounds: int = 3,
+                     out_json: str = "BENCH_scenarios.json") -> List[Row]:
+    """Per-scenario frame latency for EVERY registered scenario (the
+    scenario-primitive registry: ``repro.core.scenarios``), plus a
+    mixed-scenario fleet chunk running one robot per scenario under ONE
+    compiled program. Writes ``out_json``.
+
+    Each scenario runs the chunked pipeline on a sequence shaped by its
+    own spec knobs: ``drone_vio`` gets its smaller clone window and
+    double IMU rate (more propagation work per frame), ``vio_degraded``
+    gets intermittent GPS (every other fix dropped) fused at the spec's
+    inflated sigma, and ``registration`` localizes against the map the
+    ``slam`` pass just built. Embedded-class workload (48x64, 48
+    features) like the other hot-path suites; mean and p99 are computed
+    over the measured rounds' per-frame samples (warm pass excluded)."""
+    from repro.core import scenarios as scen
+    from repro.core.environment import Mode
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    base_cfg = dataclasses.replace(EDX_DRONE, frontend=fe)
+    base_rate = base_cfg.backend.imu_rate_hz
+    table = scen.table()
+    rows: List[Row] = []
+    report = {"workload": "48x64_f48", "chunk": chunk,
+              "n_frames": n_frames, "per_scenario": {}, "mixed_fleet": {}}
+    slam_map = None
+    for mid, spec in enumerate(table.specs):
+        # bench window: the spec's knob when declared, else the
+        # embedded-class default the other hot-path suites use (NOT
+        # apply_spec's deploy default of backend.msckf_window)
+        cfg_s, _ = scen.apply_spec(base_cfg, spec)
+        window = spec.window or 4
+        ipf = max(round(10 * cfg_s.backend.imu_rate_hz / base_rate), 1)
+        seq = frames.generate(n_frames=n_frames, H=48, W=64,
+                              n_landmarks=200, imu_per_frame=ipf,
+                              accel_sigma=0.5, gyro_sigma=0.02)
+        env = _env_for_spec(spec)
+        gps = seq.gps.copy()
+        if env.gps_degraded:
+            gps[::2] = np.nan            # intermittent fixes
+        accel = np.stack(
+            [seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+             for i in range(n_frames)])
+        gyro = np.stack(
+            [seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+             for i in range(n_frames)])
+        v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+        loc = Localizer(cfg_s, seq.cam, window=window)
+        if spec.host_stage == "registration" and slam_map is not None:
+            loc.map = slam_map
+
+        def one_pass():
+            st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+            loc.run(st, seq.images_left, seq.images_right, accel, gyro,
+                    gps, env, seq.dt / ipf, chunk=chunk)
+
+        one_pass()                                   # warm/compile
+        try:
+            key = Mode(spec.name)
+        except ValueError:
+            key = spec.name
+        tracker = loc.variation[key]
+        m0 = len(tracker.samples)
+        for _ in range(rounds):
+            one_pass()
+        s = np.asarray(tracker.samples[m0:])
+        if spec.host_stage == "slam":
+            slam_map = loc.map                       # feeds registration
+        entry = {"ms_per_frame_mean": float(s.mean()) * 1e3,
+                 "ms_per_frame_p99": float(np.percentile(s, 99)) * 1e3,
+                 "window": window, "imu_per_frame": ipf,
+                 "chunk_traces": loc.chunk_trace_count()}
+        report["per_scenario"][spec.name] = entry
+        rows.append((f"scenarios/{spec.name}_frame_us",
+                     entry["ms_per_frame_mean"] * 1e3,
+                     f"p99={entry['ms_per_frame_p99'] * 1e3:.0f}us,"
+                     f"window={window},ipf={ipf}"))
+
+    # mixed-scenario fleet: one robot per registered scenario, K-frame
+    # chunks, ONE compiled program (the acceptance criterion)
+    B = len(table)
+    seq = frames.generate(n_frames=n_frames, H=48, W=64, n_landmarks=200,
+                          accel_sigma=0.5, gyro_sigma=0.02)
+    il, ir, ac, gy, gps = frames.tile_fleet_sequence(seq, B, n_frames)
+    mode_ids = np.arange(B, dtype=np.int32)
+    no_gps = [mid for mid, s in enumerate(table.specs)
+              if not (s.env_rule is not None and s.env_rule.gps)]
+    gps = gps.copy()
+    gps[:, np.isin(mode_ids, no_gps)] = np.nan
+    fleet = FleetLocalizer(base_cfg, seq.cam, batch=B, window=4)
+    if slam_map is not None:
+        for mid in table.host_stage_ids("registration"):
+            fleet.robot_host(int(mid)).map = slam_map
+    ipf = seq.imu_per_frame
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+
+    def fleet_pass():
+        states = fleet.init_state(
+            p0=np.tile(seq.poses[0][:3, 3], (B, 1)),
+            v0=np.tile(v0, (B, 1)))
+        t0 = time.perf_counter()
+        states = fleet.run(states, il, ir, ac, gy, gps, mode_ids,
+                           seq.dt / ipf, chunk=chunk)
+        jax.block_until_ready(states.filt.p)
+        return time.perf_counter() - t0
+
+    fleet_pass()                                     # warm/compile
+    wall = min(fleet_pass() for _ in range(rounds))
+    report["mixed_fleet"] = {
+        "scenarios": list(table.names),
+        "ms_per_frame": wall / n_frames * 1e3,
+        "ms_per_robot_frame": wall / (n_frames * B) * 1e3,
+        "chunk_traces": fleet.chunk_trace_count(),
+    }
+    rows.append(("scenarios/mixed_fleet_frame_us",
+                 wall / n_frames * 1e6,
+                 f"robots={B},traces={fleet.chunk_trace_count()}"))
+    if out_json:
+        import json
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return rows
+
+
 def fleet_scaling(n_frames: int = 6, batch: int = 8) -> List[Row]:
     """B robots per dispatch: amortized per-robot latency vs the
     single-robot fused step on the same frames.
@@ -690,6 +827,10 @@ def main() -> None:
     ap.add_argument("--fleet-shard-worker", action="store_true",
                     help="internal: measure at the current device count "
                          "and print a FLEET_SHARD_RESULT line")
+    ap.add_argument("--scenarios", action="store_true",
+                    help="run every registered scenario (incl. drone_vio "
+                         "and vio_degraded) plus a mixed-scenario fleet "
+                         "chunk and write BENCH_scenarios.json")
     ap.add_argument("--all", action="store_true",
                     help="also run the paper figure/table suites")
     args = ap.parse_args()
@@ -716,6 +857,11 @@ def main() -> None:
         _, cached = kreg.load_or_refit(args.models, kernels=kernels)
         print(f"calibration/models,0.0,"
               f"{'cache_hit' if cached else 'refit'}:{args.models}")
+    if args.scenarios:
+        for name, us, derived in scenario_latency(
+                n_frames=max(args.frames, 8), chunk=args.chunk or 8):
+            print(f"{name},{us:.1f},{derived}")
+        return
     suites = [lambda: fused_vs_seed(args.frames),
               lambda: fleet_scaling(min(args.frames, 6), args.batch)]
     if args.chunk:

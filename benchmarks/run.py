@@ -55,6 +55,7 @@ def _register_suites():
         "chunked": lambda: eudoxus_bench.chunked_pipeline(
             n_frames=32, ks=(1, 4, 8)),
         "fleet": eudoxus_bench.fleet_scaling,
+        "scenarios": lambda: eudoxus_bench.scenario_latency(n_frames=8),
         "tbl1": eudoxus_bench.tbl1_building_blocks,
         "tbl2": eudoxus_bench.tbl2_sharing,
         "sbV-C": sb_sizing.sb_sizing_rows,

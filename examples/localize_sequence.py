@@ -1,14 +1,18 @@
-"""End-to-end driver: a robot crossing all four operating scenarios.
+"""End-to-end driver: one robot crossing every registered scenario.
 
     PYTHONPATH=src python examples/localize_sequence.py [--frames 8]
 
-Phase 1  outdoor  (GPS, no map)    -> VIO + GPS fusion
-Phase 2  indoor   (no GPS, no map) -> SLAM, building a map
-Phase 3  indoor   (no GPS, map)    -> Registration against phase-2's map
+Phase 1  outdoor  (GPS, no map)        -> VIO + GPS fusion
+Phase 2  indoor   (no GPS, no map)     -> SLAM, building a map
+Phase 3  indoor   (no GPS, map)        -> Registration against phase-2's map
+Phase 4  outdoor  (degraded GPS)       -> VIO_DEGRADED (down-weighted fixes)
+Phase 5  airborne (no GPS, no map)     -> DRONE_VIO (the paper's 2nd prototype)
 
 This is the paper's deployment story (Sec. III: logistics robots moving
-between outdoor yards and mapped/unmapped warehouses) on the synthetic
-world; per-mode latency variation is reported like Fig. 5/9-11.
+between outdoor yards and mapped/unmapped warehouses, plus the drone
+prototype) on the synthetic world — every phase is served by the SAME
+compiled program through the scenario-primitive registry; per-mode
+latency variation is reported like Fig. 5/9-11.
 """
 import argparse
 import dataclasses
@@ -27,7 +31,7 @@ def main():
     args = ap.parse_args()
     n = args.frames
 
-    seq = frames.generate(n_frames=3 * n, H=120, W=160, n_landmarks=300,
+    seq = frames.generate(n_frames=5 * n, H=120, W=160, n_landmarks=300,
                           accel_sigma=0.5, gyro_sigma=0.02)
     fe = dataclasses.replace(EDX_DRONE.frontend, height=120, width=160,
                              max_features=128)
@@ -41,6 +45,10 @@ def main():
         ("outdoor / VIO+GPS", Environment(True, False)),
         ("indoor unknown / SLAM", Environment(False, False)),
         ("indoor known / Registration", Environment(False, True)),
+        ("degraded GPS / VIO_DEGRADED",
+         Environment(True, False, gps_degraded=True)),
+        ("airborne / DRONE_VIO",
+         Environment(False, False, airborne=True)),
     ]
     f = 0
     for name, env in phases:

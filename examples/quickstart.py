@@ -36,7 +36,7 @@ for i in range(6):
 print(f"   RMSE vs ground truth: {loc.rmse(seq.poses[:, :3, 3]):.3f} m")
 
 # -------------------------------------------------------------------- training
-from repro.configs import get_config, reduced
+from repro.configs.lm import get_config, reduced
 from repro.launch import steps as steps_lib
 
 print("== 2. One train step (olmoe-1b-7b, reduced) ==")

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, reduced
+from repro.configs.lm import get_config, reduced
 from repro.launch.serve import generate
 from repro.models import model
 

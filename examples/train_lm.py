@@ -9,7 +9,7 @@ same path the multi-pod dry-run compiles at full scale.
 """
 import argparse
 
-from repro.configs import get_config
+from repro.configs.lm import get_config
 from repro.launch import train as train_mod
 
 
@@ -28,11 +28,12 @@ def main():
     print(f"model: {n/1e6:.0f}M params ({cfg100m.n_layers}L "
           f"d={cfg100m.d_model} vocab={cfg100m.vocab})")
 
-    # route through the production trainer via its CLI surface
-    import repro.configs as configs_pkg
-    orig = configs_pkg.get_config
-    configs_pkg.get_config = lambda name: cfg100m if name == "train-lm-100m" else orig(name)
-    train_mod.get_config = configs_pkg.get_config
+    # route through the production trainer via its CLI surface (the
+    # LM arch registry lives in the quarantined repro.configs.lm)
+    import repro.configs.lm as configs_lm
+    orig = configs_lm.get_config
+    configs_lm.get_config = lambda name: cfg100m if name == "train-lm-100m" else orig(name)
+    train_mod.get_config = configs_lm.get_config
     try:
         losses = train_mod.main([
             "--arch", "train-lm-100m", "--steps", str(args.steps),
@@ -41,7 +42,7 @@ def main():
             "--log-every", "25",
         ])
     finally:
-        configs_pkg.get_config = orig
+        configs_lm.get_config = orig
         train_mod.get_config = orig
     assert losses[-1] < losses[0], "loss should decrease"
 

@@ -1,55 +1,31 @@
-"""Architecture registry: ``get_config(name)`` / ``list_configs()``.
+"""Localization pipeline configs — the package's public surface.
 
-LM-family architectures (the assigned pool) are ``ModelConfig``s;
-the paper's own localization pipelines are ``EudoxusConfig``s
-(``get_eudoxus_config``).
+``repro.configs`` surfaces ONLY the paper's localization configs
+(``EudoxusConfig`` and the EDX-CAR / EDX-DRONE prototypes). The seed's
+LM-era architecture registry (``get_config``/``list_configs``/
+``ModelConfig`` and the per-arch modules) is quarantined in
+``repro.configs.lm`` — mirroring the ``distributed/sharding.py``
+quarantine — and must be imported explicitly by the leftover
+``repro.models``/``repro.launch`` stack that still uses it.
 """
 from __future__ import annotations
 
-import importlib
-from typing import Dict, List
-
-from repro.configs.base import (
-    ModelConfig, MoEConfig, SSMConfig, XLSTMConfig, ShapeConfig,
-    SHAPES, SHAPES_BY_NAME, get_shape, reduced,
+from repro.configs.eudoxus import (
+    CONFIGS as EUDOXUS_CONFIGS, EDX_CAR, EDX_DRONE, BackendConfig,
+    EudoxusConfig, FrontendConfig,
 )
 
-_ARCH_MODULES = {
-    "qwen3-14b": "qwen3_14b",
-    "stablelm-1.6b": "stablelm_1_6b",
-    "command-r-plus-104b": "command_r_plus_104b",
-    "codeqwen1.5-7b": "codeqwen15_7b",
-    "llama-3.2-vision-11b": "llama32_vision_11b",
-    "zamba2-1.2b": "zamba2_1_2b",
-    "xlstm-1.3b": "xlstm_1_3b",
-    "musicgen-large": "musicgen_large",
-    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
-    "olmoe-1b-7b": "olmoe_1b_7b",
-}
+
+def get_eudoxus_config(name: str) -> EudoxusConfig:
+    return EUDOXUS_CONFIGS[name]
 
 
-def list_configs() -> List[str]:
-    return list(_ARCH_MODULES)
-
-
-def get_config(name: str) -> ModelConfig:
-    if name not in _ARCH_MODULES:
-        raise KeyError(f"unknown arch {name!r}; available: {list_configs()}")
-    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
-    return mod.CONFIG
-
-
-def all_configs() -> Dict[str, ModelConfig]:
-    return {n: get_config(n) for n in _ARCH_MODULES}
-
-
-def get_eudoxus_config(name: str):
-    from repro.configs import eudoxus
-    return eudoxus.CONFIGS[name]
+def list_eudoxus_configs():
+    return list(EUDOXUS_CONFIGS)
 
 
 __all__ = [
-    "ModelConfig", "MoEConfig", "SSMConfig", "XLSTMConfig", "ShapeConfig",
-    "SHAPES", "SHAPES_BY_NAME", "get_shape", "reduced",
-    "list_configs", "get_config", "all_configs", "get_eudoxus_config",
+    "EudoxusConfig", "FrontendConfig", "BackendConfig",
+    "EDX_CAR", "EDX_DRONE", "EUDOXUS_CONFIGS",
+    "get_eudoxus_config", "list_eudoxus_configs",
 ]

@@ -1,0 +1,55 @@
+"""QUARANTINED seed leftover — the LM-era architecture registry.
+
+These ``ModelConfig`` architectures (qwen3, llama-3.2-vision, ...) serve
+only the seed's ``repro.models``/``repro.launch``/``repro.checkpoint``
+stack; nothing in the localization system imports them, and since the
+scenario-registry PR they are deliberately NOT re-exported from
+``repro.configs`` (mirroring the ``distributed/sharding.py``
+quarantine) — import ``repro.configs.lm`` explicitly if you really want
+them. The localization system's configs are ``repro.configs.eudoxus``
+(surfaced by the package).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, XLSTMConfig, ShapeConfig,
+    SHAPES, SHAPES_BY_NAME, get_shape, reduced,
+)
+
+_ARCH_MODULES = {
+    "qwen3-14b": "qwen3_14b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "musicgen-large": "musicgen_large",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+}
+
+
+def list_configs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {list_configs()}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in _ARCH_MODULES}
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "XLSTMConfig", "ShapeConfig",
+    "SHAPES", "SHAPES_BY_NAME", "get_shape", "reduced",
+    "list_configs", "get_config", "all_configs",
+]

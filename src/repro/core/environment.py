@@ -1,36 +1,53 @@
-"""Operating-environment taxonomy (paper Fig. 2).
+"""Operating-environment taxonomy (paper Fig. 2, generalized).
 
-Two booleans — GPS availability and pre-built map availability — induce
-four scenarios, each preferring one backend mode (paper Fig. 3):
+The paper's two booleans — GPS availability and pre-built map
+availability — induce four scenarios, each preferring one backend mode
+(paper Fig. 3):
 
     <No GPS, No Map>   indoor unknown   -> SLAM
     <No GPS, Map>      indoor known     -> Registration
     <GPS,    No Map>   outdoor unknown  -> VIO (+GPS fusion)
     <GPS,    Map>      outdoor known    -> VIO (+GPS fusion)
+
+Since the scenario-primitive registry (``core.scenarios``) the taxonomy
+is extensible: two more booleans — degraded GPS reception and an
+airborne platform — select the drone prototype (``drone_vio``) and the
+GPS-intermittent outdoor profile (``vio_degraded``), and
+``select_mode_id`` resolves AGAINST THE REGISTERED SCENARIO TABLE (each
+``ScenarioSpec`` declares an ``EnvRule``) instead of a hard-coded
+0/1/2 mapping. Mode ids are the registry's registration indices; the
+constants below pin the shipped order.
 """
 from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
 
-import jax.numpy as jnp
-
 
 class Mode(enum.Enum):
     REGISTRATION = "registration"
     VIO = "vio"
     SLAM = "slam"
+    DRONE_VIO = "drone_vio"
+    VIO_DEGRADED = "vio_degraded"
 
 
 # integer mode ids: the fused step dispatches its backend via
 # ``lax.switch(mode_id, ...)`` so one compiled program serves every
 # operating environment (and a vmapped batch can mix modes per robot).
+# These pin the shipped scenarios' registration order in
+# ``core.scenarios.SCENARIOS``; ids past the registered range lower to
+# an in-scan pass-through (and a host-side raise).
 MODE_VIO = 0
 MODE_SLAM = 1
 MODE_REGISTRATION = 2
+MODE_DRONE_VIO = 3
+MODE_VIO_DEGRADED = 4
 
 MODE_TO_ID = {Mode.VIO: MODE_VIO, Mode.SLAM: MODE_SLAM,
-              Mode.REGISTRATION: MODE_REGISTRATION}
+              Mode.REGISTRATION: MODE_REGISTRATION,
+              Mode.DRONE_VIO: MODE_DRONE_VIO,
+              Mode.VIO_DEGRADED: MODE_VIO_DEGRADED}
 ID_TO_MODE = {v: k for k, v in MODE_TO_ID.items()}
 
 
@@ -42,28 +59,45 @@ def mode_id(mode: Mode) -> int:
 class Environment:
     gps_available: bool
     map_available: bool
+    # extended Fig. 2 axes (defaults reproduce the paper's 2x2 grid)
+    gps_degraded: bool = False   # intermittent/low-quality GPS reception
+    airborne: bool = False       # drone platform (the paper's 2nd prototype)
 
     @property
     def name(self) -> str:
         a = "outdoor" if self.gps_available else "indoor"
         b = "known" if self.map_available else "unknown"
-        return f"{a}-{b}"
+        tags = (["degraded"] if self.gps_degraded else []) \
+            + (["airborne"] if self.airborne else [])
+        return "-".join([a, b] + tags)
 
 
 def select_mode(env: Environment) -> Mode:
-    if env.gps_available:
-        return Mode.VIO            # outdoor: VIO+GPS Pareto-dominates (Fig.3c/d)
-    if env.map_available:
-        return Mode.REGISTRATION   # indoor known: best error at higher FPS (Fig.3b)
-    return Mode.SLAM               # indoor unknown: lowest error (Fig.3a)
+    """Resolve the environment to the preferred scenario's ``Mode``
+    member (paper Fig. 3 for the 2x2 grid; the registered ``EnvRule``
+    table for the extended axes). Scenarios registered without a Mode
+    member resolve through ``select_mode_id`` / the scenario table
+    directly."""
+    from repro.core import scenarios
+    tab = scenarios.table()
+    mid = tab.resolve_env(env)
+    try:
+        return Mode(tab.specs[mid].name)
+    except ValueError:
+        raise ValueError(
+            f"scenario {tab.specs[mid].name!r} has no Mode member; use "
+            "scenarios.table().resolve_env(env) for custom scenarios"
+        ) from None
 
 
-def select_mode_id(gps_available, map_available) -> jnp.ndarray:
-    """Traceable Fig. 2 taxonomy: same decision as ``select_mode`` on
-    int32 ids. Accepts scalars or (B,) boolean arrays, so a vmapped fleet
-    resolves each robot's backend inside the batched dispatch."""
-    gps = jnp.asarray(gps_available, bool)
-    mp = jnp.asarray(map_available, bool)
-    return jnp.where(gps, MODE_VIO,
-                     jnp.where(mp, MODE_REGISTRATION, MODE_SLAM)
-                     ).astype(jnp.int32)
+def select_mode_id(gps_available, map_available, gps_degraded=False,
+                   airborne=False):
+    """Traceable taxonomy: resolves the environment booleans against the
+    registered scenario table's ``EnvRule``s on int32 ids. Accepts
+    scalars or (B,) boolean arrays, so a vmapped fleet resolves each
+    robot's backend inside the batched dispatch. With the extended axes
+    left False this reproduces the paper's 2x2 mapping exactly."""
+    from repro.core import scenarios
+    return scenarios.table().resolve_mode_id(
+        gps_available, map_available, gps_degraded=gps_degraded,
+        airborne=airborne)

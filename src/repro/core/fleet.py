@@ -43,10 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.eudoxus import EudoxusConfig
+from repro.core import scenarios as scen
 from repro.core import scheduler as sched, tracks
 from repro.core.backend import tracking
-from repro.core.environment import (MODE_REGISTRATION, MODE_SLAM, MODE_VIO,
-                                    select_mode_id)
+from repro.core.environment import MODE_VIO, select_mode_id
 from repro.core.localizer import (Localizer, LocalizerState, TracedStep,
                                   _ChunkStager, host_kalman_update,
                                   init_localizer_state, resolve_marg_kernel)
@@ -99,6 +99,10 @@ class FleetLocalizer:
         self._pad = self.padded - batch
         self.window = window or cfg.backend.msckf_window
         self.scheduler = scheduler or sched.LatencyModels()
+        # frozen scenario-registry snapshot this fleet compiles against
+        # (mode ids are indices into it; scenarios registered AFTER
+        # construction need a new FleetLocalizer)
+        self.scenarios = scen.table()
         self.host_kalman_fallback = host_kalman_fallback
         self.host_kalman_fixes = 0   # chunk-boundary host updates applied
         self.dispatch_count = 0
@@ -120,13 +124,15 @@ class FleetLocalizer:
         self._robots = {}
         # batch over state + per-frame inputs; the offload flags and IMU
         # dt are fleet-wide scalars
-        self._traced = TracedStep(cfg, cam, self.vocab)
+        self._traced = TracedStep(cfg, cam, self.vocab,
+                                  scenarios=self.scenarios)
         vstep = jax.vmap(self._traced,
                          in_axes=(0, 0, 0, 0, 0, 0, 0, None, None))
         # chunk x fleet: lax.scan over K frames of the vmapped transition
         # — one dispatch advances B robots K frames (steady state: one
         # trace per chunk size); staged chunk inputs are donated back
-        self._traced_chunk = TracedChunk(cfg, cam, self.vocab, fleet=True)
+        self._traced_chunk = TracedChunk(cfg, cam, self.vocab, fleet=True,
+                                         scenarios=self.scenarios)
         if self.mesh is None:
             self._fused_fleet = jax.jit(vstep, donate_argnums=(0,))
             self._fused_fleet_chunk = jax.jit(self._traced_chunk,
@@ -231,7 +237,7 @@ class FleetLocalizer:
         the mesh width happens here (pad robots see NaN GPS and zero
         frames, and are never read back).
         """
-        mode_np = np.asarray(mode_ids, np.int32)
+        mode_np = self.scenarios.validate_ids(mode_ids)
         args = (self._pad0(imgs_l, np.float32),
                 self._pad0(imgs_r, np.float32),
                 self._pad0(imu_accel, np.float32),
@@ -242,9 +248,8 @@ class FleetLocalizer:
             args = self._put(args, self._frame_in_sharding)
         states, outs = self._fused_fleet(
             states, *args,
-            flags_from_plan(
-                self._offload_plan,
-                slam_active=bool((mode_np == MODE_SLAM).any())),
+            flags_from_plan(self._offload_plan, modes=mode_np,
+                            table=self.scenarios),
             jnp.float32(dt_imu))
         self.dispatch_count += 1
         states = self._host_map_stage(states, outs, mode_np)
@@ -252,21 +257,23 @@ class FleetLocalizer:
 
     def _host_map_stage(self, states: LocalizerState, outs: FrameOutputs,
                         mode_ids: np.ndarray) -> LocalizerState:
-        """Per-robot SLAM/Registration map work after the batched
-        dispatch (no-op for an all-VIO fleet; pad robots are VIO by
-        construction and never enter)."""
-        slam = mode_ids == MODE_SLAM
+        """Per-robot host map work after the batched dispatch, driven by
+        each robot's scenario spec (``host_stage``): no-op for a fleet
+        of host-stage-free scenarios (VIO and its variants; pad robots
+        are VIO by construction and never enter)."""
+        tab = self.scenarios
+        slam = tab.mask(mode_ids, tab.host_stage_ids("slam"))
         hist_np = np.asarray(outs.hist) if slam.any() else None
         if slam.any():
             self.ba_runs += int(np.asarray(outs.ba_ran)
                                 [:len(mode_ids)][slam].sum())
-        for b in np.nonzero(mode_ids != MODE_VIO)[0]:
+        for b in np.nonzero(tab.mask(mode_ids, tab.host_stage_ids()))[0]:
             st_b = jax.tree_util.tree_map(lambda x: x[b], states)
             fr_b = jax.tree_util.tree_map(lambda x: x[b], outs.fr)
-            if mode_ids[b] == MODE_SLAM:
+            if tab.specs[int(mode_ids[b])].host_stage == "slam":
                 self.robot_host(b)._slam_step(st_b, fr_b,
                                               hist=hist_np[b])
-            else:
+            else:                       # "registration"
                 new_b = self.robot_host(b)._registration_step(st_b, fr_b)
                 if new_b is not st_b:   # registration fused a pose fix
                     states = states._replace(filt=jax.tree_util.tree_map(
@@ -297,7 +304,7 @@ class FleetLocalizer:
         when per-frame registration feedback matters.
         """
         K = np.asarray(imgs_l).shape[0]
-        mode_np = np.asarray(mode_ids, np.int32)
+        mode_np = self.scenarios.validate_ids(mode_ids)
         act, n_real = self._active_mask(K, active)
         base_idx = np.asarray(states.frame_idx)      # pre-chunk, per robot
 
@@ -307,14 +314,14 @@ class FleetLocalizer:
         plan = self._chunk_plan(n_real)
         states, outs = self._fused_fleet_chunk(
             states, inputs,
-            flags_from_plan(plan,
-                            slam_active=bool((mode_np == MODE_SLAM).any())),
+            flags_from_plan(plan, modes=mode_np, table=self.scenarios),
             jnp.float32(dt_imu))
         self.dispatch_count += 1
 
         if self.host_kalman_fallback and not plan.kalman_gain:
             states = self._host_kalman_fix(states, outs, act)
-        if (mode_np != MODE_VIO).any():
+        if self.scenarios.mask(mode_np,
+                               self.scenarios.host_stage_ids()).any():
             states = self._host_chunk_stage(states, outs, mode_np, act,
                                             base_idx)
         return states, outs
@@ -395,13 +402,15 @@ class FleetLocalizer:
         """
         T = np.asarray(imgs_l).shape[0]
         chunk = max(int(chunk), 1)
-        mode_np = np.asarray(mode_ids, np.int32)
+        mode_np = self.scenarios.validate_ids(mode_ids)
         segments = [list(range(s, min(s + chunk, T)))
                     for s in range(0, T, chunk)]
         if not segments:                 # T == 0: nothing to localize
             return states
-        slam_active = bool((mode_np == MODE_SLAM).any())
-        has_reg = bool((mode_np == MODE_REGISTRATION).any())
+        tab = self.scenarios
+        slam_active = bool(tab.mask(mode_np,
+                                    tab.host_stage_ids("slam")).any())
+        has_flush = bool(tab.mask(mode_np, tab.chunk_flush_ids()).any())
         dt = jnp.float32(dt_imu)
         base_idx = np.asarray(states.frame_idx)
 
@@ -441,11 +450,11 @@ class FleetLocalizer:
                 plan = seg_plan(seg)
                 states, outs = self._fused_fleet_chunk(
                     states, inputs,
-                    flags_from_plan(plan, slam_active=slam_active), dt)
+                    flags_from_plan(plan, modes=mode_np, table=tab), dt)
                 self.dispatch_count += 1
                 if self.host_kalman_fallback and not plan.kalman_gain:
                     states = self._host_kalman_fix(states, outs, act)
-                if (mode_np != MODE_VIO).any():
+                if tab.mask(mode_np, tab.host_stage_ids()).any():
                     states = self._host_chunk_stage(
                         states, outs, mode_np, act,
                         base_idx + np.int32(seg[0]))
@@ -461,7 +470,7 @@ class FleetLocalizer:
             plan = seg_plan(seg)
             states, outs = self._fused_fleet_chunk(
                 states, staged.inputs,
-                flags_from_plan(plan, slam_active=slam_active), dt)
+                flags_from_plan(plan, modes=mode_np, table=tab), dt)
             staged.consumed = True
             self.dispatch_count += 1
             if si + 1 < len(segments):
@@ -475,10 +484,10 @@ class FleetLocalizer:
             if pending is not None:
                 self._slam_replay(*pending)
                 pending = None
-            if has_reg:
-                # per-robot ragged flush: sync ONLY the Registration
-                # robots' last-active-frame slices before the next
-                # dispatch; everything else stays pipelined
+            if has_flush:
+                # per-robot ragged flush: sync ONLY the chunk-flush
+                # (Registration) robots' last-active-frame slices before
+                # the next dispatch; everything else stays pipelined
                 states = self._registration_fix(states, outs, mode_np, act)
             if slam_active:
                 pending = (outs, mode_np, act, base_idx + np.int32(seg[0]))
@@ -498,10 +507,12 @@ class FleetLocalizer:
         return self._registration_fix(states, outs, mode_np, act)
 
     def _slam_replay(self, outs, mode_np, act, base_idx) -> None:
-        """Ordered per-frame host replay for SLAM robots: append-only
-        bookkeeping from scan outputs — no device work, no ``states``
-        dependency, so the overlap pipeline can run it a chunk late."""
-        slam = mode_np == MODE_SLAM
+        """Ordered per-frame host replay for SLAM-host-stage robots:
+        append-only bookkeeping from scan outputs — no device work, no
+        ``states`` dependency, so the overlap pipeline can run it a
+        chunk late."""
+        slam = self.scenarios.mask(mode_np,
+                                   self.scenarios.host_stage_ids("slam"))
         if not slam.any():
             return
         K = act.shape[0]
@@ -529,7 +540,8 @@ class FleetLocalizer:
         slice (ragged across robots), runs place recognition + PnP on
         the host, and fuses the fix back into the batched filter state.
         ``states`` must be the live post-chunk state."""
-        reg = np.nonzero(mode_np == MODE_REGISTRATION)[0]
+        reg = np.nonzero(self.scenarios.mask(
+            mode_np, self.scenarios.chunk_flush_ids()))[0]
         if reg.size == 0:
             return states
         assert states is not None, "registration drain deferred"
@@ -583,10 +595,13 @@ class FleetLocalizer:
         return self._traced_chunk.traces
 
     def step_envs(self, states, imgs_l, imgs_r, imu_accel, imu_gyro, gps,
-                  gps_available, map_available, dt_imu: float):
-        """Convenience wrapper taking the Fig. 2 environment booleans
-        ((B,) arrays) instead of pre-resolved mode ids."""
-        mode_ids = select_mode_id(gps_available, map_available)
+                  gps_available, map_available, dt_imu: float,
+                  gps_degraded=False, airborne=False):
+        """Convenience wrapper taking the (extended) Fig. 2 environment
+        booleans ((B,) arrays) instead of pre-resolved mode ids."""
+        mode_ids = select_mode_id(gps_available, map_available,
+                                  gps_degraded=gps_degraded,
+                                  airborne=airborne)
         gps = np.asarray(gps, np.float32).copy()
         gps[~np.asarray(gps_available, bool)] = np.nan
         return self.step(states, imgs_l, imgs_r, imu_accel, imu_gyro, gps,

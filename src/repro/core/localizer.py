@@ -45,7 +45,6 @@ baseline the benchmarks compare against.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Union
@@ -55,9 +54,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.eudoxus import EudoxusConfig
+from repro.core import scenarios as scen
 from repro.core import scheduler as sched, tracks
 from repro.core.backend import fusion, mapping, msckf, tracking
-from repro.core.environment import Environment, Mode, mode_id, select_mode
+from repro.core.environment import Environment, Mode, select_mode
 from repro.core.frontend import fast
 from repro.core.frontend.pipeline import (FrontendResult,
                                           empty_prev_features, run_frontend)
@@ -88,7 +88,7 @@ def resolve_marg_kernel(plan: sched.OffloadPlan,
     a = np.empty((l, 3, 3), np.float32)
     b = np.empty((l, 3), np.float32)
     use_pallas = kreg.decide_path("marg_schur", g, a, b) == "pallas"
-    return dataclasses.replace(plan, marg_schur=use_pallas)
+    return plan.replace(marg_schur=use_pallas)
 
 
 def np_quat_to_rot(q: np.ndarray) -> np.ndarray:
@@ -205,6 +205,9 @@ class Localizer:
         self.host_kalman_fixes = 0   # chunk-boundary host updates applied
         self.vocab = (vocab if vocab is not None else
                       jnp.asarray(tracking.make_vocab(cfg.backend.bow_vocab_size)))
+        # frozen scenario-registry snapshot this localizer compiles —
+        # scenarios registered AFTER construction need a new Localizer
+        self.scenarios = scen.table()
         self.variation = {m: sched.VariationTracker() for m in Mode}
         self.map: Optional[MapData] = None
         self._slam_keyframes: List[Dict] = []
@@ -219,9 +222,11 @@ class Localizer:
         # buffers. The chunk program is traced per distinct K; chunk
         # dispatches also donate their staged inputs (the ring slot is
         # handed back to the runtime once consumed).
-        self._traced = TracedStep(cfg, cam, self.vocab)
+        self._traced = TracedStep(cfg, cam, self.vocab,
+                                  scenarios=self.scenarios)
         self._fused_step = jax.jit(self._traced, donate_argnums=(0,))
-        self._traced_chunk = TracedChunk(cfg, cam, self.vocab)
+        self._traced_chunk = TracedChunk(cfg, cam, self.vocab,
+                                         scenarios=self.scenarios)
         self._fused_chunk = jax.jit(self._traced_chunk,
                                     donate_argnums=(0, 1))
         # seed-style kernel-by-kernel dispatches (step_reference + tests)
@@ -279,13 +284,42 @@ class Localizer:
         return self._offload_plan
 
     # ------------------------------------------------------------------
+    def _tracker(self, spec: scen.ScenarioSpec) -> sched.VariationTracker:
+        """Variation tracker for a scenario: keyed by the ``Mode``
+        member when one exists (the public benchmark surface), by the
+        spec name for user-registered scenarios."""
+        try:
+            key = Mode(spec.name)
+        except ValueError:
+            key = spec.name
+        if key not in self.variation:
+            self.variation[key] = sched.VariationTracker()
+        return self.variation[key]
+
+    def _host_stage(self, state: LocalizerState, spec: scen.ScenarioSpec,
+                    outs) -> LocalizerState:
+        """Per-frame host stage declared by the spec: dynamically-sized
+        map bookkeeping (scenarios without a host stage — VIO and its
+        variants — are fully served by the dispatch; any in-scan
+        BA/marginalization already ran inside it)."""
+        if spec.host_stage == "slam":
+            self.ba_runs += int(np.asarray(outs.ba_ran))
+            return self._slam_step(state, outs.fr,
+                                   hist=np.asarray(outs.hist))
+        if spec.host_stage == "registration":
+            return self._registration_step(state, outs.fr)
+        return state
+
     def step(self, state: LocalizerState, img_l, img_r, imu_accel, imu_gyro,
              gps, env: Environment, dt_imu: float) -> LocalizerState:
-        """One frame through the fused path: a single jitted dispatch in
-        VIO mode. imu_accel/gyro must cover the interval ENDING at this
-        frame's timestamp (clone/observation alignment)."""
+        """One frame through the fused path: a single jitted dispatch.
+        The environment resolves to a registered scenario through the
+        spec table's ``EnvRule``s. imu_accel/gyro must cover the
+        interval ENDING at this frame's timestamp (clone/observation
+        alignment)."""
         t0 = time.perf_counter()
-        mode = select_mode(env)
+        mid = self.scenarios.resolve_env(env)
+        spec = self.scenarios.specs[mid]
         gps_arr = (np.full(3, np.nan, np.float32) if gps is None
                    else np.asarray(gps, np.float32))
         plan = self._offload_plan
@@ -295,22 +329,14 @@ class Localizer:
             jnp.asarray(img_r, jnp.float32),
             jnp.asarray(imu_accel, jnp.float32),
             jnp.asarray(imu_gyro, jnp.float32),
-            jnp.asarray(gps_arr), jnp.int32(mode_id(mode)),
-            flags_from_plan(plan, slam_active=mode == Mode.SLAM),
+            jnp.asarray(gps_arr), jnp.int32(mid),
+            flags_from_plan(plan, modes=(mid,), table=self.scenarios),
             jnp.float32(dt_imu))
         self.dispatch_count += 1
 
-        # host stage: dynamically-sized map bookkeeping (SLAM/Registration;
-        # SLAM's BA/marginalization already ran inside the dispatch)
-        if mode == Mode.SLAM:
-            self.ba_runs += int(np.asarray(outs.ba_ran))
-            state = self._slam_step(state, outs.fr,
-                                    hist=np.asarray(outs.hist))
-        elif mode == Mode.REGISTRATION:
-            state = self._registration_step(state, outs.fr)
-
+        state = self._host_stage(state, spec, outs)
         self.trajectory.append(np.asarray(state.filt.p))
-        self.variation[mode].add(time.perf_counter() - t0)
+        self._tracker(spec).add(time.perf_counter() - t0)
         return state
 
     # ------------------------------------------------------------------
@@ -348,7 +374,13 @@ class Localizer:
             envs = [envs] * T
         assert len(envs) == T, (len(envs), T)
         chunk = max(int(chunk), 1)
-        modes = [select_mode(e) for e in envs]
+        # resolve each frame's scenario through the registry (and
+        # validate the resolved ids host-side — resolution can only
+        # produce registered ids, but the guard keeps a stale snapshot
+        # from slipping an unknown id into the dispatch)
+        mids = [self.scenarios.resolve_env(e) for e in envs]
+        self.scenarios.validate_ids(mids)
+        specs = [self.scenarios.specs[m] for m in mids]
 
         gps_seq = np.full((T, 3), np.nan, np.float32)
         if gps is not None:
@@ -357,13 +389,14 @@ class Localizer:
                 if e.gps_available:
                     gps_seq[i] = g[i]
 
-        # segment the sequence: flush at K frames or after a Registration
-        # frame (its host-stage feedback must precede the next frame)
+        # segment the sequence: flush at K frames or after a chunk-flush
+        # frame (Registration: its host-stage feedback must precede the
+        # next frame)
         segments: List[List[int]] = []
         cur: List[int] = []
         for i in range(T):
             cur.append(i)
-            if len(cur) == chunk or modes[i] == Mode.REGISTRATION:
+            if len(cur) == chunk or specs[i].chunk_flush:
                 segments.append(cur)
                 cur = []
         if cur:
@@ -375,8 +408,8 @@ class Localizer:
         # in-dispatch decisions must not leak into later per-frame
         # step() calls
         plan = self._plan(chunk)
-        flags = flags_from_plan(
-            plan, slam_active=any(m == Mode.SLAM for m in modes))
+        flags = flags_from_plan(plan, modes=set(mids),
+                                table=self.scenarios)
         # chunk-boundary host Kalman fallback: only live at the
         # offload_kalman=False operating point — a feedback path, so it
         # (like Registration) must land before the next dispatch
@@ -399,19 +432,19 @@ class Localizer:
             # chunk is touched
             for seg in segments:
                 inputs = jax.device_put(
-                    self._build_chunk_reference(seg, seq, modes, chunk))
+                    self._build_chunk_reference(seg, seq, mids, chunk))
                 state, outs = self._fused_chunk(state, inputs, flags, dt)
                 self.dispatch_count += 1
                 if kalman_fb:
                     state = self._host_kalman_fix(state, outs, len(seg))
-                state = self._drain_chunk(state, outs, seg, modes,
+                state = self._drain_chunk(state, outs, seg, specs,
                                           base0 + seg[0], mark)
             return state
 
         # --- async double-buffered pipeline ---
         stager = _ChunkStager()
         self.last_stager = stager
-        staged = stager.stage(self._build_chunk(segments[0], seq, modes,
+        staged = stager.stage(self._build_chunk(segments[0], seq, mids,
                                                 chunk))
         pending = None        # one completed-but-undrained chunk
         for si, seg in enumerate(segments):
@@ -421,7 +454,7 @@ class Localizer:
             if si + 1 < len(segments):
                 # overlapped with chunk N's device execution
                 staged = stager.stage(self._build_chunk(
-                    segments[si + 1], seq, modes, chunk))
+                    segments[si + 1], seq, mids, chunk))
             if kalman_fb:
                 # feedback: the boundary update must reach the next
                 # dispatch — an inherent pipeline bubble, taken only
@@ -430,18 +463,18 @@ class Localizer:
             if pending is not None:
                 self._drain_chunk(None, *pending)
                 pending = None
-            if modes[seg[-1]] == Mode.REGISTRATION:
+            if specs[seg[-1]].chunk_flush:
                 # the host pose fix must land before the next dispatch:
                 # drain now (a pipeline bubble, inherent to feedback)
-                state = self._drain_chunk(state, outs, seg, modes,
+                state = self._drain_chunk(state, outs, seg, specs,
                                           base0 + seg[0], mark)
             else:
-                pending = (outs, seg, modes, base0 + seg[0], mark)
+                pending = (outs, seg, specs, base0 + seg[0], mark)
         if pending is not None:
             self._drain_chunk(None, *pending)
         return state
 
-    def _build_chunk(self, idxs: List[int], seq, modes: List[Mode],
+    def _build_chunk(self, idxs: List[int], seq, mids: List[int],
                      chunk: int) -> FrameInputs:
         """Pre-stack one padded K-frame chunk as fresh host arrays (the
         staging half of the pipeline). Buffers are written once and
@@ -467,13 +500,13 @@ class Localizer:
             gyro=take(imu_gyro, np.float32, (ipf, 3)),
             gps=take(gps_seq, np.float32, (3,)),
             mode=np.concatenate(
-                [np.asarray([mode_id(modes[i]) for i in idxs], np.int32),
+                [np.asarray([mids[i] for i in idxs], np.int32),
                  np.zeros(pad, np.int32)]),
             active=np.concatenate(
                 [np.ones(n, bool), np.zeros(pad, bool)]))
 
     def _build_chunk_reference(self, idxs: List[int], seq,
-                               modes: List[Mode],
+                               mids: List[int],
                                chunk: int) -> FrameInputs:
         """PR 2's staging, preserved for the synchronous baseline: stack
         each frame individually through a Python loop (the host cost the
@@ -498,7 +531,7 @@ class Localizer:
             gyro=stack(imu_gyro, np.float32, (ipf, 3)),
             gps=stack(gps_seq, np.float32, (3,)),
             mode=np.concatenate(
-                [np.asarray([mode_id(modes[i]) for i in idxs], np.int32),
+                [np.asarray([mids[i] for i in idxs], np.int32),
                  np.zeros(pad, np.int32)]),
             active=np.concatenate(
                 [np.ones(n, bool), np.zeros(pad, bool)]))
@@ -527,49 +560,50 @@ class Localizer:
 
     def _drain_chunk(self, state: Optional[LocalizerState],
                      outs: FrameOutputs, idxs: List[int],
-                     modes: List[Mode], abs_base: int,
+                     specs: List[scen.ScenarioSpec], abs_base: int,
                      mark: List[float]) -> Optional[LocalizerState]:
         """Ordered host-stage drain of one completed chunk. Blocks only
         on the outputs it reads: poses always; frontend leaves + BoW
-        histograms only when the chunk held SLAM/Registration frames.
-        SLAM bookkeeping is append-only replay (no device work — BA and
-        marginalization already ran inside the scan); Registration
-        applies its pose fix to ``state`` (deferred drains pass None:
-        their chunks contain no Registration frame by construction)."""
+        histograms only when the chunk held frames whose scenario
+        declares a host stage. SLAM bookkeeping is append-only replay
+        (no device work — BA and marginalization already ran inside the
+        scan); Registration applies its pose fix to ``state`` (deferred
+        drains pass None: their chunks contain no chunk-flush frame by
+        construction)."""
         n = len(idxs)
         outs_np_p = np.asarray(outs.p)
         outs_np_q = np.asarray(outs.q)
         # one device->host transfer for the whole chunk's frontend
         # outputs (per-frame per-leaf slicing would sync K x leaves
-        # times); skipped entirely for all-VIO chunks
-        non_vio = any(modes[i] != Mode.VIO for i in idxs)
-        fr_np = jax.device_get(outs.fr) if non_vio else None
-        hist_np = np.asarray(outs.hist) if non_vio else None
+        # times); skipped entirely for chunks with no host stage
+        hosted = any(specs[i].host_stage is not None for i in idxs)
+        fr_np = jax.device_get(outs.fr) if hosted else None
+        hist_np = np.asarray(outs.hist) if hosted else None
         for j, i in enumerate(idxs):
-            mode = modes[i]
-            if mode == Mode.SLAM:
+            stage = specs[i].host_stage
+            if stage == "slam":
                 fr_j = jax.tree_util.tree_map(lambda x: x[j], fr_np)
                 self._slam_frame(outs_np_q[j], outs_np_p[j],
                                  abs_base + j, fr_j, hist=hist_np[j])
                 self.trajectory.append(outs_np_p[j].copy())
-            elif mode == Mode.REGISTRATION:
-                # chunk-terminal by construction: the post-chunk state IS
-                # this frame's state, so the pose fix lands before the
-                # next chunk begins
-                assert j == len(idxs) - 1, "registration frame mid-chunk"
+            elif stage == "registration":
+                # chunk-terminal by construction (chunk_flush): the
+                # post-chunk state IS this frame's state, so the pose
+                # fix lands before the next chunk begins
+                assert j == len(idxs) - 1, "chunk-flush frame mid-chunk"
                 assert state is not None, "registration drain deferred"
                 fr_j = jax.tree_util.tree_map(lambda x: x[j], fr_np)
                 state = self._registration_step(state, fr_j)
                 self.trajectory.append(np.asarray(state.filt.p))
             else:
                 self.trajectory.append(outs_np_p[j].copy())
-        if non_vio:
+        if hosted:
             self.ba_runs += int(np.asarray(outs.ba_ran).sum())
         now = time.perf_counter()
         per_frame = (now - mark[0]) / n
         mark[0] = now
         for i in idxs:
-            self.variation[modes[i]].add(per_frame)
+            self._tracker(specs[i]).add(per_frame)
         return state
 
     # ------------------------------------------------------------------
@@ -627,9 +661,23 @@ class Localizer:
                     fx=self.cam.fx, fy=self.cam.fy,
                     cx=self.cam.cx, cy=self.cam.cy)
             vd_np[use, :-1] = False
-        if (mode == Mode.VIO and gps is not None
+        # fuse GPS exactly when the resolved scenario's pipeline declares
+        # the gps_fusion primitive (at its declared sigma), so this stays
+        # a valid equivalence oracle for VIO_DEGRADED and user-registered
+        # GPS scenarios, not just legacy VIO
+        spec = self.scenarios.specs[self.scenarios.resolve_env(env)]
+        gps_use = next((u for u in spec.pipeline if u.name == "gps_fusion"),
+                       None)
+        if (gps_use is not None and gps is not None
                 and np.all(np.isfinite(gps))):
-            filt, _ = self._gps_update(filt, jnp.asarray(gps, jnp.float32))
+            sigma = gps_use.param_dict().get("sigma_gps")
+            if sigma is None:
+                filt, _ = self._gps_update(filt,
+                                           jnp.asarray(gps, jnp.float32))
+            else:
+                filt, _ = self._gps_update(filt,
+                                           jnp.asarray(gps, jnp.float32),
+                                           sigma_gps=float(sigma))
 
         state = LocalizerState(
             filt=filt, tracks_uv=jnp.asarray(uv_np),

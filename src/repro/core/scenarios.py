@@ -1,0 +1,432 @@
+"""Scenario registry: operating modes as declarative primitive pipelines.
+
+A ``ScenarioSpec`` declares an operating scenario as an ordered
+composition of the fundamental primitives in ``core.primitives`` plus
+per-scenario knobs (clone-window length, IMU rate, BA cadence) and the
+host-stage contract the orchestrators honour. Scenarios register into
+the extensible ``SCENARIOS`` table; ``core.step`` lowers a frozen
+snapshot of that table (``ScenarioTable``) into the single compiled scan
+body — the ``lax.switch`` branch list, the gated heavy blocks and the
+per-scenario knob lookup tables are all built from the specs, so adding
+a scenario never touches the hot path, and one compiled chunk program
+still serves every registered scenario (fleets mix scenarios per robot
+through the int mode id).
+
+The mode id IS the registration index: the shipped specs register in
+the order that reproduces the pre-registry constants
+(``environment.MODE_VIO == 0`` etc.), and out-of-range ids lower to a
+pass-through branch (plus a host-side ``validate_ids`` raise) instead of
+silently clamping onto a wrong backend.
+
+Registering a new scenario (see README "Scenario registry"):
+
+    from repro.core import scenarios
+    spec = scenarios.ScenarioSpec(
+        name="vio_tight",
+        pipeline=scenarios.SPINE + (scenarios.use("gps_fusion",
+                                                  sigma_gps=0.02),),
+        # priority must EXCEED the shipped vio rule (20) for gps
+        # environments to resolve to the new profile — the
+        # highest-priority matching rule wins
+        env_rule=scenarios.EnvRule(gps=True, priority=25))
+    mode_id = scenarios.register_scenario(spec)
+    # Localizer / FleetLocalizer built AFTER registration compile it in.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import primitives as prim
+
+
+@dataclass(frozen=True)
+class PrimitiveUse:
+    """One pipeline entry: a primitive plus its per-scenario params
+    (baked into the branch for switch primitives, table-resolved for
+    gated ones)."""
+    name: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def param_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+
+def use(name: str, **params) -> PrimitiveUse:
+    """Declare a pipeline entry: ``use("gps_fusion", sigma_gps=0.25)``."""
+    return PrimitiveUse(name, tuple(sorted(params.items())))
+
+
+@dataclass(frozen=True)
+class EnvRule:
+    """Declarative Fig. 2-style environment predicate: a conjunction of
+    the environment booleans this scenario claims (None = don't care).
+    ``select_mode_id`` resolves rules lowest-priority-first, so the
+    highest-priority matching rule wins; a priority-0 always-match rule
+    is the fallback."""
+    gps: Optional[bool] = None
+    map: Optional[bool] = None
+    degraded: Optional[bool] = None
+    airborne: Optional[bool] = None
+    priority: int = 0
+
+    def conditions(self) -> Tuple[Tuple[str, bool], ...]:
+        return tuple((k, v) for k, v in (
+            ("gps", self.gps), ("map", self.map),
+            ("degraded", self.degraded), ("airborne", self.airborne))
+            if v is not None)
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One operating scenario: an ordered primitive composition plus the
+    knobs and host-stage contract that make it runnable end-to-end.
+
+    ``window``/``imu_rate_hz`` are shape/rate knobs applied when a
+    config is derived for the scenario (``apply_spec``) — inside a mixed
+    fleet the shared config governs shapes. ``ba_every`` is the in-scan
+    BA cadence (table-resolved per mode id, None = config default).
+    ``host_stage`` names the per-frame host work the orchestrators run
+    ("slam" = append-only map bookkeeping replayed from scan outputs,
+    "registration" = place recognition + PnP pose fix); ``chunk_flush``
+    marks host feedback that must land before the next dispatch
+    (registration's pose fix)."""
+    name: str
+    pipeline: Tuple[PrimitiveUse, ...]
+    window: Optional[int] = None
+    imu_rate_hz: Optional[int] = None
+    ba_every: Optional[int] = None
+    host_stage: Optional[str] = None
+    chunk_flush: bool = False
+    env_rule: Optional[EnvRule] = None
+    description: str = ""
+
+
+# the shared mode-independent prefix every scenario must declare — it
+# defines the state shapes one compiled program threads for the fleet
+SPINE: Tuple[PrimitiveUse, ...] = (
+    use("frontend"), use("track_ring"), use("imu_propagate"),
+    use("msckf_update"))
+
+# host stages the orchestrators implement (Localizer._host_stage /
+# FleetLocalizer._host_map_stage dispatch on these exact names)
+HOST_STAGES = (None, "slam", "registration")
+
+
+# --------------------------------------------------------------------------
+# the registry (name -> spec, id = registration index)
+# --------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, ScenarioSpec] = {}
+_REVISION = [0]
+_TABLE_CACHE: Dict[int, "ScenarioTable"] = {}
+
+
+def register_scenario(spec: ScenarioSpec) -> int:
+    """Register ``spec`` and return its mode id (the registration
+    index). Validates the pipeline against the primitive registry and
+    the shared-spine contract immediately, so a bad spec fails here and
+    not inside a jit trace."""
+    if spec.name in SCENARIOS:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    if spec.host_stage not in HOST_STAGES:
+        raise ValueError(
+            f"scenario {spec.name!r}: unknown host_stage "
+            f"{spec.host_stage!r}; the orchestrators implement "
+            f"{[s for s in HOST_STAGES if s]} (None = no host stage)")
+    _validate_pipeline(spec, list(SCENARIOS.values()))
+    SCENARIOS[spec.name] = spec
+    _REVISION[0] += 1
+    return len(SCENARIOS) - 1
+
+
+def unregister_scenario(name: str) -> None:
+    """Remove the MOST RECENTLY registered scenario (ids are positional,
+    so only tail removal keeps every other scenario's compiled id
+    stable). Test/bench hygiene helper."""
+    if not SCENARIOS:
+        raise KeyError(name)
+    last = next(reversed(SCENARIOS))
+    if name != last:
+        raise ValueError(
+            f"only the last-registered scenario ({last!r}) can be "
+            f"unregistered; {name!r} would shift later mode ids")
+    del SCENARIOS[name]
+    _REVISION[0] += 1
+
+
+def _validate_pipeline(spec: ScenarioSpec,
+                       others: Sequence[ScenarioSpec]) -> None:
+    placements = []
+    for u in spec.pipeline:
+        p = prim.get_primitive(u.name)
+        placements.append(p.placement)
+    # spine prefix, then switch/gated only — and the spine must be
+    # IDENTICAL across scenarios (same primitives, params, order): it
+    # runs unconditionally and defines the shared state shapes
+    n_spine = 0
+    for pl in placements:
+        if pl != "spine":
+            break
+        n_spine += 1
+    if any(pl == "spine" for pl in placements[n_spine:]):
+        raise ValueError(
+            f"scenario {spec.name!r}: spine primitives must form the "
+            "pipeline prefix (spine work is mode-independent)")
+    sw_seen_gated = False
+    for pl in placements[n_spine:]:
+        if pl == "gated":
+            sw_seen_gated = True
+        elif sw_seen_gated:
+            raise ValueError(
+                f"scenario {spec.name!r}: switch primitives must precede "
+                "gated primitives (the mode dispatch runs before the "
+                "gated heavy blocks)")
+    if others:
+        ref = others[0].pipeline
+        ref_spine = tuple(u for u in ref
+                          if prim.get_primitive(u.name).placement == "spine")
+        if tuple(spec.pipeline[:n_spine]) != ref_spine:
+            raise ValueError(
+                f"scenario {spec.name!r}: spine prefix "
+                f"{[u.name for u in spec.pipeline[:n_spine]]} differs from "
+                f"the registered spine {[u.name for u in ref_spine]} — all "
+                "scenarios share one spine (it defines the state shapes "
+                "of the single compiled program)")
+
+
+# --------------------------------------------------------------------------
+# frozen lowering snapshot
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GatedUse:
+    """Lowering record for one gated primitive across the table: which
+    scenarios use it (ids/names) and their per-scenario params."""
+    name: str
+    writes: Tuple[str, ...]
+    scenario_ids: Tuple[int, ...]
+    scenario_names: Tuple[str, ...]
+    params_by_id: Tuple[Optional[Tuple[Tuple[str, Any], ...]], ...]
+
+
+@dataclass(frozen=True)
+class ScenarioTable:
+    """Immutable snapshot of the registry that a compiled program (and
+    the localizer that owns it) binds to: registering more scenarios
+    later never changes an existing trace."""
+    specs: Tuple[ScenarioSpec, ...]
+    spine: Tuple[PrimitiveUse, ...]
+    switch_uses: Tuple[Tuple[PrimitiveUse, ...], ...]  # per scenario
+    gated: Tuple[GatedUse, ...]                        # global order
+    gate_keys: Tuple[str, ...]
+
+    # -- identity ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.specs)
+
+    def id_of(self, name: str) -> int:
+        return self.names.index(name)
+
+    def spec_for_id(self, mode_id: int) -> ScenarioSpec:
+        if not 0 <= int(mode_id) < len(self.specs):
+            raise ValueError(f"unknown mode id {int(mode_id)}; registered "
+                             f"ids are 0..{len(self.specs) - 1} "
+                             f"({list(self.names)})")
+        return self.specs[int(mode_id)]
+
+    def validate_ids(self, mode_ids) -> np.ndarray:
+        """Host-side guard: raise on ids outside the registered range
+        (the in-scan dispatch treats them as pass-through, but reaching
+        it with an unknown id is a caller bug, not a scenario)."""
+        ids = np.asarray(mode_ids, np.int32)
+        bad = ids[(ids < 0) | (ids >= len(self.specs))]
+        if bad.size:
+            raise ValueError(
+                f"unknown mode id(s) {sorted(set(bad.tolist()))}; "
+                f"registered ids are 0..{len(self.specs) - 1} "
+                f"({list(self.names)})")
+        return ids
+
+    # -- activity / host-stage masks --------------------------------------
+    def activity(self, mode_ids: Iterable[int]) -> Dict[str, bool]:
+        """scenario name -> present in this dispatch (drives the scalar
+        gating flags: absent scenarios' gated blocks are skipped at
+        runtime)."""
+        present = set(int(m) for m in np.asarray(list(mode_ids)).ravel())
+        return {s.name: (i in present) for i, s in enumerate(self.specs)}
+
+    def host_stage_ids(self, stage: Optional[str] = None) -> Tuple[int, ...]:
+        """Mode ids whose spec declares host stage ``stage`` (any
+        non-None host stage when ``stage`` is None)."""
+        return tuple(i for i, s in enumerate(self.specs)
+                     if (s.host_stage is not None if stage is None
+                         else s.host_stage == stage))
+
+    def mask(self, mode_ids, ids: Sequence[int]) -> np.ndarray:
+        return np.isin(np.asarray(mode_ids, np.int32), list(ids))
+
+    def chunk_flush_ids(self) -> Tuple[int, ...]:
+        return tuple(i for i, s in enumerate(self.specs) if s.chunk_flush)
+
+    # -- environment resolution (Fig. 2 generalized) -----------------------
+    def _sorted_rules(self):
+        rules = []
+        for i, s in enumerate(self.specs):
+            if s.env_rule is not None:
+                rules.append((s.env_rule.priority, i, s.env_rule))
+        rules.sort(key=lambda t: t[0])
+        return rules
+
+    def resolve_mode_id(self, gps_available, map_available,
+                        gps_degraded=False, airborne=False):
+        """Traceable taxonomy resolution: accepts scalars or (B,) bool
+        arrays, returns int32 mode ids. Lowest-priority rule first, so
+        the highest-priority matching rule wins; built entirely from the
+        registered specs' ``EnvRule``s."""
+        import jax.numpy as jnp
+        env = {"gps": jnp.asarray(gps_available, bool),
+               "map": jnp.asarray(map_available, bool),
+               "degraded": jnp.asarray(gps_degraded, bool),
+               "airborne": jnp.asarray(airborne, bool)}
+        rules = self._sorted_rules()
+        if not rules:
+            raise ValueError("no scenario declares an EnvRule")
+        if rules[0][2].conditions():
+            raise ValueError(
+                "the lowest-priority scenario EnvRule must be an "
+                "unconditional fallback (the shipped 'slam' rule)")
+        out = jnp.int32(rules[0][1])
+        for _, mode_id, rule in rules[1:]:
+            match = jnp.ones((), bool)
+            for k, v in rule.conditions():
+                match = match & (env[k] == v)
+            out = jnp.where(match, jnp.int32(mode_id), out)
+        return jnp.broadcast_to(
+            out, jnp.broadcast_shapes(*(v.shape for v in env.values()))
+        ).astype(jnp.int32)
+
+    def resolve_env(self, env) -> int:
+        """Host-side twin of ``resolve_mode_id`` for one
+        ``environment.Environment``."""
+        flags = {"gps": env.gps_available, "map": env.map_available,
+                 "degraded": getattr(env, "gps_degraded", False),
+                 "airborne": getattr(env, "airborne", False)}
+        chosen = None
+        for _, mode_id, rule in self._sorted_rules():
+            if all(bool(flags[k]) == v for k, v in rule.conditions()):
+                chosen = mode_id
+        if chosen is None:
+            raise ValueError(f"no registered scenario matches {env}")
+        return chosen
+
+
+def _build_table(specs: Sequence[ScenarioSpec]) -> ScenarioTable:
+    if not specs:
+        raise ValueError("no scenarios registered")
+    spine = tuple(u for u in specs[0].pipeline
+                  if prim.get_primitive(u.name).placement == "spine")
+    switch_uses = []
+    gated_order: Dict[str, GatedUse] = {}
+    per_spec_gated: Dict[str, Dict[int, PrimitiveUse]] = {}
+    for i, s in enumerate(specs):
+        rest = s.pipeline[len(spine):]
+        switch_uses.append(tuple(
+            u for u in rest
+            if prim.get_primitive(u.name).placement == "switch"))
+        for u in rest:
+            if prim.get_primitive(u.name).placement == "gated":
+                per_spec_gated.setdefault(u.name, {})[i] = u
+                gated_order.setdefault(u.name, None)
+    gated = []
+    for name in gated_order:
+        p = prim.get_primitive(name)
+        users = per_spec_gated[name]
+        gated.append(GatedUse(
+            name=name, writes=p.writes,
+            scenario_ids=tuple(sorted(users)),
+            scenario_names=tuple(specs[i].name for i in sorted(users)),
+            params_by_id=tuple(users[i].params if i in users else None
+                               for i in range(len(specs)))))
+    gate_keys = sorted({p.offload_key for s in specs for u in s.pipeline
+                        for p in (prim.get_primitive(u.name),)
+                        if p.offload_key is not None} | {"marg_schur"})
+    return ScenarioTable(specs=tuple(specs), spine=spine,
+                         switch_uses=tuple(switch_uses),
+                         gated=tuple(gated), gate_keys=tuple(gate_keys))
+
+
+def table() -> ScenarioTable:
+    """Frozen snapshot of the CURRENT registry (cached per revision).
+    Localizers capture this at construction, so later registrations
+    never mutate an existing compiled program."""
+    rev = _REVISION[0]
+    if rev not in _TABLE_CACHE:
+        _TABLE_CACHE.clear()
+        _TABLE_CACHE[rev] = _build_table(list(SCENARIOS.values()))
+    return _TABLE_CACHE[rev]
+
+
+def apply_spec(cfg, spec: ScenarioSpec):
+    """Derive a scenario-shaped config: returns ``(cfg', window)`` with
+    the spec's rate/cadence knobs folded into the backend config and the
+    clone-window override resolved (None = config default). Used when a
+    localizer is built FOR a scenario; inside a mixed fleet the shared
+    config governs shapes and the spec's in-scan branch governs
+    behavior."""
+    import dataclasses
+    be = cfg.backend
+    be = dataclasses.replace(
+        be,
+        imu_rate_hz=spec.imu_rate_hz or be.imu_rate_hz,
+        ba_every=spec.ba_every or be.ba_every)
+    return (dataclasses.replace(cfg, backend=be),
+            spec.window or be.msckf_window)
+
+
+# --------------------------------------------------------------------------
+# the five shipped scenarios (registration order IS the mode id — the
+# first three reproduce the pre-registry MODE_VIO/MODE_SLAM/
+# MODE_REGISTRATION constants bitwise)
+# --------------------------------------------------------------------------
+
+register_scenario(ScenarioSpec(
+    name="vio",
+    pipeline=SPINE + (use("gps_fusion"),),
+    env_rule=EnvRule(gps=True, priority=20),
+    description="outdoor VIO + GPS fusion (paper Fig. 3c/d)"))
+
+register_scenario(ScenarioSpec(
+    name="slam",
+    pipeline=SPINE + (use("bow_histogram"), use("ba_marginalize")),
+    host_stage="slam",
+    env_rule=EnvRule(priority=0),      # fallback: indoor unknown
+    description="indoor-unknown SLAM: windowed BA + map growth"))
+
+register_scenario(ScenarioSpec(
+    name="registration",
+    pipeline=SPINE + (use("map_query"),),
+    host_stage="registration", chunk_flush=True,
+    env_rule=EnvRule(gps=False, map=True, priority=10),
+    description="indoor-known registration against a persisted map"))
+
+register_scenario(ScenarioSpec(
+    name="drone_vio",
+    pipeline=SPINE,
+    window=12, imu_rate_hz=400,
+    env_rule=EnvRule(gps=False, airborne=True, priority=40),
+    description="the paper's drone prototype: smaller clone window, "
+                "higher IMU rate, no BA, no GPS"))
+
+register_scenario(ScenarioSpec(
+    name="vio_degraded",
+    pipeline=SPINE + (use("gps_fusion", sigma_gps=0.25),),
+    env_rule=EnvRule(gps=True, degraded=True, priority=30),
+    description="GPS-intermittent outdoor VIO: fixes fused with 5x the "
+                "position sigma (NaN outages already zero-weighted)"))

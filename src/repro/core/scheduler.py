@@ -16,6 +16,7 @@ is identical.
 from __future__ import annotations
 
 import time
+from collections.abc import Mapping
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -84,40 +85,117 @@ KERNEL_MODELS = {
 }
 
 
-@dataclass(frozen=True)
-class OffloadPlan:
-    """Offload decisions resolved BEFORE the fused dispatch.
+# canonical OffloadPlan keys: the primitive names of core.primitives
+# (each primitive declares its offload_key; the plan is keyed by those
+# names) plus the kernel-level "marg_schur" Pallas-vs-XLA pick
+PLAN_KEYS = ("frontend", "msckf_update", "map_query", "ba_marginalize",
+             "marg_schur")
+
+# the pre-registry field names, kept as attribute aliases so existing
+# call sites / tests read the same decisions
+_LEGACY_PLAN_FIELDS = {
+    "kalman_gain": "msckf_update",        # MSCKF update (in-dispatch)
+    "projection": "map_query",            # Registration map projection
+    "marginalization": "ba_marginalize",  # SLAM windowed BA + marg
+    "marg_schur": "marg_schur",
+    "frontend": "frontend",
+}
+
+
+class OffloadPlan(Mapping):
+    """Offload decisions resolved BEFORE the fused dispatch, keyed by
+    PRIMITIVE NAME (``core.primitives``; see ``PLAN_KEYS``).
 
     The fused step/chunk is one jitted program; deciding offload from
     device data mid-frame would force a device->host sync. All sizes the
     models need (update-batch budget x window, padded map/BA buffers) are
     static shapes, so the plan is computed host-side up front — once per
-    chunk, not per frame — and its in-dispatch decisions are passed into
-    the jit as traced booleans. Covers all three paper kernels (Fig. 16)
-    plus the frontend op block."""
-    kalman_gain: bool = True       # MSCKF update (inside the fused dispatch)
-    projection: bool = True        # Registration map projection (host stage)
-    marginalization: bool = True   # SLAM windowed BA + marginalization
-    #                                (inside the fused dispatch since PR 3).
-    #                                False SKIPS the BA round entirely —
-    #                                the same accuracy-for-latency skip
-    #                                the host stage implemented, codified
-    #                                by test_offload_plan_gates_inscan_ba.
-    #                                Note the frame and chunk plans can
-    #                                legitimately disagree near the model
-    #                                boundary (chunk amortizes launch
-    #                                overhead), like kalman_gain.
-    # which impl of the in-scan blocked Schur reduction the traced flag
-    # selects: Pallas kernel (True) vs XLA path. Resolved by the
-    # localizer through kernels.registry.decide_path("marg_schur", ...)
-    # so REPRO_KERNELS forcing / fitted models / platform fallback all
-    # apply — the scheduler only carries the decision into the dispatch.
-    marg_schur: bool = True
-    # FE ops accel path at the frame's pixel count. Advisory: the ops
-    # themselves dispatch per-call through kernels.registry (same models,
-    # same comparison) at trace time; this field is the plan's
-    # consolidated record of that decision for the configured frame size.
-    frontend: bool = True
+    chunk, not per frame — and its in-dispatch decisions enter the jit
+    as the traced per-primitive gates of ``step.PlanFlags``. Unknown
+    primitives default to True (offload — there is no evidence the host
+    is faster), so plans stay valid as scenarios register new
+    primitives.
+
+    Semantics per key:
+      msckf_update   — run the MSCKF update in-dispatch; False ships the
+                       consumed-track buffers out for the chunk-boundary
+                       host Kalman fallback.
+      ba_marginalize — run the in-scan BA round; False SKIPS it entirely
+                       (the accuracy-for-latency skip codified by
+                       test_offload_plan_gates_inscan_ba). The frame and
+                       chunk plans can legitimately disagree near the
+                       model boundary (the chunk amortizes launch
+                       overhead), like msckf_update.
+      marg_schur     — which impl of the blocked Schur reduction the
+                       traced flag selects: Pallas (True) vs XLA.
+                       Resolved through kernels.registry.decide_path so
+                       REPRO_KERNELS forcing / fitted models / platform
+                       fallback all apply.
+      map_query      — Registration map projection path (host stage).
+      frontend       — FE ops accel path at the frame's pixel count.
+                       Advisory: the ops dispatch per-call through
+                       kernels.registry at trace time; this is the
+                       plan's consolidated record of that decision.
+
+    Legacy attribute aliases (``plan.kalman_gain`` etc.,
+    ``_LEGACY_PLAN_FIELDS``) are kept for existing call sites."""
+
+    __slots__ = ("_d",)
+
+    def __init__(self, decisions: Optional[Mapping] = None, **fields):
+        d = {k: True for k in PLAN_KEYS}
+        if decisions is not None:
+            for k, v in dict(decisions).items():
+                d[_LEGACY_PLAN_FIELDS.get(k, str(k))] = bool(v)
+        for k, v in fields.items():
+            d[_LEGACY_PLAN_FIELDS.get(k, k)] = bool(v)
+        object.__setattr__(self, "_d", d)
+
+    # Mapping interface (keyed by primitive name; legacy names resolve)
+    def __getitem__(self, key: str) -> bool:
+        return self._d[_LEGACY_PLAN_FIELDS.get(key, key)]
+
+    def get(self, key: str, default: bool = True) -> bool:
+        return self._d.get(_LEGACY_PLAN_FIELDS.get(key, key), default)
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def replace(self, **fields) -> "OffloadPlan":
+        """A copy with the given decisions overridden (primitive or
+        legacy key names)."""
+        return OffloadPlan(self._d, **fields)
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}={v}" for k, v in sorted(self._d.items()))
+        return f"OffloadPlan({inner})"
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, OffloadPlan) and self._d == other._d
+
+    # legacy attribute aliases
+    @property
+    def kalman_gain(self) -> bool:
+        return self._d["msckf_update"]
+
+    @property
+    def projection(self) -> bool:
+        return self._d["map_query"]
+
+    @property
+    def marginalization(self) -> bool:
+        return self._d["ba_marginalize"]
+
+    @property
+    def marg_schur(self) -> bool:
+        return self._d["marg_schur"]
+
+    @property
+    def frontend(self) -> bool:
+        return self._d["frontend"]
 
 
 @dataclass
@@ -173,16 +251,16 @@ class LatencyModels:
         h_height = max_updates * 2 * window
         if transfer_bytes is None:
             transfer_bytes = max_updates * window * 2 * 4
-        return OffloadPlan(
-            kalman_gain=self.should_offload("kalman_gain", h_height,
-                                            transfer_bytes),
-            projection=self.should_offload(
+        return OffloadPlan({
+            "msckf_update": self.should_offload("kalman_gain", h_height,
+                                                transfer_bytes),
+            "map_query": self.should_offload(
                 "projection", max(map_points, 1), map_points * 4 * 4),
-            marginalization=self.should_offload(
+            "ba_marginalize": self.should_offload(
                 "marginalization", max(ba_landmarks, 1),
                 ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4),
-            frontend=self.should_offload(
-                "conv2d", max(frame_pixels, 1), frame_pixels * 4))
+            "frontend": self.should_offload(
+                "conv2d", max(frame_pixels, 1), frame_pixels * 4)})
 
     def plan_chunk(self, window: int, max_updates: int, chunk: int,
                    map_points: int = 0, ba_landmarks: int = 0,
@@ -210,10 +288,7 @@ class LatencyModels:
         marg = self.should_offload("marginalization", max(ba_landmarks, 1),
                                    ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4,
                                    overhead_s=amortized)
-        return OffloadPlan(kalman_gain=kalman,
-                           projection=plan.projection,
-                           marginalization=marg,
-                           frontend=plan.frontend)
+        return plan.replace(msckf_update=kalman, ba_marginalize=marg)
 
     def plan_fleet_chunk(self, window: int, max_updates: int, chunk: int,
                          batch: int = 1, shards: int = 1,

@@ -1,9 +1,31 @@
-"""Pure state threading for the localization hot path.
+"""Scenario compiler + pure state threading for the localization hot path.
 
 This module is the functional half of the localizer split: everything
 here is a pure function of fixed-shape arrays — no host state, no maps,
 no timing. ``core.localizer.Localizer`` owns orchestration (host map
 stages, scheduling, stats) and drives these functions.
+
+Since the scenario-primitive registry this module is a COMPILER: the
+per-frame transition is no longer a hand-written monolith with
+hard-coded backends — ``localize_step`` lowers a frozen
+``core.scenarios.ScenarioTable`` (every registered ``ScenarioSpec``,
+each an ordered composition of ``core.primitives``) into one scan body:
+
+  * the shared spine (frontend, track ring, IMU propagate/augment,
+    MSCKF consume/update) runs unconditionally, in declared order;
+  * each scenario's switch primitives become one branch of the in-scan
+    ``lax.switch`` on the mode id (out-of-range ids take a trailing
+    pass-through branch instead of clamping onto a wrong backend);
+  * gated primitives (BoW histogram, windowed BA + Schur
+    marginalization) compile behind a SCALAR activity cond — built from
+    the per-scenario activity flags, so an all-VIO dispatch skips them
+    at runtime even under vmap — with an inner per-frame/per-robot cond
+    on a baked uses-table, and per-scenario knobs (BA cadence) resolved
+    through baked lookup tables indexed by the mode id.
+
+One compiled chunk program therefore serves EVERY registered scenario,
+and a vmapped fleet mixes scenarios per robot, exactly as the paper's
+runtime-reconfigurable accelerator serves its modes from one fabric.
 
 Three granularities, all one compiled program each:
 
@@ -16,30 +38,28 @@ Three granularities, all one compiled program each:
   ``fleet_chunk``        K frames x B robots -> one dispatch (scan of
                          the vmapped transition)
 
-Mode switching stays inside the scan body via the int-id ``lax.switch``,
-so one compiled chunk program serves every operating environment — and
-since PR 3 that includes SLAM's windowed BA + Schur marginalization
-(``core.backend.ba``), which run in-scan behind the switch with the
-blocked ``marg_schur`` Pallas/XLA kernel selected by the scheduler's
-traced ``PlanFlags``. The scheduler's offload decisions are resolved
-host-side per chunk and enter as traced booleans. Chunks are padded to
-a fixed K with ``active=False`` frames (the transition passes state
-through unchanged), so every chunk — including the trailing partial one
-— reuses the same trace.
+The scheduler's offload decisions are resolved host-side per chunk
+(``scheduler.OffloadPlan``, keyed by primitive name) and enter as the
+traced per-primitive gates / per-scenario activity scalars of
+``PlanFlags``. Chunks are padded to a fixed K with ``active=False``
+frames (the transition passes state through unchanged), so every chunk —
+including the trailing partial one — reuses the same trace.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.eudoxus import EudoxusConfig
+from repro.core import primitives as prim
+from repro.core import scenarios as scen
 from repro.core import tracks
 from repro.core.backend import ba as ba_mod
-from repro.core.backend import fusion, msckf, tracking
-from repro.core.environment import MODE_SLAM
+from repro.core.backend import msckf
 from repro.core.frontend import orb, pipeline
 from repro.core.frontend.pipeline import FrontendResult
 
@@ -60,27 +80,62 @@ class LocalizerState(NamedTuple):
 
 
 class PlanFlags(NamedTuple):
-    """The scheduler's pre-resolved offload decisions that enter the
-    fused dispatch as traced booleans (one compiled program serves every
-    decision; see ``scheduler.OffloadPlan``)."""
-    kalman: jax.Array       # () bool — run the MSCKF update in-dispatch
-    marg: jax.Array         # () bool — run SLAM BA+marginalization in-scan
-    marg_pallas: jax.Array  # () bool — blocked Schur kernel: Pallas vs XLA
-    # () bool — any SLAM frame in this dispatch. Always a SCALAR (never
-    # batched), so the cond it gates survives vmap as a real branch: an
-    # all-VIO fleet/chunk skips the whole SLAM block at runtime instead
-    # of executing both sides of a batched select.
-    slam: jax.Array
+    """The scheduler's pre-resolved decisions as they enter the fused
+    dispatch, generalized to the primitive registry:
+
+    ``gates``   primitive offload key -> () bool traced gate (run the
+                primitive's in-dispatch work / pick its accel kernel).
+                Keys come from the bound ``ScenarioTable.gate_keys``.
+    ``active``  scenario name -> () bool — any frame of this dispatch
+                runs the scenario. Always SCALARS (never batched), so
+                the conds they gate survive vmap as real branches: an
+                all-VIO fleet/chunk skips the whole gated heavy block at
+                runtime instead of executing both sides of a batched
+                select.
+
+    The legacy field views (``kalman``/``marg``/``marg_pallas``/
+    ``slam``) read the corresponding entries."""
+    gates: Dict[str, jax.Array]
+    active: Dict[str, jax.Array]
+
+    @property
+    def kalman(self):
+        return self.gates["msckf_update"]
+
+    @property
+    def marg(self):
+        return self.gates["ba_marginalize"]
+
+    @property
+    def marg_pallas(self):
+        return self.gates["marg_schur"]
+
+    @property
+    def slam(self):
+        return self.active["slam"]
 
 
-def flags_from_plan(plan, slam_active: bool = True) -> PlanFlags:
-    """OffloadPlan -> the traced in-dispatch flag bundle. ``slam_active``
-    is the host's knowledge of whether any frame in the dispatch runs
-    the SLAM backend (conservative default: True)."""
-    return PlanFlags(kalman=jnp.asarray(plan.kalman_gain),
-                     marg=jnp.asarray(plan.marginalization),
-                     marg_pallas=jnp.asarray(plan.marg_schur),
-                     slam=jnp.asarray(slam_active))
+def flags_from_plan(plan, slam_active=None, modes=None,
+                    table: scen.ScenarioTable = None) -> PlanFlags:
+    """OffloadPlan -> the traced in-dispatch flag bundle.
+
+    ``modes``: the mode ids present in the dispatch (drives the
+    per-scenario activity scalars; scenarios not present skip their
+    gated blocks at runtime). ``slam_active`` is the legacy single-flag
+    form (only the SLAM block was gated pre-registry); with neither,
+    every scenario is conservatively active. ``table`` defaults to the
+    current global registry snapshot — pass the localizer's bound table
+    so the flag pytree structure matches its compiled program."""
+    table = table if table is not None else scen.table()
+    gates = {k: jnp.asarray(plan.get(k, True)) for k in table.gate_keys}
+    if modes is not None:
+        act = table.activity(modes)
+    else:
+        act = {nm: True for nm in table.names}
+        if slam_active is not None and "slam" in act:
+            act["slam"] = bool(slam_active)
+    active = {nm: jnp.asarray(bool(v)) for nm, v in act.items()}
+    return PlanFlags(gates=gates, active=active)
 
 
 class FrameInputs(NamedTuple):
@@ -93,7 +148,7 @@ class FrameInputs(NamedTuple):
     accel: jax.Array   # (ipf, 3) float32 IMU accel ending at this frame
     gyro: jax.Array    # (ipf, 3) float32
     gps: jax.Array     # (3,) float32, NaN when unavailable
-    mode: jax.Array    # () int32 backend mode id (environment.MODE_*)
+    mode: jax.Array    # () int32 scenario mode id (registry index)
     active: jax.Array  # () bool; False = padding frame
 
 
@@ -103,15 +158,17 @@ class FrameOutputs(NamedTuple):
     without touching the device (append-only); ``ba_cost``/``ba_ran``
     surface the in-scan BA passes for observability. ``upd_*`` carry the
     consumed-track update buffers OUT of the scan when the scheduler
-    skipped the in-program MSCKF update (``flags.kalman`` False) so the
-    host can apply a chunk-boundary Kalman fallback instead of dropping
-    the observations entirely (zeros whenever the update ran in-scan)."""
+    skipped the in-program MSCKF update (``msckf_update`` gate False) so
+    the host can apply a chunk-boundary Kalman fallback instead of
+    dropping the observations entirely (zeros whenever the update ran
+    in-scan)."""
     fr: FrontendResult
     p: jax.Array        # (3,) post-frame position
     q: jax.Array        # (4,) post-frame orientation quaternion
-    hist: jax.Array     # (V,) BoW histogram — SLAM frames only (zeros
-    #                     otherwise; Registration queries compute theirs
-    #                     in the host stage against the live map)
+    hist: jax.Array     # (V,) BoW histogram — scenarios with the
+    #                     bow_histogram primitive only (zeros otherwise;
+    #                     Registration queries compute theirs in the
+    #                     host stage against the live map)
     ba_cost: jax.Array  # () float32 latest windowed-BA cost
     ba_ran: jax.Array   # () bool — BA+marginalization executed this frame
     upd_uv: jax.Array      # (max_updates, W, 2) consumed tracks, or zeros
@@ -120,129 +177,178 @@ class FrameOutputs(NamedTuple):
     #                         in-scan update was gated off this frame
 
 
+# --------------------------------------------------------------------------
+# the step compiler: ScenarioTable -> one scan body
+# --------------------------------------------------------------------------
+
+_MISSING = object()
+
+
+def _gated_params(g: scen.GatedUse, table: scen.ScenarioTable, be_cfg,
+                  safe_mode: jax.Array) -> Dict:
+    """Per-scenario knobs for a shared gated block, resolved through
+    baked lookup tables indexed by the (already-bounded) mode id, so one
+    compiled block serves scenarios with different knobs.
+
+    ``ba_every`` (the BA cadence) resolves use-level param > spec knob >
+    config default, per scenario. Any other ``use(...)`` param must be
+    declared by EVERY scenario using the primitive (there is no generic
+    stage default to fall back on); uniform scalar values bake directly
+    (bitwise-identical to a pre-registry constant), differing numeric
+    values become a per-mode lookup table (non-user/invalid rows carry a
+    masked placeholder — the uses-table cond keeps them unreached)."""
+    params: Dict = {}
+    n = len(table)
+    use_params = [None if p is None else dict(p) for p in g.params_by_id]
+    if g.name == "ba_marginalize":
+        vals = []
+        for i in range(n):
+            u = use_params[i] or {}
+            vals.append(int(u.get("ba_every") or table.specs[i].ba_every
+                            or be_cfg.ba_every))
+        if len(set(vals)) == 1:
+            params["ba_every"] = vals[0]
+        else:
+            arr = jnp.asarray(vals + [vals[0]], jnp.int32)  # pad: invalid id
+            params["ba_every"] = arr[safe_mode]
+    users = [i for i in range(n) if use_params[i] is not None]
+    keys = sorted(set().union(
+        *(use_params[i].keys() for i in users), set()) - set(params))
+    for k in keys:
+        vals = [use_params[i].get(k, _MISSING) for i in users]
+        declared = [v for v in vals if v is not _MISSING]
+        if not declared:
+            continue
+        if len(declared) < len(vals):
+            missing = [table.specs[i].name for i, v in zip(users, vals)
+                       if v is _MISSING]
+            raise ValueError(
+                f"gated primitive {g.name!r}: param {k!r} must be "
+                f"declared by every scenario using the primitive "
+                f"(missing in {missing}) — or promote it to a "
+                "spec-level knob resolved in _gated_params")
+        if all(v == declared[0] for v in declared[1:]):
+            params[k] = declared[0]
+        elif all(isinstance(v, (int, float)) for v in declared):
+            by_id = dict(zip(users, declared))
+            row = [by_id.get(i, declared[0]) for i in range(n)]
+            row.append(declared[0])                     # invalid-id pad
+            dtype = (jnp.int32 if all(isinstance(v, int) for v in declared)
+                     else jnp.float32)
+            params[k] = jnp.asarray(row, dtype)[safe_mode]
+        else:
+            raise ValueError(
+                f"gated primitive {g.name!r}: per-scenario values for "
+                f"{k!r} must be scalars to lower into a lookup table "
+                f"(got {declared!r})")
+    return params
+
+
 def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
                   accel: jax.Array, gyro: jax.Array, gps: jax.Array,
                   mode: jax.Array, flags: PlanFlags,
                   dt_imu: jax.Array, *, cfg, be_cfg,
                   fx: float, fy: float, cx: float, cy: float,
                   baseline: float, vocab: jax.Array,
-                  allow_pallas_marg: bool = True
+                  allow_pallas_marg: bool = True,
+                  scenarios: scen.ScenarioTable = None
                   ) -> Tuple[LocalizerState, FrameOutputs]:
-    """One fused frame: frontend -> track ring buffer -> lax.switch
-    backend (with SLAM's windowed BA/marginalization in-scan) -> new
+    """One fused frame, compiled from the scenario registry: shared
+    spine -> per-scenario ``lax.switch`` -> gated heavy blocks -> new
     state. Pure function of fixed-shape arrays; jitted with
     ``donate_argnums=(0,)`` by the Localizer (and the body of the chunk
     scan below — the K=1 special case IS this function).
 
-    gps: (3,) world position, NaN when unavailable. mode: () int32 mode
-    id. flags: the scheduler's pre-resolved decisions as traced bools.
+    gps: (3,) world position, NaN when unavailable. mode: () int32
+    scenario id (out-of-range ids pass through the mode dispatch).
+    flags: the scheduler's pre-resolved decisions as traced bools.
+    ``scenarios``: the frozen ScenarioTable to compile (default: the
+    global registry at trace time).
     """
-    fe_carry = pipeline.FrontendCarry(prev_img=state.prev_img,
-                                      prev_yx=state.prev_yx,
-                                      prev_valid=state.prev_valid)
-    fe_carry, fr = pipeline.step_carry(fe_carry, img_l, img_r, cfg)
-
-    # --- track bookkeeping (fixed-shape ring buffer over the window);
-    # frame 0 falls out naturally: prev_valid is all-False so every slot
-    # reseeds from this frame's detections
-    tracks_uv, tracks_valid = tracks.roll_and_update(
-        state.tracks_uv, state.tracks_valid, fr.yx, fr.valid,
-        fr.prev_yx, fr.track_valid)
-
-    # --- MSCKF propagate/augment (frame 0 defines the start pose)
-    filt = jax.lax.cond(
-        state.frame_idx > 0,
-        lambda f: msckf.propagate(f, accel, gyro, dt=dt_imu),
-        lambda f: f, state.filt)
-    filt = msckf.augment(filt)
-
-    # --- MSCKF update on CONSUMED tracks only (ended this frame, or at
-    # full window length) — each observation is used exactly once, the
-    # MSCKF consistency requirement. offload_kalman=False skips the
-    # update in-dispatch (trading accuracy for latency, paper Fig. 17's
-    # host-bound operating point): a host-path update mid-program would
-    # force the device->host sync the fused/chunked pipeline exists to
-    # avoid. See ROADMAP "Open items" for the host-fallback follow-on.
-    uv, vd, count, consumed = tracks.select_consumed(tracks_uv, tracks_valid)
-    do_consume = (count >= tracks.MIN_UPDATE_TRACKS) & (state.frame_idx >= 3)
-    filt = jax.lax.cond(
-        do_consume & flags.kalman,
-        lambda f: msckf.update(f, uv, vd, fx=fx, fy=fy, cx=cx, cy=cy)[0],
-        lambda f: f, filt)
-    tracks_valid = jnp.where(do_consume,
-                             tracks.consume(tracks_valid, consumed),
-                             tracks_valid)
-    # consumed observations leave the buffer whether or not the update
-    # ran (one-shot MSCKF semantics); when the scheduler gated the
-    # in-scan update off, ship them out so the chunk-boundary host
-    # fallback can still feed them to the filter exactly once
-    upd_skipped = do_consume & ~flags.kalman
-    upd_uv = jnp.where(upd_skipped, uv, 0.0)
-    upd_valid = jnp.where(upd_skipped, vd, False)
-
-    # --- mode dispatch (paper Fig. 2 -> one resident program per mode):
-    # VIO fuses GPS on-device (gps_update is NaN-safe: invalid fixes get
-    # zero weight); SLAM / Registration defer their dynamically-sized map
-    # growth to the host stage
-    filt = jax.lax.switch(jnp.clip(mode, 0, 2),
-                          [lambda f: fusion.gps_update(f, gps)[0],
-                           lambda f: f, lambda f: f], filt)
-
-    # --- SLAM windowed BA + marginalization, in-scan (paper Sec. VI-A's
-    # variation-dominating kernel): push the post-frame pose as a
-    # keyframe, compute the BoW histogram the host map stage replays
-    # (keyframe appends), and on the host path's exact trigger run the
-    # fixed-shape BA round. Feedback-free by construction (results live
-    # in BAState / the scan outputs), so VIO/Registration frames and the
-    # trajectory are untouched. The outer cond is gated by the SCALAR
-    # ``flags.slam`` so all-VIO dispatches skip it even under vmap; the
-    # inner per-frame/per-robot cond gates on the (possibly batched)
-    # mode id.
+    table = scenarios if scenarios is not None else scen.table()
+    n_scen = len(table)
+    w = state.tracks_uv.shape[1]
     n_hist = 2 ** vocab.shape[0]
+    ctx = prim.FrameCtx(cfg=cfg, be_cfg=be_cfg, fx=fx, fy=fy, cx=cx, cy=cy,
+                        baseline=baseline, vocab=vocab, flags=flags,
+                        dt_imu=dt_imu,
+                        allow_pallas_marg=allow_pallas_marg)
+    c = prim.FrameCarry(
+        img_l=img_l, img_r=img_r, accel=accel, gyro=gyro, gps=gps,
+        mode=mode, filt=state.filt, tracks_uv=state.tracks_uv,
+        tracks_valid=state.tracks_valid, prev_img=state.prev_img,
+        prev_yx=state.prev_yx, prev_valid=state.prev_valid,
+        frame_idx=state.frame_idx, ba=state.ba,
+        hist=jnp.zeros((n_hist,), jnp.float32),
+        ba_ran=jnp.bool_(False),
+        upd_uv=jnp.zeros((tracks.MAX_UPDATES, w, 2), jnp.float32),
+        upd_valid=jnp.zeros((tracks.MAX_UPDATES, w), bool),
+        upd_skipped=jnp.bool_(False))
 
-    def slam_branch(ba_in):
-        hist = tracking.bow_histogram(fr.desc, fr.valid, vocab)
-        R = msckf.quat_to_rot(filt.q)
-        ba2 = ba_mod.push_keyframe(ba_in, R, filt.p)
-        trigger = ((ba2.n_kf >= be_cfg.ba_min_keyframes)
-                   & (state.frame_idx % be_cfg.ba_every == 0)
-                   & flags.marg)
+    # out-of-range ids lower to the trailing pass-through branch and the
+    # all-False row of every gated uses-table (the satellite fix: an
+    # unknown scenario must not silently run a wrong backend)
+    mode = jnp.asarray(mode, jnp.int32)
+    safe_mode = jnp.where((mode >= 0) & (mode < n_scen), mode,
+                          jnp.int32(n_scen))
 
-        def run_ba(b):
-            pts, pv = ba_mod.backproject_stereo(
-                fr.yx, fr.disparity, fr.stereo_valid, R, filt.p,
-                fx=fx, fy=fy, cx=cx, cy=cy, baseline=baseline)
-            lms, lmv = ba_mod.select_landmarks(pts, pv,
-                                               be_cfg.ba_landmarks)
-            intr = jnp.asarray([fx, fy, cx, cy], jnp.float32)
-            return ba_mod.ba_round(
-                b, lms, lmv, intr, lm_iters=be_cfg.lm_iters,
-                lm_lambda0=be_cfg.lm_lambda0,
-                marg_pallas=flags.marg_pallas,
-                allow_pallas=allow_pallas_marg)
+    # --- shared spine: mode-independent, unconditional, declared order
+    for use_ in table.spine:
+        p = prim.get_primitive(use_.name)
+        c = p.stage(ctx, c, use_.param_dict())
 
-        ba3 = jax.lax.cond(trigger, run_ba, lambda b: b, ba2)
-        return ba3, trigger, hist
+    # --- per-scenario switch: each scenario's light filter work becomes
+    # one branch (params baked per branch); branch n_scen = pass-through
+    def _branch(uses):
+        def br(filt):
+            c2 = dataclasses.replace(c, filt=filt)
+            for u in uses:
+                f_new = prim.get_primitive(u.name).stage(
+                    ctx, c2, u.param_dict())
+                c2 = dataclasses.replace(c2, filt=f_new)
+            return c2.filt
+        return br
 
-    def not_slam(ba_in):
-        return (ba_in, jnp.bool_(False),
-                jnp.zeros((n_hist,), jnp.float32))
+    branches = [_branch(uses) for uses in table.switch_uses]
+    branches.append(lambda f: f)            # unknown id: pass-through
+    c = dataclasses.replace(c, filt=jax.lax.switch(safe_mode, branches,
+                                                   c.filt))
 
-    ba_state, ba_ran, hist = jax.lax.cond(
-        flags.slam,
-        lambda b: jax.lax.cond(mode == MODE_SLAM, slam_branch,
-                               not_slam, b),
-        not_slam, state.ba)
+    # --- gated heavy blocks (paper Sec. VI-A's variation-dominating
+    # kernels): outer cond on the SCALAR any-user-scenario-active flag
+    # (a real runtime skip even under vmap), inner cond on the baked
+    # per-mode uses-table (batched select in a fleet, like the
+    # pre-registry ``mode == MODE_SLAM``)
+    for g in table.gated:
+        p = prim.get_primitive(g.name)
+        active_any = jnp.any(jnp.stack(
+            [jnp.asarray(flags.active.get(nm, True))
+             for nm in g.scenario_names]))
+        uses_row = [i in g.scenario_ids for i in range(n_scen)] + [False]
+        uses_arr = jnp.asarray(uses_row, bool)
+        params = _gated_params(g, table, be_cfg, safe_mode)
+        operand = tuple(getattr(c, f) for f in g.writes)
+        carry_now = c
 
+        def _live(op, _g=g, _p=p, _params=params, _c=carry_now,
+                  _uses=uses_arr):
+            def run(op2):
+                c2 = dataclasses.replace(_c, **dict(zip(_g.writes, op2)))
+                return _p.stage(ctx, c2, _params)
+            return jax.lax.cond(_uses[safe_mode], run, lambda op2: op2, op)
+
+        vals = jax.lax.cond(active_any, _live, lambda op: op, operand)
+        c = dataclasses.replace(c, **dict(zip(g.writes, vals)))
+
+    # --- assemble the post-frame state and scan outputs
     new_state = LocalizerState(
-        filt=filt, tracks_uv=tracks_uv, tracks_valid=tracks_valid,
-        prev_img=fe_carry.prev_img, prev_yx=fe_carry.prev_yx,
-        prev_valid=fe_carry.prev_valid,
-        frame_idx=state.frame_idx + 1, ba=ba_state)
-    outs = FrameOutputs(fr=fr, p=filt.p, q=filt.q, hist=hist,
-                        ba_cost=ba_state.last_cost, ba_ran=ba_ran,
-                        upd_uv=upd_uv, upd_valid=upd_valid,
-                        upd_skipped=upd_skipped)
+        filt=c.filt, tracks_uv=c.tracks_uv, tracks_valid=c.tracks_valid,
+        prev_img=c.prev_img, prev_yx=c.prev_yx, prev_valid=c.prev_valid,
+        frame_idx=c.frame_idx + 1, ba=c.ba)
+    outs = FrameOutputs(fr=c.fr, p=c.filt.p, q=c.filt.q, hist=c.hist,
+                        ba_cost=c.ba.last_cost, ba_ran=c.ba_ran,
+                        upd_uv=c.upd_uv, upd_valid=c.upd_valid,
+                        upd_skipped=c.upd_skipped)
     return new_state, outs
 
 
@@ -279,17 +385,20 @@ def frame_transition(state: LocalizerState, inp: FrameInputs,
                      flags: PlanFlags, dt_imu: jax.Array, *,
                      cfg, be_cfg, fx: float, fy: float, cx: float,
                      cy: float, baseline: float, vocab: jax.Array,
-                     allow_pallas_marg: bool = True
+                     allow_pallas_marg: bool = True,
+                     scenarios: scen.ScenarioTable = None
                      ) -> Tuple[LocalizerState, FrameOutputs]:
     """The scan-able FrameState -> FrameState transition: one frame of
-    ``localize_step`` gated by ``inp.active`` (padding frames pass state
-    through so a fixed-K chunk serves any sequence length)."""
+    the compiled ``localize_step`` gated by ``inp.active`` (padding
+    frames pass state through so a fixed-K chunk serves any sequence
+    length)."""
     def live(st):
         return localize_step(st, inp.img_l, inp.img_r, inp.accel,
                              inp.gyro, inp.gps, inp.mode, flags,
                              dt_imu, cfg=cfg, be_cfg=be_cfg, fx=fx, fy=fy,
                              cx=cx, cy=cy, baseline=baseline, vocab=vocab,
-                             allow_pallas_marg=allow_pallas_marg)
+                             allow_pallas_marg=allow_pallas_marg,
+                             scenarios=scenarios)
 
     def skip(st):
         return st, _zero_outputs(st, vocab, _zero_frontend_result(st))
@@ -301,7 +410,8 @@ def localize_chunk(state: LocalizerState, inputs: FrameInputs,
                    flags: PlanFlags, dt_imu: jax.Array, *,
                    cfg, be_cfg, fx: float, fy: float, cx: float, cy: float,
                    baseline: float, vocab: jax.Array,
-                   allow_pallas_marg: bool = True
+                   allow_pallas_marg: bool = True,
+                   scenarios: scen.ScenarioTable = None
                    ) -> Tuple[LocalizerState, FrameOutputs]:
     """K frames in ONE dispatch: ``lax.scan`` of the frame transition.
 
@@ -313,7 +423,8 @@ def localize_chunk(state: LocalizerState, inputs: FrameInputs,
         return frame_transition(st, x, flags, dt_imu, cfg=cfg,
                                 be_cfg=be_cfg, fx=fx, fy=fy, cx=cx, cy=cy,
                                 baseline=baseline, vocab=vocab,
-                                allow_pallas_marg=allow_pallas_marg)
+                                allow_pallas_marg=allow_pallas_marg,
+                                scenarios=scenarios)
 
     return jax.lax.scan(body, state, inputs)
 
@@ -322,7 +433,8 @@ def fleet_chunk(states: LocalizerState, inputs: FrameInputs,
                 flags: PlanFlags, dt_imu: jax.Array, *,
                 cfg, be_cfg, fx: float, fy: float, cx: float, cy: float,
                 baseline: float, vocab: jax.Array,
-                allow_pallas_marg: bool = True
+                allow_pallas_marg: bool = True,
+                scenarios: scen.ScenarioTable = None
                 ) -> Tuple[LocalizerState, FrameOutputs]:
     """K frames x B robots in ONE dispatch: scan over the chunk axis of
     the vmapped transition. states: (B, ...) pytree; inputs: FrameInputs
@@ -333,7 +445,8 @@ def fleet_chunk(states: LocalizerState, inputs: FrameInputs,
             lambda st, xi: frame_transition(
                 st, xi, flags, dt_imu, cfg=cfg, be_cfg=be_cfg, fx=fx,
                 fy=fy, cx=cx, cy=cy, baseline=baseline, vocab=vocab,
-                allow_pallas_marg=allow_pallas_marg))(sts, x)
+                allow_pallas_marg=allow_pallas_marg,
+                scenarios=scenarios))(sts, x)
 
     return jax.lax.scan(vbody, states, inputs)
 
@@ -360,24 +473,30 @@ def init_localizer_state(cfg: EudoxusConfig, window: int, p0=None, v0=None,
         ba=ba_mod.init_ba_state(cfg.backend.ba_window))
 
 
-def _bind(fn, cfg: EudoxusConfig, cam, vocab: jax.Array):
+def _bind(fn, cfg: EudoxusConfig, cam, vocab: jax.Array,
+          scenarios: scen.ScenarioTable = None):
     """Close a step/chunk function over its static configuration (the
-    frozen configs and camera intrinsics) and the shared BoW vocabulary
-    (a device constant baked into the trace)."""
+    frozen configs, camera intrinsics and scenario-table snapshot) and
+    the shared BoW vocabulary (a device constant baked into the
+    trace)."""
     return functools.partial(fn, cfg=cfg.frontend, be_cfg=cfg.backend,
                              fx=cam.fx, fy=cam.fy, cx=cam.cx, cy=cam.cy,
-                             baseline=cam.baseline, vocab=vocab)
+                             baseline=cam.baseline, vocab=vocab,
+                             scenarios=scenarios)
 
 
 class TracedStep:
-    """``localize_step`` bound to a config/camera/vocab, counting traces.
+    """``localize_step`` bound to a config/camera/vocab/scenario-table,
+    counting traces.
 
     The wrapper body runs once per jit trace, so ``traces`` counts
     compilations without relying on private JAX cache APIs. Shared by
     ``Localizer`` (jitted directly) and ``FleetLocalizer`` (vmapped)."""
 
-    def __init__(self, cfg: EudoxusConfig, cam, vocab: jax.Array):
-        self._step = _bind(localize_step, cfg, cam, vocab)
+    def __init__(self, cfg: EudoxusConfig, cam, vocab: jax.Array,
+                 scenarios: scen.ScenarioTable = None):
+        self._step = _bind(localize_step, cfg, cam, vocab,
+                           scenarios=scenarios)
         self.traces = 0
 
     def __call__(self, *args):
@@ -387,14 +506,15 @@ class TracedStep:
 
 class TracedChunk:
     """``localize_chunk`` (or ``fleet_chunk`` when ``fleet=True``) bound
-    to a config/camera/vocab, counting traces. Steady state: exactly one
-    trace — chunk padding keeps K static and ``active`` masking keeps
-    shapes data-independent."""
+    to a config/camera/vocab/scenario-table, counting traces. Steady
+    state: exactly one trace — chunk padding keeps K static and
+    ``active`` masking keeps shapes data-independent."""
 
     def __init__(self, cfg: EudoxusConfig, cam, vocab: jax.Array,
-                 fleet: bool = False):
+                 fleet: bool = False,
+                 scenarios: scen.ScenarioTable = None):
         fn = fleet_chunk if fleet else localize_chunk
-        self._chunk = _bind(fn, cfg, cam, vocab)
+        self._chunk = _bind(fn, cfg, cam, vocab, scenarios=scenarios)
         self.traces = 0
 
     def __call__(self, state, inputs, flags, dt_imu):

@@ -12,7 +12,9 @@ its local slice of the fleet:
     mesh:      +---------- robots axis (size D) ----------+
     states:    robots 0..1 | 2..3      | 4..5      | 6..7      (B=8, D=4)
     inputs:    (K, B, ...) sharded over axis 1, replicated over K
-    flags/dt:  replicated scalars (ONE scheduler plan serves all shards)
+    flags/dt:  replicated scalars — the per-primitive offload gates and
+               per-scenario activity flags of ``step.PlanFlags`` (ONE
+               scheduler plan serves all shards)
 
 Capacity then scales with device count: a chunk dispatch executes
 K x (B/D) robot-frames per device instead of K x B on device 0. When B
@@ -80,7 +82,8 @@ def chunk_sharding(mesh: Mesh) -> NamedSharding:
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
-    """Fully-replicated sharding (scalars: PlanFlags, dt)."""
+    """Fully-replicated sharding (scalars: the PlanFlags gate/activity
+    dicts, dt)."""
     return NamedSharding(mesh, P())
 
 

@@ -25,7 +25,7 @@ from pathlib import Path
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_config, get_shape, list_configs, SHAPES
+from repro.configs.lm import get_config, get_shape, list_configs, SHAPES
 from repro.distributed.sharding import LogicalRules, default_rules, sharding_context
 from repro.launch import hlo_analysis, jaxpr_cost, steps
 from repro.launch.mesh import make_production_mesh

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, reduced
+from repro.configs.lm import get_config, reduced
 from repro.launch import steps as steps_lib
 from repro.models import model as model_lib
 

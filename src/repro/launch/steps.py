@@ -182,7 +182,7 @@ def input_specs(arch: str, shape_name: str, rules: LogicalRules):
 
     Returns (abstract_args, in_specs) for the cell's step function
     (train_step / prefill / serve_step)."""
-    from repro.configs import get_config, get_shape
+    from repro.configs.lm import get_config, get_shape
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     if shape.kind == "train":

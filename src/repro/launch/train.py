@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
-from repro.configs import get_config, reduced
+from repro.configs.lm import get_config, reduced
 from repro.core.scheduler import VariationTracker
 from repro.data.tokens import TokenStream
 from repro.launch import steps as steps_lib

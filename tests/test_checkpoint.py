@@ -54,7 +54,7 @@ def test_no_tmp_leftovers(tmp_path):
 
 def test_restart_determinism(tmp_path):
     """Train 6 steps straight vs 3 + restore + 3: identical final params."""
-    from repro.configs import get_config, reduced
+    from repro.configs.lm import get_config, reduced
     from repro.data.tokens import TokenStream
     from repro.launch import steps as steps_lib
 

@@ -1,8 +1,8 @@
 """Assigned architecture configs: exact public dims + shape rules."""
 import pytest
 
-from repro.configs import (SHAPES, all_configs, get_config, get_shape,
-                           list_configs, reduced)
+from repro.configs.lm import (SHAPES, all_configs, get_config, get_shape,
+                              list_configs, reduced)
 
 # (arch, layers, d_model, heads, kv, d_ff, vocab)
 ASSIGNED = {

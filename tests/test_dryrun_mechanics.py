@@ -81,7 +81,7 @@ def test_shape_bytes_parser():
 
 def test_input_specs_cover_all_archs():
     """Every (arch, shape) cell must produce abstract inputs + specs."""
-    from repro.configs import SHAPES, get_config, list_configs
+    from repro.configs.lm import SHAPES, get_config, list_configs
     from repro.distributed.sharding import LogicalRules
     from repro.launch import steps as steps_lib
     import tests.test_sharding as ts
@@ -103,7 +103,7 @@ def test_input_specs_cover_all_archs():
 
 
 def test_model_flops_accounting():
-    from repro.configs import get_config, get_shape
+    from repro.configs.lm import get_config, get_shape
     from repro.launch.dryrun import model_flops
     cfg = get_config("stablelm-1.6b")
     n = cfg.param_count()

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import get_config, list_configs, reduced
+from repro.configs.lm import get_config, list_configs, reduced
 from repro.launch import steps as steps_lib
 from repro.models import model
 

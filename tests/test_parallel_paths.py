@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, reduced
+from repro.configs.lm import get_config, reduced
 from repro.models import model
 from repro.models.attention import _chunked_attention, _einsum_attention
 
@@ -70,7 +70,7 @@ MOE_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import dataclasses, jax, jax.numpy as jnp
-    from repro.configs import get_config, reduced
+    from repro.configs.lm import get_config, reduced
     from repro.distributed.sharding import LogicalRules, sharding_context
     from repro.models import moe as MOE
 

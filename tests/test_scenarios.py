@@ -1,0 +1,534 @@
+"""Scenario-primitive registry: the compiled step must be BITWISE equal
+to the pre-refactor monolith for the legacy VIO/SLAM/Registration modes
+on every execution path (per-frame, chunked K in {1,4,8}, fleet,
+1-device mesh, mixed-scenario fleets), one compiled program must serve
+every registered scenario (trace counts), the two new scenarios
+(DRONE_VIO, VIO_DEGRADED) must run end-to-end, unknown mode ids must
+raise host-side and pass through in-scan, and registering a new
+scenario must never touch ``core.step``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scenarios as scen
+from repro.core import scheduler as sched
+from repro.core import step as step_mod
+from repro.core.environment import (MODE_DRONE_VIO, MODE_REGISTRATION,
+                                    MODE_SLAM, MODE_VIO, MODE_VIO_DEGRADED,
+                                    Environment, select_mode_id)
+from repro.core.step import (FrameInputs, flags_from_plan,
+                             init_localizer_state, localize_step)
+from repro.data import frames
+
+import reference_monolith as mono
+
+WINDOW = 4
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    """Embedded-scale config: small enough that the module's many
+    jit compiles stay cheap, BA budgets shrunk likewise."""
+    from repro.configs.eudoxus import EDX_DRONE
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    be = dataclasses.replace(EDX_DRONE.backend, ba_window=4,
+                             ba_landmarks=16, lm_iters=2)
+    return dataclasses.replace(EDX_DRONE, frontend=fe, backend=be)
+
+
+@pytest.fixture(scope="module")
+def tiny_seq():
+    return frames.generate(n_frames=12, H=48, W=64, n_landmarks=200,
+                           accel_sigma=0.5, gyro_sigma=0.02, seed=0)
+
+
+@pytest.fixture(scope="module")
+def bind(tiny_cfg, tiny_seq):
+    """Shared static bindings (incl. one vocab both paths bake in)."""
+    from repro.core.backend import tracking
+    cam = tiny_seq.cam
+    return dict(cfg=tiny_cfg.frontend, be_cfg=tiny_cfg.backend,
+                fx=cam.fx, fy=cam.fy, cx=cam.cx, cy=cam.cy,
+                baseline=cam.baseline,
+                vocab=jnp.asarray(
+                    tracking.make_vocab(tiny_cfg.backend.bow_vocab_size)))
+
+
+def _flags(modes):
+    return flags_from_plan(sched.OffloadPlan(marg_schur=False), modes=modes)
+
+
+def _frame_args(seq, i):
+    ipf = seq.imu_per_frame
+    a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+    g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+    return (jnp.asarray(seq.images_left[i]), jnp.asarray(seq.images_right[i]),
+            jnp.asarray(a), jnp.asarray(g))
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _chunk_inputs(seq, idxs, mode_ids, K):
+    """Padded FrameInputs chunk over ``idxs`` with per-frame modes."""
+    ipf = seq.imu_per_frame
+    n = len(idxs)
+    pad = K - n
+
+    def stk(per):
+        arr = np.stack([np.asarray(per(i), np.float32) for i in idxs])
+        if pad:
+            arr = np.concatenate(
+                [arr, np.zeros((pad,) + arr.shape[1:], np.float32)])
+        return arr
+
+    return FrameInputs(
+        img_l=stk(lambda i: seq.images_left[i]),
+        img_r=stk(lambda i: seq.images_right[i]),
+        accel=stk(lambda i: seq.imu_accel[max(i - 1, 0) * ipf:
+                                          max(i, 1) * ipf]),
+        gyro=stk(lambda i: seq.imu_gyro[max(i - 1, 0) * ipf:
+                                        max(i, 1) * ipf]),
+        gps=stk(lambda i: seq.gps[i]),
+        mode=np.concatenate([np.asarray(mode_ids, np.int32)[:n],
+                             np.zeros(pad, np.int32)]),
+        active=np.concatenate([np.ones(n, bool), np.zeros(pad, bool)]))
+
+
+# --------------------------------------------------------------------------
+# bitwise equivalence with the pre-refactor monolith
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [MODE_VIO, MODE_SLAM, MODE_REGISTRATION])
+def test_compiled_matches_monolith_per_frame(tiny_cfg, tiny_seq, bind, mode):
+    """Registry-compiled step == frozen monolith, every state leaf and
+    every scan output bitwise, for each legacy backend."""
+    seq = tiny_seq
+    flags = _flags((mode,))
+    dt = jnp.float32(seq.dt / seq.imu_per_frame)
+    new = jax.jit(lambda st, *a: localize_step(st, *a, **bind))
+    old = jax.jit(
+        lambda st, *a: mono.localize_step_monolith(st, *a, **bind))
+    st_n = init_localizer_state(tiny_cfg, WINDOW, p0=seq.poses[0][:3, 3])
+    st_o = init_localizer_state(tiny_cfg, WINDOW, p0=seq.poses[0][:3, 3])
+    for i in range(8):
+        il, ir, a, g = _frame_args(seq, i)
+        gps = jnp.asarray(seq.gps[i])
+        m = jnp.int32(mode)
+        st_n, out_n = new(st_n, il, ir, a, g, gps, m, flags, dt)
+        st_o, out_o = old(st_o, il, ir, a, g, gps, m, flags, dt)
+    _assert_trees_equal(st_n, st_o)
+    _assert_trees_equal(out_n, out_o)
+
+
+def test_compiled_matches_monolith_chunked(tiny_cfg, tiny_seq, bind):
+    """K in {1,4,8} chunk scans (mixed legacy modes, padded partial
+    chunks included) reproduce the monolith scan bitwise."""
+    seq = tiny_seq
+    mode_ids = [MODE_SLAM] * 4 + [MODE_VIO] * 4 + [MODE_REGISTRATION] * 2
+    flags = _flags(mode_ids)
+    dt = jnp.float32(seq.dt / seq.imu_per_frame)
+    for K in (1, 4, 8):
+        new = jax.jit(lambda st, inp: step_mod.localize_chunk(
+            st, inp, flags, dt, **bind))
+        old = jax.jit(lambda st, inp: mono.localize_chunk_monolith(
+            st, inp, flags, dt, **bind))
+        st_n = init_localizer_state(tiny_cfg, WINDOW,
+                                    p0=seq.poses[0][:3, 3])
+        st_o = init_localizer_state(tiny_cfg, WINDOW,
+                                    p0=seq.poses[0][:3, 3])
+        for s in range(0, 10, K):
+            idxs = list(range(s, min(s + K, 10)))
+            inputs = _chunk_inputs(seq, idxs, mode_ids[s:s + K], K)
+            st_n, out_n = new(st_n, jax.device_put(inputs))
+            st_o, out_o = old(st_o, jax.device_put(inputs))
+        _assert_trees_equal(st_n, st_o)
+        _assert_trees_equal(out_n, out_o)
+
+
+def _fleet_states(cfg, seq, B):
+    sts = [init_localizer_state(cfg, WINDOW, p0=seq.poses[0][:3, 3])
+           for _ in range(B)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *sts)
+
+
+def _fleet_inputs(seq, T, K, mode_ids):
+    B = len(mode_ids)
+    per = [_chunk_inputs(seq, list(range(T)), [m] * T, K)
+           for m in mode_ids]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs, axis=1), *per)
+
+
+def test_compiled_matches_monolith_fleet_and_mesh(tiny_cfg, tiny_seq, bind):
+    """A mixed-mode fleet chunk (B=3: VIO/SLAM/Registration) reproduces
+    the monolith fleet scan bitwise — unsharded AND through a 1-device
+    robots mesh (shard_map)."""
+    from repro.distributed.fleet_mesh import fleet_mesh, shard_fleet_chunk
+    seq = tiny_seq
+    mode_ids = np.array([MODE_VIO, MODE_SLAM, MODE_REGISTRATION], np.int32)
+    flags = _flags(mode_ids)
+    dt = jnp.float32(seq.dt / seq.imu_per_frame)
+    T = K = 6
+    inputs = _fleet_inputs(seq, T, K, mode_ids)
+
+    new = jax.jit(lambda st, inp: step_mod.fleet_chunk(
+        st, inp, flags, dt, **bind))
+    old = jax.jit(lambda st, inp: mono.fleet_chunk_monolith(
+        st, inp, flags, dt, **bind))
+    st_n, out_n = new(_fleet_states(tiny_cfg, seq, 3),
+                      jax.device_put(inputs))
+    st_o, out_o = old(_fleet_states(tiny_cfg, seq, 3),
+                      jax.device_put(inputs))
+    _assert_trees_equal(st_n, st_o)
+    _assert_trees_equal(out_n, out_o)
+
+    mesh = fleet_mesh(jax.devices()[:1])
+    sharded = jax.jit(shard_fleet_chunk(
+        lambda st, inp, fl, d: step_mod.fleet_chunk(st, inp, fl, d, **bind),
+        mesh))
+    st_s, out_s = sharded(_fleet_states(tiny_cfg, seq, 3),
+                          jax.device_put(inputs), flags, dt)
+    _assert_trees_equal(st_s, st_o)
+    _assert_trees_equal(out_s, out_o)
+
+
+# --------------------------------------------------------------------------
+# one compiled program serves every registered scenario
+# --------------------------------------------------------------------------
+
+def test_mixed_scenario_fleet_single_trace(tiny_cfg, tiny_seq):
+    """All five shipped scenarios in ONE fleet chunk program: a robot
+    per scenario, chunked run, exactly one trace, finite estimates —
+    and the two new scenarios match their solo single-robot runs."""
+    from repro.core.fleet import FleetLocalizer
+    seq = tiny_seq
+    B, T = 5, 8
+    il, ir, ac, gy, gps = frames.tile_fleet_sequence(seq, B, T)
+    mode_ids = np.array([MODE_VIO, MODE_SLAM, MODE_REGISTRATION,
+                         MODE_DRONE_VIO, MODE_VIO_DEGRADED], np.int32)
+    gps = gps.copy()
+    gps[:, np.isin(mode_ids, [MODE_SLAM, MODE_REGISTRATION,
+                              MODE_DRONE_VIO])] = np.nan
+    fleet = FleetLocalizer(tiny_cfg, seq.cam, batch=B, window=WINDOW)
+    states = fleet.init_state(
+        p0=np.tile(seq.poses[0][:3, 3], (B, 1)))
+    states = fleet.run(states, il, ir, ac, gy, gps, mode_ids,
+                       seq.dt / seq.imu_per_frame, chunk=4)
+    assert fleet.chunk_trace_count() == 1, \
+        "mixing scenarios retraced the fleet chunk program"
+    pos = fleet.positions(states)
+    assert np.all(np.isfinite(pos))
+
+    # each new scenario's row must equal a solo fleet of that scenario
+    for mid in (MODE_DRONE_VIO, MODE_VIO_DEGRADED):
+        b = int(np.nonzero(mode_ids == mid)[0][0])
+        solo = FleetLocalizer(tiny_cfg, seq.cam, batch=1, window=WINDOW)
+        s1 = solo.init_state(p0=seq.poses[0][:3, 3][None])
+        s1 = solo.run(s1, il[:, b:b + 1], ir[:, b:b + 1], ac[:, b:b + 1],
+                      gy[:, b:b + 1], gps[:, b:b + 1],
+                      mode_ids[b:b + 1], seq.dt / seq.imu_per_frame,
+                      chunk=4)
+        # B=1 and B=5 compile separate batched programs; rows agree to
+        # float tolerance (the existing fleet-vs-single contract)
+        np.testing.assert_allclose(solo.positions(s1)[0], pos[b],
+                                   atol=1e-5)
+
+
+def test_per_frame_scenario_sweep_single_trace(tiny_cfg, tiny_seq):
+    """The per-frame fused path crosses all five scenarios without
+    retracing (mode is data, not a trace signature)."""
+    from repro.core.localizer import Localizer
+    seq = tiny_seq
+    envs = [Environment(True, False),                      # vio
+            Environment(False, False),                     # slam
+            Environment(False, True),                      # registration
+            Environment(False, False, airborne=True),      # drone_vio
+            Environment(True, False, gps_degraded=True),   # vio_degraded
+            Environment(True, False)]
+    loc = Localizer(tiny_cfg, seq.cam, window=WINDOW)
+    st = loc.init_state(p0=seq.poses[0][:3, 3])
+    ipf = seq.imu_per_frame
+    for i, env in enumerate(envs):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        gps = seq.gps[i] if env.gps_available else None
+        st = loc.step(st, seq.images_left[i], seq.images_right[i], a, g,
+                      gps, env, seq.dt / ipf)
+    assert loc.fused_trace_count() == 1
+    assert np.all(np.isfinite(np.asarray(st.filt.p)))
+
+
+# --------------------------------------------------------------------------
+# new-scenario semantics
+# --------------------------------------------------------------------------
+
+def test_drone_vio_is_vio_without_gps_fusion(tiny_cfg, tiny_seq, bind):
+    """DRONE_VIO's pipeline is the spine alone: with no GPS it matches
+    VIO's NaN-outage behavior, with GPS present it must DIFFER (VIO
+    fuses, the drone spec declares no gps_fusion primitive)."""
+    seq = tiny_seq
+    flags = _flags((MODE_VIO, MODE_DRONE_VIO))
+    dt = jnp.float32(seq.dt / seq.imu_per_frame)
+    step = jax.jit(lambda st, *a: localize_step(st, *a, **bind))
+
+    def drive(mode, gps_on):
+        st = init_localizer_state(tiny_cfg, WINDOW, p0=seq.poses[0][:3, 3])
+        for i in range(6):
+            il, ir, a, g = _frame_args(seq, i)
+            gps = (jnp.asarray(seq.gps[i]) if gps_on
+                   else jnp.full(3, jnp.nan))
+            st, _ = step(st, il, ir, a, g, gps, jnp.int32(mode), flags, dt)
+        return st
+
+    # no usable GPS: equivalent filters. NOT bitwise — VIO still runs
+    # the zero-weight gps_update, whose apply_correction renormalizes
+    # the quaternion (float-level rounding); the drone pipeline omits
+    # the primitive entirely.
+    st_d, st_v = drive(MODE_DRONE_VIO, False), drive(MODE_VIO, False)
+    for ld, lv in zip(jax.tree_util.tree_leaves(st_d),
+                      jax.tree_util.tree_leaves(st_v)):
+        np.testing.assert_allclose(np.asarray(ld, np.float32),
+                                   np.asarray(lv, np.float32),
+                                   atol=1e-5)
+    # valid GPS: VIO fuses it, the drone pipeline must not
+    p_vio = np.asarray(drive(MODE_VIO, True).filt.p)
+    p_drone = np.asarray(drive(MODE_DRONE_VIO, True).filt.p)
+    assert not np.allclose(p_vio, p_drone)
+
+
+def test_vio_degraded_downweights_gps(tiny_cfg, tiny_seq, bind):
+    """VIO_DEGRADED fuses the same fixes with an inflated sigma: its
+    covariance must stay wider than plain VIO's under identical
+    inputs."""
+    seq = tiny_seq
+    flags = _flags((MODE_VIO, MODE_VIO_DEGRADED))
+    dt = jnp.float32(seq.dt / seq.imu_per_frame)
+    step = jax.jit(lambda st, *a: localize_step(st, *a, **bind))
+
+    def drive(mode):
+        st = init_localizer_state(tiny_cfg, WINDOW, p0=seq.poses[0][:3, 3])
+        for i in range(6):
+            il, ir, a, g = _frame_args(seq, i)
+            st, _ = step(st, il, ir, a, g, jnp.asarray(seq.gps[i]),
+                         jnp.int32(mode), flags, dt)
+        return st
+
+    tr_vio = float(np.trace(np.asarray(drive(MODE_VIO).filt.P)[:6, :6]))
+    tr_deg = float(np.trace(
+        np.asarray(drive(MODE_VIO_DEGRADED).filt.P)[:6, :6]))
+    assert tr_deg > tr_vio, (tr_deg, tr_vio)
+
+    spec = scen.SCENARIOS["vio_degraded"]
+    assert spec.pipeline[-1].param_dict()["sigma_gps"] == 0.25
+
+
+def test_spec_knobs_apply(tiny_cfg):
+    """apply_spec folds the drone knobs (smaller clone window, higher
+    IMU rate, BA cadence) into a derived config."""
+    drone = scen.SCENARIOS["drone_vio"]
+    cfg2, window = scen.apply_spec(tiny_cfg, drone)
+    assert window == 12 < tiny_cfg.backend.msckf_window
+    assert cfg2.backend.imu_rate_hz == 400 > tiny_cfg.backend.imu_rate_hz
+    cfg3, w3 = scen.apply_spec(tiny_cfg, scen.SCENARIOS["vio"])
+    assert w3 == tiny_cfg.backend.msckf_window
+    assert cfg3.backend == tiny_cfg.backend
+
+
+# --------------------------------------------------------------------------
+# unknown mode ids: host-side raise, in-scan pass-through
+# --------------------------------------------------------------------------
+
+def test_unknown_mode_id_raises_host_side(tiny_cfg, tiny_seq):
+    from repro.core.fleet import FleetLocalizer
+    seq = tiny_seq
+    B, T = 2, 2
+    il, ir, ac, gy, gps = frames.tile_fleet_sequence(seq, B, T)
+    fleet = FleetLocalizer(tiny_cfg, seq.cam, batch=B, window=WINDOW)
+    states = fleet.init_state()
+    bad = np.array([MODE_VIO, 99], np.int32)
+    with pytest.raises(ValueError, match="unknown mode id"):
+        fleet.run(states, il, ir, ac, gy, gps, bad,
+                  seq.dt / seq.imu_per_frame, chunk=2)
+    with pytest.raises(ValueError, match="unknown mode id"):
+        fleet.step(states, il[0], ir[0], ac[0], gy[0], gps[0],
+                   np.array([-1, MODE_VIO], np.int32),
+                   seq.dt / seq.imu_per_frame)
+
+
+def test_out_of_range_mode_passes_through_in_scan(tiny_cfg, tiny_seq, bind):
+    """In-scan, an out-of-range id takes the pass-through branch (spine
+    only — exactly what Registration's in-scan half does), NOT the old
+    clamp-to-Registration... which happened to be the same backend, but
+    now also NOT SLAM's heavy block or VIO's GPS fusion."""
+    seq = tiny_seq
+    flags = _flags(None)        # conservatively all-active
+    dt = jnp.float32(seq.dt / seq.imu_per_frame)
+    step = jax.jit(lambda st, *a: localize_step(st, *a, **bind))
+
+    def drive(mode):
+        st = init_localizer_state(tiny_cfg, WINDOW, p0=seq.poses[0][:3, 3])
+        outs = None
+        for i in range(5):
+            il, ir, a, g = _frame_args(seq, i)
+            st, outs = step(st, il, ir, a, g, jnp.asarray(seq.gps[i]),
+                            jnp.int32(mode), flags, dt)
+        return st, outs
+
+    st_bad, outs_bad = drive(99)
+    st_reg, outs_reg = drive(MODE_REGISTRATION)
+    _assert_trees_equal(st_bad, st_reg)       # spine-only == spine-only
+    assert not np.asarray(outs_bad.ba_ran)
+    assert float(np.asarray(outs_bad.hist).sum()) == 0.0
+    # ...and it is NOT the VIO branch (GPS was valid: VIO would fuse it)
+    st_vio, _ = drive(MODE_VIO)
+    assert not np.allclose(np.asarray(st_bad.filt.p),
+                           np.asarray(st_vio.filt.p))
+
+
+# --------------------------------------------------------------------------
+# extensibility: a new scenario without touching step.py
+# --------------------------------------------------------------------------
+
+def test_register_scenario_without_touching_step(tiny_cfg, tiny_seq):
+    """The worked README example: register a spec, build localizers
+    AFTER, and the compiled program grows a branch — no step.py edit,
+    one trace, behavior distinct from the base scenario."""
+    from repro.core.fleet import FleetLocalizer
+    seq = tiny_seq
+    spec = scen.ScenarioSpec(
+        name="vio_tight",
+        pipeline=scen.SPINE + (scen.use("gps_fusion", sigma_gps=0.005),),
+        env_rule=scen.EnvRule(gps=True, degraded=False, priority=25))
+    mid = scen.register_scenario(spec)
+    try:
+        assert mid == 5
+        assert scen.table().specs[mid].name == "vio_tight"
+        # priority 25 beats the shipped vio rule (20): clean-GPS
+        # environments now resolve to the new profile, degraded ones
+        # still to vio_degraded
+        assert scen.table().resolve_env(Environment(True, False)) == mid
+        assert scen.table().resolve_env(
+            Environment(True, False, gps_degraded=True)) == 4
+        B, T = 2, 6
+        il, ir, ac, gy, gps = frames.tile_fleet_sequence(seq, B, T)
+        fleet = FleetLocalizer(tiny_cfg, seq.cam, batch=B, window=WINDOW)
+        states = fleet.init_state(p0=np.tile(seq.poses[0][:3, 3], (B, 1)))
+        states = fleet.run(states, il, ir, ac, gy, gps,
+                           np.array([MODE_VIO, mid], np.int32),
+                           seq.dt / seq.imu_per_frame, chunk=3)
+        assert fleet.chunk_trace_count() == 1
+        pos = fleet.positions(states)
+        assert np.all(np.isfinite(pos))
+        # same inputs, different fusion sigma -> different estimates
+        assert not np.allclose(pos[0], pos[1])
+    finally:
+        scen.unregister_scenario("vio_tight")
+
+
+def test_per_scenario_gated_knob_lookup(tiny_cfg, tiny_seq, bind):
+    """A registered scenario with a different BA cadence shares the
+    gated block through a baked per-mode lookup table: slam_fast (use-
+    level ba_every=1) runs BA on frames the shipped slam (cadence 2)
+    skips, in the SAME compiled program."""
+    spec = scen.ScenarioSpec(
+        name="slam_fast",
+        pipeline=scen.SPINE + (scen.use("bow_histogram"),
+                               scen.use("ba_marginalize", ba_every=1)),
+        host_stage="slam")
+    mid = scen.register_scenario(spec)
+    try:
+        seq = tiny_seq
+        flags = flags_from_plan(sched.OffloadPlan(marg_schur=False),
+                                modes=(MODE_SLAM, mid))
+        dt = jnp.float32(seq.dt / seq.imu_per_frame)
+        step = jax.jit(lambda st, *a: localize_step(st, *a, **bind))
+
+        def ba_rans(mode):
+            st = init_localizer_state(tiny_cfg, WINDOW,
+                                      p0=seq.poses[0][:3, 3])
+            rans = []
+            for i in range(8):
+                il, ir, a, g = _frame_args(seq, i)
+                st, outs = step(st, il, ir, a, g, jnp.asarray(seq.gps[i]),
+                                jnp.int32(mode), flags, dt)
+                rans.append(bool(np.asarray(outs.ba_ran)))
+            return rans
+
+        fast, slow = ba_rans(mid), ba_rans(MODE_SLAM)
+        assert sum(fast) > sum(slow) > 0, (fast, slow)
+    finally:
+        scen.unregister_scenario("slam_fast")
+
+
+def test_unregister_non_tail_raises():
+    with pytest.raises(ValueError, match="last-registered"):
+        scen.unregister_scenario("vio")
+
+
+def test_unknown_host_stage_rejected():
+    with pytest.raises(ValueError, match="host_stage"):
+        scen.register_scenario(scen.ScenarioSpec(
+            name="bad_stage", pipeline=scen.SPINE, host_stage="mapping"))
+    assert "bad_stage" not in scen.SCENARIOS
+
+
+def test_spine_contract_enforced():
+    with pytest.raises(ValueError, match="spine"):
+        scen.register_scenario(scen.ScenarioSpec(
+            name="broken", pipeline=(scen.use("frontend"),
+                                     scen.use("gps_fusion"),
+                                     scen.use("track_ring"))))
+    assert "broken" not in scen.SCENARIOS
+
+
+# --------------------------------------------------------------------------
+# taxonomy + plan/flags generalization
+# --------------------------------------------------------------------------
+
+def test_select_mode_id_extended_taxonomy():
+    ids = select_mode_id(
+        np.array([False, False, True, True, False, True]),
+        np.array([False, True, False, True, False, False]),
+        gps_degraded=np.array([False, False, False, False, False, True]),
+        airborne=np.array([False, False, False, False, True, False]))
+    np.testing.assert_array_equal(
+        np.asarray(ids), [MODE_SLAM, MODE_REGISTRATION, MODE_VIO, MODE_VIO,
+                          MODE_DRONE_VIO, MODE_VIO_DEGRADED])
+
+
+def test_offload_plan_keyed_by_primitive_name():
+    lm = sched.LatencyModels(transfer_bw=1e12, fixed_overhead_s=0.0)
+    sizes = np.linspace(16, 4096, 16)
+    host = 1e-6 * sizes
+    lm.fit_kernel("kalman_gain", sizes, host, host * 0.1)
+    lm.fit_kernel("marginalization", sizes, host, host * 10.0)
+    plan = lm.plan_frame(window=8, max_updates=24, ba_landmarks=64)
+    # primitive-name keys...
+    assert plan["msckf_update"] is True or plan["msckf_update"] is False
+    assert plan["msckf_update"] and not plan["ba_marginalize"]
+    assert set(sched.PLAN_KEYS) <= set(plan)
+    # ...legacy attribute aliases read the same decisions
+    assert plan.kalman_gain == plan["msckf_update"]
+    assert plan.marginalization == plan["ba_marginalize"]
+    # replace() round-trips both spellings
+    assert not plan.replace(msckf_update=False).kalman_gain
+    assert not plan.replace(kalman_gain=False)["msckf_update"]
+    # unknown primitives default to offload
+    assert plan.get("future_primitive") is True
+
+
+def test_flags_activity_from_modes():
+    flags = _flags((MODE_VIO, MODE_DRONE_VIO))
+    assert not bool(flags.active["slam"])
+    assert bool(flags.active["vio"]) and bool(flags.active["drone_vio"])
+    assert not bool(flags.slam)
+    # legacy views still read the per-primitive gates
+    assert bool(flags.kalman) and bool(flags.marg)
+    assert not bool(flags.marg_pallas)
