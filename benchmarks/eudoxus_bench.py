@@ -752,6 +752,78 @@ def fleet_sharded_sweep(device_counts, n_frames: int, batch: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# fused-spine megakernels: fused (Pallas) vs unfused (XLA reference) sweep
+# ---------------------------------------------------------------------------
+
+def kernels_microbench(reps: int = 7,
+                       out_json: str = "BENCH_kernels.json") -> List[Row]:
+    """Micro-benchmark every megakernel's fused vs unfused path over its
+    calibration sweep (frame pixels / clone-window sizes / landmark
+    counts) plus a corner-budget sweep for the frontend, recording mean
+    and p99 per path. On CPU the "fused" path runs in Pallas interpret
+    mode — expect it to LOSE there; the point of the JSON is that the
+    calibrated dispatch sees exactly these numbers and keeps the fused
+    path off the hot loop until the hardware wins."""
+    import json
+
+    from repro.kernels import registry as kreg
+
+    def stats(fn) -> Tuple[float, float]:
+        fn()                                   # warmup/compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        a = np.asarray(ts)
+        return float(a.mean()) * 1e6, float(np.percentile(a, 99)) * 1e6
+
+    def jitted(spec, args):
+        """Jit both paths; the frontend's cfg operand is static."""
+        if spec.name == "frontend_fused":
+            il, ir, cfg = args
+            return (jax.jit(lambda a, b: spec.xla(a, b, cfg)),
+                    jax.jit(lambda a, b: spec.pallas(a, b, cfg)),
+                    (il, ir))
+        return (jax.jit(spec.xla), jax.jit(spec.pallas), args)
+
+    rows: List[Row] = []
+    report: Dict = {"reps": reps, "kernels": {}}
+    sweeps = []
+    for name in kreg.MEGAKERNELS:
+        spec = kreg.REGISTRY[name]
+        for n in spec.calibrate_sizes:
+            sweeps.append((name, f"n{n}", spec.calibrate_inputs(n)))
+    # corner-budget sweep: same frame, varying top-N feature budget
+    fe_spec = kreg.REGISTRY["frontend_fused"]
+    il, ir, cfg0 = fe_spec.calibrate_inputs(64)
+    for budget in (32, 128):
+        sweeps.append(("frontend_fused", f"budget{budget}",
+                       (il, ir, dataclasses.replace(cfg0,
+                                                    max_features=budget))))
+    for name, label, args in sweeps:
+        spec = kreg.REGISTRY[name]
+        fx, fp, call_args = jitted(spec, args)
+        mean_x, p99_x = stats(lambda: fx(*call_args))
+        mean_p, p99_p = stats(lambda: fp(*call_args))
+        entry = {"unfused_xla": {"mean_us": mean_x, "p99_us": p99_x},
+                 "fused_pallas": {"mean_us": mean_p, "p99_us": p99_p},
+                 "size_feature": spec.size_feature(*args),
+                 "transfer_bytes": spec.transfer_bytes(*args)}
+        report["kernels"].setdefault(name, {})[label] = entry
+        rows.append((f"kernels/{name}_{label}_unfused", mean_x,
+                     f"p99={p99_x:.0f}us"))
+        rows.append((f"kernels/{name}_{label}_fused", mean_p,
+                     f"p99={p99_p:.0f}us,"
+                     f"ratio={mean_p / max(mean_x, 1e-9):.2f}x"))
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Tbl. I / II: building-block composition + sharing economics
 # ---------------------------------------------------------------------------
 
@@ -827,6 +899,12 @@ def main() -> None:
     ap.add_argument("--fleet-shard-worker", action="store_true",
                     help="internal: measure at the current device count "
                          "and print a FLEET_SHARD_RESULT line")
+    ap.add_argument("--kernels", action="store_true",
+                    help="micro-benchmark the fused-spine megakernels "
+                         "(fused Pallas vs unfused XLA, mean+p99 per "
+                         "path) and write BENCH_kernels.json")
+    ap.add_argument("--reps", type=int, default=7,
+                    help="timing samples per kernel path for --kernels")
     ap.add_argument("--scenarios", action="store_true",
                     help="run every registered scenario (incl. drone_vio "
                          "and vio_degraded) plus a mixed-scenario fleet "
@@ -857,6 +935,10 @@ def main() -> None:
         _, cached = kreg.load_or_refit(args.models, kernels=kernels)
         print(f"calibration/models,0.0,"
               f"{'cache_hit' if cached else 'refit'}:{args.models}")
+    if args.kernels:
+        for name, us, derived in kernels_microbench(reps=args.reps):
+            print(f"{name},{us:.1f},{derived}")
+        return
     if args.scenarios:
         for name, us, derived in scenario_latency(
                 n_frames=max(args.frames, 8), chunk=args.chunk or 8):

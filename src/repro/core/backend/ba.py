@@ -159,8 +159,13 @@ def marginalize_schur(Hpp, Hpl, Hll, bp, bl, use_pallas,
             (g, a, bl))
     else:
         yy, yv = marg_schur.accumulate_ref(g, a, bl)
+    return _schur_tail(Hpp, bp, yy, yv, jitter)
 
-    # Schur complement of the landmark block inside H_mm (6x6 algebra)
+
+def _schur_tail(Hpp, bp, yy, yv, jitter):
+    """Schur complement of the landmark block inside H_mm (6x6 algebra,
+    shared by the legacy and normal-equation marginalization entries)."""
+    k = Hpp.shape[0]
     s_d = Hpp[0] + jitter * jnp.eye(6, dtype=Hpp.dtype) - yy[:6, :6]
     s_d_inv = mb.inverse_spd(s_d, jitter=jitter)
     u = yy[6:, :6]                                    # C A^{-1} B, stacked
@@ -170,6 +175,32 @@ def marginalize_schur(Hpp, Hpl, Hll, bp, bl, use_pallas,
     y0 = s_d_inv @ (bp[0] - yv[:6])                   # marginal pose soln
     b_prior = bp[1:].reshape(-1) - (yv[6:] - u @ y0)
     return h_prior, b_prior
+
+
+def marginalize_schur_normal(Hpp, bp, r, jx, jl, use_pallas,
+                             jitter: float = 1e-4,
+                             allow_pallas: bool = True):
+    """Marginalize straight from the BA residual Jacobians: the widened
+    ``marg_schur`` kernel assembles each landmark tile's normal-equation
+    blocks (Hpl/Hll/bl contractions of r/jx/jl) in VMEM and feeds them
+    to the Schur reduction, so the (K,M,6,3)/(M,3,3) intermediates never
+    materialize in HBM. Only the pose-diagonal Hpp (K,6,6) and bp (K,6)
+    — which the 6x6 Schur tail needs whole — are assembled by XLA.
+
+    Numerically identical to ``build_normal_eqs`` + ``marginalize_schur``
+    (the xla branch runs the exact relocated op sequence)."""
+    from repro.kernels import marg_schur
+
+    if allow_pallas:
+        yy, yv = jax.lax.cond(
+            use_pallas,
+            lambda ops: marg_schur.accumulate_normal(*ops, jitter=jitter),
+            lambda ops: marg_schur.accumulate_normal_ref(*ops,
+                                                         jitter=jitter),
+            (r, jx, jl))
+    else:
+        yy, yv = marg_schur.accumulate_normal_ref(r, jx, jl, jitter=jitter)
+    return _schur_tail(Hpp, bp, yy, yv, jitter)
 
 
 def ba_round(ba: BAState, lms: jax.Array, lm_valid: jax.Array,
@@ -189,9 +220,12 @@ def ba_round(ba: BAState, lms: jax.Array, lm_valid: jax.Array,
     kw, m = prob.obs_valid.shape
     r, jx, jl = mapping.residuals(prob, jnp.zeros((kw, 6)),
                                   jnp.zeros((m, 3)))
-    hpp, hpl, hll, bp, bl = mapping.build_normal_eqs(r, jx, jl)
-    h_prior, b_prior = marginalize_schur(hpp, hpl, hll, bp, bl,
-                                         marg_pallas,
-                                         allow_pallas=allow_pallas)
+    # only the pose-diagonal blocks the Schur tail consumes whole are
+    # assembled here; Hpl/Hll/bl are fused into the widened kernel
+    hpp = jnp.einsum("kmri,kmrj->kij", jx, jx)
+    bp = jnp.einsum("kmri,kmr->ki", jx, r)
+    h_prior, b_prior = marginalize_schur_normal(hpp, bp, r, jx, jl,
+                                                marg_pallas,
+                                                allow_pallas=allow_pallas)
     return ba._replace(H_prior=h_prior, b_prior=b_prior,
                        last_cost=costs[-1].astype(jnp.float32))

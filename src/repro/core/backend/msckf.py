@@ -149,6 +149,46 @@ def propagate(state: MsckfState, accel: jax.Array, gyro: jax.Array,
     return state._replace(q=q, p=p, v=v, P=P)
 
 
+def propagate_terms(state: MsckfState, accel: jax.Array, gyro: jax.Array,
+                    dt: float, sigma_a: float = 0.08,
+                    sigma_g: float = 0.004):
+    """Nominal integration + per-sample error-state transitions, without
+    touching P: returns (q, p, v, F_seq (K,15,15), Q (15,15)).
+
+    Feeds the fused covariance megakernel (``kernels.cov_update``): the
+    per-sample F blocks are identical to ``propagate``'s, but the
+    F·P·Fᵀ+Q covariance sweep is left to the kernel so P stays tiled
+    on-chip across all K samples instead of round-tripping per sample.
+    Q is sample-independent (white-noise discretization at fixed dt)."""
+
+    def step(carry, uw):
+        q, p, v = carry
+        am, wm = uw
+        w_hat = wm - state.bg
+        a_hat = am - state.ba
+        R = quat_to_rot(q)
+        a_w = R @ a_hat + GRAVITY
+        p_new = p + v * dt + 0.5 * a_w * dt * dt
+        v_new = v + a_w * dt
+        q_new = quat_normalize(quat_mult(q, small_quat(w_hat * dt)))
+        F = jnp.eye(15)
+        F = F.at[0:3, 0:3].set(jnp.eye(3) - skew(w_hat) * dt)
+        F = F.at[0:3, 9:12].set(-jnp.eye(3) * dt)
+        F = F.at[3:6, 6:9].set(jnp.eye(3) * dt)
+        F = F.at[6:9, 0:3].set(-R @ skew(a_hat) * dt)
+        F = F.at[6:9, 12:15].set(-R * dt)
+        return (q_new, p_new, v_new), F
+
+    (q, p, v), F_seq = jax.lax.scan(step, (state.q, state.p, state.v),
+                                    (accel, gyro))
+    Q = jnp.zeros((15, 15))
+    Q = Q.at[0:3, 0:3].set(jnp.eye(3) * (sigma_g * dt) ** 2)
+    Q = Q.at[6:9, 6:9].set(jnp.eye(3) * (sigma_a * dt) ** 2)
+    Q = Q.at[9:12, 9:12].set(jnp.eye(3) * (1e-5 * dt) ** 2)
+    Q = Q.at[12:15, 12:15].set(jnp.eye(3) * (1e-4 * dt) ** 2)
+    return q, p, v, F_seq, Q
+
+
 def augment(state: MsckfState) -> MsckfState:
     """Clone the current pose into the sliding window (shift-out oldest)."""
     W = state.clones_q.shape[0]

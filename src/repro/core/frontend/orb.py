@@ -37,13 +37,20 @@ def _bilinear(img: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
             + v10 * dy * (1 - dx) + v11 * dy * dx)
 
 
-def orientation(img: jax.Array, yx: jax.Array) -> jax.Array:
-    """Intensity-centroid angle per feature. yx (N,2) int32 -> (N,) radians."""
+def circle_offsets() -> tuple:
+    """The intensity-centroid sampling circle as host tables — the ROM
+    the FPGA's FC block streams; fused kernels pass these in as operands
+    (Pallas kernels can't capture array constants)."""
     r = 7
     dy, dx = np.mgrid[-r:r + 1, -r:r + 1]
     circle = (dy ** 2 + dx ** 2) <= r ** 2
-    dy = jnp.asarray(dy[circle], jnp.float32)
-    dx = jnp.asarray(dx[circle], jnp.float32)
+    return (np.asarray(dy[circle], np.float32),
+            np.asarray(dx[circle], np.float32))
+
+
+def orientation_t(img: jax.Array, yx: jax.Array, dy: jax.Array,
+                  dx: jax.Array) -> jax.Array:
+    """``orientation`` with the circle tables passed as operands."""
 
     def one(p):
         ys = p[0].astype(jnp.float32) + dy
@@ -56,10 +63,16 @@ def orientation(img: jax.Array, yx: jax.Array) -> jax.Array:
     return jax.vmap(one)(yx)
 
 
-def describe(img: jax.Array, yx: jax.Array, angles: jax.Array) -> jax.Array:
-    """(N, 256) bool rBRIEF descriptors (img should be pre-smoothed)."""
+def orientation(img: jax.Array, yx: jax.Array) -> jax.Array:
+    """Intensity-centroid angle per feature. yx (N,2) int32 -> (N,) radians."""
+    dy, dx = circle_offsets()
+    return orientation_t(img, yx, jnp.asarray(dy), jnp.asarray(dx))
+
+
+def describe_t(img: jax.Array, yx: jax.Array, angles: jax.Array,
+               pairs: jax.Array) -> jax.Array:
+    """``describe`` with the (256,4) BRIEF pattern passed as an operand."""
     img = img.astype(jnp.float32)
-    pairs = jnp.asarray(PAIRS)                       # (256,4)
 
     def one(p, a):
         c, s = jnp.cos(a), jnp.sin(a)
@@ -75,6 +88,11 @@ def describe(img: jax.Array, yx: jax.Array, angles: jax.Array) -> jax.Array:
         return v1 < v2
 
     return jax.vmap(one)(yx, angles)
+
+
+def describe(img: jax.Array, yx: jax.Array, angles: jax.Array) -> jax.Array:
+    """(N, 256) bool rBRIEF descriptors (img should be pre-smoothed)."""
+    return describe_t(img, yx, angles, jnp.asarray(PAIRS))
 
 
 def pack_bits(desc: jax.Array) -> jax.Array:

@@ -44,10 +44,10 @@ def feature_extraction(img: jax.Array, cfg) -> tuple:
     return feats, desc
 
 
-def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
-                 prev_img_l: Optional[jax.Array] = None,
-                 prev_feats: Optional[fast.Features] = None) -> FrontendResult:
-    """Full frontend for one stereo frame (optionally tracking from t-1)."""
+def _fe_match_ref(img_l: jax.Array, img_r: jax.Array, cfg):
+    """Unfused FE + MO slice: the XLA reference composition of the
+    ``frontend_fused`` megakernel (DR refinement and LK tracking sit
+    outside the fusion boundary). Returns (fl, fr, dl, matches)."""
     # FE on both streams through one compiled path (vmap = multiplexing)
     both = jnp.stack([img_l, img_r]).astype(jnp.float32)
     feats_b, desc_b = jax.vmap(lambda im: feature_extraction(im, cfg))(both)
@@ -56,11 +56,39 @@ def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
     fr = fast.Features(yx=feats_b.yx[1], score=feats_b.score[1],
                        valid=feats_b.valid[1])
     dl, dr_ = desc_b[0], desc_b[1]
-
-    # SM: MO + DR
     m = stereo.match(dl, fl.yx, fl.valid, dr_, fr.yx, fr.valid,
                      max_disparity=cfg.stereo_max_disparity,
                      hamming_budget=cfg.stereo_hamming_budget)
+    return fl, fr, dl, m
+
+
+def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
+                 prev_img_l: Optional[jax.Array] = None,
+                 prev_feats: Optional[fast.Features] = None,
+                 fused_gate: Optional[jax.Array] = None) -> FrontendResult:
+    """Full frontend for one stereo frame (optionally tracking from t-1).
+
+    ``fused_gate`` (traced bool) selects the ``frontend_fused`` Pallas
+    megakernel for the FE+MO slice via ``lax.cond``; ``None`` — or a
+    frame shape the fused path's NMS tiling can't take — statically
+    drops the fused branch, keeping the unfused path's program (and its
+    numerics) untouched for every existing caller."""
+    from repro.kernels import frontend_fused
+
+    use_fused = (fused_gate is not None
+                 and frontend_fused.supported(img_l.shape[0],
+                                              img_l.shape[1],
+                                              cfg.nms_window))
+    if use_fused:
+        fl, fr, dl, m = jax.lax.cond(
+            fused_gate,
+            lambda ims: frontend_fused.fe_match(ims[0], ims[1], cfg),
+            lambda ims: _fe_match_ref(ims[0], ims[1], cfg),
+            (img_l, img_r))
+    else:
+        fl, fr, dl, m = _fe_match_ref(img_l, img_r, cfg)
+
+    # DR refinement (shared, outside the fusion boundary)
     m = stereo.refine(img_l, img_r, fl.yx, m,
                       radius=cfg.block_match_radius)
 
@@ -101,14 +129,16 @@ def init_carry(cfg) -> FrontendCarry:
 
 
 def step_carry(carry: FrontendCarry, img_l: jax.Array, img_r: jax.Array,
-               cfg) -> Tuple[FrontendCarry, FrontendResult]:
+               cfg, fused_gate: Optional[jax.Array] = None
+               ) -> Tuple[FrontendCarry, FrontendResult]:
     """One frontend stage of the scan body: run the full frontend from
     the carried previous frame, then advance the carry."""
     prev_feats = fast.Features(
         yx=carry.prev_yx,
         score=jnp.zeros(carry.prev_valid.shape, jnp.float32),
         valid=carry.prev_valid)
-    fr = run_frontend(img_l, img_r, cfg, carry.prev_img, prev_feats)
+    fr = run_frontend(img_l, img_r, cfg, carry.prev_img, prev_feats,
+                      fused_gate=fused_gate)
     new_carry = FrontendCarry(prev_img=img_l, prev_yx=fr.yx,
                               prev_valid=fr.valid)
     return new_carry, fr

@@ -74,21 +74,47 @@ from repro.core.step import (FrameInputs, FrameOutputs,  # noqa: F401
 BA_LANDMARKS = 64
 
 
-def resolve_marg_kernel(plan: sched.OffloadPlan,
-                        cfg: EudoxusConfig) -> sched.OffloadPlan:
-    """Fill ``plan.marg_schur`` from the kernel registry's decision for
-    the blocked in-scan Schur reduction at this config's padded BA
-    shapes (honours REPRO_KERNELS forcing, fitted latency models, and
-    the platform fallback — same precedence as every dispatched
-    kernel)."""
+def resolve_kernel_plan(plan: sched.OffloadPlan, cfg: EudoxusConfig,
+                        window: Optional[int] = None) -> sched.OffloadPlan:
+    """Fill the plan's kernel-level Pallas-vs-XLA gates from the kernel
+    registry's decision at this config's padded shapes (honours
+    REPRO_KERNELS forcing, fitted latency models, and the platform
+    fallback — same precedence as every dispatched kernel):
+
+      marg_schur     — the blocked in-scan Schur reduction, at the BA
+                       window's padded residual-Jacobian shapes;
+      frontend_fused — the fused FE+MO megakernel, at the configured
+                       frame shape (odd/cell-misaligned frames resolve
+                       to False via the spec's ``supports``);
+      cov_update     — the fused covariance megakernel, at the clone
+                       window's error-state dimension.
+
+    All dummies are ``np.empty`` — decide_path only reads shapes/dtypes,
+    so resolution never allocates device memory or traces kernels."""
     from repro.kernels import registry as kreg
     l = cfg.backend.ba_landmarks
     kw = cfg.backend.ba_window
-    g = np.empty((l, 6 * kw, 3), np.float32)
-    a = np.empty((l, 3, 3), np.float32)
-    b = np.empty((l, 3), np.float32)
-    use_pallas = kreg.decide_path("marg_schur", g, a, b) == "pallas"
-    return plan.replace(marg_schur=use_pallas)
+    r = np.empty((kw, l, 2), np.float32)
+    jx = np.empty((kw, l, 2, 6), np.float32)
+    jl = np.empty((kw, l, 2, 3), np.float32)
+    img = np.empty((cfg.frontend.height, cfg.frontend.width), np.float32)
+    d = 15 + 6 * (window or cfg.backend.msckf_window)
+    P = np.empty((d, d), np.float32)
+    F_seq = np.empty((8, 15, 15), np.float32)
+    Q = np.empty((15, 15), np.float32)
+    return plan.replace(
+        marg_schur=kreg.decide_path("marg_schur", r, jx, jl) == "pallas",
+        frontend_fused=kreg.decide_path(
+            "frontend_fused", img, img, cfg.frontend) == "pallas",
+        cov_update=kreg.decide_path(
+            "cov_update", P, F_seq, Q, np.int32(1)) == "pallas")
+
+
+def resolve_marg_kernel(plan: sched.OffloadPlan,
+                        cfg: EudoxusConfig) -> sched.OffloadPlan:
+    """Back-compat alias of ``resolve_kernel_plan`` (PR 5 name; fleet
+    and external callers resolve every kernel gate through it)."""
+    return resolve_kernel_plan(plan, cfg)
 
 
 def np_quat_to_rot(q: np.ndarray) -> np.ndarray:
@@ -150,7 +176,17 @@ class _ChunkStager:
     the single-device path) makes the ``device_put`` split each staged
     buffer across the fleet shards up front, so the ring overlaps the
     PER-DEVICE host->device copies with the previous chunk's execution
-    and every shard's dispatch consumes (donates) its local slice."""
+    and every shard's dispatch consumes (donates) its local slice.
+
+    On accelerator backends the double buffering is real: chunk N+1's
+    ``device_put`` is COMMITTED to the device (explicit placement), so
+    XLA issues the host->device DMA immediately and asynchronously into
+    fresh device buffers that chunk N+1's dispatch then donates — the
+    copy engine overlaps chunk N's compute, the paper's input-side
+    pipelining. On CPU an explicit placement would force a copy where
+    ``device_put`` otherwise ALIASES the pre-stacked host arrays
+    (zero-copy), so the uncommitted PR-3 path is kept there bitwise
+    intact — same call, same aliasing, same buffers."""
 
     def __init__(self):
         self._slots: List[Optional[_StagedChunk]] = [None, None]
@@ -159,6 +195,12 @@ class _ChunkStager:
         self.stage_seconds = 0.0     # host time spent staging (hidden
         #                              behind device execution when the
         #                              pipeline overlaps)
+        try:
+            self._commit_dev = (jax.devices()[0]
+                                if jax.devices()[0].platform != "cpu"
+                                else None)
+        except Exception:            # pragma: no cover - no backend
+            self._commit_dev = None
 
     def stage(self, inputs_np: FrameInputs,
               sharding=None) -> _StagedChunk:
@@ -166,9 +208,12 @@ class _ChunkStager:
         prev = self._slots[self._next]
         assert prev is None or prev.consumed, \
             "input ring overrun: slot restaged while its chunk is in flight"
-        # device_put treats sharding=None as default placement, so the
-        # unsharded path is the same call
-        staged = _StagedChunk(jax.device_put(inputs_np, sharding))
+        # device_put treats sharding=None as default placement (CPU:
+        # zero-copy aliasing); on accelerators an explicit committed
+        # target starts the async H2D transfer now, into donated-target
+        # buffers, instead of lazily at the next dispatch
+        target = sharding if sharding is not None else self._commit_dev
+        staged = _StagedChunk(jax.device_put(inputs_np, target))
         self._slots[self._next] = staged
         self._next ^= 1
         self.staged_chunks += 1
@@ -273,7 +318,7 @@ class Localizer:
             plan = self.scheduler.plan_chunk(
                 self.window, tracks.MAX_UPDATES, chunk,
                 map_points=mp, ba_landmarks=bl, frame_pixels=px)
-        return resolve_marg_kernel(plan, self.cfg)
+        return resolve_kernel_plan(plan, self.cfg, self.window)
 
     def refresh_offload_plan(self) -> sched.OffloadPlan:
         """Re-resolve the per-frame offload decisions (after fitting

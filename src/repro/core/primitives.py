@@ -166,11 +166,21 @@ def get_primitive(name: str) -> Primitive:
 
 def _frontend(ctx: FrameCtx, c: FrameCarry, params: Mapping) -> FrameCarry:
     """FAST+ORB features, stereo correspondences, LK tracks (paper
-    Sec. IV frontend)."""
+    Sec. IV frontend). When the plan carries a ``frontend_fused`` gate
+    (and the Pallas kill switch is on), the FE+MO slice is selected
+    between the fused megakernel and the unfused composition by the
+    traced gate; plans without the key keep the unfused program — and
+    its numerics — statically unchanged."""
     fe_carry = pipeline.FrontendCarry(prev_img=c.prev_img,
                                       prev_yx=c.prev_yx,
                                       prev_valid=c.prev_valid)
-    fe_carry, fr = pipeline.step_carry(fe_carry, c.img_l, c.img_r, ctx.cfg)
+    gates = getattr(ctx.flags, "gates", None)
+    fused_gate = None
+    if (ctx.allow_pallas_marg and gates is not None
+            and "frontend_fused" in gates):
+        fused_gate = gates["frontend_fused"]
+    fe_carry, fr = pipeline.step_carry(fe_carry, c.img_l, c.img_r, ctx.cfg,
+                                       fused_gate=fused_gate)
     return _replace(c, fr=fr, prev_img=fe_carry.prev_img,
                     prev_yx=fe_carry.prev_yx,
                     prev_valid=fe_carry.prev_valid)
@@ -188,12 +198,42 @@ def _track_ring(ctx: FrameCtx, c: FrameCarry, params: Mapping) -> FrameCarry:
 def _imu_propagate(ctx: FrameCtx, c: FrameCarry,
                    params: Mapping) -> FrameCarry:
     """MSCKF propagate + clone augmentation (frame 0 defines the start
-    pose, so propagation is skipped there)."""
-    filt = jax.lax.cond(
-        c.frame_idx > 0,
-        lambda f: msckf.propagate(f, c.accel, c.gyro, dt=ctx.dt_imu),
-        lambda f: f, c.filt)
-    return _replace(c, filt=msckf.augment(filt))
+    pose, so propagation is skipped there). A plan-supplied
+    ``cov_update`` gate selects the fused covariance megakernel — one
+    VMEM-resident P sweep over all IMU samples plus the clone insertion
+    — against the scan-based reference; plans without the key keep the
+    reference program statically."""
+
+    def ref_path(f):
+        f2 = jax.lax.cond(
+            c.frame_idx > 0,
+            lambda s: msckf.propagate(s, c.accel, c.gyro, dt=ctx.dt_imu),
+            lambda s: s, f)
+        return msckf.augment(f2)
+
+    gates = getattr(ctx.flags, "gates", None)
+    if (not ctx.allow_pallas_marg or gates is None
+            or "cov_update" not in gates):
+        return _replace(c, filt=ref_path(c.filt))
+
+    def fused_path(f):
+        from repro.kernels import cov_update
+        q, p, v, F_seq, Q = msckf.propagate_terms(f, c.accel, c.gyro,
+                                                  dt=ctx.dt_imu)
+        do = c.frame_idx > 0
+        q = jnp.where(do, q, f.q)
+        p = jnp.where(do, p, f.p)
+        v = jnp.where(do, v, f.v)
+        P = cov_update.fused_update(f.P, F_seq, Q, do)
+        W = f.clones_q.shape[0]
+        return f._replace(
+            q=q, p=p, v=v,
+            clones_q=jnp.concatenate([f.clones_q[1:], q[None]], axis=0),
+            clones_p=jnp.concatenate([f.clones_p[1:], p[None]], axis=0),
+            n_clones=jnp.minimum(f.n_clones + 1, W), P=P)
+
+    filt = jax.lax.cond(gates["cov_update"], fused_path, ref_path, c.filt)
+    return _replace(c, filt=filt)
 
 
 def _msckf_update(ctx: FrameCtx, c: FrameCarry,
@@ -296,8 +336,10 @@ def _ba_marginalize(ctx: FrameCtx, c: FrameCarry, params: Mapping):
 
 register_primitive(Primitive(
     name="frontend", stage=_frontend, placement="spine",
-    offload_key="frontend", kernel="conv2d", latency_kernel="conv2d",
-    description="FAST+ORB features, stereo match, LK tracking"))
+    offload_key="frontend", kernel="frontend_fused",
+    latency_kernel="frontend_fused",
+    description="FAST+ORB features, stereo match, LK tracking "
+                "(fused FE+MO megakernel behind the frontend_fused gate)"))
 
 register_primitive(Primitive(
     name="track_ring", stage=_track_ring, placement="spine",
@@ -305,7 +347,9 @@ register_primitive(Primitive(
 
 register_primitive(Primitive(
     name="imu_propagate", stage=_imu_propagate, placement="spine",
-    description="MSCKF IMU propagation + clone augmentation"))
+    kernel="cov_update", latency_kernel="cov_update",
+    description="MSCKF IMU propagation + clone augmentation "
+                "(fused covariance megakernel behind the cov_update gate)"))
 
 register_primitive(Primitive(
     name="msckf_update", stage=_msckf_update, placement="spine",

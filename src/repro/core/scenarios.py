@@ -354,9 +354,14 @@ def _build_table(specs: Sequence[ScenarioSpec]) -> ScenarioTable:
             scenario_names=tuple(specs[i].name for i in sorted(users)),
             params_by_id=tuple(users[i].params if i in users else None
                                for i in range(len(specs)))))
+    # kernel-level Pallas-vs-XLA gates ride alongside the offload keys:
+    # marg_schur picks the blocked Schur impl inside ba_marginalize, and
+    # the PR-6 megakernel gates pick the fused FE+MO / covariance
+    # kernels inside the spine's frontend / imu_propagate stages
     gate_keys = sorted({p.offload_key for s in specs for u in s.pipeline
                         for p in (prim.get_primitive(u.name),)
-                        if p.offload_key is not None} | {"marg_schur"})
+                        if p.offload_key is not None}
+                       | {"marg_schur", "frontend_fused", "cov_update"})
     return ScenarioTable(specs=tuple(specs), spine=spine,
                          switch_uses=tuple(switch_uses),
                          gated=tuple(gated), gate_keys=tuple(gate_keys))

@@ -75,6 +75,11 @@ KERNEL_MODELS = {
     "kalman_gain": 2,       # quadratic in H height (Fig. 16b)
     "marginalization": 2,   # quadratic in #features (Fig. 16c)
     "marg_schur": 1,        # blocked Schur reduction: linear in landmarks
+    # fused spine megakernels: the frontend streams the frame once
+    # (linear in pixels); the covariance sweep is dense in the (d, d)
+    # state block (quadratic in the error-state dimension)
+    "frontend_fused": 1,
+    "cov_update": 2,
     # frontend / building-block ops (registry-dispatched): latency is
     # linear in the element count each size feature reports
     "conv2d": 1,
@@ -87,9 +92,18 @@ KERNEL_MODELS = {
 
 # canonical OffloadPlan keys: the primitive names of core.primitives
 # (each primitive declares its offload_key; the plan is keyed by those
-# names) plus the kernel-level "marg_schur" Pallas-vs-XLA pick
+# names) plus the kernel-level Pallas-vs-XLA picks ("marg_schur" and the
+# PR-6 megakernel gates "frontend_fused"/"cov_update")
 PLAN_KEYS = ("frontend", "msckf_update", "map_query", "ba_marginalize",
-             "marg_schur")
+             "marg_schur", "frontend_fused", "cov_update")
+
+# per-key default when a plan doesn't decide it. Offload keys default to
+# True (no evidence the host is faster); the megakernel gates default to
+# False — they swap the spine's numerics-identical-but-reordered fused
+# kernels in, so an unresolved plan must keep the reference program
+# (bitwise parity with the monolithic path) until the registry's
+# decide_path explicitly opts in per chunk.
+PLAN_KEY_DEFAULTS = {"frontend_fused": False, "cov_update": False}
 
 # the pre-registry field names, kept as attribute aliases so existing
 # call sites / tests read the same decisions
@@ -136,6 +150,14 @@ class OffloadPlan(Mapping):
                        Advisory: the ops dispatch per-call through
                        kernels.registry at trace time; this is the
                        plan's consolidated record of that decision.
+      frontend_fused — traced gate selecting the fused FE+MO Pallas
+                       megakernel over the unfused composition inside
+                       the spine's frontend stage. Defaults to False
+                       (keep the reference program) until resolved per
+                       chunk via kernels.registry.decide_path /
+                       fitted models (localizer.resolve_kernel_plan).
+      cov_update     — same, for the fused IMU propagate+augment
+                       covariance megakernel in imu_propagate.
 
     Legacy attribute aliases (``plan.kalman_gain`` etc.,
     ``_LEGACY_PLAN_FIELDS``) are kept for existing call sites."""
@@ -143,7 +165,7 @@ class OffloadPlan(Mapping):
     __slots__ = ("_d",)
 
     def __init__(self, decisions: Optional[Mapping] = None, **fields):
-        d = {k: True for k in PLAN_KEYS}
+        d = {k: PLAN_KEY_DEFAULTS.get(k, True) for k in PLAN_KEYS}
         if decisions is not None:
             for k, v in dict(decisions).items():
                 d[_LEGACY_PLAN_FIELDS.get(k, str(k))] = bool(v)
@@ -288,7 +310,23 @@ class LatencyModels:
         marg = self.should_offload("marginalization", max(ba_landmarks, 1),
                                    ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4,
                                    overhead_s=amortized)
-        return plan.replace(msckf_update=kalman, ba_marginalize=marg)
+        # megakernel gates: resolved per chunk from their fitted latency
+        # models when available (the registry's decide_path applies the
+        # same models plus REPRO_KERNELS forcing at trace time — see
+        # localizer.resolve_kernel_plan); unfitted keeps the False
+        # default so the reference program stays selected
+        fused = {}
+        if self.fitted("frontend_fused"):
+            fused["frontend_fused"] = self.should_offload(
+                "frontend_fused", max(frame_pixels, 1),
+                frame_pixels * 2 * 4, overhead_s=amortized)
+        d_err = 15 + 6 * window
+        if self.fitted("cov_update"):
+            fused["cov_update"] = self.should_offload(
+                "cov_update", d_err, d_err * d_err * 4,
+                overhead_s=amortized)
+        return plan.replace(msckf_update=kalman, ba_marginalize=marg,
+                            **fused)
 
     def plan_fleet_chunk(self, window: int, max_updates: int, chunk: int,
                          batch: int = 1, shards: int = 1,

@@ -85,7 +85,14 @@ class PlanFlags(NamedTuple):
 
     ``gates``   primitive offload key -> () bool traced gate (run the
                 primitive's in-dispatch work / pick its accel kernel).
-                Keys come from the bound ``ScenarioTable.gate_keys``.
+                Keys come from the bound ``ScenarioTable.gate_keys``,
+                which also carry the megakernel selectors
+                (``frontend_fused``/``cov_update``/``marg_schur``):
+                those pick the fused Pallas spine inside a primitive
+                via ``lax.cond`` rather than gating the work itself.
+                When the plan decides one of them off host-side the key
+                is absent here and the primitive traces only the
+                reference path (bitwise-identical program).
     ``active``  scenario name -> () bool — any frame of this dispatch
                 runs the scenario. Always SCALARS (never batched), so
                 the conds they gate survive vmap as real branches: an
@@ -115,6 +122,11 @@ class PlanFlags(NamedTuple):
         return self.active["slam"]
 
 
+# Gate keys whose lax.cond is elided entirely (not traced) when the
+# host-side plan decision is False — see flags_from_plan.
+_STATIC_DROP_GATES = frozenset({"frontend_fused", "cov_update"})
+
+
 def flags_from_plan(plan, slam_active=None, modes=None,
                     table: scen.ScenarioTable = None) -> PlanFlags:
     """OffloadPlan -> the traced in-dispatch flag bundle.
@@ -125,9 +137,24 @@ def flags_from_plan(plan, slam_active=None, modes=None,
     form (only the SLAM block was gated pre-registry); with neither,
     every scenario is conservatively active. ``table`` defaults to the
     current global registry snapshot — pass the localizer's bound table
-    so the flag pytree structure matches its compiled program."""
+    so the flag pytree structure matches its compiled program.
+
+    Megakernel selector keys (``frontend_fused``/``cov_update``) are
+    DROPPED from the gate dict when the plan decides them off
+    host-side: both sides of their ``lax.cond`` are numerically
+    equivalent, but merely tracing the fused branch perturbs XLA fusion
+    under vmap enough to break bitwise parity with the pre-megakernel
+    program — omitting the key keeps the reference spine statically
+    untouched. A plan that turns one on (or carries a traced value)
+    keeps the key, so forced-Pallas runs trace the fused branch."""
     table = table if table is not None else scen.table()
-    gates = {k: jnp.asarray(plan.get(k, True)) for k in table.gate_keys}
+    gates = {}
+    for k in table.gate_keys:
+        v = plan.get(k, True)
+        if (k in _STATIC_DROP_GATES and not isinstance(v, jax.Array)
+                and not bool(v)):
+            continue
+        gates[k] = jnp.asarray(v)
     if modes is not None:
         act = table.activity(modes)
     else:

@@ -1,0 +1,110 @@
+"""Fused IMU covariance megakernel — propagate + state augment on P tiles.
+
+``msckf.propagate`` sweeps K IMU samples with a lax.scan whose body does
+F·P·Fᵀ+Q on the 15×15 IMU block and F·P_ic on the clone coupling — each
+sample re-reads and re-writes the full (d, d) covariance through HBM.
+``msckf.augment`` then permutes the clone blocks and inserts the new
+clone rows, another full-P round trip.
+
+This kernel fuses both: the covariance is the kernel's OUTPUT block and
+stays VMEM-resident across the whole grid — grid step i applies sample
+i's transition in place; the last step applies the augment permutation
+and clone-row insertion on the already-hot tile. DRAM sees exactly one
+P read and one P write for the whole propagate+augment sequence.
+
+The nominal integration (quaternion state, tiny) stays in XLA —
+``msckf.propagate_terms`` produces the per-sample F blocks the kernel
+consumes. ``do_prop`` is a traced (1,1) gate: frame 0 skips propagation
+but still augments, matching the spine's ``frame_idx > 0`` cond without
+changing kernel shapes. ``update_ref`` is the registry's XLA reference
+composition (same math as propagate-then-augment on the P slice).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import default_interpret
+
+
+def _propagate_P(P, F, Q):
+    """One sample's covariance transition on the IMU block (same update
+    as ``msckf.propagate``'s scan body, on an already-loaded P)."""
+    Pii = P[:15, :15]
+    Pic = P[:15, 15:]
+    Pii_new = F @ Pii @ F.T + Q
+    Pic_new = F @ Pic
+    P = P.at[:15, :15].set(0.5 * (Pii_new + Pii_new.T))
+    P = P.at[:15, 15:].set(Pic_new)
+    P = P.at[15:, :15].set(Pic_new.T)
+    return P
+
+
+def _augment_P(P):
+    """Clone-window permutation + new-clone row/col insertion (same
+    sequence as ``msckf.augment``: J selects the first 6 error dims, so
+    P·Jᵀ is P's first 6 columns)."""
+    d = P.shape[0]
+    rows = jnp.concatenate([P[:15], P[21:], P[15:21]], axis=0)
+    P_shift = jnp.concatenate([rows[:, :15], rows[:, 21:], rows[:, 15:21]],
+                              axis=1)
+    PJ = P_shift[:, :6]                               # (d, 6)
+    JPJ = PJ[:6, :]                                   # (6, 6)
+    P_new = P_shift.at[:, d - 6:].set(PJ)
+    P_new = P_new.at[d - 6:, :].set(PJ.T)
+    P_new = P_new.at[d - 6:, d - 6:].set(JPJ)
+    return P_new
+
+
+def _cov_kernel(F_ref, Q_ref, gate_ref, P_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _load():
+        out_ref[...] = P_ref[...]                     # one DRAM read of P
+
+    P = out_ref[...]
+    F = F_ref[...][0]
+    P_upd = _propagate_P(P, F, Q_ref[...])
+    out_ref[...] = jnp.where(gate_ref[...][0, 0] > 0, P_upd, P)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _augment():
+        out_ref[...] = _augment_P(out_ref[...])
+
+
+def fused_update(P: jax.Array, F_seq: jax.Array, Q: jax.Array,
+                 do_prop: jax.Array, *,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """P (d,d), F_seq (K,15,15), Q (15,15), do_prop () int32/bool ->
+    augmented post-propagation covariance (d,d)."""
+    if interpret is None:
+        interpret = default_interpret()
+    d = P.shape[0]
+    K = F_seq.shape[0]
+    gate = jnp.asarray(do_prop, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        _cov_kernel,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, 15, 15), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((15, 15), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((d, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), P.dtype),
+        interpret=interpret,
+    )(F_seq, Q, gate, P)
+
+
+def update_ref(P: jax.Array, F_seq: jax.Array, Q: jax.Array,
+               do_prop: jax.Array) -> jax.Array:
+    """Unfused XLA reference of the same covariance sweep (the registry's
+    host path and the parity oracle)."""
+    def step(P, F):
+        return _propagate_P(P, F, Q), None
+
+    P_prop, _ = jax.lax.scan(step, P, F_seq)
+    return _augment_P(jnp.where(jnp.asarray(do_prop) > 0, P_prop, P))

@@ -1,0 +1,295 @@
+"""Fused frontend megakernel — detect + describe + match in one pipeline.
+
+The paper's frontend accelerator wins by fusing the FE tasks into one
+pipelined block: the frame streams through IF (blur), FD (FAST-9 +
+NMS) and FC (rBRIEF) without ever round-tripping intermediates through
+DRAM, and only the fixed feature-budget SRAM crosses to the matching
+unit. The unfused XLA spine (``frontend/filters.py`` + ``fast.py`` +
+``orb.py`` + ``stereo.py``) materializes the blurred frame, the full
+score map and the descriptor matrix in HBM between ops.
+
+This module is the Pallas twin: three ``pallas_call`` stages whose only
+DRAM-visible products are the ones the backend actually consumes.
+
+  kernel A (_fe_kernel):   pad-once frame (VMEM-resident) -> separable
+                           Gaussian blur + FAST-9 scoring + per-cell NMS
+                           in one pass over row-blocks; the full score
+                           map never leaves VMEM — only the (Hc, Wc)
+                           cell maxima do.
+  kernel B (_fc_kernel):   smoothed frame + top-N corner budget ->
+                           orientation + rotated-BRIEF + bit packing.
+  kernel C (_mo_kernel):   packed descriptors -> SWAR-popcount epipolar
+                           match (the stereo_hamming unit, fused with
+                           the constraint masking + argmin).
+
+The composition (``fe_match``) is numerically exact vs the unfused
+reference (``core.frontend.pipeline._fe_match_ref``): same tap order,
+same op sequence, integer hamming distances that are exact in fp32.
+Shapes stay static under the scan via the fixed ``max_features`` corner
+budget. ``supported()`` gates dispatch: the NMS reshape trick needs the
+frame to be a whole number of NMS cells (odd sizes fall back to XLA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.frontend import fast, filters, orb, stereo
+from repro.kernels.common import default_interpret, pick_block
+
+
+def supported(h: int, w: int, cell: int) -> bool:
+    """Fused path needs whole NMS cells (the reshape-NMS crop must be a
+    no-op so corner coordinates match the reference bitwise)."""
+    return h % cell == 0 and w % cell == 0 and h >= cell and w >= cell
+
+
+# --------------------------------------------------------------------------
+# kernel A: blur + FAST-9 + cell NMS over row-blocks of the padded frame
+# --------------------------------------------------------------------------
+
+def _fe_kernel(pad_ref, smooth_ref, best_ref, idx_ref, *, taps, H, W, bh,
+               pad, cell, threshold, arc_len):
+    i = pl.program_id(0)
+    row0 = i * bh
+    P = pad_ref[...]                                  # (H+2p, W+2p) VMEM
+    r = len(taps) // 2
+
+    # IF: separable Gaussian on this row-block (vertical then horizontal,
+    # same tap order / accumulation as filters._conv1d -> bitwise equal;
+    # the pad-p border doubles as both passes' edge padding)
+    vP = jnp.zeros((bh, W + 2 * pad), jnp.float32)
+    for ti, t in enumerate(taps):
+        vP = vP + jax.lax.dynamic_slice(
+            P, (row0 + (pad - r) + ti, 0), (bh, W + 2 * pad)) * t
+    smooth = jnp.zeros((bh, W), jnp.float32)
+    for tj, t in enumerate(taps):
+        smooth = smooth + vP[:, (pad - r) + tj:(pad - r) + tj + W] * t
+    smooth_ref[...] = smooth
+
+    # FD: FAST-9 on the RAW block (ring offsets read from the same pad)
+    center = jax.lax.dynamic_slice(P, (row0 + pad, pad), (bh, W))
+    ring = jnp.stack([
+        jax.lax.dynamic_slice(P, (row0 + pad + dy, pad + dx), (bh, W))
+        for dy, dx in fast.CIRCLE])                   # (16, bh, W)
+    diff = ring - center[None]
+    brighter = diff > threshold
+    darker = diff < -threshold
+
+    def has_arc(flags):
+        out = jnp.zeros(flags.shape[1:], bool)
+        for start in range(16):
+            run = flags[start % 16]
+            for j in range(1, arc_len):
+                run = run & flags[(start + j) % 16]
+            out = out | run
+        return out
+
+    corner_b = has_arc(brighter)
+    corner_d = has_arc(darker)
+    sb = jnp.sum(jnp.where(brighter, jnp.abs(diff) - threshold, 0.0), axis=0)
+    sd = jnp.sum(jnp.where(darker, jnp.abs(diff) - threshold, 0.0), axis=0)
+    score = jnp.where(corner_b, sb, 0.0) + jnp.where(corner_d, sd, 0.0)
+    margin = 16
+    yy = row0 + jax.lax.broadcasted_iota(jnp.int32, (bh, W), 0)
+    xx = jax.lax.broadcasted_iota(jnp.int32, (bh, W), 1)
+    inside = ((yy >= margin) & (yy < H - margin) &
+              (xx >= margin) & (xx < W - margin))
+    score = jnp.where(inside, score, 0.0)
+
+    # NMS: one candidate per cell — only (bc, Wc) maxima leave VMEM,
+    # the dense score block does not
+    bc, Wc = bh // cell, W // cell
+    s = score.reshape(bc, cell, Wc, cell).transpose(0, 2, 1, 3)
+    s = s.reshape(bc * Wc, cell * cell)
+    idx = jnp.argmax(s, axis=1)
+    best = jnp.take_along_axis(s, idx[:, None], axis=1)[:, 0]
+    best_ref[...] = best.reshape(bc, Wc)
+    idx_ref[...] = idx.reshape(bc, Wc).astype(jnp.int32)
+
+
+def _detect_describe(img: jax.Array, cfg, interpret: bool
+                     ) -> Tuple[fast.Features, jax.Array, jax.Array]:
+    """One image through kernels A + B: Features, desc (N,256) bool,
+    packed (N,8) uint32."""
+    H, W = img.shape
+    cell = cfg.nms_window
+    taps = filters.gaussian_taps(cfg.gaussian_sigma)
+    pad = max(len(taps) // 2, 3)                      # blur radius vs ring
+    P = jnp.pad(img.astype(jnp.float32), pad, mode="edge")
+    Hc, Wc = H // cell, W // cell
+    bc = pick_block(Hc, 8)
+    bh = bc * cell
+
+    smooth, best, idx = pl.pallas_call(
+        functools.partial(_fe_kernel, taps=taps, H=H, W=W, bh=bh, pad=pad,
+                          cell=cell, threshold=cfg.fast_threshold,
+                          arc_len=cfg.fast_arc_len),
+        grid=(H // bh,),
+        in_specs=[pl.BlockSpec((H + 2 * pad, W + 2 * pad),
+                               lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((bh, W), lambda i: (i, 0)),
+                   pl.BlockSpec((bc, Wc), lambda i: (i, 0)),
+                   pl.BlockSpec((bc, Wc), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((H, W), jnp.float32),
+                   jax.ShapeDtypeStruct((Hc, Wc), jnp.float32),
+                   jax.ShapeDtypeStruct((Hc, Wc), jnp.int32)],
+        interpret=interpret,
+    )(P)
+
+    # top-K over cell maxima (identical arithmetic to fast.grid_nms_topk)
+    bestf = best.reshape(Hc * Wc)
+    idxf = idx.reshape(Hc * Wc)
+    cy = jnp.arange(Hc * Wc) // Wc * cell + idxf // cell
+    cx = jnp.arange(Hc * Wc) % Wc * cell + idxf % cell
+    k = min(cfg.max_features, Hc * Wc)
+    top_score, top_i = jax.lax.top_k(bestf, k)
+    yx = jnp.stack([cy[top_i], cx[top_i]], axis=1).astype(jnp.int32)
+    valid = top_score > 0
+    if k < cfg.max_features:
+        padn = cfg.max_features - k
+        yx = jnp.pad(yx, ((0, padn), (0, 0)))
+        top_score = jnp.pad(top_score, (0, padn))
+        valid = jnp.pad(valid, (0, padn))
+    feats = fast.Features(yx=yx, score=top_score, valid=valid)
+
+    desc_u8, packed = _describe(smooth, yx, interpret)
+    return feats, desc_u8 != 0, packed
+
+
+# --------------------------------------------------------------------------
+# kernel B: orientation + rBRIEF + bit packing on the corner budget
+# --------------------------------------------------------------------------
+
+def _fc_kernel(img_ref, yx_ref, cdy_ref, cdx_ref, pairs_ref,
+               desc_ref, packed_ref):
+    img = img_ref[...]
+    yx = yx_ref[...]
+    # the FPGA's pattern ROMs arrive as operands (kernels can't capture
+    # array constants); arithmetic is orb's, bit for bit
+    ang = orb.orientation_t(img, yx, cdy_ref[...], cdx_ref[...])
+    desc = orb.describe_t(img, yx, ang, pairs_ref[...])
+    desc_ref[...] = desc.astype(jnp.uint8)
+    packed_ref[...] = orb.pack_bits(desc)
+
+
+def _describe(smooth: jax.Array, yx: jax.Array, interpret: bool
+              ) -> Tuple[jax.Array, jax.Array]:
+    H, W = smooth.shape
+    n = yx.shape[0]
+    bn = pick_block(n, 128)
+    cdy, cdx = orb.circle_offsets()
+    nc = cdy.shape[0]
+    return pl.pallas_call(
+        _fc_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((H, W), lambda i: (0, 0)),
+                  pl.BlockSpec((bn, 2), lambda i: (i, 0)),
+                  pl.BlockSpec((nc,), lambda i: (0,)),
+                  pl.BlockSpec((nc,), lambda i: (0,)),
+                  pl.BlockSpec((orb.N_BITS, 4), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((bn, orb.N_BITS), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, 8), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, orb.N_BITS), jnp.uint8),
+                   jax.ShapeDtypeStruct((n, 8), jnp.uint32)],
+        interpret=interpret,
+    )(smooth, yx, jnp.asarray(cdy), jnp.asarray(cdx),
+      jnp.asarray(orb.PAIRS))
+
+
+# --------------------------------------------------------------------------
+# kernel C: SWAR-popcount epipolar match on packed descriptors
+# --------------------------------------------------------------------------
+
+_BIG_INT = 1 << 30      # python int: folds into the kernel (no capture)
+
+
+def _popcount32(x):
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return (x * 0x01010101) >> 24
+
+
+def _mo_kernel(pl_ref, yxl_ref, vl_ref, pr_ref, yxr_ref, vr_ref,
+               idx_ref, best_ref, disp_ref, *, max_disparity, row_tol):
+    a = pl_ref[...]                                   # (bn, 8) uint32
+    b = pr_ref[...]                                   # (NR, 8)
+    x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+    dist = jnp.sum(_popcount32(x.astype(jnp.uint32)),
+                   axis=-1).astype(jnp.int32)         # exact in int32
+    yxl = yxl_ref[...]
+    yxr = yxr_ref[...]
+    rowdiff = jnp.abs(yxl[:, None, 0] - yxr[None, :, 0])
+    disp = yxl[:, None, 1] - yxr[None, :, 1]
+    ok = ((rowdiff <= row_tol) & (disp >= 0) & (disp <= max_disparity)
+          & (vl_ref[...][:, 0] > 0)[:, None] & (vr_ref[...][:, 0] > 0)[None])
+    dist = jnp.where(ok, dist, _BIG_INT)
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    best = jnp.take_along_axis(dist, idx[:, None], axis=1)
+    dval = jnp.take_along_axis(disp.astype(jnp.float32), idx[:, None],
+                               axis=1)
+    idx_ref[...] = idx[:, None]
+    best_ref[...] = best
+    disp_ref[...] = dval
+
+
+def match_packed(pk_l, yxl, vl, pk_r, yxr, vr, *, max_disparity: int,
+                 hamming_budget: int, row_tol: int = 2,
+                 interpret: Optional[bool] = None) -> stereo.StereoMatches:
+    """Epipolar-constrained hamming match on packed (N,8) descriptors.
+    Integer distances order identically to the float reference (hamming
+    <= 256 is exact in fp32), so right_idx/valid match bitwise."""
+    if interpret is None:
+        interpret = default_interpret()
+    NL, NR = pk_l.shape[0], pk_r.shape[0]
+    bn = pick_block(NL, 128)
+    idx, best, dval = pl.pallas_call(
+        functools.partial(_mo_kernel, max_disparity=max_disparity,
+                          row_tol=row_tol),
+        grid=(NL // bn,),
+        in_specs=[pl.BlockSpec((bn, 8), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, 2), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((NR, 8), lambda i: (0, 0)),
+                  pl.BlockSpec((NR, 2), lambda i: (0, 0)),
+                  pl.BlockSpec((NR, 1), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((NL, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((NL, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((NL, 1), jnp.float32)],
+        interpret=interpret,
+    )(pk_l, yxl, vl.astype(jnp.int32)[:, None],
+      pk_r, yxr, vr.astype(jnp.int32)[:, None])
+    return stereo.StereoMatches(
+        right_idx=idx[:, 0],
+        disparity=jnp.maximum(dval[:, 0], 0.0),
+        valid=best[:, 0] <= hamming_budget)
+
+
+# --------------------------------------------------------------------------
+# composition: the registry's pallas path
+# --------------------------------------------------------------------------
+
+def fe_match(img_l: jax.Array, img_r: jax.Array, cfg, *,
+             interpret: Optional[bool] = None):
+    """Fused FE + MO for one stereo frame: returns (fl, fr, dl, matches),
+    the same tuple as ``pipeline._fe_match_ref`` (DR refinement and LK
+    tracking stay shared, outside the fusion boundary)."""
+    if interpret is None:
+        interpret = default_interpret()
+    fl, dl, pk_l = _detect_describe(img_l.astype(jnp.float32), cfg,
+                                    interpret)
+    fr, _, pk_r = _detect_describe(img_r.astype(jnp.float32), cfg,
+                                   interpret)
+    m = match_packed(pk_l, fl.yx, fl.valid, pk_r, fr.yx, fr.valid,
+                     max_disparity=cfg.stereo_max_disparity,
+                     hamming_budget=cfg.stereo_hamming_budget,
+                     interpret=interpret)
+    return fl, fr, dl, m

@@ -21,6 +21,7 @@ is the XLA path of the registry's ``marg_schur`` entry.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -99,4 +100,84 @@ def accumulate_ref(g: jax.Array, a: jax.Array, b: jax.Array
                    ) -> Tuple[jax.Array, jax.Array]:
     """Unblocked XLA reference of the same reduction (the registry's
     host/xla path; also the vmap-friendly in-scan fallback)."""
+    return _tile_terms(g, a, b)
+
+
+# --------------------------------------------------------------------------
+# widened entry: consume the BA normal-equation assembly directly
+# --------------------------------------------------------------------------
+#
+# ``ba.ba_round`` used to materialize the full Gauss-Newton blocks
+# (Hpl (K,M,6,3), Hll (M,3,3), bl (M,3) — mapping.build_normal_eqs)
+# before handing them to ``accumulate``. But every one of those blocks
+# is a landmark-local contraction of the residual Jacobians, so the JᵀJ
+# assembly tiles over landmarks exactly like the Schur reduction does.
+# ``accumulate_normal`` fuses both: each grid step contracts its
+# landmark tile's (K, mb, 2, ·) Jacobian slabs into the tile's G/A/b
+# blocks in VMEM and feeds them straight to the Schur accumulation —
+# Hpl/Hll/bl never exist at full M in HBM.
+
+def _normal_tile(r: jax.Array, jx: jax.Array, jl: jax.Array,
+                 jitter: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Tile-local normal-equation assembly: r (K,mb,2), jx (K,mb,2,6),
+    jl (K,mb,2,3) -> g (mb, 6K, 3), a (mb, 3, 3), b (mb, 3). Same
+    contractions as ``mapping.build_normal_eqs`` restricted to the tile
+    (all three are landmark-local, so tiling over m is exact)."""
+    k, mb_ = jx.shape[0], jx.shape[1]
+    hll = jnp.einsum("kmri,kmrj->mij", jl, jl)
+    hpl = jnp.einsum("kmri,kmrj->kmij", jx, jl)
+    bl = jnp.einsum("kmri,kmr->mi", jl, r)
+    g = hpl.transpose(1, 0, 2, 3).reshape(mb_, 6 * k, 3)
+    a = hll + jitter * jnp.eye(3, dtype=hll.dtype)[None]
+    return g, a, bl
+
+
+def _normal_kernel(r_ref, jx_ref, jl_ref, yy_ref, yv_ref, *, jitter):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        yy_ref[...] = jnp.zeros_like(yy_ref)
+        yv_ref[...] = jnp.zeros_like(yv_ref)
+
+    g, a, b = _normal_tile(r_ref[...], jx_ref[...], jl_ref[...], jitter)
+    yy, yv = _tile_terms(g, a, b)
+    yy_ref[...] += yy
+    yv_ref[...] += yv[:, None]
+
+
+def accumulate_normal(r: jax.Array, jx: jax.Array, jl: jax.Array, *,
+                      jitter: float = 1e-4, mb: int = 16,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Fused JᵀJ assembly + Schur accumulation from BA residual
+    Jacobians: r (K,M,2), jx (K,M,2,6), jl (K,M,2,3) -> (6K,6K), (6K,)."""
+    if interpret is None:
+        interpret = default_interpret()
+    k, m = jx.shape[0], jx.shape[1]
+    d = 6 * k
+    mb = pick_block(m, mb)
+    yy, yv = pl.pallas_call(
+        functools.partial(_normal_kernel, jitter=jitter),
+        grid=(m // mb,),
+        in_specs=[pl.BlockSpec((k, mb, 2), lambda i: (0, i, 0)),
+                  pl.BlockSpec((k, mb, 2, 6), lambda i: (0, i, 0, 0)),
+                  pl.BlockSpec((k, mb, 2, 3), lambda i: (0, i, 0, 0))],
+        out_specs=[pl.BlockSpec((d, d), lambda i: (0, 0)),
+                   pl.BlockSpec((d, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((d, d), jx.dtype),
+                   jax.ShapeDtypeStruct((d, 1), jx.dtype)],
+        interpret=interpret,
+    )(r, jx, jl)
+    return yy, yv[:, 0]
+
+
+def accumulate_normal_ref(r: jax.Array, jx: jax.Array, jl: jax.Array, *,
+                          jitter: float = 1e-4
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Unblocked XLA reference: full normal-equation assembly (identical
+    contractions to ``mapping.build_normal_eqs``) then the unblocked
+    Schur reduction — the exact op sequence ``ba_round`` ran before the
+    fusion, relocated behind the registry's xla path."""
+    g, a, b = _normal_tile(r, jx, jl, jitter)
     return _tile_terms(g, a, b)

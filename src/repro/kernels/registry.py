@@ -15,7 +15,9 @@ can persist/reload them as JSON.
 
 Dispatch precedence (``decide_path``):
     1. shapes incompatible with the 8x128 TPU tiling  -> xla
-    2. REPRO_KERNELS=pallas / =xla                    -> forced path
+       (REPRO_KERNELS=pallas! raises ``KernelUnsupported`` here instead
+       of silently falling back)
+    2. REPRO_KERNELS=pallas / =pallas! / =xla         -> forced path
     3. fitted latency models installed                -> predicted-latency
        comparison (the paper's decision)
     4. fallback                                       -> pallas on TPU,
@@ -60,10 +62,19 @@ def _nbytes(*arrays) -> int:
 def tileable_matmul(sa, sb) -> bool:
     """Both operands compatible with the MXU's 8x128 fp32 tiling: every
     sublane dim divisible by 8 and every lane dim by 128 (the inner dim
-    is b's sublane dim, hence the ``sb[0] % 8`` requirement)."""
-    return (len(sa) == 2 and len(sb) == 2
+    is b's sublane dim, hence the ``sb[0] % 8`` requirement), and the
+    contraction dims must actually agree — a shape mismatch would trace
+    the Pallas path into a nonsense grid before XLA could complain."""
+    return (len(sa) == 2 and len(sb) == 2 and sa[1] == sb[0]
             and sa[0] % 8 == 0 and sa[1] % 128 == 0
             and sb[0] % 8 == 0 and sb[1] % 128 == 0)
+
+
+class KernelUnsupported(ValueError):
+    """Raised when ``REPRO_KERNELS=pallas!`` demands the Pallas path but
+    the KernelSpec's ``supports`` predicate rejects the shapes — the
+    strict force surfaces the spec by name instead of silently running
+    the XLA fallback."""
 
 
 @dataclass(frozen=True)
@@ -215,14 +226,50 @@ def _marginalize_host(Hpp, Hpl, Hll, bp, bl):
 # the chunk program behind a lax.cond; decide_path picks which branch the
 # traced flag selects (see core.backend.ba.marginalize_schur).
 
-def _marg_schur_xla(g, a, b):
+def _marg_schur_xla(r, jx, jl):
     from repro.kernels import marg_schur
-    return marg_schur.accumulate_ref(g, a, b)
+    return marg_schur.accumulate_normal_ref(r, jx, jl)
 
 
-def _marg_schur_pallas(g, a, b):
+def _marg_schur_pallas(r, jx, jl):
     from repro.kernels import marg_schur
-    return marg_schur.accumulate(g, a, b)
+    return marg_schur.accumulate_normal(r, jx, jl)
+
+
+# --- frontend megakernel (detect + describe + match): the pallas path
+# keeps the padded frame VMEM-resident across FAST scoring, NMS and
+# descriptor packing; the xla path is the unfused pipeline composition.
+
+def _frontend_fused_xla(img_l, img_r, cfg):
+    from repro.core.frontend import pipeline
+    return pipeline._fe_match_ref(img_l, img_r, cfg)
+
+
+def _frontend_fused_pallas(img_l, img_r, cfg):
+    from repro.kernels import frontend_fused
+    return frontend_fused.fe_match(img_l, img_r, cfg)
+
+
+def _frontend_fused_supports(img_l, img_r, cfg):
+    from repro.kernels import frontend_fused
+    return (hasattr(img_l, "ndim") and img_l.ndim == 2
+            and img_l.shape == img_r.shape
+            and frontend_fused.supported(img_l.shape[0], img_l.shape[1],
+                                         cfg.nms_window))
+
+
+# --- covariance megakernel (IMU propagate + augment): the pallas path
+# holds P on-chip across all K sample transitions and the clone
+# insertion; the xla path is the scan-based reference composition.
+
+def _cov_update_xla(P, F_seq, Q, do_prop):
+    from repro.kernels import cov_update
+    return cov_update.update_ref(P, F_seq, Q, do_prop)
+
+
+def _cov_update_pallas(P, F_seq, Q, do_prop):
+    from repro.kernels import cov_update
+    return cov_update.fused_update(P, F_seq, Q, do_prop)
 
 
 # --------------------------------------------------------------------------
@@ -255,10 +302,33 @@ def _marg_inputs(M: int):
 def _marg_schur_inputs(m: int):
     rs = np.random.RandomState(6)
     kw = 4
-    g = jnp.asarray(rs.randn(m, 6 * kw, 3) * 0.1, jnp.float32)
-    a = jnp.asarray(np.tile(np.eye(3) * 4, (m, 1, 1)), jnp.float32)
-    b = jnp.asarray(rs.randn(m, 3), jnp.float32)
-    return g, a, b
+    r = jnp.asarray(rs.randn(kw, m, 2), jnp.float32)
+    jx = jnp.asarray(rs.randn(kw, m, 2, 6) * 0.1, jnp.float32)
+    jl = jnp.asarray(rs.randn(kw, m, 2, 3) * 0.1, jnp.float32)
+    return r, jx, jl
+
+
+def _frontend_fused_inputs(n: int):
+    import dataclasses
+    from repro.configs.eudoxus import EDX_DRONE
+    rs = np.random.RandomState(7)
+    cfg = dataclasses.replace(EDX_DRONE.frontend, height=n, width=n,
+                              max_features=64)
+    img_l = jnp.asarray(rs.rand(n, n) * 255, jnp.float32)
+    img_r = jnp.asarray(rs.rand(n, n) * 255, jnp.float32)
+    return img_l, img_r, cfg
+
+
+def _cov_update_inputs(w: int):
+    rs = np.random.RandomState(8)
+    d = 15 + 6 * w
+    m = rs.randn(d, d) * 0.05
+    P = jnp.asarray(m @ m.T + np.eye(d), jnp.float32)
+    F_seq = jnp.asarray(
+        np.tile(np.eye(15), (10, 1, 1)) + rs.randn(10, 15, 15) * 0.01,
+        jnp.float32)
+    Q = jnp.asarray(np.eye(15) * 1e-4, jnp.float32)
+    return P, F_seq, Q, jnp.int32(1)
 
 
 def _conv_inputs(h: int):
@@ -349,10 +419,28 @@ _register(KernelSpec(
 
 _register(KernelSpec(
     name="marg_schur", xla=_marg_schur_xla, pallas=_marg_schur_pallas,
-    size_feature=lambda g, a, b: float(g.shape[0]),    # landmark count
-    transfer_bytes=lambda g, a, b: _nbytes(g, a, b),
-    supports=lambda g, a, b: g.ndim == 3 and g.shape[-1] == 3,
+    size_feature=lambda r, jx, jl: float(jl.shape[1]),  # landmark count
+    transfer_bytes=lambda r, jx, jl: _nbytes(r, jx, jl),
+    supports=lambda r, jx, jl: jl.ndim == 4 and jl.shape[-1] == 3,
     calibrate_inputs=_marg_schur_inputs, calibrate_sizes=(16, 32, 64)))
+
+_register(KernelSpec(
+    name="frontend_fused",
+    xla=_frontend_fused_xla, pallas=_frontend_fused_pallas,
+    size_feature=lambda img_l, img_r, cfg: float(img_l.shape[0])
+    * img_l.shape[1],                                  # pixel count
+    transfer_bytes=lambda img_l, img_r, cfg: _nbytes(img_l, img_r),
+    supports=_frontend_fused_supports,
+    calibrate_inputs=_frontend_fused_inputs, calibrate_sizes=(64, 128)))
+
+_register(KernelSpec(
+    name="cov_update", xla=_cov_update_xla, pallas=_cov_update_pallas,
+    size_feature=lambda P, F_seq, Q, do_prop: float(P.shape[0]),
+    transfer_bytes=lambda P, F_seq, Q, do_prop: _nbytes(P, F_seq, Q),
+    supports=lambda P, F_seq, Q, do_prop: P.ndim == 2
+    and P.shape[0] == P.shape[1] and P.shape[0] >= 21
+    and (P.shape[0] - 15) % 6 == 0,
+    calibrate_inputs=_cov_update_inputs, calibrate_sizes=(10, 20, 30)))
 
 
 # --------------------------------------------------------------------------
@@ -366,12 +454,20 @@ def decide_path(name: str, *args, **kw) -> str:
     can toggle without re-importing; inside an already-compiled jitted
     function the decision is baked in at trace time."""
     spec = REGISTRY[name]
-    force = os.environ.get("REPRO_KERNELS", "auto")  # auto | pallas | xla
+    # auto | pallas | pallas! (strict: raise on unsupported shapes) | xla
+    force = os.environ.get("REPRO_KERNELS", "auto")
     if force == "xla":
         return "xla"
     if not spec.supports(*args, **kw):
+        if force == "pallas!":
+            shapes = [tuple(a.shape) for a in args if hasattr(a, "shape")]
+            raise KernelUnsupported(
+                f"REPRO_KERNELS=pallas! but KernelSpec '{spec.name}' does "
+                f"not support argument shapes {shapes} — the kernel's "
+                "tiling predicate rejected them (no silent XLA fallback "
+                "under the strict force)")
         return "xla"
-    if force == "pallas":
+    if force in ("pallas", "pallas!"):
         return "pallas"
     models = _INSTALLED
     if models is not None and models.fitted(name):
@@ -394,6 +490,11 @@ def dispatch(name: str, *args, **kw):
 # --------------------------------------------------------------------------
 
 PAPER_KERNELS = ("projection", "kalman_gain", "marginalization")
+
+# the fused spine megakernels (PR 6): calibrated separately from the
+# paper's three host-vs-accel kernels so the default calibrate() sweep
+# stays cheap; pass kernels=PAPER_KERNELS + MEGAKERNELS to profile all
+MEGAKERNELS = ("frontend_fused", "cov_update", "marg_schur")
 
 
 def calibrate(models: Optional[sched.LatencyModels] = None,

@@ -29,23 +29,42 @@ def test_marginalize_schur_matches_reference(use_pallas):
 
 
 def test_registry_marg_schur_paths_agree():
-    """Both registry impls of the blocked reduction produce the same
-    (Y, y) — the Pallas kernel is a drop-in for the XLA path."""
+    """Both registry impls of the widened (normal-eq assembly + Schur)
+    reduction produce the same (Y, y) — the fused Pallas kernel is a
+    drop-in for the XLA path."""
     spec = registry.REGISTRY["marg_schur"]
-    g, a, b = registry._marg_schur_inputs(32)
-    yx, vx = spec.xla(g, a, b)
-    yp, vp = spec.pallas(g, a, b)
+    r, jx, jl = registry._marg_schur_inputs(32)
+    yx, vx = spec.xla(r, jx, jl)
+    yp, vp = spec.pallas(r, jx, jl)
     np.testing.assert_allclose(np.asarray(yx), np.asarray(yp), atol=1e-4)
     np.testing.assert_allclose(np.asarray(vx), np.asarray(vp), atol=1e-4)
 
 
 def test_marg_schur_blocking_invariant():
-    """Landmark-tile size must not change the reduction."""
-    g, a, b = registry._marg_schur_inputs(48)
-    y1, v1 = marg_schur.accumulate(g, a, b, mb=4)
-    y2, v2 = marg_schur.accumulate(g, a, b, mb=48)
+    """Landmark-tile size must not change the widened reduction."""
+    r, jx, jl = registry._marg_schur_inputs(48)
+    y1, v1 = marg_schur.accumulate_normal(r, jx, jl, mb=4)
+    y2, v2 = marg_schur.accumulate_normal(r, jx, jl, mb=48)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4)
+
+
+def test_marg_schur_normal_matches_legacy_assembly():
+    """The fused JᵀJ-assembly kernel == build_normal_eqs + the legacy
+    blocked reduction, on both paths (the materialized Hpl/Hll/bl the
+    fusion removed)."""
+    r, jx, jl = registry._marg_schur_inputs(48)
+    k, m = jx.shape[0], jx.shape[1]
+    Hpp, Hpl, Hll, bp, bl = mapping.build_normal_eqs(r, jx, jl)
+    g = Hpl.transpose(1, 0, 2, 3).reshape(m, 6 * k, 3)
+    a = Hll + 1e-4 * jnp.eye(3)[None]
+    y_ref, v_ref = marg_schur.accumulate_ref(g, a, bl)
+    y0, v0 = marg_schur.accumulate_normal_ref(r, jx, jl)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v_ref))
+    y1, v1 = marg_schur.accumulate_normal(r, jx, jl)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v_ref), atol=1e-4)
 
 
 def test_push_keyframe_window_semantics():

@@ -94,3 +94,127 @@ def test_tri_solve_both_modes():
     np.testing.assert_allclose(L @ x1, b, rtol=1e-4, atol=1e-4)
     x2 = ref.tri_solve(L, b, lower=True, trans=True)
     np.testing.assert_allclose(L.T @ x2, b, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# fused-spine megakernels (frontend_fused / cov_update / marg_schur):
+# interpret-mode parity vs their XLA reference compositions
+# --------------------------------------------------------------------------
+
+import dataclasses
+
+from repro.configs.eudoxus import EDX_DRONE
+from repro.core.frontend import pipeline
+from repro.kernels import cov_update, frontend_fused, marg_schur, registry
+
+
+def _fe_cfg(h, w, max_features=32):
+    return dataclasses.replace(EDX_DRONE.frontend, height=h, width=w,
+                               max_features=max_features)
+
+
+def _frames(h, w, seed=0):
+    rs = np.random.RandomState(seed)
+    return (jnp.asarray(rs.rand(h, w) * 255, jnp.float32),
+            jnp.asarray(rs.rand(h, w) * 255, jnp.float32))
+
+
+def test_frontend_fused_parity_exact():
+    """The megakernel is descriptor-exact vs the unfused pipeline:
+    identical corners, scores, descriptors and stereo matches."""
+    cfg = _fe_cfg(64, 96)
+    il, ir = _frames(64, 96)
+    fl, fr, dl, m = frontend_fused.fe_match(il, ir, cfg, interpret=True)
+    fl0, fr0, dl0, m0 = pipeline._fe_match_ref(il, ir, cfg)
+    np.testing.assert_array_equal(np.asarray(fl.yx), np.asarray(fl0.yx))
+    np.testing.assert_array_equal(np.asarray(fr.yx), np.asarray(fr0.yx))
+    np.testing.assert_array_equal(np.asarray(fl.valid),
+                                  np.asarray(fl0.valid))
+    np.testing.assert_array_equal(np.asarray(fl.score),
+                                  np.asarray(fl0.score))
+    np.testing.assert_array_equal(np.asarray(dl), np.asarray(dl0))
+    np.testing.assert_array_equal(np.asarray(m.right_idx),
+                                  np.asarray(m0.right_idx))
+    np.testing.assert_array_equal(np.asarray(m.valid), np.asarray(m0.valid))
+    np.testing.assert_array_equal(np.asarray(m.disparity),
+                                  np.asarray(m0.disparity))
+
+
+@pytest.mark.parametrize("max_features", [8, 64])
+def test_frontend_fused_corner_budget_edges(max_features):
+    """Top-N truncation (budget < cell count) and padding (budget > cell
+    count) both match the reference bit for bit. 48x64 / cell 8 has 48
+    NMS cells, so 8 truncates and 64 pads."""
+    cfg = _fe_cfg(48, 64, max_features=max_features)
+    il, ir = _frames(48, 64, seed=3)
+    fl, fr, dl, m = frontend_fused.fe_match(il, ir, cfg, interpret=True)
+    fl0, fr0, dl0, m0 = pipeline._fe_match_ref(il, ir, cfg)
+    assert fl.yx.shape == (max_features, 2)
+    np.testing.assert_array_equal(np.asarray(fl.yx), np.asarray(fl0.yx))
+    np.testing.assert_array_equal(np.asarray(fl.valid),
+                                  np.asarray(fl0.valid))
+    np.testing.assert_array_equal(np.asarray(dl), np.asarray(dl0))
+    np.testing.assert_array_equal(np.asarray(m.right_idx),
+                                  np.asarray(m0.right_idx))
+    np.testing.assert_array_equal(np.asarray(m.valid), np.asarray(m0.valid))
+
+
+@pytest.mark.parametrize("h,w", [(57, 96), (64, 93), (41, 53)])
+def test_frontend_fused_odd_sizes_fall_back(h, w, monkeypatch):
+    """Fixed-seed fuzz over odd frame shapes: the fused path's NMS tiling
+    rejects them (supported() False), forced-pallas dispatch falls back
+    to XLA silently, and the strict force surfaces the spec by name."""
+    cfg = _fe_cfg(h, w)
+    il, ir = _frames(h, w, seed=h * 100 + w)
+    assert not frontend_fused.supported(h, w, cfg.nms_window)
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert registry.decide_path("frontend_fused", il, ir, cfg) == "xla"
+    monkeypatch.setenv("REPRO_KERNELS", "pallas!")
+    with pytest.raises(registry.KernelUnsupported, match="frontend_fused"):
+        registry.decide_path("frontend_fused", il, ir, cfg)
+    # the reference path still serves the shape
+    fl0, fr0, dl0, m0 = pipeline._fe_match_ref(il, ir, cfg)
+    assert fl0.yx.shape == (cfg.max_features, 2)
+
+
+@pytest.mark.parametrize("do_prop", [1, 0])
+def test_cov_update_parity(do_prop):
+    """The blocked covariance megakernel == the scan-based reference
+    (propagate x K then augment) within 1e-5 rel, including the gated-off
+    (do_prop=0) frame-0 case where only the augment runs."""
+    P, F_seq, Q, _ = registry._cov_update_inputs(6)
+    do = jnp.int32(do_prop)
+    out = cov_update.fused_update(P, F_seq, Q, do, interpret=True)
+    ref_out = cov_update.update_ref(P, F_seq, Q, do)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cov_update_matches_msckf_sequence():
+    """The reference composition itself reproduces msckf.propagate +
+    msckf.augment on the covariance block (the code the megakernel
+    replaces inside the scan)."""
+    from repro.core.backend import msckf
+    rs = np.random.RandomState(11)
+    st = msckf.init_state(4)
+    accel = jnp.asarray(rs.randn(10, 3) * 0.2, jnp.float32)
+    gyro = jnp.asarray(rs.randn(10, 3) * 0.02, jnp.float32)
+    dt = jnp.float32(0.005)
+    st_ref = msckf.augment(msckf.propagate(st, accel, gyro, dt))
+    _, _, _, F_seq, Q = msckf.propagate_terms(st, accel, gyro, dt)
+    P_fused = cov_update.fused_update(st.P, F_seq, Q, jnp.int32(1),
+                                      interpret=True)
+    np.testing.assert_allclose(np.asarray(P_fused), np.asarray(st_ref.P),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_marg_schur_normal_parity():
+    """Fused JᵀJ assembly + Schur accumulation vs the unblocked XLA
+    reference, interpret mode."""
+    r, jx, jl = registry._marg_schur_inputs(48)
+    yy, yv = marg_schur.accumulate_normal(r, jx, jl, interpret=True)
+    yy0, yv0 = marg_schur.accumulate_normal_ref(r, jx, jl)
+    np.testing.assert_allclose(np.asarray(yy), np.asarray(yy0),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(yv), np.asarray(yv0),
+                               rtol=1e-5, atol=1e-4)

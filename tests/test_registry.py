@@ -68,6 +68,45 @@ def test_tileable_requires_inner_dims():
     assert not ops._tileable((8, 128), (12, 128))
 
 
+def test_tileable_requires_matching_contraction():
+    """Satellite fix: a's lane dim must equal b's sublane dim — an
+    individually-aligned but mismatched pair must not reach the Pallas
+    grid (XLA would reject it; the kernel would compute garbage)."""
+    assert registry.tileable_matmul((8, 128), (128, 256))
+    assert not registry.tileable_matmul((8, 128), (256, 128))
+    assert not registry.tileable_matmul((8, 256), (128, 128))
+
+
+def test_strict_force_raises_on_unsupported(monkeypatch):
+    """REPRO_KERNELS=pallas! turns the silent XLA fallback into a
+    KernelUnsupported naming the spec (and still forces Pallas when the
+    shapes are fine)."""
+    monkeypatch.setenv("REPRO_KERNELS", "pallas!")
+    a = jnp.ones((8, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    assert registry.decide_path("matmul", a, b) == "pallas"
+    bad = jnp.ones((7, 128), jnp.float32)
+    with pytest.raises(registry.KernelUnsupported) as ei:
+        registry.decide_path("matmul", bad, b)
+    assert "matmul" in str(ei.value)
+    assert "(7, 128)" in str(ei.value)
+    # plain pallas keeps the documented silent fallback
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert registry.decide_path("matmul", bad, b) == "xla"
+
+
+def test_megakernels_registered():
+    """The fused-spine megakernels sit behind the same dispatch: listed,
+    calibratable, and auto-on-CPU resolves to the XLA reference."""
+    for name in registry.MEGAKERNELS:
+        spec = registry.REGISTRY[name]
+        assert spec.calibrate_inputs is not None
+        args = spec.calibrate_inputs(spec.calibrate_sizes[0])
+        assert spec.supports(*args)
+        assert spec.size_feature(*args) > 0
+        assert spec.transfer_bytes(*args) > 0
+
+
 def test_auto_unfitted_cpu_is_xla(monkeypatch):
     monkeypatch.setenv("REPRO_KERNELS", "auto")
     a = jnp.ones((8, 128), jnp.float32)

@@ -532,3 +532,21 @@ def test_flags_activity_from_modes():
     # legacy views still read the per-primitive gates
     assert bool(flags.kalman) and bool(flags.marg)
     assert not bool(flags.marg_pallas)
+
+
+def test_flags_drop_megakernel_gates_when_off():
+    """A megakernel selector decided off host-side must be ABSENT from
+    the gate dict — its lax.cond would otherwise be traced, and even an
+    untaken fused branch perturbs XLA fusion under vmap enough to break
+    bitwise fleet/monolith parity. On (or traced) keys survive."""
+    off = flags_from_plan(sched.OffloadPlan(marg_schur=False))
+    assert "frontend_fused" not in off.gates
+    assert "cov_update" not in off.gates
+    assert "marg_schur" in off.gates  # work gates always stay traced
+
+    on = flags_from_plan(sched.OffloadPlan(frontend_fused=True,
+                                           cov_update=True))
+    assert bool(on.gates["frontend_fused"]) and bool(on.gates["cov_update"])
+
+    traced = flags_from_plan({"frontend_fused": jnp.asarray(False)})
+    assert "frontend_fused" in traced.gates
