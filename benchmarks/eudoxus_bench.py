@@ -598,6 +598,200 @@ def scenario_latency(n_frames: int = 16, chunk: int = 8, rounds: int = 3,
     return rows
 
 
+def _const_model(seconds: float) -> sched.RegressionModel:
+    """Fitted constant-latency model (the online single-size shape)."""
+    m = sched.RegressionModel(1)
+    m.coeffs = np.asarray([float(seconds)], np.float64)
+    return m
+
+
+def _bw_split_scheduler(kernel: str, transfer_bytes: int,
+                        host_s: float = 1e-3) -> sched.LatencyModels:
+    """Scheduler whose ``kernel`` decision is decided by the TRANSFER
+    term alone: accel compute beats the host by the midpoint of the
+    car/drone DMA costs, so full-bandwidth scenarios offload while the
+    drone's 1.2 GB/s budget keeps the kernel on the host."""
+    mid = (transfer_bytes / 7.9e9 + transfer_bytes / 1.2e9) / 2
+    m = sched.LatencyModels(fixed_overhead_s=0.0)
+    m.host[kernel] = _const_model(host_s)
+    m.accel[kernel] = _const_model(host_s - mid)
+    return m
+
+
+def adaptive_suite(n_frames: int = 16, chunk: int = 4, rounds: int = 2,
+                   out_json: str = "BENCH_adaptive.json") -> List[Row]:
+    """Scenario-aware runtime-adaptive scheduling (the PR 7 feedback
+    controller). Three measurements, written to ``out_json``:
+
+    1. ``mixed_fleet``: one robot per registered scenario under ONE
+       compiled program, global-plan (``adaptive=False``) vs
+       per-scenario-plan (``adaptive=True``) ms/frame, plus the
+       per-scenario gate tables proving the plans diverge (a
+       transfer-decided marginalization model: the drone's 1.2 GB/s
+       budget flips ``ba_marginalize`` to the host).
+    2. ``migration``: a mid-run EnvRule flip (GPS degrades, the drone
+       lands) changes mode ids at a chunk boundary; per-chunk wall
+       times straddling the boundary give the p99 across migration, and
+       the trace count proves the gates re-resolved without recompiles.
+    3. ``refit``: a deliberately poisoned calibration (accel model
+       predicting ~0) initially offloads the MSCKF update; live drain
+       timings feed ``refit_online`` until the decision flips back to
+       the host — chunks-to-correct plus pre/post plan decisions and
+       ms/frame.
+    """
+    import json
+    from repro.core import scenarios as scen
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    be = dataclasses.replace(EDX_DRONE.backend, ba_window=4,
+                             ba_landmarks=16, lm_iters=2)
+    cfg = dataclasses.replace(EDX_DRONE, frontend=fe, backend=be)
+    table = scen.table()
+    window = 4
+    rows: List[Row] = []
+    report: Dict = {"workload": "48x64_f48", "chunk": chunk,
+                    "n_frames": n_frames}
+
+    bl = cfg.backend.ba_landmarks
+    tb = bl * (6 * 3 + 3 * 3 + 3) * 4    # plan_frame's marg transfer bytes
+
+    # -- 1. mixed fleet: global plan vs per-scenario plans --------------
+    B = len(table)
+    seq = frames.generate(n_frames=n_frames, H=48, W=64, n_landmarks=200,
+                          accel_sigma=0.5, gyro_sigma=0.02)
+    il, ir, ac, gy, gps = frames.tile_fleet_sequence(seq, B, n_frames)
+    gps = gps.copy()
+    gps[:, :] = np.nan
+    mode_ids = np.arange(B, dtype=np.int32)
+    ipf = seq.imu_per_frame
+    p0 = np.tile(seq.poses[0][:3, 3], (B, 1))
+
+    def fleet_pass(fleet):
+        states = fleet.init_state(p0=p0)
+        t0 = time.perf_counter()
+        states = fleet.run(states, il, ir, ac, gy, gps, mode_ids,
+                           seq.dt / ipf, chunk=chunk)
+        jax.block_until_ready(states.filt.p)
+        return time.perf_counter() - t0
+
+    entry: Dict = {"scenarios": list(table.names)}
+    for label, adaptive in (("global_plan", False),
+                            ("per_scenario_plan", True)):
+        fleet = FleetLocalizer(cfg, seq.cam, batch=B, window=window,
+                               scheduler=_bw_split_scheduler(
+                                   "marginalization", tb),
+                               adaptive=adaptive)
+        fleet_pass(fleet)                            # warm/compile
+        wall = min(fleet_pass(fleet) for _ in range(rounds))
+        entry[label] = {"ms_per_frame": wall / n_frames * 1e3,
+                        "chunk_traces": fleet.chunk_trace_count()}
+        if adaptive:
+            plans = fleet._chunk_plan(chunk)
+            entry["plans"] = {nm: dict(p) for nm, p in plans.items()}
+        rows.append((f"adaptive/mixed_fleet_{label}_frame_us",
+                     wall / n_frames * 1e6,
+                     f"robots={B},traces={fleet.chunk_trace_count()}"))
+    report["mixed_fleet"] = entry
+
+    # -- 2. mid-run EnvRule flip: p99 across the migration boundary ----
+    from repro.core.environment import (MODE_DRONE_VIO, MODE_SLAM,
+                                        MODE_VIO, MODE_VIO_DEGRADED)
+    fleet = FleetLocalizer(cfg, seq.cam, batch=3, window=window,
+                           scheduler=_bw_split_scheduler(
+                               "marginalization", tb),
+                           adaptive=True)
+    il3, ir3, ac3, gy3, gps3 = frames.tile_fleet_sequence(seq, 3, n_frames)
+    gps3 = gps3.copy()
+    gps3[:, :] = np.nan
+    pre = np.array([MODE_SLAM, MODE_DRONE_VIO, MODE_VIO], np.int32)
+    post = np.array([MODE_SLAM, MODE_VIO, MODE_VIO_DEGRADED], np.int32)
+    half = (n_frames // (2 * chunk)) * chunk or chunk
+
+    def migration_pass(record=None):
+        states = fleet.init_state(p0=p0[:3])
+        for s in range(0, n_frames, chunk):
+            e = min(s + chunk, n_frames)
+            ids = pre if s < half else post
+            t0 = time.perf_counter()
+            states, _ = fleet.step_chunk(
+                states, il3[s:e], ir3[s:e], ac3[s:e], gy3[s:e],
+                gps3[s:e], ids, seq.dt / ipf,
+                active=(np.arange(chunk) < e - s if e - s < chunk
+                        else None))
+            jax.block_until_ready(states.filt.p)
+            if record is not None:
+                record.append((time.perf_counter() - t0) / (e - s))
+
+    migration_pass()                                 # warm/compile
+    samples: List[float] = []
+    for _ in range(rounds):
+        migration_pass(samples)
+    s = np.asarray(samples)
+    report["migration"] = {
+        "modes_pre": [table.names[int(i)] for i in pre],
+        "modes_post": [table.names[int(i)] for i in post],
+        "flip_at_frame": half,
+        "ms_per_frame_mean": float(s.mean()) * 1e3,
+        "ms_per_frame_p99": float(np.percentile(s, 99)) * 1e3,
+        "chunk_traces": fleet.chunk_trace_count(),
+    }
+    rows.append(("adaptive/migration_frame_us", float(s.mean()) * 1e6,
+                 f"p99={np.percentile(s, 99) * 1e6:.0f}us,"
+                 f"traces={fleet.chunk_trace_count()}"))
+
+    # -- 3. online refit self-corrects a poisoned calibration ----------
+    models = sched.LatencyModels(fixed_overhead_s=0.0)
+    models.host["kalman_gain"] = _const_model(1e-7)
+    models.accel["kalman_gain"] = _const_model(1e-10)    # poisoned
+    loc = Localizer(cfg, seq.cam, window=window, scheduler=models,
+                    adaptive=True, refit_every=1)
+    pre_decision = loc._scenario_plans(chunk)["vio"]["msckf_update"]
+    accel = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(n_frames)])
+    gyro = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                     for i in range(n_frames)])
+    env = Environment(True, False)
+    st = loc.init_state(p0=seq.poses[0][:3, 3])
+    corrected_at = None
+    chunk_ms: List[float] = []
+    for ci, s0 in enumerate(range(0, n_frames, chunk)):
+        e = min(s0 + chunk, n_frames)
+        t0 = time.perf_counter()
+        st = loc.run(st, seq.images_left[s0:e], seq.images_right[s0:e],
+                     accel[s0:e], gyro[s0:e], seq.gps[s0:e],
+                     [env] * (e - s0), seq.dt / ipf, chunk=chunk)
+        chunk_ms.append((time.perf_counter() - t0) / (e - s0) * 1e3)
+        if (corrected_at is None
+                and not loc._run_plans["vio"]["msckf_update"]):
+            corrected_at = ci + 1
+    post_decision = loc._run_plans["vio"]["msckf_update"]
+    # chunk 0 pays compilation; the last chunk still under the poisoned
+    # plan (post-compile) is the honest "pre" latency
+    pre_ms = chunk_ms[min((corrected_at or 1) - 1, len(chunk_ms) - 1)]
+    if corrected_at and corrected_at > 1:
+        pre_ms = chunk_ms[corrected_at - 1]
+    report["refit"] = {
+        "poisoned_kernel": "kalman_gain",
+        "pre_decision_offload": bool(pre_decision),
+        "post_decision_offload": bool(post_decision),
+        "chunks_to_correct": corrected_at,
+        "plan_refits": loc.plan_refits,
+        "provenance": models.accel["kalman_gain"].provenance,
+        "ms_per_frame_pre": pre_ms,
+        "ms_per_frame_post": chunk_ms[-1],
+        "chunk_traces": loc.chunk_trace_count(),
+    }
+    rows.append(("adaptive/refit_chunks_to_correct",
+                 float(corrected_at or -1),
+                 f"pre_offload={bool(pre_decision)},"
+                 f"post_offload={bool(post_decision)},"
+                 f"refits={loc.plan_refits}"))
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return rows
+
+
 def fleet_scaling(n_frames: int = 6, batch: int = 8) -> List[Row]:
     """B robots per dispatch: amortized per-robot latency vs the
     single-robot fused step on the same frames.
@@ -909,6 +1103,12 @@ def main() -> None:
                     help="run every registered scenario (incl. drone_vio "
                          "and vio_degraded) plus a mixed-scenario fleet "
                          "chunk and write BENCH_scenarios.json")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="run the adaptive-scheduling suite (global vs "
+                         "per-scenario plans on a mixed fleet, mid-run "
+                         "scenario migration p99, online-refit recovery "
+                         "from a poisoned calibration) and write "
+                         "BENCH_adaptive.json")
     ap.add_argument("--all", action="store_true",
                     help="also run the paper figure/table suites")
     args = ap.parse_args()
@@ -942,6 +1142,11 @@ def main() -> None:
     if args.scenarios:
         for name, us, derived in scenario_latency(
                 n_frames=max(args.frames, 8), chunk=args.chunk or 8):
+            print(f"{name},{us:.1f},{derived}")
+        return
+    if args.adaptive:
+        for name, us, derived in adaptive_suite(
+                n_frames=max(args.frames, 8), chunk=args.chunk or 4):
             print(f"{name},{us:.1f},{derived}")
         return
     suites = [lambda: fused_vs_seed(args.frames),

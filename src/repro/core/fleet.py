@@ -49,7 +49,8 @@ from repro.core.backend import tracking
 from repro.core.environment import MODE_VIO, select_mode_id
 from repro.core.localizer import (Localizer, LocalizerState, TracedStep,
                                   _ChunkStager, host_kalman_update,
-                                  init_localizer_state, resolve_marg_kernel)
+                                  init_localizer_state, resolve_kernel_plan,
+                                  resolve_marg_kernel)
 from repro.core.step import (FrameInputs, FrameOutputs, TracedChunk,
                              flags_from_plan)
 # NB: import names directly — the package re-exports the ``fleet_mesh``
@@ -85,12 +86,20 @@ class FleetLocalizer:
                  window: Optional[int] = None,
                  scheduler: Optional[sched.LatencyModels] = None,
                  mesh=None, devices=None,
-                 host_kalman_fallback: bool = True):
+                 host_kalman_fallback: bool = True,
+                 adaptive: bool = False):
         if mesh is not None and devices is not None:
             raise ValueError("pass mesh or devices, not both")
         self.cfg = cfg
         self.cam = cam
         self.batch = batch
+        # adaptive: per-scenario offload plans (each at its spec's dma_bw
+        # budget) lowered into per-mode gate tables — a mixed fleet runs
+        # drone-tuned and car-tuned gates in the SAME compiled program,
+        # and a mid-run mode_ids change re-resolves gates by table
+        # lookup, never by retracing. Default off (static fleet plan).
+        self.adaptive = adaptive
+        self._gate_structure = None  # pinned gate-key set (retrace guard)
         self.mesh = fleet_mesh(devices) if devices is not None else mesh
         self.n_shards = mesh_shards(self.mesh)
         # pad the fleet so B divides the shard count; pad robots are
@@ -313,12 +322,11 @@ class FleetLocalizer:
         inputs = self._put(inputs_np, self._chunk_in_sharding)
         plan = self._chunk_plan(n_real)
         states, outs = self._fused_fleet_chunk(
-            states, inputs,
-            flags_from_plan(plan, modes=mode_np, table=self.scenarios),
+            states, inputs, self._fleet_flags(plan, mode_np),
             jnp.float32(dt_imu))
         self.dispatch_count += 1
 
-        if self.host_kalman_fallback and not plan.kalman_gain:
+        if self.host_kalman_fallback and self._kalman_off(plan, mode_np):
             states = self._host_kalman_fix(states, outs, act)
         if self.scenarios.mask(mode_np,
                                self.scenarios.host_stage_ids()).any():
@@ -337,13 +345,51 @@ class FleetLocalizer:
         and enters the sharded dispatch as replicated scalars. With
         ``mesh=None`` the amortization stays the pre-mesh ``plan_chunk``
         behavior (over K only) so the unsharded path's decisions are
-        untouched by this refactor."""
+        untouched by this refactor.
+
+        With ``adaptive=True`` this returns a dict of ONE plan per
+        registered scenario instead — shared sizes (one program, shared
+        shapes), per-spec ``dma_bw`` in the break-even — which
+        ``_fleet_flags`` lowers into per-mode gate tables."""
+        kw = dict(batch=self.padded if self.mesh is not None else 1,
+                  shards=self.n_shards,
+                  map_points=self.cfg.backend.max_map_points,
+                  ba_landmarks=self.cfg.backend.ba_landmarks)
+        if self.adaptive:
+            plans = self.scheduler.plan_scenarios(
+                self.scenarios.specs, self.window, tracks.MAX_UPDATES,
+                max(n_real, 1), **kw)
+            return {spec.name: resolve_kernel_plan(
+                        plans[spec.name], self.cfg, self.window,
+                        transfer_bw=spec.dma_bw)
+                    for spec in self.scenarios.specs}
         return resolve_marg_kernel(self.scheduler.plan_fleet_chunk(
-            self.window, tracks.MAX_UPDATES, max(n_real, 1),
-            batch=self.padded if self.mesh is not None else 1,
-            shards=self.n_shards,
-            map_points=self.cfg.backend.max_map_points,
-            ba_landmarks=self.cfg.backend.ba_landmarks), self.cfg)
+            self.window, tracks.MAX_UPDATES, max(n_real, 1), **kw),
+            self.cfg)
+
+    def _fleet_flags(self, plan, mode_np):
+        """Lower a chunk plan into dispatch flags: scalar gates for the
+        static fleet plan; per-mode gate tables for the adaptive
+        per-scenario dict, with the gate-key STRUCTURE pinned on first
+        build so later re-plans (new scheduler fits, migrated modes)
+        only ever change table values — never the traced pytree."""
+        if isinstance(plan, dict):
+            flags = flags_from_plan(plan, modes=mode_np,
+                                    table=self.scenarios,
+                                    gate_structure=self._gate_structure)
+            if self._gate_structure is None:
+                self._gate_structure = tuple(flags.gates)
+            return flags
+        return flags_from_plan(plan, modes=mode_np, table=self.scenarios)
+
+    def _kalman_off(self, plan, mode_np) -> bool:
+        """True when the chunk's in-scan MSCKF update is gated off for
+        any robot present — the host-fallback trigger (per-robot
+        applicability is resolved from the scan's ``upd_skipped``)."""
+        if isinstance(plan, dict):
+            return any(not plan[self.scenarios.names[m]].kalman_gain
+                       for m in {int(m) for m in mode_np})
+        return not plan.kalman_gain
 
     def _active_mask(self, K: int, active) -> Tuple[np.ndarray, int]:
         """(K, B_padded) activity mask from an optional (K,) prefix
@@ -449,10 +495,10 @@ class FleetLocalizer:
                 inputs = self._put(inputs_np, self._chunk_in_sharding)
                 plan = seg_plan(seg)
                 states, outs = self._fused_fleet_chunk(
-                    states, inputs,
-                    flags_from_plan(plan, modes=mode_np, table=tab), dt)
+                    states, inputs, self._fleet_flags(plan, mode_np), dt)
                 self.dispatch_count += 1
-                if self.host_kalman_fallback and not plan.kalman_gain:
+                if self.host_kalman_fallback and self._kalman_off(plan,
+                                                                  mode_np):
                     states = self._host_kalman_fix(states, outs, act)
                 if tab.mask(mode_np, tab.host_stage_ids()).any():
                     states = self._host_chunk_stage(
@@ -469,14 +515,13 @@ class FleetLocalizer:
             act = act0
             plan = seg_plan(seg)
             states, outs = self._fused_fleet_chunk(
-                states, staged.inputs,
-                flags_from_plan(plan, modes=mode_np, table=tab), dt)
+                states, staged.inputs, self._fleet_flags(plan, mode_np), dt)
             staged.consumed = True
             self.dispatch_count += 1
             if si + 1 < len(segments):
                 inputs_np, act0 = build(segments[si + 1])
                 staged = stager.stage(inputs_np, self._chunk_in_sharding)
-            if self.host_kalman_fallback and not plan.kalman_gain:
+            if self.host_kalman_fallback and self._kalman_off(plan, mode_np):
                 # feedback: the boundary update must reach the next
                 # dispatch (a bubble, only at the host-Kalman operating
                 # point)

@@ -75,7 +75,9 @@ BA_LANDMARKS = 64
 
 
 def resolve_kernel_plan(plan: sched.OffloadPlan, cfg: EudoxusConfig,
-                        window: Optional[int] = None) -> sched.OffloadPlan:
+                        window: Optional[int] = None,
+                        transfer_bw: Optional[float] = None
+                        ) -> sched.OffloadPlan:
     """Fill the plan's kernel-level Pallas-vs-XLA gates from the kernel
     registry's decision at this config's padded shapes (honours
     REPRO_KERNELS forcing, fitted latency models, and the platform
@@ -88,6 +90,12 @@ def resolve_kernel_plan(plan: sched.OffloadPlan, cfg: EudoxusConfig,
                        to False via the spec's ``supports``);
       cov_update     — the fused covariance megakernel, at the clone
                        window's error-state dimension.
+
+    ``transfer_bw`` carries a scenario's DMA budget (``ScenarioSpec
+    .dma_bw``, e.g. the drone's 1.2 GB/s link vs the car's 7.9 GB/s)
+    into the fitted-model break-even — shapes are shared across the
+    fleet's single compiled program, so per-scenario divergence comes
+    entirely from this transfer term.
 
     All dummies are ``np.empty`` — decide_path only reads shapes/dtypes,
     so resolution never allocates device memory or traces kernels."""
@@ -103,11 +111,14 @@ def resolve_kernel_plan(plan: sched.OffloadPlan, cfg: EudoxusConfig,
     F_seq = np.empty((8, 15, 15), np.float32)
     Q = np.empty((15, 15), np.float32)
     return plan.replace(
-        marg_schur=kreg.decide_path("marg_schur", r, jx, jl) == "pallas",
+        marg_schur=kreg.decide_path(
+            "marg_schur", r, jx, jl, transfer_bw=transfer_bw) == "pallas",
         frontend_fused=kreg.decide_path(
-            "frontend_fused", img, img, cfg.frontend) == "pallas",
+            "frontend_fused", img, img, cfg.frontend,
+            transfer_bw=transfer_bw) == "pallas",
         cov_update=kreg.decide_path(
-            "cov_update", P, F_seq, Q, np.int32(1)) == "pallas")
+            "cov_update", P, F_seq, Q, np.int32(1),
+            transfer_bw=transfer_bw) == "pallas")
 
 
 def resolve_marg_kernel(plan: sched.OffloadPlan,
@@ -230,30 +241,70 @@ class MapData:
     keyframe_poses: np.ndarray  # (K,4,4)
 
 
+class _VariationMap(dict):
+    """Per-scenario latency trackers keyed by SCENARIO NAME — the
+    registry's canonical key, so user-registered scenarios and the
+    shipped ones live in one uniform map. Legacy ``environment.Mode``
+    lookups (``loc.variation[Mode.VIO]``) keep working: a Mode member
+    normalizes to its string value, which IS the matching scenario
+    name."""
+
+    @staticmethod
+    def _key(k):
+        return k.value if isinstance(k, Mode) else k
+
+    def __getitem__(self, k):
+        return super().__getitem__(self._key(k))
+
+    def __setitem__(self, k, v):
+        super().__setitem__(self._key(k), v)
+
+    def __contains__(self, k):
+        return super().__contains__(self._key(k))
+
+    def get(self, k, default=None):
+        return super().get(self._key(k), default)
+
+
 class Localizer:
     def __init__(self, cfg: EudoxusConfig, cam, window: Optional[int] = None,
                  scheduler: Optional[sched.LatencyModels] = None,
                  vocab: Optional[jax.Array] = None,
-                 host_kalman_fallback: bool = True):
+                 host_kalman_fallback: bool = True,
+                 adaptive: bool = False, refit_every: int = 4):
         """vocab: optional pre-built BoW vocabulary — lets a fleet share
         one device copy across robots instead of rebuilding per robot.
         host_kalman_fallback: when the scheduler gates the in-scan MSCKF
         update off (``offload_kalman=False``), ``run`` applies the
         registry's host-path Kalman update between chunks instead of
         dropping the consumed observations (see ``host_kalman_update``);
-        False restores the pure accuracy-for-latency skip."""
+        False restores the pure accuracy-for-latency skip.
+        adaptive: scenario-aware runtime-adaptive scheduling — ``run``
+        resolves ONE plan per registered scenario (each at its
+        ``dma_bw`` budget), lowers them into per-mode gate tables so
+        mixed fleets and mid-run scenario migrations re-resolve gates
+        without retracing, feeds live per-chunk wall timings back into
+        the scheduler's observation buffers, and refits the latency
+        models every ``refit_every`` chunks (``refit_online``). Default
+        off: the reference paths keep PR 6's bitwise-static plans."""
         self.cfg = cfg
         self.cam = cam
         self.window = window or cfg.backend.msckf_window
         self.scheduler = scheduler or sched.LatencyModels()
         self.host_kalman_fallback = host_kalman_fallback
         self.host_kalman_fixes = 0   # chunk-boundary host updates applied
+        self.adaptive = adaptive
+        self.refit_every = max(int(refit_every), 1)
+        self.plan_refits = 0         # online refits that changed the plans
+        self._gate_structure = None  # pinned gate-key set (retrace guard)
+        self._run_plans = None       # per-scenario plans for the live run
         self.vocab = (vocab if vocab is not None else
                       jnp.asarray(tracking.make_vocab(cfg.backend.bow_vocab_size)))
         # frozen scenario-registry snapshot this localizer compiles —
         # scenarios registered AFTER construction need a new Localizer
         self.scenarios = scen.table()
-        self.variation = {m: sched.VariationTracker() for m in Mode}
+        self.variation = _VariationMap(
+            {name: sched.VariationTracker() for name in self.scenarios.names})
         self.map: Optional[MapData] = None
         self._slam_keyframes: List[Dict] = []
         self.trajectory: List[np.ndarray] = []
@@ -329,17 +380,76 @@ class Localizer:
         return self._offload_plan
 
     # ------------------------------------------------------------------
+    # adaptive scheduling: per-scenario plans + online refit
+    # ------------------------------------------------------------------
+    def _scenario_plans(self, chunk: int) -> Dict[str, sched.OffloadPlan]:
+        """One resolved OffloadPlan per registered scenario. Sizes are
+        SHARED (one compiled program serves the whole fleet, so padded
+        shapes cannot differ per robot); what diverges is each spec's
+        ``dma_bw`` in the break-even — the paper's drone-vs-car DMA
+        asymmetry surfacing as different gate choices."""
+        mp = self.cfg.backend.max_map_points
+        px = self.cfg.frontend.height * self.cfg.frontend.width
+        bl = self.cfg.backend.ba_landmarks
+        plans = self.scheduler.plan_scenarios(
+            self.scenarios.specs, self.window, tracks.MAX_UPDATES,
+            max(int(chunk), 1), map_points=mp, ba_landmarks=bl,
+            frame_pixels=px)
+        return {spec.name: resolve_kernel_plan(
+                    plans[spec.name], self.cfg, self.window,
+                    transfer_bw=spec.dma_bw)
+                for spec in self.scenarios.specs}
+
+    def _adaptive_flags(self, plans: Dict[str, sched.OffloadPlan],
+                        mids: List[int]) -> PlanFlags:
+        """Lower the per-scenario plans into per-mode gate tables. The
+        first build pins the traced gate-key set (``_gate_structure``);
+        every later re-plan — including online refits mid-run — reuses
+        it, so a refit can flip table VALUES but never the pytree
+        STRUCTURE the compiled program was traced with."""
+        flags = flags_from_plan(plans, modes=set(mids),
+                                table=self.scenarios,
+                                gate_structure=self._gate_structure)
+        if self._gate_structure is None:
+            self._gate_structure = tuple(flags.gates)
+        return flags
+
+    def _adaptive_kalman_fb(self, plans: Dict[str, sched.OffloadPlan],
+                            mids: List[int]) -> bool:
+        """Host Kalman fallback is live iff ANY scenario present in the
+        run gates the in-scan update off (per-frame applicability is
+        resolved inside ``_host_kalman_fix`` from the scan's
+        ``upd_skipped`` output)."""
+        return self.host_kalman_fallback and any(
+            not plans[self.scenarios.names[m]].kalman_gain
+            for m in set(mids))
+
+    def _maybe_refit(self, done_chunks: int, chunk: int, mids: List[int],
+                     flags: PlanFlags, kalman_fb: bool):
+        """Between-chunk feedback step: every ``refit_every`` completed
+        chunks, refit the latency models from the live observation
+        buffers; when anything refit, re-resolve the per-scenario plans
+        and rebuild the gate tables against the pinned structure — new
+        decisions take effect at the next dispatch, zero retraces."""
+        if not self.adaptive or done_chunks % self.refit_every:
+            return flags, kalman_fb
+        if not self.scheduler.refit_online():
+            return flags, kalman_fb
+        plans = self._scenario_plans(chunk)
+        self._run_plans = plans
+        self.plan_refits += 1
+        return (self._adaptive_flags(plans, mids),
+                self._adaptive_kalman_fb(plans, mids))
+
+    # ------------------------------------------------------------------
     def _tracker(self, spec: scen.ScenarioSpec) -> sched.VariationTracker:
-        """Variation tracker for a scenario: keyed by the ``Mode``
-        member when one exists (the public benchmark surface), by the
-        spec name for user-registered scenarios."""
-        try:
-            key = Mode(spec.name)
-        except ValueError:
-            key = spec.name
-        if key not in self.variation:
-            self.variation[key] = sched.VariationTracker()
-        return self.variation[key]
+        """Variation tracker for a scenario, keyed by its name (the map
+        is name-keyed from construction; scenarios registered after the
+        snapshot was taken still get one lazily)."""
+        tr = self.variation.get(spec.name)
+        if tr is None:
+            tr = self.variation[spec.name] = sched.VariationTracker()
+        return tr
 
     def _host_stage(self, state: LocalizerState, spec: scen.ScenarioSpec,
                     outs) -> LocalizerState:
@@ -451,14 +561,24 @@ class Localizer:
 
         # per-chunk resolution, local to this run: the chunk-amortized
         # in-dispatch decisions must not leak into later per-frame
-        # step() calls
-        plan = self._plan(chunk)
-        flags = flags_from_plan(plan, modes=set(mids),
-                                table=self.scenarios)
-        # chunk-boundary host Kalman fallback: only live at the
-        # offload_kalman=False operating point — a feedback path, so it
-        # (like Registration) must land before the next dispatch
-        kalman_fb = self.host_kalman_fallback and not plan.kalman_gain
+        # step() calls. Adaptive mode resolves one plan PER SCENARIO
+        # (each at its dma_bw budget) and lowers them into per-mode gate
+        # tables — a mixed fleet and a mid-run migration both re-resolve
+        # gates by indexing, never by retracing.
+        if self.adaptive:
+            plans = self._scenario_plans(chunk)
+            self._run_plans = plans
+            flags = self._adaptive_flags(plans, mids)
+            kalman_fb = self._adaptive_kalman_fb(plans, mids)
+        else:
+            self._run_plans = None
+            plan = self._plan(chunk)
+            flags = flags_from_plan(plan, modes=set(mids),
+                                    table=self.scenarios)
+            # chunk-boundary host Kalman fallback: only live at the
+            # offload_kalman=False operating point — a feedback path, so
+            # it (like Registration) must land before the next dispatch
+            kalman_fb = self.host_kalman_fallback and not plan.kalman_gain
         dt = jnp.float32(dt_imu)
         seq = (imgs_l, imgs_r, imu_accel, imu_gyro, gps_seq)
         base0 = int(state.frame_idx)     # the run's first absolute frame
@@ -475,7 +595,7 @@ class Localizer:
             # baseline: per-frame list-stack staging on the critical
             # path, dispatch, then a blocking drain before the next
             # chunk is touched
-            for seg in segments:
+            for si, seg in enumerate(segments):
                 inputs = jax.device_put(
                     self._build_chunk_reference(seg, seq, mids, chunk))
                 state, outs = self._fused_chunk(state, inputs, flags, dt)
@@ -484,6 +604,8 @@ class Localizer:
                     state = self._host_kalman_fix(state, outs, len(seg))
                 state = self._drain_chunk(state, outs, seg, specs,
                                           base0 + seg[0], mark)
+                flags, kalman_fb = self._maybe_refit(si + 1, chunk, mids,
+                                                     flags, kalman_fb)
             return state
 
         # --- async double-buffered pipeline ---
@@ -515,6 +637,11 @@ class Localizer:
                                           base0 + seg[0], mark)
             else:
                 pending = (outs, seg, specs, base0 + seg[0], mark)
+            # feedback controller tick: refit between dispatches, so new
+            # gate tables (same structure, fresh values) ride into the
+            # next chunk's dispatch at the top of the next iteration
+            flags, kalman_fb = self._maybe_refit(si + 1, chunk, mids,
+                                                 flags, kalman_fb)
         if pending is not None:
             self._drain_chunk(None, *pending)
         return state
@@ -649,6 +776,18 @@ class Localizer:
         mark[0] = now
         for i in idxs:
             self._tracker(specs[i]).add(per_frame)
+        if self._run_plans is not None:
+            # live feedback: attribute each frame's wall time to the
+            # side its scenario's plan actually executed (observations
+            # land only on the chosen side — see LatencyModels.observe)
+            mp = self.cfg.backend.max_map_points
+            px = self.cfg.frontend.height * self.cfg.frontend.width
+            bl = self.cfg.backend.ba_landmarks
+            for i in idxs:
+                self.scheduler.observe_plan(
+                    self._run_plans[specs[i].name], self.window,
+                    tracks.MAX_UPDATES, per_frame, map_points=mp,
+                    ba_landmarks=bl, frame_pixels=px)
         return state
 
     # ------------------------------------------------------------------

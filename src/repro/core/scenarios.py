@@ -92,7 +92,15 @@ class ScenarioSpec:
     ("slam" = append-only map bookkeeping replayed from scan outputs,
     "registration" = place recognition + PnP pose fix); ``chunk_flush``
     marks host feedback that must land before the next dispatch
-    (registration's pose fix)."""
+    (registration's pose fix).
+
+    ``dma_bw`` is the scenario's host<->accelerator transfer-bandwidth
+    budget in bytes/s (the paper's platform asymmetry: EDX-CAR rides
+    PCIe 3.0 at 7.9 GB/s, the drone prototype's embedded link manages
+    1.2 GB/s). The scheduler's per-scenario offload plans charge DMA at
+    THIS rate (``scheduler.plan_scenarios``), so a mixed fleet resolves
+    drone-tuned and car-tuned gates in the same dispatch; None keeps the
+    scheduler's platform default."""
     name: str
     pipeline: Tuple[PrimitiveUse, ...]
     window: Optional[int] = None
@@ -102,6 +110,7 @@ class ScenarioSpec:
     chunk_flush: bool = False
     env_rule: Optional[EnvRule] = None
     description: str = ""
+    dma_bw: Optional[float] = None
 
 
 # the shared mode-independent prefix every scenario must declare — it
@@ -425,9 +434,10 @@ register_scenario(ScenarioSpec(
     name="drone_vio",
     pipeline=SPINE,
     window=12, imu_rate_hz=400,
+    dma_bw=1.2e9,        # the drone prototype's embedded DMA budget
     env_rule=EnvRule(gps=False, airborne=True, priority=40),
     description="the paper's drone prototype: smaller clone window, "
-                "higher IMU rate, no BA, no GPS"))
+                "higher IMU rate, no BA, no GPS, 1.2 GB/s DMA budget"))
 
 register_scenario(ScenarioSpec(
     name="vio_degraded",

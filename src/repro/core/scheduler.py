@@ -25,16 +25,25 @@ import numpy as np
 
 @dataclass
 class RegressionModel:
-    """Polynomial latency model: t(n) = sum_i c_i n^i."""
+    """Polynomial latency model: t(n) = sum_i c_i n^i.
+
+    ``provenance`` records how the current coefficients were obtained:
+    ``"calibrated"`` (the offline ``calibrate()`` sweep) or ``"online"``
+    (re-fitted from live chunk timings by ``LatencyModels.refit_online``).
+    Persisted through the registry's schema-v2 JSON."""
     degree: int
     coeffs: Optional[np.ndarray] = None
     r2: float = 0.0
+    provenance: str = "calibrated"
 
-    def fit(self, sizes: np.ndarray, times: np.ndarray) -> "RegressionModel":
+    def fit(self, sizes: np.ndarray, times: np.ndarray,
+            weights=None) -> "RegressionModel":
         sizes = np.asarray(sizes, np.float64).ravel()
         times = np.asarray(times, np.float64).ravel()
-        finite = np.isfinite(sizes) & np.isfinite(times)
-        sizes, times = sizes[finite], times[finite]
+        w = (np.ones_like(times) if weights is None
+             else np.asarray(weights, np.float64).ravel())
+        finite = np.isfinite(sizes) & np.isfinite(times) & np.isfinite(w)
+        sizes, times, w = sizes[finite], times[finite], w[finite]
         # no usable samples at all: stay unfitted (coeffs None) so the
         # offload-by-default path applies — a constant-0 model would
         # silently pin every decision to the host
@@ -45,12 +54,16 @@ class RegressionModel:
         # degenerate profiles (too few samples to constrain the
         # polynomial, or a single repeated size) collapse to a constant
         # model with r2 = 0 instead of a rank-deficient polyfit whose
-        # R^2 is -inf/NaN
+        # R^2 is -inf/NaN. The constant honours the sample weights —
+        # for online refits at one operating size this IS the EWMA mean.
         if sizes.size < self.degree + 2 or np.ptp(sizes) == 0.0:
-            self.coeffs = np.asarray([float(times.mean())], np.float64)
+            self.coeffs = np.asarray(
+                [float(np.average(times, weights=w))], np.float64)
             self.r2 = 0.0
             return self
-        self.coeffs = np.polyfit(sizes, times, self.degree)
+        # np.polyfit weights multiply the residuals, so sqrt(w) yields a
+        # w-weighted least squares fit
+        self.coeffs = np.polyfit(sizes, times, self.degree, w=np.sqrt(w))
         pred = np.polyval(self.coeffs, sizes)
         ss_res = float(np.sum((times - pred) ** 2))
         ss_tot = float(np.sum((times - times.mean()) ** 2))
@@ -221,16 +234,78 @@ class OffloadPlan(Mapping):
 
 
 @dataclass
+class ObservationBuffer:
+    """EWMA-weighted live latency observations for one (kernel, side).
+
+    Each ``add`` decays every existing sample's weight by ``decay`` and
+    appends the new sample at weight 1, so a weighted fit over the
+    buffer IS an exponentially-weighted fit favouring recent chunks —
+    stale calibration washes out instead of anchoring the refit. The
+    buffer is bounded (oldest samples drop once their weight is
+    negligible anyway)."""
+    decay: float = 0.85
+    capacity: int = 256
+    sizes: List[float] = field(default_factory=list)
+    times: List[float] = field(default_factory=list)
+    weights: List[float] = field(default_factory=list)
+
+    def add(self, size: float, seconds: float) -> bool:
+        """Record one observation; non-finite timings are rejected (a
+        NaN drain mark must not poison the refit — same guard as the
+        degenerate-fit path in RegressionModel)."""
+        if not (np.isfinite(size) and np.isfinite(seconds)
+                and seconds >= 0.0):
+            return False
+        self.weights = [w * self.decay for w in self.weights]
+        self.sizes.append(float(size))
+        self.times.append(float(seconds))
+        self.weights.append(1.0)
+        if len(self.times) > self.capacity:
+            del self.sizes[0], self.times[0], self.weights[0]
+        return True
+
+    def __len__(self) -> int:
+        return len(self.times)
+
+
+# offload-plan key -> (kernel model name, operating-size fn) used to
+# attribute live per-frame timings to the kernel each decision selected
+# (the sizes mirror plan_frame/plan_chunk's model queries exactly)
+_PLAN_OBS_KERNELS = {
+    "msckf_update": ("kalman_gain",
+                     lambda w, mu, mp, bl, px: mu * 2 * w),
+    "ba_marginalize": ("marginalization",
+                       lambda w, mu, mp, bl, px: max(bl, 1)),
+    "map_query": ("projection", lambda w, mu, mp, bl, px: max(mp, 1)),
+    "frontend": ("conv2d", lambda w, mu, mp, bl, px: max(px, 1)),
+    "marg_schur": ("marg_schur", lambda w, mu, mp, bl, px: max(bl, 1)),
+    "frontend_fused": ("frontend_fused",
+                       lambda w, mu, mp, bl, px: max(px, 1)),
+    "cov_update": ("cov_update",
+                   lambda w, mu, mp, bl, px: 15 + 6 * w),
+}
+
+
+@dataclass
 class LatencyModels:
     host: Dict[str, RegressionModel] = field(default_factory=dict)
     accel: Dict[str, RegressionModel] = field(default_factory=dict)
     transfer_bw: float = 7.9e9      # PCIe 3.0 (EDX-CAR); 1.2e9 for drone
     fixed_overhead_s: float = 2e-4  # launch/DMA setup
+    # live per-(kernel, side) observation buffers feeding refit_online
+    observations: Dict[Tuple[str, str], ObservationBuffer] = field(
+        default_factory=dict)
+    obs_decay: float = 0.85
 
     def fit_kernel(self, name: str, sizes, host_times, accel_times):
+        """Offline calibration fit. Takes PRECEDENCE over any online
+        refit: the kernel's observation buffers are cleared so stale
+        live samples can't immediately overwrite a fresh profile."""
         deg = KERNEL_MODELS.get(name, 1)
         self.host[name] = RegressionModel(deg).fit(sizes, host_times)
         self.accel[name] = RegressionModel(deg).fit(sizes, accel_times)
+        for side in ("host", "accel"):
+            self.observations.pop((name, side), None)
 
     def fitted(self, name: str) -> bool:
         """Both sides of the kernel's latency model are usable."""
@@ -239,24 +314,90 @@ class LatencyModels:
 
     def should_offload(self, name: str, size: float,
                        transfer_bytes: int = 0,
-                       overhead_s: Optional[float] = None) -> bool:
+                       overhead_s: Optional[float] = None,
+                       transfer_bw: Optional[float] = None) -> bool:
         """The paper's decision: offload iff predicted accel time
         (+ transfer + overhead) < predicted host time. Unfitted (or
         half-fitted / degenerate) models default to offloading — there is
         no evidence the host is faster. overhead_s overrides the fixed
         launch overhead (e.g. its per-frame share once a chunk dispatch
-        amortizes it)."""
+        amortizes it); transfer_bw overrides the instance DMA bandwidth
+        (the paper's drone 1.2 GB/s vs car 7.9 GB/s asymmetry — a
+        scenario-level budget, not a property of the fitted models)."""
         if not self.fitted(name):
             return True      # no model yet: offload by default
+        bw = self.transfer_bw if transfer_bw is None else float(transfer_bw)
         t_host = self.host[name].predict(size)
         t_accel = (self.accel[name].predict(size)
                    + (self.fixed_overhead_s if overhead_s is None
                       else overhead_s))
-        if transfer_bytes and self.transfer_bw > 0:
-            t_accel += transfer_bytes / self.transfer_bw
+        if transfer_bytes and bw > 0:
+            t_accel += transfer_bytes / bw
         if not (np.isfinite(t_host) and np.isfinite(t_accel)):
             return True      # degenerate extrapolation: keep the default
         return t_accel < t_host
+
+    # ------------------------------------------------------------------
+    # online refit: live chunk timings -> refreshed latency models
+    # ------------------------------------------------------------------
+    def observe(self, name: str, side: str, size: float,
+                seconds: float) -> bool:
+        """Feed one live latency observation for kernel ``name`` on
+        ``side`` ("host"/"accel") at operating ``size``. Observations
+        only ever land on the side the plan actually EXECUTED — the
+        inactive side keeps its calibrated model until a decision flip
+        routes traffic to it."""
+        if side not in ("host", "accel"):
+            raise ValueError(f"side must be 'host' or 'accel', got {side!r}")
+        buf = self.observations.get((name, side))
+        if buf is None:
+            buf = self.observations[(name, side)] = ObservationBuffer(
+                decay=self.obs_decay)
+        return buf.add(size, seconds)
+
+    def observe_plan(self, plan, window: int, max_updates: int,
+                     seconds: float, map_points: int = 0,
+                     ba_landmarks: int = 0, frame_pixels: int = 0) -> None:
+        """Attribute one frame's measured wall time to every kernel the
+        plan decided, on the side each decision selected (True = accel,
+        False = host), at the same operating sizes ``plan_frame``/
+        ``plan_chunk`` queried. A coarse but honest feedback signal:
+        "the chosen configuration costs this much per frame" — enough
+        for ``refit_online`` to correct a poisoned model, because the
+        poisoned (too-fast) side is exactly the one being executed and
+        therefore observed."""
+        for key, (kernel, size_fn) in _PLAN_OBS_KERNELS.items():
+            decision = plan.get(key, PLAN_KEY_DEFAULTS.get(key, True))
+            side = "accel" if bool(decision) else "host"
+            self.observe(kernel, side,
+                         size_fn(window, max_updates, map_points,
+                                 ba_landmarks, frame_pixels),
+                         seconds)
+
+    def refit_online(self, min_samples: int = 4) -> List[str]:
+        """Re-fit every (kernel, side) model whose observation buffer
+        holds at least ``min_samples`` live samples, EWMA-weighted so
+        recent chunks dominate; returns the refit ``"side:kernel"``
+        labels. Single-operating-size buffers (the common online case —
+        the dispatch shapes are static) collapse to a constant model at
+        the EWMA mean, which is exactly the right prediction at the only
+        size the dispatch ever queries. Models refit here carry
+        ``provenance="online"`` (persisted by the registry's JSON);
+        a later ``calibrate()``/``fit_kernel`` takes precedence and
+        clears the buffers."""
+        refit = []
+        for (name, side), buf in self.observations.items():
+            if len(buf) < min_samples:
+                continue
+            model = RegressionModel(KERNEL_MODELS.get(name, 1)).fit(
+                np.asarray(buf.sizes), np.asarray(buf.times),
+                weights=np.asarray(buf.weights))
+            if not model.fitted:
+                continue     # all samples rejected: keep the old model
+            model.provenance = "online"
+            getattr(self, side)[name] = model
+            refit.append(f"{side}:{name}")
+        return refit
 
     def r2_report(self) -> Dict[str, float]:
         return {k: m.r2 for k, m in self.host.items()}
@@ -264,30 +405,38 @@ class LatencyModels:
     def plan_frame(self, window: int, max_updates: int,
                    transfer_bytes: Optional[int] = None,
                    map_points: int = 0, ba_landmarks: int = 0,
-                   frame_pixels: int = 0) -> OffloadPlan:
+                   frame_pixels: int = 0,
+                   transfer_bw: Optional[float] = None) -> OffloadPlan:
         """Pre-resolve offload decisions from static shapes only (the
         fused update batch is padded to max_updates tracks, so H height =
         max_updates * 2 * window regardless of device data; the map /
         BA-landmark buffers are padded to their configured capacity).
-        transfer_bytes defaults to the padded float32 uv buffer size."""
+        transfer_bytes defaults to the padded float32 uv buffer size;
+        transfer_bw overrides the DMA bandwidth every decision charges
+        (per-scenario budgets — see ``plan_scenarios``)."""
         h_height = max_updates * 2 * window
         if transfer_bytes is None:
             transfer_bytes = max_updates * window * 2 * 4
         return OffloadPlan({
             "msckf_update": self.should_offload("kalman_gain", h_height,
-                                                transfer_bytes),
+                                                transfer_bytes,
+                                                transfer_bw=transfer_bw),
             "map_query": self.should_offload(
-                "projection", max(map_points, 1), map_points * 4 * 4),
+                "projection", max(map_points, 1), map_points * 4 * 4,
+                transfer_bw=transfer_bw),
             "ba_marginalize": self.should_offload(
                 "marginalization", max(ba_landmarks, 1),
-                ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4),
+                ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4,
+                transfer_bw=transfer_bw),
             "frontend": self.should_offload(
-                "conv2d", max(frame_pixels, 1), frame_pixels * 4)})
+                "conv2d", max(frame_pixels, 1), frame_pixels * 4,
+                transfer_bw=transfer_bw)})
 
     def plan_chunk(self, window: int, max_updates: int, chunk: int,
                    map_points: int = 0, ba_landmarks: int = 0,
                    frame_pixels: int = 0,
-                   dispatch_frames: Optional[int] = None) -> OffloadPlan:
+                   dispatch_frames: Optional[int] = None,
+                   transfer_bw: Optional[float] = None) -> OffloadPlan:
         """Per-chunk plan: identical decision structure to ``plan_frame``
         (same ``should_offload``, same guards) except the fixed launch
         overhead of the in-dispatch kernels (Kalman gain and the SLAM
@@ -301,15 +450,18 @@ class LatencyModels:
         plan = self.plan_frame(window, max_updates,
                                map_points=map_points,
                                ba_landmarks=ba_landmarks,
-                               frame_pixels=frame_pixels)
+                               frame_pixels=frame_pixels,
+                               transfer_bw=transfer_bw)
         h_height = max_updates * 2 * window
         per_frame_bytes = max_updates * window * 2 * 4
         amortized = self.fixed_overhead_s / max(dispatch_frames or chunk, 1)
         kalman = self.should_offload("kalman_gain", h_height,
-                                     per_frame_bytes, overhead_s=amortized)
+                                     per_frame_bytes, overhead_s=amortized,
+                                     transfer_bw=transfer_bw)
         marg = self.should_offload("marginalization", max(ba_landmarks, 1),
                                    ba_landmarks * (6 * 3 + 3 * 3 + 3) * 4,
-                                   overhead_s=amortized)
+                                   overhead_s=amortized,
+                                   transfer_bw=transfer_bw)
         # megakernel gates: resolved per chunk from their fitted latency
         # models when available (the registry's decide_path applies the
         # same models plus REPRO_KERNELS forcing at trace time — see
@@ -319,19 +471,21 @@ class LatencyModels:
         if self.fitted("frontend_fused"):
             fused["frontend_fused"] = self.should_offload(
                 "frontend_fused", max(frame_pixels, 1),
-                frame_pixels * 2 * 4, overhead_s=amortized)
+                frame_pixels * 2 * 4, overhead_s=amortized,
+                transfer_bw=transfer_bw)
         d_err = 15 + 6 * window
         if self.fitted("cov_update"):
             fused["cov_update"] = self.should_offload(
                 "cov_update", d_err, d_err * d_err * 4,
-                overhead_s=amortized)
+                overhead_s=amortized, transfer_bw=transfer_bw)
         return plan.replace(msckf_update=kalman, ba_marginalize=marg,
                             **fused)
 
     def plan_fleet_chunk(self, window: int, max_updates: int, chunk: int,
                          batch: int = 1, shards: int = 1,
                          map_points: int = 0, ba_landmarks: int = 0,
-                         frame_pixels: int = 0) -> OffloadPlan:
+                         frame_pixels: int = 0,
+                         transfer_bw: Optional[float] = None) -> OffloadPlan:
         """ONE plan for a sharded fleet chunk dispatch, valid on every
         shard by construction: all model inputs (window, update budget,
         padded map/BA buffers) are per-robot static shapes, identical
@@ -346,7 +500,33 @@ class LatencyModels:
         return self.plan_chunk(
             window, max_updates, chunk, map_points=map_points,
             ba_landmarks=ba_landmarks, frame_pixels=frame_pixels,
-            dispatch_frames=max(chunk, 1) * local_batch)
+            dispatch_frames=max(chunk, 1) * local_batch,
+            transfer_bw=transfer_bw)
+
+    def plan_scenarios(self, specs, window: int, max_updates: int,
+                       chunk: int, batch: int = 1, shards: int = 1,
+                       map_points: int = 0, ba_landmarks: int = 0,
+                       frame_pixels: int = 0) -> Dict[str, OffloadPlan]:
+        """One OffloadPlan PER REGISTERED SCENARIO for a mixed dispatch:
+        ``{scenario name: plan}``, each resolved by ``plan_fleet_chunk``
+        under that scenario's DMA-bandwidth budget (``spec.dma_bw``,
+        e.g. the paper's drone 1.2 GB/s vs car 7.9 GB/s — None keeps the
+        instance default). All SHAPE inputs are shared: inside one
+        compiled program the fleet-wide config governs shapes, so
+        per-scenario divergence comes from the transfer-bandwidth term —
+        exactly the paper's asymmetry. Duck-typed over spec objects
+        (reads ``.name``/``.dma_bw``) so this module stays importable
+        below ``core.scenarios``; ``step.flags_from_plan`` lowers the
+        returned mapping into per-mode gate tables indexed by the traced
+        mode id."""
+        plans = {}
+        for spec in specs:
+            plans[spec.name] = self.plan_fleet_chunk(
+                window, max_updates, chunk, batch=batch, shards=shards,
+                map_points=map_points, ba_landmarks=ba_landmarks,
+                frame_pixels=frame_pixels,
+                transfer_bw=getattr(spec, "dma_bw", None))
+        return plans
 
 
 def profile_fn(fn: Callable, reps: int = 3) -> float:

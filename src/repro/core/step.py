@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections.abc import Mapping
 from typing import Dict, NamedTuple, Tuple
 
 import jax
@@ -57,6 +58,7 @@ import jax.numpy as jnp
 from repro.configs.eudoxus import EudoxusConfig
 from repro.core import primitives as prim
 from repro.core import scenarios as scen
+from repro.core import scheduler as sched
 from repro.core import tracks
 from repro.core.backend import ba as ba_mod
 from repro.core.backend import msckf
@@ -83,16 +85,23 @@ class PlanFlags(NamedTuple):
     """The scheduler's pre-resolved decisions as they enter the fused
     dispatch, generalized to the primitive registry:
 
-    ``gates``   primitive offload key -> () bool traced gate (run the
-                primitive's in-dispatch work / pick its accel kernel).
-                Keys come from the bound ``ScenarioTable.gate_keys``,
-                which also carry the megakernel selectors
-                (``frontend_fused``/``cov_update``/``marg_schur``):
-                those pick the fused Pallas spine inside a primitive
-                via ``lax.cond`` rather than gating the work itself.
-                When the plan decides one of them off host-side the key
-                is absent here and the primitive traces only the
-                reference path (bitwise-identical program).
+    ``gates``   primitive offload key -> traced gate: a () bool (one
+                fleet-wide decision, the default path) or an
+                (n_scen+1,) bool PER-MODE GATE TABLE lowered from
+                per-scenario OffloadPlans (``scheduler.plan_scenarios``)
+                — ``localize_step`` indexes tables by the traced mode id
+                down to per-frame scalars, so a mixed fleet runs
+                drone-tuned and car-tuned gates in ONE compiled program
+                and a scenario migration (new mode id at a chunk
+                boundary) re-resolves gates with zero retraces. Keys
+                come from the bound ``ScenarioTable.gate_keys``, which
+                also carry the megakernel selectors (``frontend_fused``/
+                ``cov_update``/``marg_schur``): those pick the fused
+                Pallas spine inside a primitive via ``lax.cond`` rather
+                than gating the work itself. When the plan decides one
+                of them off host-side the key is absent here and the
+                primitive traces only the reference path
+                (bitwise-identical program).
     ``active``  scenario name -> () bool — any frame of this dispatch
                 runs the scenario. Always SCALARS (never batched), so
                 the conds they gate survive vmap as real branches: an
@@ -128,8 +137,21 @@ _STATIC_DROP_GATES = frozenset({"frontend_fused", "cov_update"})
 
 
 def flags_from_plan(plan, slam_active=None, modes=None,
-                    table: scen.ScenarioTable = None) -> PlanFlags:
-    """OffloadPlan -> the traced in-dispatch flag bundle.
+                    table: scen.ScenarioTable = None,
+                    gate_structure=None) -> PlanFlags:
+    """OffloadPlan (or per-scenario plan mapping) -> the traced
+    in-dispatch flag bundle.
+
+    ``plan`` is either ONE ``scheduler.OffloadPlan`` (the default
+    fleet-wide path: scalar gates, bitwise-identical to the
+    pre-adaptive program) or a ``{scenario name: OffloadPlan}`` mapping
+    (``scheduler.plan_scenarios``): then every kept gate key lowers to
+    an (n_scen+1,) bool GATE TABLE — row i is scenario i's decision,
+    the pad row is the key's default for invalid ids — indexed by the
+    traced mode id inside the scan (exactly like the ``ba_every`` knob
+    lookup). Tables are emitted even when momentarily uniform, so a
+    later re-plan (online refit, scenario migration) changes VALUES,
+    never the pytree structure: zero retraces.
 
     ``modes``: the mode ids present in the dispatch (drives the
     per-scenario activity scalars; scenarios not present skip their
@@ -146,15 +168,39 @@ def flags_from_plan(plan, slam_active=None, modes=None,
     under vmap enough to break bitwise parity with the pre-megakernel
     program — omitting the key keeps the reference spine statically
     untouched. A plan that turns one on (or carries a traced value)
-    keeps the key, so forced-Pallas runs trace the fused branch."""
+    keeps the key, so forced-Pallas runs trace the fused branch. With
+    per-scenario plans the drop rule is the UNION over scenarios: the
+    key is traced in if ANY scenario's plan enables it (the disabled
+    scenarios' rows stay False). ``gate_structure`` (an iterable of
+    gate keys) overrides the drop rule entirely — pass a previous
+    bundle's ``flags.gates.keys()`` to pin the compiled program's flag
+    structure across online re-plans."""
     table = table if table is not None else scen.table()
+    multi = (isinstance(plan, Mapping)
+             and not isinstance(plan, sched.OffloadPlan)
+             and bool(plan)
+             and all(isinstance(v, Mapping) for v in plan.values()))
     gates = {}
     for k in table.gate_keys:
-        v = plan.get(k, True)
-        if (k in _STATIC_DROP_GATES and not isinstance(v, jax.Array)
-                and not bool(v)):
-            continue
-        gates[k] = jnp.asarray(v)
+        if multi:
+            default = sched.PLAN_KEY_DEFAULTS.get(k, True)
+            vals = [bool(plan[nm].get(k, default)) if nm in plan
+                    else default for nm in table.names]
+            if gate_structure is not None:
+                if k not in gate_structure:
+                    continue
+            elif k in _STATIC_DROP_GATES and not any(vals):
+                continue
+            gates[k] = jnp.asarray(vals + [default], bool)
+        else:
+            v = plan.get(k, True)
+            if gate_structure is not None:
+                if k not in gate_structure:
+                    continue
+            elif (k in _STATIC_DROP_GATES and not isinstance(v, jax.Array)
+                    and not bool(v)):
+                continue
+            gates[k] = jnp.asarray(v)
     if modes is not None:
         act = table.activity(modes)
     else:
@@ -296,8 +342,25 @@ def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
     n_scen = len(table)
     w = state.tracks_uv.shape[1]
     n_hist = 2 ** vocab.shape[0]
+
+    # out-of-range ids lower to the trailing pass-through branch and the
+    # all-False row of every gated uses-table (the satellite fix: an
+    # unknown scenario must not silently run a wrong backend)
+    mode = jnp.asarray(mode, jnp.int32)
+    safe_mode = jnp.where((mode >= 0) & (mode < n_scen), mode,
+                          jnp.int32(n_scen))
+
+    # per-mode gate TABLES (scenario-adaptive plans lower each kept key
+    # to an (n_scen+1,) bool row set — see flags_from_plan) index down
+    # to this frame's scalars here, before any primitive runs, so every
+    # primitive keeps consuming () gates regardless of whether the
+    # dispatch carries one fleet-wide plan or one plan per scenario
+    frame_gates = {k: (v[safe_mode] if getattr(v, "ndim", 0) == 1 else v)
+                   for k, v in flags.gates.items()}
+    frame_flags = PlanFlags(gates=frame_gates, active=flags.active)
+
     ctx = prim.FrameCtx(cfg=cfg, be_cfg=be_cfg, fx=fx, fy=fy, cx=cx, cy=cy,
-                        baseline=baseline, vocab=vocab, flags=flags,
+                        baseline=baseline, vocab=vocab, flags=frame_flags,
                         dt_imu=dt_imu,
                         allow_pallas_marg=allow_pallas_marg)
     c = prim.FrameCarry(
@@ -311,13 +374,6 @@ def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
         upd_uv=jnp.zeros((tracks.MAX_UPDATES, w, 2), jnp.float32),
         upd_valid=jnp.zeros((tracks.MAX_UPDATES, w), bool),
         upd_skipped=jnp.bool_(False))
-
-    # out-of-range ids lower to the trailing pass-through branch and the
-    # all-False row of every gated uses-table (the satellite fix: an
-    # unknown scenario must not silently run a wrong backend)
-    mode = jnp.asarray(mode, jnp.int32)
-    safe_mode = jnp.where((mode >= 0) & (mode < n_scen), mode,
-                          jnp.int32(n_scen))
 
     # --- shared spine: mode-independent, unconditional, declared order
     for use_ in table.spine:

@@ -447,12 +447,16 @@ _register(KernelSpec(
 # dispatch
 # --------------------------------------------------------------------------
 
-def decide_path(name: str, *args, **kw) -> str:
+def decide_path(name: str, *args, transfer_bw: Optional[float] = None,
+                **kw) -> str:
     """Which path would run: 'pallas' (accelerator) or 'xla' (host).
 
     REPRO_KERNELS is read per call (not at import) so tests/benchmarks
     can toggle without re-importing; inside an already-compiled jitted
-    function the decision is baked in at trace time."""
+    function the decision is baked in at trace time. ``transfer_bw``
+    (keyword-only, never forwarded to the spec's shape predicates)
+    overrides the installed models' DMA bandwidth for this decision —
+    per-scenario budgets, e.g. the paper's drone 1.2 GB/s link."""
     spec = REGISTRY[name]
     # auto | pallas | pallas! (strict: raise on unsupported shapes) | xla
     force = os.environ.get("REPRO_KERNELS", "auto")
@@ -473,7 +477,9 @@ def decide_path(name: str, *args, **kw) -> str:
     if models is not None and models.fitted(name):
         size = spec.size_feature(*args, **kw)
         tb = spec.transfer_bytes(*args, **kw)
-        return "pallas" if models.should_offload(name, size, tb) else "xla"
+        return ("pallas" if models.should_offload(name, size, tb,
+                                                  transfer_bw=transfer_bw)
+                else "xla")
     return "pallas" if _on_tpu() else "xla"
 
 
@@ -566,13 +572,19 @@ def device_fingerprint() -> Dict[str, str]:
 
 
 def save_models(models: sched.LatencyModels, path: str) -> None:
-    """Persist fitted models (coefficients + fit quality) as versioned,
-    fingerprinted JSON."""
+    """Persist fitted models (coefficients + fit quality + provenance)
+    as versioned, fingerprinted JSON. Models re-fitted from live chunk
+    timings (``LatencyModels.refit_online``) carry an ``"online"``
+    provenance field, so a reloaded profile shows which coefficients
+    came from the offline sweep and which from runtime feedback; the
+    fingerprint refusal applies to BOTH — online observations are just
+    as hardware-specific as a calibration sweep."""
     def side(d):
         return {k: {"degree": m.degree,
                     "coeffs": None if m.coeffs is None
                     else np.asarray(m.coeffs).tolist(),
-                    "r2": m.r2}
+                    "r2": m.r2,
+                    "provenance": m.provenance}
                 for k, m in d.items()}
     blob = {"schema_version": SCHEMA_VERSION,
             "fingerprint": device_fingerprint(),
@@ -612,6 +624,7 @@ def load_models(path: str, *,
             if m["coeffs"] is not None:
                 rm.coeffs = np.asarray(m["coeffs"], np.float64)
             rm.r2 = m["r2"]
+            rm.provenance = m.get("provenance", "calibrated")
             side[k] = rm
     return models
 

@@ -7,9 +7,10 @@ Production posture (scaled down to this container):
   - deterministic restart: data stream is (seed, step)-addressed; restart
     resumes from the latest checkpoint and replays nothing;
   - async checkpointing every --ckpt-every steps + on SIGTERM (preemption);
-  - straggler watchdog: per-step wall time tracked (scheduler.VariationTracker);
-    steps slower than mean + 4*sd are logged as straggler events — on a real
-    fleet this triggers hot-spare swap (see distributed/elastic.py);
+  - straggler watchdog: per-step wall time tracked (launch.watchdog
+    .StepTimeTracker); steps slower than mean + 4*sd are logged as
+    straggler events — on a real fleet this triggers hot-spare swap (see
+    distributed/elastic.py);
   - the same train_step/pjit path the multi-pod dry-run compiles.
 """
 from __future__ import annotations
@@ -26,9 +27,9 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs.lm import get_config, reduced
-from repro.core.scheduler import VariationTracker
 from repro.data.tokens import TokenStream
 from repro.launch import steps as steps_lib
+from repro.launch.watchdog import StepTimeTracker
 
 
 def main(argv=None):
@@ -62,7 +63,7 @@ def main(argv=None):
 
     stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=args.seed,
                          n_codebooks=cfg.n_codebooks)
-    tracker = VariationTracker()
+    tracker = StepTimeTracker()
     stop = {"now": False}
 
     def _sigterm(signum, frame):        # preemption-safe shutdown
@@ -82,10 +83,9 @@ def main(argv=None):
         losses.append(loss)
         dt = time.perf_counter() - t0
         tracker.add(dt)
-        st = tracker.stats()
-        if len(tracker.samples) > 10 and dt > st["mean"] + 4 * st["sd"]:
+        if tracker.is_straggler(dt):
             print(f"[straggler] step {step} took {dt:.3f}s "
-                  f"(mean {st['mean']:.3f}s)")
+                  f"(mean {tracker.stats()['mean']:.3f}s)")
         if step % args.log_every == 0:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"lr {float(metrics['lr']):.2e} "

@@ -1,0 +1,53 @@
+"""Straggler watchdog for the training launcher.
+
+``launch/`` is the LM-era half of this repo and must not import the
+localization stack (the PR 4/5 quarantine boundary: ``core.scheduler``
+now owns latency models, offload plans and online refit — none of which
+a training loop needs). ``StepTimeTracker`` is the minimal per-step
+wall-time tracker the launcher actually uses: record samples, report
+mean/sd/rsd, flag stragglers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class StepTimeTracker:
+    """Per-step wall-time samples with straggler detection.
+
+    API mirrors the localization scheduler's ``VariationTracker``
+    (``add``/``stats``/``samples``) so existing launcher call sites are
+    untouched, plus ``is_straggler`` encapsulating the mean + k*sd rule
+    the launcher previously spelled out inline."""
+
+    samples: List[float] = field(default_factory=list)
+    warmup: int = 10        # samples before straggler detection arms
+
+    def add(self, seconds: float) -> None:
+        self.samples.append(seconds)
+
+    def stats(self) -> Dict[str, float]:
+        a = np.asarray(self.samples, np.float64)
+        a = a[np.isfinite(a)]        # a NaN step must not poison the run
+        if a.size == 0:
+            return {"mean": 0.0, "sd": 0.0, "rsd": 0.0}
+        if a.size == 1:
+            return {"mean": float(a[0]), "sd": 0.0, "rsd": 0.0}
+        return {
+            "mean": float(a.mean()),
+            "sd": float(a.std()),
+            "rsd": float(a.std() / max(a.mean(), 1e-12)),
+        }
+
+    def is_straggler(self, seconds: float, k: float = 4.0) -> bool:
+        """True when ``seconds`` exceeds mean + k*sd over the samples
+        recorded so far (armed only past the warmup count — early steps
+        include compilation and would trip any threshold)."""
+        if len(self.samples) <= self.warmup:
+            return False
+        st = self.stats()
+        return seconds > st["mean"] + k * st["sd"]

@@ -49,7 +49,7 @@ def no_kalman_offload_scheduler():
 
     class NoKalmanOffload(sched.LatencyModels):
         def should_offload(self, name, size, transfer_bytes=0,
-                           overhead_s=None):
+                           overhead_s=None, transfer_bw=None):
             return name != "kalman_gain"
 
     return NoKalmanOffload

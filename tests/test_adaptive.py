@@ -1,0 +1,388 @@
+"""Scenario-aware runtime-adaptive scheduling: per-scenario OffloadPlans
+(diverging on each spec's DMA-bandwidth budget), their lowering into
+per-mode gate tables, retrace-free mid-run scenario migration, the
+online latency-refit feedback loop (EWMA observation buffers ->
+``refit_online`` -> re-planned gates with a pinned pytree structure),
+and the persistence/provenance contract for online-refit models."""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scenarios as scen
+from repro.core import scheduler as sched
+from repro.core.environment import (MODE_DRONE_VIO, MODE_SLAM, MODE_VIO,
+                                    MODE_VIO_DEGRADED, Environment, Mode)
+from repro.core.step import flags_from_plan
+from repro.data import frames
+
+WINDOW = 4
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    from repro.configs.eudoxus import EDX_DRONE
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    be = dataclasses.replace(EDX_DRONE.backend, ba_window=4,
+                             ba_landmarks=16, lm_iters=2)
+    return dataclasses.replace(EDX_DRONE, frontend=fe, backend=be)
+
+
+@pytest.fixture(scope="module")
+def tiny_seq():
+    return frames.generate(n_frames=12, H=48, W=64, n_landmarks=200,
+                           accel_sigma=0.5, gyro_sigma=0.02, seed=0)
+
+
+def _const(seconds: float) -> sched.RegressionModel:
+    """Fitted constant-latency model (the online single-size shape)."""
+    m = sched.RegressionModel(1)
+    m.coeffs = np.asarray([float(seconds)], np.float64)
+    return m
+
+
+def _bw_split_models(kernel: str, transfer_bytes: int,
+                     host_s: float = 1e-3) -> sched.LatencyModels:
+    """Models crafted so the TRANSFER term alone decides ``kernel``:
+    accel compute is faster than host by exactly the midpoint of the
+    car/drone DMA costs, so the decision offloads at 7.9 GB/s and stays
+    on the host at 1.2 GB/s — the paper's asymmetry in miniature."""
+    mid = (transfer_bytes / 7.9e9 + transfer_bytes / 1.2e9) / 2
+    m = sched.LatencyModels(fixed_overhead_s=0.0)
+    m.host[kernel] = _const(host_s)
+    m.accel[kernel] = _const(host_s - mid)
+    return m
+
+
+# --------------------------------------------------------------------------
+# per-scenario plans: divergence driven by ScenarioSpec.dma_bw
+# --------------------------------------------------------------------------
+
+def test_plan_scenarios_diverge_on_dma_bw():
+    """One plan per registered scenario; with a transfer-decided
+    marginalization model the drone's 1.2 GB/s budget flips
+    ba_marginalize to the host while every full-bandwidth scenario
+    offloads — same shapes, different links."""
+    bl = 16
+    tb = bl * (6 * 3 + 3 * 3 + 3) * 4       # plan_frame's transfer volume
+    m = _bw_split_models("marginalization", tb)
+    plans = m.plan_scenarios(scen.table().specs, WINDOW, 8, chunk=8,
+                             ba_landmarks=bl)
+    assert set(plans) == set(scen.table().names)
+    assert plans["vio"]["ba_marginalize"] is True
+    assert plans["slam"]["ba_marginalize"] is True
+    assert plans["drone_vio"]["ba_marginalize"] is False
+    # scenarios without a dma_bw budget share the instance default
+    assert plans["vio"] == plans["vio_degraded"]
+
+
+def test_plan_scenarios_shared_sizes_default_bw_identical():
+    """With no fitted models every scenario resolves the same default
+    plan — divergence requires evidence, not just a budget."""
+    m = sched.LatencyModels()
+    plans = m.plan_scenarios(scen.table().specs, WINDOW, 8, chunk=4)
+    base = plans["vio"]
+    assert all(p == base for p in plans.values())
+
+
+# --------------------------------------------------------------------------
+# flags_from_plan: lowering per-scenario plans to gate tables
+# --------------------------------------------------------------------------
+
+def test_flags_multi_plan_lowers_to_tables():
+    table = scen.table()
+    n = len(table)
+    plans = {nm: sched.OffloadPlan() for nm in table.names}
+    plans["drone_vio"] = plans["drone_vio"].replace(ba_marginalize=False)
+    flags = flags_from_plan(plans, modes={MODE_VIO, MODE_DRONE_VIO},
+                            table=table)
+    for k, v in flags.gates.items():
+        assert v.shape == (n + 1,), k    # one row per scenario + pad row
+        assert v.dtype == jnp.bool_.dtype
+    col = np.asarray(flags.gates["ba_marginalize"])
+    assert col[MODE_DRONE_VIO] == False          # noqa: E712
+    assert col[MODE_SLAM] == True                # noqa: E712
+    assert col[n] == True    # pad row carries the key's default
+
+
+def test_flags_multi_uniform_values_still_tables():
+    """Momentarily-uniform decisions must STILL lower to (n+1,) tables:
+    a () scalar here and a table after the next refit would be a pytree
+    shape change — a retrace."""
+    table = scen.table()
+    plans = {nm: sched.OffloadPlan() for nm in table.names}
+    flags = flags_from_plan(plans, modes={MODE_VIO}, table=table)
+    assert all(v.shape == (len(table) + 1,) for v in flags.gates.values())
+
+
+def test_flags_multi_union_drop_rule():
+    """Megakernel selector keys keep PR 6's drop-before-trace rule as a
+    UNION: dropped only when NO scenario's plan enables them; a single
+    enabling scenario traces the key in for everyone (disabled
+    scenarios' rows stay False)."""
+    table = scen.table()
+    plans = {nm: sched.OffloadPlan() for nm in table.names}
+    flags = flags_from_plan(plans, modes={MODE_VIO}, table=table)
+    assert "frontend_fused" not in flags.gates
+    assert "cov_update" not in flags.gates
+
+    plans["slam"] = plans["slam"].replace(frontend_fused=True)
+    flags2 = flags_from_plan(plans, modes={MODE_VIO}, table=table)
+    col = np.asarray(flags2.gates["frontend_fused"])
+    assert col[MODE_SLAM] == True                # noqa: E712
+    assert col[MODE_VIO] == False                # noqa: E712
+    assert "cov_update" not in flags2.gates
+
+
+def test_flags_gate_structure_pins_keys():
+    """gate_structure overrides the drop rule in both directions, so an
+    online re-plan can never change the traced flag pytree."""
+    table = scen.table()
+    plans = {nm: sched.OffloadPlan() for nm in table.names}
+    base = flags_from_plan(plans, modes={MODE_VIO}, table=table)
+    structure = tuple(base.gates)
+
+    # a refit flips a dropped key on: without pinning the key would
+    # appear (structure change); pinned, it stays out
+    flipped = dict(plans)
+    flipped["slam"] = flipped["slam"].replace(frontend_fused=True)
+    pinned = flags_from_plan(flipped, modes={MODE_VIO}, table=table,
+                             gate_structure=structure)
+    assert tuple(pinned.gates) == structure
+
+    # and the scalar path honours it too
+    scalar = flags_from_plan(sched.OffloadPlan(frontend_fused=True),
+                             modes=(MODE_VIO,), table=table,
+                             gate_structure=structure)
+    assert "frontend_fused" not in scalar.gates
+
+
+def test_flags_scalar_path_unchanged():
+    """A single OffloadPlan still lowers to () scalar gates — the
+    bitwise-parity contract for adaptive-off paths."""
+    flags = flags_from_plan(sched.OffloadPlan(), modes=(MODE_VIO,),
+                            table=scen.table())
+    assert all(getattr(v, "ndim", 0) == 0 for v in flags.gates.values())
+
+
+# --------------------------------------------------------------------------
+# observation buffers + online refit edge cases
+# --------------------------------------------------------------------------
+
+def test_refit_empty_and_short_buffers_noop():
+    m = sched.LatencyModels()
+    assert m.refit_online() == []        # nothing observed at all
+    m.observe("kalman_gain", "accel", 64.0, 1e-3)
+    assert m.refit_online() == []        # 1 sample < min_samples
+    assert "kalman_gain" not in m.accel
+    assert m.refit_online(min_samples=1) == ["accel:kalman_gain"]
+    assert m.accel["kalman_gain"].predict(64.0) == pytest.approx(1e-3)
+
+
+def test_observe_rejects_nonfinite_and_negative():
+    m = sched.LatencyModels()
+    assert not m.observe("kalman_gain", "host", 10.0, float("nan"))
+    assert not m.observe("kalman_gain", "host", float("inf"), 1e-3)
+    assert not m.observe("kalman_gain", "host", 10.0, -1e-3)
+    assert len(m.observations[("kalman_gain", "host")]) == 0
+    assert m.refit_online(min_samples=1) == []
+    with pytest.raises(ValueError):
+        m.observe("kalman_gain", "device", 10.0, 1e-3)
+
+
+def test_refit_ewma_weights_favor_recent():
+    """A latency regime change dominates the refit: old samples decay
+    under the EWMA, so the constant model lands near the NEW level."""
+    m = sched.LatencyModels()
+    for _ in range(10):
+        m.observe("kalman_gain", "accel", 64.0, 1.0)
+    for _ in range(10):
+        m.observe("kalman_gain", "accel", 64.0, 0.1)
+    m.refit_online()
+    pred = m.accel["kalman_gain"].predict(64.0)
+    assert pred < 0.3                    # plain mean would sit at 0.55
+    assert m.accel["kalman_gain"].provenance == "online"
+
+
+def test_calibrate_precedence_clears_observations():
+    """fit_kernel (the offline sweep) takes precedence: it replaces the
+    online-provenance model AND clears the live buffers so stale
+    samples can't immediately overwrite the fresh profile."""
+    m = sched.LatencyModels()
+    for _ in range(6):
+        m.observe("kalman_gain", "accel", 64.0, 5e-3)
+        m.observe("kalman_gain", "host", 64.0, 5e-3)
+    m.refit_online()
+    assert m.accel["kalman_gain"].provenance == "online"
+    sizes = np.asarray([16, 32, 64, 128], np.float64)
+    m.fit_kernel("kalman_gain", sizes, sizes * 1e-6, sizes * 1e-7)
+    assert m.accel["kalman_gain"].provenance == "calibrated"
+    assert ("kalman_gain", "accel") not in m.observations
+    assert ("kalman_gain", "host") not in m.observations
+    assert m.refit_online() == []        # buffers really are gone
+
+
+def test_observe_plan_lands_on_executed_side():
+    """observe_plan routes each frame's timing to the side each plan
+    key actually selected — True decisions feed accel buffers, False
+    decisions feed host buffers, and nothing lands on the idle side."""
+    m = sched.LatencyModels()
+    plan = sched.OffloadPlan(msckf_update=True, ba_marginalize=False)
+    m.observe_plan(plan, WINDOW, 8, 2e-3, ba_landmarks=16)
+    assert len(m.observations[("kalman_gain", "accel")]) == 1
+    assert ("kalman_gain", "host") not in m.observations
+    assert len(m.observations[("marginalization", "host")]) == 1
+    assert ("marginalization", "accel") not in m.observations
+
+
+def test_online_refit_flips_poisoned_decision():
+    """The acceptance loop in miniature: a poisoned (absurdly fast)
+    accel model wins the plan, live timings land on the executed accel
+    side, and the refit corrects the model until the decision flips to
+    the host — self-correcting scheduling without recalibration."""
+    m = sched.LatencyModels(fixed_overhead_s=0.0)
+    m.host["kalman_gain"] = _const(1e-6)
+    m.accel["kalman_gain"] = _const(1e-9)        # poisoned calibration
+    h = 8 * 2 * WINDOW
+    assert m.plan_frame(WINDOW, 8)["msckf_update"] is True
+    for _ in range(6):                   # live frames cost ~1 ms
+        m.observe("kalman_gain", "accel", h, 1e-3)
+    assert "accel:kalman_gain" in m.refit_online()
+    assert m.plan_frame(WINDOW, 8)["msckf_update"] is False
+    assert m.accel["kalman_gain"].provenance == "online"
+
+
+# --------------------------------------------------------------------------
+# persistence: provenance round-trip + foreign-fingerprint refusal
+# --------------------------------------------------------------------------
+
+def test_online_provenance_roundtrip_and_fingerprint_refusal(tmp_path):
+    from repro.kernels import registry as kreg
+    m = sched.LatencyModels()
+    for _ in range(6):
+        m.observe("kalman_gain", "accel", 64.0, 2e-3)
+    m.refit_online()
+    path = tmp_path / "models.json"
+    kreg.save_models(m, str(path))
+
+    loaded = kreg.load_models(str(path))
+    assert loaded.accel["kalman_gain"].provenance == "online"
+    assert loaded.accel["kalman_gain"].predict(64.0) == pytest.approx(2e-3)
+
+    # online observations are as hardware-specific as a calibration
+    # sweep: a foreign fingerprint refuses the whole profile
+    blob = json.loads(path.read_text())
+    blob["fingerprint"]["device_kind"] = "some-other-accelerator"
+    path.write_text(json.dumps(blob))
+    with pytest.raises(kreg.CalibrationMismatch):
+        kreg.load_models(str(path))
+    assert kreg.load_models(
+        str(path),
+        allow_mismatch=True).accel["kalman_gain"].provenance == "online"
+
+
+# --------------------------------------------------------------------------
+# variation tracking unified on scenario keys (satellite)
+# --------------------------------------------------------------------------
+
+def test_variation_keyed_by_scenario_name(tiny_cfg, tiny_seq):
+    from repro.core.localizer import Localizer
+    loc = Localizer(tiny_cfg, tiny_seq.cam, window=WINDOW)
+    assert set(loc.variation) == set(scen.table().names)
+    assert all(isinstance(k, str) for k in loc.variation)
+    # legacy Mode lookups alias the name-keyed entries
+    assert loc.variation[Mode.VIO] is loc.variation["vio"]
+    assert Mode.SLAM in loc.variation
+    assert loc.variation.get(Mode.DRONE_VIO) is loc.variation["drone_vio"]
+
+
+# --------------------------------------------------------------------------
+# retrace-free migration + end-to-end adaptive runs
+# --------------------------------------------------------------------------
+
+def test_fleet_migration_single_trace_with_diverging_gates(tiny_cfg,
+                                                           tiny_seq):
+    """The tentpole acceptance: a mixed fleet under per-scenario plans
+    compiles ONCE; drone and SLAM robots run different ba_marginalize
+    gates in the SAME dispatch; a mid-run scenario migration (mode ids
+    change at a chunk boundary) re-resolves gates with zero retraces."""
+    from repro.core.fleet import FleetLocalizer
+    seq = tiny_seq
+    bl = tiny_cfg.backend.ba_landmarks
+    tb = bl * (6 * 3 + 3 * 3 + 3) * 4
+    m = _bw_split_models("marginalization", tb)
+    fleet = FleetLocalizer(tiny_cfg, seq.cam, batch=3, window=WINDOW,
+                           scheduler=m, adaptive=True)
+
+    plans = fleet._chunk_plan(4)
+    assert isinstance(plans, dict)
+    assert plans["slam"]["ba_marginalize"] is True
+    assert plans["drone_vio"]["ba_marginalize"] is False
+
+    B, T = 3, 8
+    il, ir, ac, gy, gps = frames.tile_fleet_sequence(seq, B, T)
+    gps = gps.copy()
+    gps[:, :] = np.nan                   # none of these scenarios fuse GPS
+    mode_ids = np.array([MODE_SLAM, MODE_DRONE_VIO, MODE_VIO], np.int32)
+    states = fleet.init_state(p0=np.tile(seq.poses[0][:3, 3], (B, 1)))
+    dt = seq.dt / seq.imu_per_frame
+
+    states, _ = fleet.step_chunk(states, il[:4], ir[:4], ac[:4], gy[:4],
+                                 gps[:4], mode_ids, dt)
+    # mid-run migration: the VIO robot's GPS degrades, the drone lands
+    migrated = np.array([MODE_SLAM, MODE_VIO, MODE_VIO_DEGRADED], np.int32)
+    states, _ = fleet.step_chunk(states, il[4:], ir[4:], ac[4:], gy[4:],
+                                 gps[4:], migrated, dt)
+    assert fleet.chunk_trace_count() == 1, \
+        "scenario migration retraced the fleet chunk program"
+    assert np.all(np.isfinite(fleet.positions(states)))
+
+
+def test_localizer_adaptive_run_refits_without_retrace(tiny_cfg, tiny_seq):
+    """End-to-end feedback loop: a poisoned accel model makes the first
+    chunks offload the MSCKF update; live drain timings feed the
+    observation buffers; the periodic refit flips the decision mid-run;
+    the gate tables change VALUES under the pinned structure — one
+    trace for the whole run."""
+    from repro.core.localizer import Localizer
+    seq = tiny_seq
+    m = sched.LatencyModels(fixed_overhead_s=0.0)
+    m.host["kalman_gain"] = _const(1e-7)         # host is actually fast
+    m.accel["kalman_gain"] = _const(1e-10)       # poisoned: accel "wins"
+    loc = Localizer(tiny_cfg, seq.cam, window=WINDOW, scheduler=m,
+                    adaptive=True, refit_every=1)
+    assert loc._scenario_plans(4)["vio"]["msckf_update"] is True
+
+    st = loc.init_state(p0=seq.poses[0][:3, 3])
+    envs = [Environment(True, False)] * 12       # VIO throughout
+    ipf = seq.imu_per_frame
+    accel = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(12)])
+    gyro = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                     for i in range(12)])
+    st = loc.run(st, seq.images_left[:12], seq.images_right[:12], accel,
+                 gyro, seq.gps[:12], envs, seq.dt / ipf, chunk=4)
+    assert loc.chunk_trace_count() == 1
+    assert np.all(np.isfinite(np.asarray(st.filt.p)))
+    # the refit observed real ~ms frames on the poisoned accel side and
+    # flipped the decision back to the (genuinely faster) host
+    assert loc.plan_refits >= 1
+    assert m.accel["kalman_gain"].provenance == "online"
+    assert m.accel["kalman_gain"].predict(8 * 2 * WINDOW) > 1e-7
+    assert loc._run_plans["vio"]["msckf_update"] is False
+
+
+def test_adaptive_off_is_default_and_static(tiny_cfg, tiny_seq):
+    """Default-off contract: without adaptive=True the run path resolves
+    ONE fleet-wide plan with scalar () gates — the bitwise-parity
+    surface PR 6 locked down stays untouched."""
+    from repro.core.localizer import Localizer
+    loc = Localizer(tiny_cfg, tiny_seq.cam, window=WINDOW)
+    assert loc.adaptive is False
+    assert loc._run_plans is None
+    flags = flags_from_plan(loc._plan(chunk=4), modes={MODE_VIO},
+                            table=loc.scenarios)
+    assert all(getattr(v, "ndim", 0) == 0 for v in flags.gates.values())

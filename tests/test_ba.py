@@ -156,7 +156,7 @@ def test_offload_plan_gates_inscan_ba(synthetic_sequence, small_cfg):
 
     class NeverOffload(sched.LatencyModels):
         def should_offload(self, name, size, transfer_bytes=0,
-                           overhead_s=None):
+                           overhead_s=None, transfer_bw=None):
             return False
 
     loc = Localizer(small_cfg, synthetic_sequence.cam, window=8,

@@ -220,7 +220,8 @@ def test_offload_plan_gates_kalman_update(synthetic_sequence, small_cfg):
     import repro.core.scheduler as sched
 
     class NeverOffload(sched.LatencyModels):
-        def should_offload(self, name, size, transfer_bytes=0):
+        def should_offload(self, name, size, transfer_bytes=0,
+                           overhead_s=None, transfer_bw=None):
             return False
 
     seq = synthetic_sequence
