@@ -1018,6 +1018,214 @@ def kernels_microbench(reps: int = 7,
 
 
 # ---------------------------------------------------------------------------
+# Serving: continuous robot admission over the paged state pool (PR 8)
+# ---------------------------------------------------------------------------
+
+def serving_suite(n_frames: int = 8, chunk: int = 2, capacity: int = 3,
+                  n_robots: int = 6, seed: int = 0,
+                  out_json: str = "BENCH_serving.json") -> List[Row]:
+    """Throughput-under-churn for ``repro.serve`` (SLAMBench-style
+    measuring stick), written to ``out_json``:
+
+    1. ``churn``: ``n_robots`` robot sessions with Poisson arrivals over
+       a capacity-``capacity`` pool, each streaming ``n_frames`` frames
+       and leaving when served — robots/sec admitted, per-robot p50/p99
+       submit-to-pose latency, and chunk ``traces == 1`` across the
+       whole churn sequence (zero retraces; measured post-compile).
+    2. ``bitwise``: a churned pool (admit A+B -> chunk -> retire B ->
+       admit C into B's recycled slot -> chunk) against a static pool of
+       the survivors on the same slots — bitwise-equal state rows.
+    3. ``resize``: the explicitly-slow overflow path — elastic grow
+       carrying state bitwise across pools, its retrace counted apart
+       from the steady-state invariant.
+    """
+    import json
+
+    from repro.serve import RobotStatePool, ServingEngine
+
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    be = dataclasses.replace(EDX_DRONE.backend, ba_window=4,
+                             ba_landmarks=16, lm_iters=2)
+    cfg = dataclasses.replace(EDX_DRONE, frontend=fe, backend=be)
+    window = 4
+    seq = frames.generate(n_frames=n_frames, H=48, W=64, n_landmarks=200,
+                          gps_available=True, accel_sigma=0.5,
+                          gyro_sigma=0.02, seed=seed)
+    ipf = seq.imu_per_frame
+    dt = seq.dt / ipf
+    p0 = seq.poses[0][:3, 3]
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+
+    def frame_args(i):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        return (seq.images_left[i], seq.images_right[i], a, g, seq.gps[i])
+
+    def robot_frames(i0, n):
+        a = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(i0, i0 + n)])
+        g = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(i0, i0 + n)])
+        return (seq.images_left[i0:i0 + n], seq.images_right[i0:i0 + n],
+                a, g, seq.gps[i0:i0 + n])
+
+    rows: List[Row] = []
+    report: Dict = {"workload": "48x64_f48", "chunk": chunk,
+                    "capacity": capacity, "n_robots": n_robots,
+                    "n_frames": n_frames, "arrivals": "poisson",
+                    "seed": seed}
+
+    # -- 1. Poisson-arrival churn over a fixed-capacity pool ------------
+    pool = RobotStatePool(cfg, seq.cam, capacity=capacity, window=window)
+    engine = ServingEngine(pool, chunk=chunk, dt_imu=dt,
+                           overflow="reject")
+    # compile the one chunk program OUTSIDE the measured churn window
+    # (serving steady state is post-compile by definition)
+    engine.submit_join("warmup", "vio", p0=p0, v0=v0)
+    for i in range(chunk):
+        engine.submit_frame("warmup", *frame_args(i))
+    engine.run_chunk()
+    engine.submit_leave("warmup")
+    engine.run_chunk()
+    traces_after_compile = pool.chunk_trace_count()
+    # steady-state chunk wall times only: drop the compile chunks
+    from repro.launch.watchdog import StepTimeTracker
+    engine.tracker = StepTimeTracker()
+
+    rng = np.random.RandomState(seed)
+    # arrival times in units of chunk boundaries, mean one robot per
+    # two chunks — overlapping sessions with occupancy < capacity
+    arrival = np.floor(np.cumsum(
+        rng.exponential(2.0, size=n_robots))).astype(int)
+    scen = ["vio", "slam"] * n_robots
+    t0 = time.perf_counter()
+    joined, left = set(), set()
+    boundary = 0
+    while len(left) < n_robots and boundary < 10_000:
+        for r in range(n_robots):
+            rid = f"robot{r}"
+            if rid not in joined and arrival[r] <= boundary:
+                engine.submit_join(rid, scen[r], p0=p0, v0=v0)
+                for i in range(n_frames):
+                    engine.submit_frame(rid, *frame_args(i))
+                joined.add(rid)
+        engine.run_chunk()
+        for rid in list(joined - left):
+            if len(engine.latencies.get(rid, ())) >= n_frames:
+                engine.submit_leave(rid)
+                left.add(rid)
+        boundary += 1
+    engine.run_chunk()                     # drain the final leaves
+    wall = time.perf_counter() - t0
+    assert len(left) == n_robots, "churn pass did not converge"
+    assert pool.chunk_trace_count() == traces_after_compile == 1, (
+        "serving churn retraced the chunk program")
+
+    rep = engine.latency_report()
+    per_robot = {k: v for k, v in rep["per_robot"].items()
+                 if k != "warmup"}
+    p99s = [v["p99_s"] for v in per_robot.values()]
+    p50s = [v["p50_s"] for v in per_robot.values()]
+    churn = {
+        "wall_s": wall,
+        "robots_per_s": n_robots / wall,
+        "frames_served": rep["frames_served"],
+        "chunks": rep["chunks"],
+        "chunk_traces": rep["pool"]["chunk_traces"],
+        "retired_chunk_traces": rep["pool"]["retired_chunk_traces"],
+        "admissions": rep["pool"]["admissions"],
+        "departures": rep["pool"]["departures"],
+        "pose_p50_ms_median_robot": float(np.median(p50s)) * 1e3,
+        "pose_p99_ms_worst_robot": float(np.max(p99s)) * 1e3,
+        "chunk_wall": rep["chunk_wall"],
+        "per_robot": per_robot,
+    }
+    report["churn"] = churn
+    rows.append(("serving/churn_robots_per_s", 0.0,
+                 f"{churn['robots_per_s']:.2f}rps"))
+    rows.append(("serving/churn_pose_p99_worst",
+                 churn["pose_p99_ms_worst_robot"] * 1e3,
+                 f"p50_med={churn['pose_p50_ms_median_robot']:.1f}ms"))
+    rows.append(("serving/churn_chunk_traces", 0.0,
+                 f"{churn['chunk_traces']} (zero retrace over "
+                 f"{churn['admissions']}J/{churn['departures']}L)"))
+
+    # -- 2. churned pool bitwise-equals a static fleet of survivors -----
+    def fresh():
+        return RobotStatePool(cfg, seq.cam, capacity=2, window=window)
+
+    churned = fresh()
+    churned.admit("A", "vio", p0=p0, v0=v0, slot=0)
+    churned.admit("B", "slam", p0=p0, v0=v0, slot=1)
+    churned.step_chunk({"A": robot_frames(0, 2),
+                        "B": robot_frames(0, 2)}, dt, chunk=2)
+    churned.retire("B")
+    churned.admit("C", "slam", p0=p0, v0=v0)   # recycles B's slot
+    churned.step_chunk({"A": robot_frames(2, 2),
+                        "C": robot_frames(0, 2)}, dt, chunk=2)
+
+    static = fresh()
+    static.admit("A", "vio", p0=p0, v0=v0, slot=0)
+    static.admit("C", "slam", p0=p0, v0=v0, slot=1)
+    static.step_chunk({"A": robot_frames(0, 2)}, dt, chunk=2)
+    static.step_chunk({"A": robot_frames(2, 2),
+                       "C": robot_frames(0, 2)}, dt, chunk=2)
+
+    fields = ["filt.p", "filt.v", "filt.q", "filt.P", "tracks_uv",
+              "tracks_valid", "frame_idx"]
+
+    def pick(state, dotted):
+        out = state
+        for part in dotted.split("."):
+            out = getattr(out, part)
+        return out
+
+    equal = True
+    for rid in ("A", "C"):
+        a = churned.state_row(churned.ticket_of(rid))
+        b = static.state_row(static.ticket_of(rid))
+        for f in fields:
+            equal &= bool(np.array_equal(pick(a, f), pick(b, f)))
+    report["bitwise"] = {
+        "equal": equal, "survivors": ["A", "C"], "fields": fields,
+        "churned_chunk_traces": churned.chunk_trace_count(),
+        "static_chunk_traces": static.chunk_trace_count(),
+    }
+    assert equal, "churned pool diverged from the static fleet"
+    rows.append(("serving/bitwise_churned_vs_static", 0.0,
+                 f"equal={equal} over {len(fields)} state fields"))
+
+    # -- 3. the explicitly-slow path: elastic overflow resize -----------
+    pos_before = churned.positions()
+    t0 = time.perf_counter()
+    churned.resize(4)
+    resize_s = time.perf_counter() - t0
+    carried = all(np.array_equal(p, pos_before[rid])
+                  for rid, p in churned.positions().items())
+    churned.admit("D", "vio", p0=p0, v0=v0)
+    churned.step_chunk({"A": robot_frames(4, 2),
+                        "D": robot_frames(0, 2)}, dt, chunk=2)
+    report["resize"] = {
+        "from_capacity": 2, "to_capacity": 4,
+        "resize_s_excl_retrace": resize_s,
+        "state_carried_bitwise": carried,
+        "resizes": churned.resizes,
+        "retired_chunk_traces": churned.retired_chunk_traces,
+        "chunk_traces_after": churned.chunk_trace_count(),
+    }
+    assert carried and churned.chunk_trace_count() == 1
+    rows.append(("serving/resize_2_to_4", resize_s * 1e6,
+                 f"carried={carried},retired_traces="
+                 f"{churned.retired_chunk_traces}"))
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Tbl. I / II: building-block composition + sharing economics
 # ---------------------------------------------------------------------------
 
@@ -1109,6 +1317,11 @@ def main() -> None:
                          "scenario migration p99, online-refit recovery "
                          "from a poisoned calibration) and write "
                          "BENCH_adaptive.json")
+    ap.add_argument("--serving", action="store_true",
+                    help="run the localization-as-a-service suite "
+                         "(Poisson-arrival churn over the paged state "
+                         "pool, churned-vs-static bitwise equivalence, "
+                         "elastic resize) and write BENCH_serving.json")
     ap.add_argument("--all", action="store_true",
                     help="also run the paper figure/table suites")
     args = ap.parse_args()
@@ -1147,6 +1360,11 @@ def main() -> None:
     if args.adaptive:
         for name, us, derived in adaptive_suite(
                 n_frames=max(args.frames, 8), chunk=args.chunk or 4):
+            print(f"{name},{us:.1f},{derived}")
+        return
+    if args.serving:
+        for name, us, derived in serving_suite(
+                n_frames=max(args.frames, 8), chunk=args.chunk or 2):
             print(f"{name},{us:.1f},{derived}")
         return
     suites = [lambda: fused_vs_seed(args.frames),

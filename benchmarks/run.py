@@ -57,6 +57,7 @@ def _register_suites():
         "fleet": eudoxus_bench.fleet_scaling,
         "scenarios": lambda: eudoxus_bench.scenario_latency(n_frames=8),
         "adaptive": lambda: eudoxus_bench.adaptive_suite(n_frames=8),
+        "serving": lambda: eudoxus_bench.serving_suite(n_frames=8),
         "tbl1": eudoxus_bench.tbl1_building_blocks,
         "tbl2": eudoxus_bench.tbl2_sharing,
         "sbV-C": sb_sizing.sb_sizing_rows,

@@ -1,0 +1,144 @@
+"""Localization-as-a-service gateway: robot sessions over asyncio.
+
+    PYTHONPATH=src python examples/serve_localizer.py \
+        [--capacity 3] [--robots 5] [--frames 8] [--chunk 2]
+
+The deployment story the paper opens with — a fleet of heterogeneous
+machines served by ONE localization stack — as a running service:
+
+  robot session (asyncio task)      gateway (this file)
+  ----------------------------      -------------------------------
+  join(scenario) ───────────────▶   queued; admitted at the next
+  stream frames  ───────────────▶   chunk boundary into a pool slot
+  ◀─────────────── poses            (zero retraces: churn is a
+  leave          ───────────────▶    slot-table write)
+
+Robot sessions arrive Poisson-style, each streaming its frames and
+awaiting poses per drained chunk; a single serving loop drains the
+request queue + frame streams into one fleet dispatch per chunk
+(``repro.serve.ServingEngine``). More sessions than pool slots forces
+the explicitly-slow overflow path (elastic resize, counted separately).
+On exit the gateway prints the SLAMBench-style report: robots/sec
+admitted, per-robot p50/p99 pose latency, chunk traces (== 1).
+
+This file replaced the LM-era ``serve_lm.py``; the localization
+serving stack shares nothing with ``repro.launch.serve`` but the
+dependency-free ``StepTimeTracker``.
+"""
+import argparse
+import asyncio
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.eudoxus import EDX_DRONE
+from repro.data import frames
+from repro.serve import RobotStatePool, ServingEngine
+
+
+def small_cfg():
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=120, width=160,
+                             max_features=128)
+    be = dataclasses.replace(EDX_DRONE.backend, ba_window=5,
+                             ba_landmarks=16, lm_iters=3)
+    return dataclasses.replace(EDX_DRONE, frontend=fe, backend=be)
+
+
+async def robot_session(name, engine, seq, n_frames, scenario, arrival_s,
+                        drained):
+    """One robot's lifetime: arrive, join, stream frames, await poses,
+    leave. Frame submission is fire-and-forget; poses come back by
+    watching the engine's drained-chunk event."""
+    await asyncio.sleep(arrival_s)
+    engine.submit_join(name, scenario,
+                       p0=seq.poses[0][:3, 3].astype(np.float32))
+    ipf = seq.imu_per_frame
+    served = 0
+    for i in range(n_frames):
+        a = seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        g = seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+        engine.submit_frame(name, seq.images_left[i], seq.images_right[i],
+                            a, g, seq.gps[i])
+    while served < n_frames:
+        await drained.wait()
+        served = len(engine.latencies.get(name, ()))
+    engine.submit_leave(name)
+    return name
+
+
+async def serving_loop(engine, drained, stop):
+    """The gateway's single drain loop: one ``run_chunk`` per
+    iteration, signalling sessions after each drained chunk. Dispatch
+    runs in a worker thread so sessions keep submitting while the
+    fleet program executes."""
+    while not stop.is_set():
+        poses = await asyncio.to_thread(engine.run_chunk)
+        drained.set()
+        drained.clear()
+        # idle backoff: nothing drained and nothing queued -> don't spin
+        await asyncio.sleep(0 if (poses or engine.pending_requests()
+                                  or engine.pending_frames()) else 0.005)
+
+
+async def main_async(args):
+    seq = frames.generate(n_frames=args.frames, H=120, W=160,
+                          n_landmarks=240, gps_available=True,
+                          accel_sigma=0.5, gyro_sigma=0.02, seed=0)
+    cfg = small_cfg()
+    pool = RobotStatePool(cfg, seq.cam, capacity=args.capacity, window=8)
+    engine = ServingEngine(pool, chunk=args.chunk,
+                           dt_imu=seq.dt / seq.imu_per_frame,
+                           overflow="resize")
+
+    rng = np.random.RandomState(0)
+    arrivals = np.cumsum(rng.exponential(args.mean_interarrival,
+                                         size=args.robots))
+    scenarios = ["vio", "slam"] * args.robots
+    print(f"serving {args.robots} robot sessions over a capacity-"
+          f"{args.capacity} pool (chunk={args.chunk}, Poisson arrivals, "
+          f"mean interarrival {args.mean_interarrival}s)")
+
+    drained = asyncio.Event()
+    stop = asyncio.Event()
+    loop_task = asyncio.create_task(serving_loop(engine, drained, stop))
+    t0 = time.perf_counter()
+    sessions = [robot_session(f"robot{i}", engine, seq, args.frames,
+                              scenarios[i], float(arrivals[i]), drained)
+                for i in range(args.robots)]
+    done = await asyncio.gather(*sessions)
+    # one more chunk so the queued leaves drain before the report
+    await asyncio.to_thread(engine.run_chunk)
+    stop.set()
+    await loop_task
+    wall = time.perf_counter() - t0
+
+    rep = engine.latency_report()
+    print(f"\nserved {len(done)} robots, {rep['frames_served']} poses "
+          f"in {wall:.1f}s "
+          f"({rep['pool']['admissions'] / wall:.2f} robots/sec admitted)")
+    cw = rep["chunk_wall"]
+    print(f"chunk drain: {int(cw['count'])} chunks, "
+          f"p50 {cw['p50']*1e3:.0f} ms, p99 {cw['p99']*1e3:.0f} ms")
+    for rid, st in sorted(rep["per_robot"].items()):
+        print(f"  {rid:8s} {st['frames']:3d} poses  "
+              f"p50 {st['p50_s']*1e3:7.1f} ms  p99 {st['p99_s']*1e3:7.1f} ms")
+    p = rep["pool"]
+    print(f"pool: capacity {p['capacity']} (resizes: {p['resizes']}), "
+          f"{p['admissions']} admissions / {p['departures']} departures, "
+          f"chunk traces {p['chunk_traces']} "
+          f"(+{p['retired_chunk_traces']} retired by resizes)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--capacity", type=int, default=3)
+    ap.add_argument("--robots", type=int, default=5)
+    ap.add_argument("--frames", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=2)
+    ap.add_argument("--mean-interarrival", type=float, default=0.5)
+    asyncio.run(main_async(ap.parse_args()))
+
+
+if __name__ == "__main__":
+    main()

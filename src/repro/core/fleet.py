@@ -114,6 +114,10 @@ class FleetLocalizer:
         self.scenarios = scen.table()
         self.host_kalman_fallback = host_kalman_fallback
         self.host_kalman_fixes = 0   # chunk-boundary host updates applied
+        # (K, n_real) -> frozen (K, B_padded) prefix mask: steady-state
+        # chunk dispatches reuse one immutable mask instead of
+        # re-allocating it per dispatch (see _active_mask)
+        self._mask_cache = {}
         self.dispatch_count = 0
         self.ba_runs = 0             # in-scan BA passes across the fleet
         self.deferred_drains = 0     # SLAM replays drained a chunk late
@@ -295,7 +299,8 @@ class FleetLocalizer:
     # ------------------------------------------------------------------
     def step_chunk(self, states: LocalizerState, imgs_l, imgs_r, imu_accel,
                    imu_gyro, gps, mode_ids, dt_imu: float,
-                   active=None) -> Tuple[LocalizerState, FrameOutputs]:
+                   active=None, stager: Optional[_ChunkStager] = None
+                   ) -> Tuple[LocalizerState, FrameOutputs]:
         """Advance every robot K frames in ONE batched scan dispatch
         (``core.step.fleet_chunk``, shard_mapped over the robots mesh
         when one is configured): chunk x fleet amortization of launch
@@ -304,7 +309,10 @@ class FleetLocalizer:
         imgs_l/imgs_r: (K,B,H,W); imu_accel/gyro: (K,B,ipf,3); gps:
         (K,B,3) with NaN rows where unavailable; mode_ids: (B,) per-robot
         modes held for the chunk; active: optional (K,) bool padding mask
-        for trailing partial chunks (keeps K static -> one trace).
+        for trailing partial chunks, or a (K,B) per-robot prefix matrix
+        (the serving pool's ragged-arrival path — robot b advances only
+        its own ``active[:, b].sum()`` frames). Either way K stays
+        static -> one trace.
 
         VIO and SLAM robots are exact (SLAM BA/marginalization run inside
         the scan; map growth is replayed in frame order after the chunk).
@@ -319,11 +327,22 @@ class FleetLocalizer:
 
         inputs_np = self._build_chunk(imgs_l, imgs_r, imu_accel, imu_gyro,
                                       gps, mode_np, act)
-        inputs = self._put(inputs_np, self._chunk_in_sharding)
+        # external callers (the serving pool) may own a persistent
+        # _ChunkStager: staging then rides the two-slot input ring
+        # (pre-sharded device_put, committed async H2D on accelerators)
+        # instead of the default one-shot placement
+        if stager is None:
+            inputs = self._put(inputs_np, self._chunk_in_sharding)
+            staged = None
+        else:
+            staged = stager.stage(inputs_np, self._chunk_in_sharding)
+            inputs = staged.inputs
         plan = self._chunk_plan(n_real)
         states, outs = self._fused_fleet_chunk(
             states, inputs, self._fleet_flags(plan, mode_np),
             jnp.float32(dt_imu))
+        if staged is not None:
+            staged.consumed = True       # buffers donated to the dispatch
         self.dispatch_count += 1
 
         if self.host_kalman_fallback and self._kalman_off(plan, mode_np):
@@ -392,10 +411,38 @@ class FleetLocalizer:
         return not plan.kalman_gain
 
     def _active_mask(self, K: int, active) -> Tuple[np.ndarray, int]:
-        """(K, B_padded) activity mask from an optional (K,) prefix
-        mask; pad-robot columns are always inactive."""
+        """(K, B_padded) activity mask from an optional (K,) prefix mask
+        or a (K, B) PER-ROBOT prefix matrix; pad-robot columns are
+        always inactive.
+
+        The 2-D form is the serving pool's ragged-arrival path: each
+        column b is robot b's own contiguous prefix (robots may have
+        staged fewer than K frames this chunk, and free pool slots stage
+        none), so one fixed-K dispatch serves arbitrary per-robot frame
+        counts without retracing. ``n_real`` is then the LONGEST prefix
+        — the launch-amortization the chunk actually gets.
+
+        Prefix masks are cached keyed on ``(K, n_real)``: steady-state
+        serving dispatches (full chunks, and the recurring partial
+        shapes) do no host-side mask allocation. Cached masks are shared
+        with staged FrameInputs and must never be mutated (the staging
+        buffers are written once — see ``_ChunkStager``)."""
+        if active is not None and np.asarray(active).ndim == 2:
+            a = np.asarray(active, bool)
+            if a.shape != (K, self.batch):
+                raise ValueError("per-robot active mask must be "
+                                 f"(K={K}, B={self.batch}), got {a.shape}")
+            counts = a.sum(axis=0)
+            # every column must be a contiguous prefix (same host-stage
+            # frame-indexing argument as the 1-D form, per robot)
+            prefix = np.arange(K)[:, None] < counts[None, :]
+            if not (a == prefix).all():
+                raise ValueError("per-robot active mask columns must be "
+                                 "contiguous prefixes")
+            act = np.zeros((K, self.padded), bool)
+            act[:, :self.batch] = a
+            return act, int(counts.max(initial=0))
         if active is None:
-            act1d = np.ones(K, bool)
             n_real = K
         else:
             act1d = np.asarray(active, bool)
@@ -407,8 +454,14 @@ class FleetLocalizer:
             if not act1d[:n_real].all():
                 raise ValueError("active mask must be a contiguous prefix "
                                  f"(got {act1d.tolist()})")
-        act = np.broadcast_to(act1d[:, None], (K, self.padded)).copy()
-        act[:, self.batch:] = False
+        key = (K, n_real)
+        act = self._mask_cache.get(key)
+        if act is None:
+            act = np.broadcast_to((np.arange(K) < n_real)[:, None],
+                                  (K, self.padded)).copy()
+            act[:, self.batch:] = False
+            act.setflags(write=False)    # shared across dispatches
+            self._mask_cache[key] = act
         return act, n_real
 
     def _build_chunk(self, imgs_l, imgs_r, imu_accel, imu_gyro, gps,

@@ -5,6 +5,14 @@
 
 Serving is mode-dispatch over the same substrate (paper C2): every family
 shares this loop; only init_cache/decode_step differ per family.
+
+Quarantine note (PR 8, mirroring the PR 4/5 boundaries): this is the
+LM-era serving stack and is deliberately unreachable from the
+localization serving layer — ``repro.serve`` (paged robot-state pool +
+continuous admission, fronted by ``examples/serve_localizer.py``, which
+superseded the deleted ``examples/serve_lm.py``) must never import
+``repro.launch.serve``, ``repro.models`` or ``repro.configs.lm``; only
+the dependency-free ``launch.watchdog.StepTimeTracker`` crosses over.
 """
 from __future__ import annotations
 

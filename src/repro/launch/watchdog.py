@@ -1,11 +1,15 @@
-"""Straggler watchdog for the training launcher.
+"""Straggler watchdog: per-step wall-time tracking.
 
 ``launch/`` is the LM-era half of this repo and must not import the
 localization stack (the PR 4/5 quarantine boundary: ``core.scheduler``
 now owns latency models, offload plans and online refit — none of which
 a training loop needs). ``StepTimeTracker`` is the minimal per-step
 wall-time tracker the launcher actually uses: record samples, report
-mean/sd/rsd, flag stragglers.
+mean/sd/rsd, flag stragglers. It is dependency-free in BOTH directions,
+so the localization serving engine (``repro.serve.engine``) reuses it
+for per-chunk drain latency — ``snapshot()`` is the serving gateway's
+reporting surface: a point-in-time summary (count/mean/sd/p50/p99) that
+never resets or otherwise perturbs the accumulated samples.
 """
 from __future__ import annotations
 
@@ -42,6 +46,23 @@ class StepTimeTracker:
             "sd": float(a.std()),
             "rsd": float(a.std() / max(a.mean(), 1e-12)),
         }
+
+    def snapshot(self) -> Dict[str, float]:
+        """Point-in-time latency summary for reporting surfaces (the
+        serving gateway's per-chunk stats): ``stats()`` plus sample
+        count and p50/p99 percentiles. Read-only — the sample list is
+        untouched, so periodic reporting never distorts later stats or
+        straggler detection."""
+        st = self.stats()
+        a = np.asarray(self.samples, np.float64)
+        a = a[np.isfinite(a)]
+        st["count"] = float(a.size)
+        if a.size == 0:
+            st["p50"] = st["p99"] = 0.0
+        else:
+            st["p50"] = float(np.percentile(a, 50))
+            st["p99"] = float(np.percentile(a, 99))
+        return st
 
     def is_straggler(self, seconds: float, k: float = 4.0) -> bool:
         """True when ``seconds`` exceeds mean + k*sd over the samples

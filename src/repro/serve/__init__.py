@@ -1,0 +1,26 @@
+"""Localization-as-a-service: continuous robot admission over a paged
+state pool.
+
+The LLM-serving playbook (paged KV cache + page table + continuous
+batching), applied to the robot axis: ``RobotStatePool`` keeps every
+robot's ``LocalizerState`` rows in a fixed-capacity padded slot pool
+(slot table, free list, generation counters) so fleet churn is a
+slot-table write instead of a localizer rebuild — zero retraces across
+arbitrary join/leave sequences. ``ServingEngine`` batches queued
+joins/leaves/scenario swaps into one slot-table update at each chunk
+boundary and drives ragged per-robot frame streams through the fleet's
+chunked dispatch. ``examples/serve_localizer.py`` is the asyncio
+gateway on top.
+
+This package is localization-only; the LM-era serving stack
+(``repro.launch.serve`` + the deleted ``examples/serve_lm.py``) is
+quarantined behind explicit imports, mirroring the PR 4/5 quarantines.
+"""
+from repro.serve.engine import ServingEngine
+from repro.serve.pool import (PoolFull, RobotStatePool, SlotTicket,
+                              StaleGeneration, UnknownRobot)
+
+__all__ = [
+    "PoolFull", "RobotStatePool", "ServingEngine", "SlotTicket",
+    "StaleGeneration", "UnknownRobot",
+]

@@ -1,0 +1,216 @@
+"""Continuous-batching admission engine over the paged state pool.
+
+The serving discipline in one sentence: ALL mutation happens at chunk
+boundaries. Robot sessions submit joins, leaves, scenario swaps and
+frames at any time; the engine queues them, and ``run_chunk`` — the
+single drain point — applies the queued requests as one batched
+slot-table update, gathers each bound robot's staged frames (ragged,
+up to ``chunk`` each), and advances the whole pool in ONE fleet
+dispatch. Nothing ever touches the pool mid-dispatch, so the async
+input ring's written-once invariant and the zero-retrace guarantee
+both hold by construction.
+
+Per-chunk drain wall time rides ``launch.watchdog.StepTimeTracker``
+(``snapshot()`` reports without resetting); per-pose latency is
+submit-to-return, tracked per robot for the gateway's p50/p99 report.
+
+Overflow policy is explicit: ``overflow="resize"`` grows the pool
+(the slow, retrace-counting path), ``overflow="reject"`` refuses the
+join and counts it.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.environment import MODE_VIO
+from repro.launch.watchdog import StepTimeTracker
+from repro.serve.pool import PoolFull, RobotStatePool, SlotTicket
+
+
+class ServingEngine:
+    """Chunk-boundary request drain over a ``RobotStatePool``.
+
+    Parameters
+    ----------
+    pool: the paged state pool to serve.
+    chunk: fixed frames-per-dispatch K (every drain reuses the one
+        compiled K-frame trace; ragged arrival fills a prefix).
+    dt_imu: IMU sample period handed to the fleet dispatch.
+    overflow: ``"resize"`` (double capacity, carry state — slow path)
+        or ``"reject"`` (count and drop the join).
+    tracker: optional ``StepTimeTracker`` for per-chunk drain wall
+        time (a fresh one is created by default).
+    """
+
+    def __init__(self, pool: RobotStatePool, chunk: int = 8,
+                 dt_imu: float = 0.005, overflow: str = "resize",
+                 tracker: Optional[StepTimeTracker] = None,
+                 clock=time.perf_counter):
+        if overflow not in ("resize", "reject"):
+            raise ValueError(f"unknown overflow policy {overflow!r}")
+        self.pool = pool
+        self.chunk = int(chunk)
+        self.dt_imu = float(dt_imu)
+        self.overflow = overflow
+        self.tracker = tracker if tracker is not None else StepTimeTracker()
+        self._clock = clock
+        # FIFO control queue: ("join"|"leave"|"assign", robot_id, arg)
+        self._requests: Deque[Tuple[str, Any, Any]] = deque()
+        # robot id -> deque of (submit_time, frame tuple) single frames
+        self._streams: Dict[Any, Deque[Tuple[float, Tuple]]] = {}
+        self.tickets: Dict[Any, SlotTicket] = {}
+        self.latencies: Dict[Any, List[float]] = {}
+        self.chunks = 0
+        self.frames_served = 0
+        self.rejected = 0
+
+    # ------------------------------------------------------------------
+    # submission surface: NEVER touches the pool
+    # ------------------------------------------------------------------
+    def submit_join(self, robot_id, scenario=MODE_VIO, p0=None, v0=None,
+                    q0=None) -> None:
+        self._requests.append(("join", robot_id, (scenario, p0, v0, q0)))
+
+    def submit_leave(self, robot_id) -> None:
+        self._requests.append(("leave", robot_id, None))
+
+    def submit_assign(self, robot_id, scenario) -> None:
+        self._requests.append(("assign", robot_id, scenario))
+
+    def submit_frame(self, robot_id, img_l, img_r, imu_accel, imu_gyro,
+                     gps=None) -> None:
+        """Queue one frame for ``robot_id`` (joined, or join queued).
+        Frames submitted before the join drains are held and served in
+        the robot's first chunk after admission."""
+        self._streams.setdefault(robot_id, deque()).append(
+            (self._clock(), (img_l, img_r, imu_accel, imu_gyro, gps)))
+
+    def pending_requests(self) -> int:
+        return len(self._requests)
+
+    def pending_frames(self, robot_id=None) -> int:
+        if robot_id is not None:
+            return len(self._streams.get(robot_id, ()))
+        return sum(len(q) for q in self._streams.values())
+
+    # ------------------------------------------------------------------
+    # the drain point
+    # ------------------------------------------------------------------
+    def _admit(self, rid, scenario, p0, v0, q0) -> None:
+        try:
+            tk = self.pool.admit(rid, scenario, p0=p0, v0=v0, q0=q0)
+        except PoolFull:
+            if self.overflow == "reject":
+                self.rejected += 1
+                self._streams.pop(rid, None)
+                return
+            self.pool.resize(max(2 * self.pool.capacity,
+                                 self.pool.capacity + 1))
+            tk = self.pool.admit(rid, scenario, p0=p0, v0=v0, q0=q0)
+        self.tickets[rid] = tk
+        self.latencies.setdefault(rid, [])
+
+    def _drain_requests(self) -> None:
+        """Apply every queued control request in FIFO order — one
+        batched slot-table update between dispatches."""
+        while self._requests:
+            kind, rid, arg = self._requests.popleft()
+            if kind == "join":
+                self._admit(rid, *arg)
+            elif kind == "leave":
+                self.pool.retire(rid)
+                self.tickets.pop(rid, None)
+                self._streams.pop(rid, None)
+            else:
+                self.pool.assign_scenario(rid, arg)
+
+    def _gather(self) -> Tuple[Dict[Any, Tuple], Dict[Any, List[float]]]:
+        """Pop up to ``chunk`` staged frames per BOUND robot, stacked
+        into the per-robot (n_b, ...) arrays the pool dispatches."""
+        frames: Dict[Any, Tuple] = {}
+        stamps: Dict[Any, List[float]] = {}
+        for rid in self.pool.robot_ids:
+            q = self._streams.get(rid)
+            if not q:
+                continue
+            take = [q.popleft() for _ in range(min(self.chunk, len(q)))]
+            stamps[rid] = [t for t, _ in take]
+            il = np.stack([f[0] for _, f in take])
+            ir = np.stack([f[1] for _, f in take])
+            ac = np.stack([f[2] for _, f in take])
+            gy = np.stack([f[3] for _, f in take])
+            gp = (np.stack([f[4] for _, f in take])
+                  if all(f[4] is not None for _, f in take) else None)
+            frames[rid] = (il, ir, ac, gy, gp)
+        return frames, stamps
+
+    def run_chunk(self) -> Dict[Any, np.ndarray]:
+        """One serving iteration: drain control requests, gather staged
+        frames, dispatch the pool one chunk, record latencies. Returns
+        robot id -> (n_b, 3) poses drained this chunk."""
+        t0 = self._clock()
+        self._drain_requests()
+        frames, stamps = self._gather()
+        poses = (self.pool.step_chunk(frames, self.dt_imu, self.chunk)
+                 if frames else {})
+        now = self._clock()
+        for rid, ts in stamps.items():
+            if rid not in poses:
+                continue
+            lat = self.latencies.setdefault(rid, [])
+            lat.extend(now - t for t in ts)
+            self.frames_served += len(ts)
+        self.tracker.add(now - t0)
+        self.chunks += 1
+        return poses
+
+    def run_until_drained(self, max_chunks: int = 10_000
+                          ) -> Dict[Any, np.ndarray]:
+        """Drive ``run_chunk`` until no requests or frames remain,
+        concatenating per-robot poses across chunks."""
+        out: Dict[Any, List[np.ndarray]] = {}
+        for _ in range(max_chunks):
+            if not self._requests and not any(
+                    self._streams.get(rid)
+                    for rid in list(self._streams)):
+                break
+            for rid, p in self.run_chunk().items():
+                out.setdefault(rid, []).append(p)
+        return {rid: np.concatenate(ps) for rid, ps in out.items()}
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+    def latency_report(self) -> Dict[str, Any]:
+        """Gateway-facing summary: per-chunk drain stats (via the
+        tracker's non-resetting ``snapshot``) plus per-robot p50/p99
+        submit-to-pose latency and the churn/retrace counters."""
+        per_robot = {}
+        for rid, lat in self.latencies.items():
+            a = np.asarray(lat, np.float64)
+            per_robot[str(rid)] = {
+                "frames": int(a.size),
+                "p50_s": float(np.percentile(a, 50)) if a.size else 0.0,
+                "p99_s": float(np.percentile(a, 99)) if a.size else 0.0,
+            }
+        return {
+            "chunks": self.chunks,
+            "frames_served": self.frames_served,
+            "rejected_joins": self.rejected,
+            "chunk_wall": self.tracker.snapshot(),
+            "per_robot": per_robot,
+            "pool": {
+                "capacity": self.pool.capacity,
+                "occupancy": self.pool.occupancy,
+                "admissions": self.pool.admissions,
+                "departures": self.pool.departures,
+                "scenario_swaps": self.pool.scenario_swaps,
+                "resizes": self.pool.resizes,
+                "chunk_traces": self.pool.chunk_trace_count(),
+                "retired_chunk_traces": self.pool.retired_chunk_traces,
+            },
+        }

@@ -1,0 +1,397 @@
+"""Paged robot-state pool: continuous admission without retraces.
+
+The batch-static ``FleetLocalizer`` compiles ONE chunk program for a
+fixed batch B — PR 4's inactive-row machinery already proves a dispatch
+mixing active and inactive rows costs nothing. This module turns that
+invariant into a serving primitive: a pool of capacity ``C`` whose
+per-robot ``LocalizerState`` rows live in the fleet's padded (C, ...)
+state buffers, managed like an LLM server's paged KV cache:
+
+  slot table    robot id -> slot index (one state row per robot)
+  free list     recycled slots, reused LIFO-by-lowest-index
+  generations   per-slot admission counters — a ``SlotTicket`` captures
+                the generation at admission, and reads through a ticket
+                whose slot has since been recycled raise
+                ``StaleGeneration`` instead of silently returning the
+                NEXT occupant's state
+
+Admission binds a robot to a free slot and initializes its state row
+with ONE jitted donated scatter (a dynamic-index write — the slot id is
+traced, so every admission reuses a single compiled program); departure
+recycles the slot and bumps its generation. The chunk program never
+sees any of it: free slots ride as inactive rows, so ``chunk_traces``
+stays 1 across arbitrary churn.
+
+Ragged arrival is the fleet's 2-D active mask: each chunk dispatch
+advances robot b by exactly the ``counts[b] <= K`` frames it staged,
+as a per-column prefix of the fixed-K chunk.
+
+The explicitly-slow path is ``resize``: when admissions exceed C, a new
+fleet is compiled at C' > C and the occupied rows are carried across —
+host gather, re-pad to the new capacity, re-place across the robots
+mesh (``fleet_mesh.shard_states``). That costs one retrace of the chunk
+program, counted separately (``retired_chunk_traces``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.environment import MODE_VIO
+from repro.core.fleet import FleetLocalizer
+from repro.core.localizer import _ChunkStager, init_localizer_state
+from repro.distributed.fleet_mesh import shard_states
+
+
+class PoolFull(RuntimeError):
+    """Admission requested with no free slot (capacity exhausted).
+    Callers choose the slow path explicitly: ``resize`` or reject."""
+
+
+class StaleGeneration(RuntimeError):
+    """A SlotTicket outlived its slot binding: the robot departed and
+    the slot was (or may have been) recycled to a new occupant."""
+
+
+class UnknownRobot(KeyError):
+    """Operation on a robot id the slot table does not hold."""
+
+
+@dataclass(frozen=True)
+class SlotTicket:
+    """Admission receipt: the binding of a robot to a slot at a
+    generation. Every read API validates the generation, so a ticket
+    held across the robot's departure can never observe the slot's next
+    occupant."""
+    robot_id: Any
+    slot: int
+    generation: int
+
+
+def _write_row(states, row, slot):
+    """One admission: scatter a fresh single-robot state row into the
+    pooled (C, ...) buffers at a TRACED slot index (dynamic-update-slice
+    — one compiled program serves every slot), donating the pool
+    buffers so the write is in place."""
+    return jax.tree_util.tree_map(
+        lambda b, r: b.at[slot].set(r), states, row)
+
+
+class RobotStatePool:
+    """Fixed-capacity paged pool of per-robot localizer state.
+
+    Wraps a ``FleetLocalizer`` of batch ``capacity`` (pool slots ==
+    fleet batch rows; the fleet may pad further for a robots mesh) and
+    owns its batched state. ``admit``/``retire``/``assign_scenario``
+    are slot-table writes; ``step_chunk`` advances every occupied slot
+    by its own staged frame count in one fleet dispatch.
+    """
+
+    def __init__(self, cfg, cam, capacity: int, *,
+                 window: Optional[int] = None, scheduler=None,
+                 mesh=None, devices=None,
+                 host_kalman_fallback: bool = True,
+                 adaptive: bool = False):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.cfg = cfg
+        self.cam = cam
+        self.capacity = capacity
+        self._fleet_kw = dict(window=window, scheduler=scheduler,
+                              mesh=mesh, devices=devices,
+                              host_kalman_fallback=host_kalman_fallback,
+                              adaptive=adaptive)
+        self.fleet = FleetLocalizer(cfg, cam, batch=capacity,
+                                    **self._fleet_kw)
+        self.states = self.fleet.init_state()
+        # --- the page table ---
+        self._slot_of: Dict[Any, int] = {}       # robot id -> slot
+        self._ticket_of: Dict[Any, SlotTicket] = {}
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self.generation = np.zeros(capacity, np.int64)
+        self._mode = np.full(capacity, MODE_VIO, np.int32)
+        # persistent two-slot input ring: chunk staging rides the async
+        # pipeline machinery (pre-sharded device_put; committed async
+        # H2D on accelerator backends)
+        self._stager = _ChunkStager()
+        self._writer = jax.jit(_write_row, donate_argnums=(0,))
+        self._ipf: Optional[int] = None          # IMU samples per frame
+        # --- churn counters ---
+        self.admissions = 0
+        self.departures = 0
+        self.scenario_swaps = 0
+        self.resizes = 0
+        # chunk traces retired by resizes (each resize compiles a new
+        # fleet program — the explicitly-slow path, counted apart from
+        # the steady-state ``chunk_traces == 1`` invariant)
+        self.retired_chunk_traces = 0
+
+    # ------------------------------------------------------------------
+    # page-table views
+    # ------------------------------------------------------------------
+    @property
+    def robot_ids(self) -> Tuple[Any, ...]:
+        """Bound robots in admission order (dict insertion order)."""
+        return tuple(self._slot_of)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> int:
+        return self.capacity - len(self._free)
+
+    def slot_of(self, robot_id) -> int:
+        try:
+            return self._slot_of[robot_id]
+        except KeyError:
+            raise UnknownRobot(robot_id) from None
+
+    def ticket_of(self, robot_id) -> SlotTicket:
+        try:
+            return self._ticket_of[robot_id]
+        except KeyError:
+            raise UnknownRobot(robot_id) from None
+
+    def chunk_trace_count(self) -> int:
+        """Traces of the LIVE chunk program — 1 across arbitrary churn;
+        only a resize (new program) resets it. ``retired_chunk_traces``
+        accumulates the pre-resize programs' counts."""
+        return self.fleet.chunk_trace_count()
+
+    def mode_of(self, robot_id) -> int:
+        return int(self._mode[self.slot_of(robot_id)])
+
+    # ------------------------------------------------------------------
+    # admission / departure / assignment: slot-table writes
+    # ------------------------------------------------------------------
+    def _resolve_mode(self, scenario) -> int:
+        """Scenario name or mode id -> validated registry id."""
+        tab = self.fleet.scenarios
+        if isinstance(scenario, str):
+            if scenario not in tab.names:
+                raise ValueError(
+                    f"unknown scenario {scenario!r}; this pool's fleet "
+                    f"compiled against {list(tab.names)}")
+            return tab.id_of(scenario)
+        mid = int(scenario)
+        tab.validate_ids([mid])
+        return mid
+
+    def admit(self, robot_id, scenario=MODE_VIO, p0=None, v0=None,
+              q0=None, slot: Optional[int] = None) -> SlotTicket:
+        """Bind ``robot_id`` to a free slot and initialize its state row
+        host-side — one slot-table write plus one jitted scatter; the
+        chunk program is untouched (zero retrace). Raises ``PoolFull``
+        when no slot is free (callers pick the slow path: ``resize``).
+
+        ``slot`` pins an explicit free slot (deterministic layouts for
+        equivalence tests); default is the lowest free index."""
+        if robot_id in self._slot_of:
+            raise ValueError(f"robot {robot_id!r} already admitted")
+        mid = self._resolve_mode(scenario)
+        if not self._free:
+            raise PoolFull(
+                f"pool at capacity {self.capacity} "
+                f"({self.occupancy} occupied) — resize() is the "
+                "explicitly-slow overflow path")
+        if slot is None:
+            s = self._free.pop()
+        else:
+            if slot not in self._free:
+                raise ValueError(f"slot {slot} is not free")
+            self._free.remove(slot)
+            s = slot
+        row = init_localizer_state(self.cfg, self.fleet.window,
+                                   p0=p0, v0=v0, q0=q0)
+        self.states = self._writer(self.states, row, jnp.int32(s))
+        if self.fleet.mesh is not None:
+            # keep the pooled state placed across the robots mesh (the
+            # scatter's output sharding follows XLA defaults otherwise)
+            self.states = shard_states(self.states, self.fleet.mesh)
+        # a recycled slot must not inherit the previous occupant's host
+        # stage (SLAM keyframes/map are per-robot, keyed by slot)
+        self.fleet._robots.pop(s, None)
+        self._mode[s] = mid
+        self._slot_of[robot_id] = s
+        tk = SlotTicket(robot_id, s, int(self.generation[s]))
+        self._ticket_of[robot_id] = tk
+        self.admissions += 1
+        return tk
+
+    def retire(self, robot_id) -> None:
+        """Departure: recycle the robot's slot (free-list push + a
+        generation bump that invalidates outstanding tickets). The
+        row's buffers stay in place as an inactive pad row until the
+        slot is re-admitted."""
+        s = self.slot_of(robot_id)
+        del self._slot_of[robot_id]
+        del self._ticket_of[robot_id]
+        self.generation[s] += 1
+        self._mode[s] = MODE_VIO
+        self.fleet._robots.pop(s, None)
+        self._free.append(s)
+        # lowest free index first keeps slot assignment deterministic
+        self._free.sort(reverse=True)
+        self.departures += 1
+
+    def assign_scenario(self, robot_id, scenario) -> None:
+        """Re-assign a bound robot's scenario: a slot-table write, live
+        at the next chunk dispatch via the traced mode id (the PR 5/7
+        migration path — zero retraces). The robot's host-stage state
+        (its map) is kept: it is the same machine in a new environment."""
+        self._mode[self.slot_of(robot_id)] = self._resolve_mode(scenario)
+        self.scenario_swaps += 1
+
+    # ------------------------------------------------------------------
+    # reads (generation-checked)
+    # ------------------------------------------------------------------
+    def _check(self, ticket: SlotTicket) -> int:
+        cur = self._slot_of.get(ticket.robot_id)
+        if (cur != ticket.slot
+                or self.generation[ticket.slot] != ticket.generation):
+            raise StaleGeneration(
+                f"ticket {ticket} is stale: slot {ticket.slot} is at "
+                f"generation {int(self.generation[ticket.slot])}")
+        return ticket.slot
+
+    def position(self, ticket: SlotTicket) -> np.ndarray:
+        """(3,) current position for a live ticket (host copy)."""
+        s = self._check(ticket)
+        return np.asarray(self.states.filt.p)[s]
+
+    def state_row(self, ticket: SlotTicket):
+        """Host copy of the robot's full state row (live tickets only)."""
+        s = self._check(ticket)
+        return jax.tree_util.tree_map(lambda x: np.asarray(x)[s],
+                                      self.states)
+
+    def positions(self) -> Dict[Any, np.ndarray]:
+        """robot id -> (3,) position for every bound robot (one host
+        transfer for the pooled buffer)."""
+        p = np.asarray(self.states.filt.p)
+        return {rid: p[s].copy() for rid, s in self._slot_of.items()}
+
+    # ------------------------------------------------------------------
+    # the hot path: one fleet dispatch advances every occupied slot
+    # ------------------------------------------------------------------
+    def step_chunk(self, frames: Dict[Any, Tuple], dt_imu: float,
+                   chunk: int) -> Dict[Any, np.ndarray]:
+        """Advance staged per-robot frame streams one fixed-K chunk.
+
+        ``frames``: robot id -> ``(imgs_l, imgs_r, imu_accel, imu_gyro,
+        gps)`` with leading per-robot frame count ``n_b <= chunk``
+        (``gps`` may be None). Ragged arrival is the per-column prefix
+        of the fleet's 2-D active mask; free slots and robots with no
+        staged frames ride as inactive rows. K is pinned to ``chunk``
+        so every serving dispatch — full, ragged or nearly empty —
+        reuses the one compiled trace.
+
+        Returns robot id -> (n_b, 3) poses for the frames drained this
+        chunk (empty dict, no dispatch, when nothing is staged)."""
+        K = int(chunk)
+        C = self.capacity
+        fe = self.cfg.frontend
+        counts = np.zeros(C, np.int64)
+        staged: List[Tuple[Any, int, Tuple]] = []
+        for rid, fr in frames.items():
+            s = self.slot_of(rid)
+            n = int(np.asarray(fr[0]).shape[0])
+            if n == 0:
+                continue
+            if n > K:
+                raise ValueError(
+                    f"robot {rid!r} staged {n} frames > chunk {K}")
+            counts[s] = n
+            staged.append((rid, s, fr))
+        if not staged:
+            return {}
+        if self._ipf is None:
+            self._ipf = int(np.asarray(staged[0][2][2]).shape[1])
+        ipf = self._ipf
+
+        il = np.zeros((K, C, fe.height, fe.width), np.float32)
+        ir = np.zeros((K, C, fe.height, fe.width), np.float32)
+        ac = np.zeros((K, C, ipf, 3), np.float32)
+        gy = np.zeros((K, C, ipf, 3), np.float32)
+        gps = np.full((K, C, 3), np.nan, np.float32)
+        for rid, s, (fl, fr_, fa, fg, fp) in staged:
+            n = counts[s]
+            il[:n, s] = np.asarray(fl, np.float32)
+            ir[:n, s] = np.asarray(fr_, np.float32)
+            ac[:n, s] = np.asarray(fa, np.float32)
+            gy[:n, s] = np.asarray(fg, np.float32)
+            if fp is not None:
+                gps[:n, s] = np.asarray(fp, np.float32)
+        active = np.arange(K)[:, None] < counts[None, :]
+
+        self.states, outs = self.fleet.step_chunk(
+            self.states, il, ir, ac, gy, gps, self._mode.copy(),
+            dt_imu, active=active, stager=self._stager)
+        p = np.asarray(outs.p)
+        return {rid: p[:counts[s], s].copy() for rid, s, _ in staged}
+
+    # ------------------------------------------------------------------
+    # the explicitly-slow path: elastic capacity overflow
+    # ------------------------------------------------------------------
+    def resize(self, new_capacity: int) -> None:
+        """Grow the pool to ``new_capacity`` slots, carrying every
+        occupied row across pools: host-gather the old padded state,
+        re-pad to the new fleet's batch, re-place across the robots
+        mesh. Slot indices, tickets and generations are preserved.
+        Costs one retrace of the chunk program (the old program's
+        traces accumulate in ``retired_chunk_traces``)."""
+        if new_capacity <= self.capacity:
+            raise ValueError(
+                f"resize must grow: {new_capacity} <= {self.capacity}")
+        old_cap = self.capacity
+        old_states = jax.device_get(self.states)
+        old_robots = self.fleet._robots
+        self.retired_chunk_traces += self.fleet.chunk_trace_count()
+
+        self.fleet = FleetLocalizer(self.cfg, self.cam,
+                                    batch=new_capacity, **self._fleet_kw)
+        self.fleet._robots.update(old_robots)
+        fresh = jax.device_get(self.fleet.init_state())
+
+        def carry(old, new):
+            out = np.asarray(new).copy()
+            out[:old_cap] = np.asarray(old)[:old_cap]
+            return out
+        carried = jax.tree_util.tree_map(carry, old_states, fresh)
+        self.states = shard_states(
+            jax.tree_util.tree_map(jnp.asarray, carried), self.fleet.mesh)
+
+        self.capacity = new_capacity
+        self.generation = np.concatenate(
+            [self.generation, np.zeros(new_capacity - old_cap, np.int64)])
+        self._mode = np.concatenate(
+            [self._mode,
+             np.full(new_capacity - old_cap, MODE_VIO, np.int32)])
+        self._free = sorted(self._free + list(range(old_cap, new_capacity)),
+                            reverse=True)
+        self._stager = _ChunkStager()    # old ring slots die with the pool
+        self.resizes += 1
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Slot-table consistency (the churn-fuzz assertion surface):
+        bound slots and the free list partition [0, C); tickets match
+        their slots' live generations; every bound mode id is
+        registered."""
+        bound = sorted(self._slot_of.values())
+        assert len(bound) == len(set(bound)), "duplicate slot binding"
+        assert sorted(bound + list(self._free)) == list(
+            range(self.capacity)), "slot table + free list != [0, C)"
+        for rid, s in self._slot_of.items():
+            tk = self._ticket_of[rid]
+            assert tk.slot == s and tk.generation == int(
+                self.generation[s]), f"stale live ticket for {rid!r}"
+        self.fleet.scenarios.validate_ids(
+            self._mode[list(self._slot_of.values())]
+            if self._slot_of else [])

@@ -1,0 +1,297 @@
+"""Serving-layer invariants: the paged robot-state pool and the
+chunk-boundary admission engine (``repro.serve``).
+
+The load-bearing claims, each pinned here:
+  * churn is a slot-table write — arbitrary join/leave/swap sequences
+    keep the slot table consistent (hypothesis fuzz) and the chunk
+    program at ONE trace;
+  * generation counters make recycled slots safe — a ticket held across
+    its robot's departure raises instead of reading the next occupant;
+  * a churned pool is BITWISE equal to a statically-constructed pool of
+    the surviving robots fed the same per-robot streams (same capacity,
+    same slots — the padded-batch discipline only promises bitwise
+    equality within one layout);
+  * the engine mutates the pool at chunk boundaries only, and the
+    overflow path (elastic resize) carries state and is counted apart.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.environment import MODE_SLAM, MODE_VIO
+from repro.launch.watchdog import StepTimeTracker
+from repro.serve import (PoolFull, RobotStatePool, ServingEngine,
+                         StaleGeneration, UnknownRobot)
+
+
+@pytest.fixture(scope="module")
+def bookkeeping_pool(synthetic_sequence, small_cfg):
+    """One capacity-4 pool shared by every test that never dispatches a
+    chunk — admission/departure/tickets are host-side slot-table writes,
+    so reusing the pool costs nothing and saves a fleet build per test."""
+    return RobotStatePool(small_cfg, synthetic_sequence.cam, capacity=4,
+                          window=8)
+
+
+def _drain(pool):
+    for rid in list(pool.robot_ids):
+        pool.retire(rid)
+
+
+def _robot_frames(seq, i0, n):
+    ipf = seq.imu_per_frame
+    ac = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                   for i in range(i0, i0 + n)])
+    gy = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                   for i in range(i0, i0 + n)])
+    return (seq.images_left[i0:i0 + n], seq.images_right[i0:i0 + n],
+            ac, gy, seq.gps[i0:i0 + n])
+
+
+# ---------------------------------------------------------------------------
+# slot-table bookkeeping (no chunk dispatches)
+# ---------------------------------------------------------------------------
+def test_admit_retire_recycles_slots(bookkeeping_pool):
+    pool = bookkeeping_pool
+    _drain(pool)
+    t1 = pool.admit("a")
+    t2 = pool.admit("b", "slam")
+    assert (t1.slot, t2.slot) != (None, None) and t1.slot != t2.slot
+    assert pool.occupancy == 2 and pool.free_slots == pool.capacity - 2
+    assert pool.mode_of("b") == MODE_SLAM
+    pool.retire("a")
+    t3 = pool.admit("c")
+    # lowest free index is reused, at a bumped generation
+    assert t3.slot == t1.slot and t3.generation == t1.generation + 1
+    pool.check_invariants()
+    with pytest.raises(ValueError):
+        pool.admit("c")                      # double admission
+    with pytest.raises(UnknownRobot):
+        pool.slot_of("a")                    # departed
+
+
+def test_stale_generation_reads_raise(bookkeeping_pool):
+    pool = bookkeeping_pool
+    _drain(pool)
+    tk = pool.admit("r", p0=np.array([1.0, 2.0, 3.0]))
+    assert np.allclose(pool.position(tk), [1.0, 2.0, 3.0])
+    pool.retire("r")
+    pool.admit("other", slot=tk.slot, p0=np.array([9.0, 9.0, 9.0]))
+    # the slot is live again with a NEW occupant: the old ticket must
+    # raise, never return robot "other"'s state
+    with pytest.raises(StaleGeneration):
+        pool.position(tk)
+    with pytest.raises(StaleGeneration):
+        pool.state_row(tk)
+
+
+def test_pool_full_and_explicit_slots(bookkeeping_pool):
+    pool = bookkeeping_pool
+    _drain(pool)
+    pool.admit("x", slot=2)
+    assert pool.slot_of("x") == 2
+    with pytest.raises(ValueError):
+        pool.admit("y", slot=2)              # not free
+    for i in range(pool.capacity - 1):
+        pool.admit(f"f{i}")
+    with pytest.raises(PoolFull):
+        pool.admit("overflow")
+    pool.check_invariants()
+
+
+def test_assign_scenario_is_a_table_write(bookkeeping_pool):
+    pool = bookkeeping_pool
+    _drain(pool)
+    pool.admit("r", "vio")
+    pool.assign_scenario("r", "slam")
+    assert pool.mode_of("r") == MODE_SLAM
+    assert pool.scenario_swaps >= 1
+    with pytest.raises(ValueError):
+        pool.assign_scenario("r", "no-such-scenario")
+
+
+def _churn_property(pool, seq):
+    """The churn invariant: after EVERY operation the slot table and
+    free list partition [0, C), live tickets match their slots'
+    generations, and tickets retired along the way raise."""
+    _drain(pool)
+    live, dead = {}, []
+    for kind, rid, scen in seq:
+        if kind == "join" and rid not in live:
+            try:
+                live[rid] = pool.admit(rid, scen)
+            except PoolFull:
+                assert pool.free_slots == 0
+        elif kind == "leave" and rid in live:
+            pool.retire(rid)
+            dead.append(live.pop(rid))
+        elif kind == "swap" and rid in live:
+            pool.assign_scenario(rid, scen)
+        pool.check_invariants()
+    assert set(pool.robot_ids) == set(live)
+    for rid, tk in live.items():
+        assert pool.position(tk).shape == (3,)
+    for tk in dead:
+        with pytest.raises(StaleGeneration):
+            pool.position(tk)
+
+
+def test_churn_fuzz_slot_table_consistency(bookkeeping_pool):
+    """Random join/leave/swap churn fuzzing — hypothesis-driven when
+    available (shrinking on failure), seeded numpy sequences otherwise
+    so the property is exercised on every box."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        rng = np.random.RandomState(0)
+        kinds = ["join", "leave", "swap"]
+        scens = ["vio", "slam"]
+        for _ in range(25):
+            seq = [(kinds[rng.randint(3)], int(rng.randint(6)),
+                    scens[rng.randint(2)])
+                   for _ in range(rng.randint(1, 25))]
+            _churn_property(bookkeeping_pool, seq)
+        return
+
+    ops = st.lists(st.tuples(st.sampled_from(["join", "leave", "swap"]),
+                             st.integers(0, 5),
+                             st.sampled_from(["vio", "slam"])),
+                   min_size=1, max_size=24)
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops)
+    def run(seq):
+        _churn_property(bookkeeping_pool, seq)
+
+    run()
+
+
+def test_active_mask_cache_and_2d_validation(bookkeeping_pool):
+    fleet = bookkeeping_pool.fleet
+    a1, n1 = fleet._active_mask(4, None)
+    a2, n2 = fleet._active_mask(4, None)
+    assert a1 is a2 and n1 == n2 == 4      # cached, not rebuilt
+    assert not a1.flags.writeable          # shared across dispatches
+    counts = np.array([2, 0, 3, 1])
+    m = np.arange(3)[:, None] < counts[None, :]
+    act, n_real = fleet._active_mask(3, m)
+    assert n_real == 3 and act.shape == (3, fleet.padded)
+    assert np.array_equal(act[:, :4], m)
+    bad = m.copy()
+    bad[0, 0], bad[1, 0] = False, True     # hole: not a prefix
+    with pytest.raises(ValueError):
+        fleet._active_mask(3, bad)
+    with pytest.raises(ValueError):
+        fleet._active_mask(3, m[:, :2])    # wrong width
+
+
+# ---------------------------------------------------------------------------
+# engine semantics (no chunk dispatches)
+# ---------------------------------------------------------------------------
+def test_engine_mutates_only_at_chunk_boundaries(bookkeeping_pool):
+    pool = bookkeeping_pool
+    _drain(pool)
+    eng = ServingEngine(pool, chunk=2, overflow="reject")
+    eng.submit_join("a")
+    eng.submit_join("b", "slam")
+    eng.submit_leave("a")
+    assert pool.occupancy == 0 and eng.pending_requests() == 3
+    eng.run_chunk()                        # the single drain point
+    assert eng.pending_requests() == 0
+    assert set(pool.robot_ids) == {"b"} and pool.mode_of("b") == MODE_SLAM
+    assert pool.admissions >= 2 and pool.departures >= 1
+
+
+def test_engine_reject_overflow(synthetic_sequence, small_cfg):
+    pool = RobotStatePool(small_cfg, synthetic_sequence.cam, capacity=1,
+                          window=8)
+    eng = ServingEngine(pool, chunk=2, overflow="reject")
+    eng.submit_join("a")
+    eng.submit_join("b")
+    eng.run_chunk()
+    assert pool.occupancy == 1 and eng.rejected == 1
+    assert pool.capacity == 1 and pool.resizes == 0
+
+
+def test_engine_resize_overflow_carries_state(synthetic_sequence,
+                                              small_cfg):
+    pool = RobotStatePool(small_cfg, synthetic_sequence.cam, capacity=1,
+                          window=8)
+    eng = ServingEngine(pool, chunk=2, overflow="resize")
+    eng.submit_join("a", p0=np.array([1.0, 2.0, 3.0]))
+    eng.run_chunk()
+    eng.submit_join("b", p0=np.array([4.0, 5.0, 6.0]))
+    eng.run_chunk()                        # forces the slow path
+    assert pool.capacity == 2 and pool.resizes == 1
+    assert pool.retired_chunk_traces == 0  # nothing dispatched yet
+    # robot a's row crossed pools intact; slots/tickets preserved
+    assert np.allclose(pool.position(eng.tickets["a"]), [1.0, 2.0, 3.0])
+    assert np.allclose(pool.position(eng.tickets["b"]), [4.0, 5.0, 6.0])
+    pool.check_invariants()
+    with pytest.raises(ValueError):
+        pool.resize(2)                     # grow-only
+
+
+def test_tracker_snapshot_is_non_resetting():
+    tr = StepTimeTracker()
+    for v in (0.1, 0.2, 0.3, float("nan")):
+        tr.add(v)
+    s1 = tr.snapshot()
+    assert s1["count"] == 3 and s1["p50"] == pytest.approx(0.2)
+    assert s1["p99"] == pytest.approx(0.298)
+    s2 = tr.snapshot()
+    assert s2 == s1                        # reporting twice changes nothing
+    assert len(tr.samples) == 4            # samples untouched (NaN kept raw)
+    tr.add(0.4)
+    assert tr.snapshot()["count"] == 4
+
+
+# ---------------------------------------------------------------------------
+# the flagship equivalence: churned pool == static pool, bitwise
+# ---------------------------------------------------------------------------
+def test_churned_pool_bitwise_equals_static(synthetic_sequence, small_cfg):
+    """Admit A+B, run a chunk, retire B, admit C into B's recycled slot,
+    run another chunk — the survivors' state rows must be BITWISE equal
+    to a pool that held A and C from the start (C inactive until its
+    admission chunk), and the churned pool's chunk program must have
+    traced exactly once."""
+    seq = synthetic_sequence
+    dt = seq.dt / seq.imu_per_frame
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+
+    def fresh_pool():
+        return RobotStatePool(small_cfg, seq.cam, capacity=2, window=8)
+
+    # --- churned lifetime ---
+    churned = fresh_pool()
+    churned.admit("A", "vio", p0=seq.poses[0][:3, 3], v0=v0, slot=0)
+    tb = churned.admit("B", "slam", p0=seq.poses[0][:3, 3], v0=v0, slot=1)
+    churned.step_chunk({"A": _robot_frames(seq, 0, 2),
+                        "B": _robot_frames(seq, 0, 2)}, dt, chunk=2)
+    churned.retire("B")
+    tc = churned.admit("C", "slam", p0=seq.poses[0][:3, 3], v0=v0)
+    assert tc.slot == tb.slot              # recycled
+    churned.step_chunk({"A": _robot_frames(seq, 2, 2),
+                        "C": _robot_frames(seq, 0, 2)}, dt, chunk=2)
+    assert churned.chunk_trace_count() == 1    # zero retraces across churn
+    assert churned.admissions == 3 and churned.departures == 1
+
+    # --- static fleet of the survivors, same slots, same streams ---
+    static = fresh_pool()
+    static.admit("A", "vio", p0=seq.poses[0][:3, 3], v0=v0, slot=0)
+    static.admit("C", "slam", p0=seq.poses[0][:3, 3], v0=v0, slot=1)
+    static.step_chunk({"A": _robot_frames(seq, 0, 2)}, dt, chunk=2)
+    static.step_chunk({"A": _robot_frames(seq, 2, 2),
+                       "C": _robot_frames(seq, 0, 2)}, dt, chunk=2)
+    assert static.chunk_trace_count() == 1
+
+    for rid in ("A", "C"):
+        a = churned.state_row(churned.ticket_of(rid))
+        b = static.state_row(static.ticket_of(rid))
+        for name in ("p", "v", "q", "P"):
+            assert np.array_equal(getattr(a.filt, name),
+                                  getattr(b.filt, name)), (rid, name)
+        assert np.array_equal(a.tracks_uv, b.tracks_uv), rid
+        assert np.array_equal(a.tracks_valid, b.tracks_valid), rid
+        assert np.array_equal(a.frame_idx, b.frame_idx), rid
