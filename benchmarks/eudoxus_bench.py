@@ -1032,10 +1032,16 @@ def serving_suite(n_frames: int = 8, chunk: int = 2, capacity: int = 3,
        and leaving when served — robots/sec admitted, per-robot p50/p99
        submit-to-pose latency, and chunk ``traces == 1`` across the
        whole churn sequence (zero retraces; measured post-compile).
-    2. ``bitwise``: a churned pool (admit A+B -> chunk -> retire B ->
+       Runs at the serving default (``inflight=2`` pipelined drain).
+    2. ``pipelined``: the SAME Poisson workload at ``inflight=1``
+       (synchronous drain) vs the depth-2 run — chunk-drain
+       mean/p50/p99/rsd, worst-robot pose p99, the boundary
+       stage/dispatch/sync/host-stage decomposition, and bitwise
+       equality of every robot's drained pose stream across the two.
+    3. ``bitwise``: a churned pool (admit A+B -> chunk -> retire B ->
        admit C into B's recycled slot -> chunk) against a static pool of
        the survivors on the same slots — bitwise-equal state rows.
-    3. ``resize``: the explicitly-slow overflow path — elastic grow
+    4. ``resize``: the explicitly-slow overflow path — elastic grow
        carrying state bitwise across pools, its retrace counted apart
        from the steady-state invariant.
     """
@@ -1076,51 +1082,75 @@ def serving_suite(n_frames: int = 8, chunk: int = 2, capacity: int = 3,
                     "n_frames": n_frames, "arrivals": "poisson",
                     "seed": seed}
 
-    # -- 1. Poisson-arrival churn over a fixed-capacity pool ------------
-    pool = RobotStatePool(cfg, seq.cam, capacity=capacity, window=window)
-    engine = ServingEngine(pool, chunk=chunk, dt_imu=dt,
-                           overflow="reject")
-    # compile the one chunk program OUTSIDE the measured churn window
-    # (serving steady state is post-compile by definition)
-    engine.submit_join("warmup", "vio", p0=p0, v0=v0)
-    for i in range(chunk):
-        engine.submit_frame("warmup", *frame_args(i))
-    engine.run_chunk()
-    engine.submit_leave("warmup")
-    engine.run_chunk()
-    traces_after_compile = pool.chunk_trace_count()
-    # steady-state chunk wall times only: drop the compile chunks
+    # -- 1 + 2. Poisson-arrival churn, synchronous vs pipelined drain ---
     from repro.launch.watchdog import StepTimeTracker
-    engine.tracker = StepTimeTracker()
 
-    rng = np.random.RandomState(seed)
-    # arrival times in units of chunk boundaries, mean one robot per
-    # two chunks — overlapping sessions with occupancy < capacity
-    arrival = np.floor(np.cumsum(
-        rng.exponential(2.0, size=n_robots))).astype(int)
-    scen = ["vio", "slam"] * n_robots
-    t0 = time.perf_counter()
-    joined, left = set(), set()
-    boundary = 0
-    while len(left) < n_robots and boundary < 10_000:
-        for r in range(n_robots):
-            rid = f"robot{r}"
-            if rid not in joined and arrival[r] <= boundary:
-                engine.submit_join(rid, scen[r], p0=p0, v0=v0)
-                for i in range(n_frames):
-                    engine.submit_frame(rid, *frame_args(i))
-                joined.add(rid)
+    def churn_run(inflight):
+        """One full Poisson-churn pass at the given pipeline depth;
+        returns (engine, per-robot drained pose streams, wall_s)."""
+        pool = RobotStatePool(cfg, seq.cam, capacity=capacity,
+                              window=window)
+        engine = ServingEngine(pool, chunk=chunk, dt_imu=dt,
+                               overflow="reject", inflight=inflight)
+        # compile the one chunk program OUTSIDE the measured churn
+        # window (serving steady state is post-compile by definition)
+        engine.submit_join("warmup", "vio", p0=p0, v0=v0)
+        for i in range(chunk):
+            engine.submit_frame("warmup", *frame_args(i))
         engine.run_chunk()
-        for rid in list(joined - left):
-            if len(engine.latencies.get(rid, ())) >= n_frames:
-                engine.submit_leave(rid)
-                left.add(rid)
-        boundary += 1
-    engine.run_chunk()                     # drain the final leaves
-    wall = time.perf_counter() - t0
-    assert len(left) == n_robots, "churn pass did not converge"
-    assert pool.chunk_trace_count() == traces_after_compile == 1, (
-        "serving churn retraced the chunk program")
+        engine.flush()
+        engine.submit_leave("warmup")
+        engine.run_chunk()
+        traces_after_compile = pool.chunk_trace_count()
+        # steady-state wall times only: drop the compile chunks
+        engine.tracker = StepTimeTracker()
+        engine.decomp = {k: StepTimeTracker() for k in engine.decomp}
+
+        rng = np.random.RandomState(seed)
+        # arrival times in units of chunk boundaries, mean one robot
+        # per two chunks — overlapping sessions, occupancy < capacity
+        arrival = np.floor(np.cumsum(
+            rng.exponential(2.0, size=n_robots))).astype(int)
+        scen = ["vio", "slam"] * n_robots
+        poses: Dict[str, List[np.ndarray]] = {}
+
+        def collect(drained):
+            for rid, p in drained.items():
+                poses.setdefault(rid, []).append(p)
+
+        t0 = time.perf_counter()
+        joined, left = set(), set()
+        boundary = 0
+        while len(left) < n_robots and boundary < 10_000:
+            for r in range(n_robots):
+                rid = f"robot{r}"
+                if rid not in joined and arrival[r] <= boundary:
+                    engine.submit_join(rid, scen[r], p0=p0, v0=v0)
+                    for i in range(n_frames):
+                        engine.submit_frame(rid, *frame_args(i))
+                    joined.add(rid)
+            collect(engine.run_chunk())
+            for rid in list(joined - left):
+                if len(engine.latencies.get(rid, ())) >= n_frames:
+                    engine.submit_leave(rid)
+                    left.add(rid)
+                elif (rid not in engine.pool.robot_ids
+                      and not engine.latencies.get(rid)):
+                    # join rejected (pool momentarily full — pipelined
+                    # robots reside one extra boundary): retry next time
+                    joined.discard(rid)
+            boundary += 1
+        collect(engine.run_chunk())        # drain the final leaves
+        collect(engine.flush())            # ... and the pipelined tail
+        wall = time.perf_counter() - t0
+        assert len(left) == n_robots, "churn pass did not converge"
+        assert pool.chunk_trace_count() == traces_after_compile == 1, (
+            "serving churn retraced the chunk program")
+        streams = {rid: np.concatenate(ps) for rid, ps in poses.items()}
+        return engine, streams, wall
+
+    engine, pipe_poses, wall = churn_run(2)
+    pool = engine.pool
 
     rep = engine.latency_report()
     per_robot = {k: v for k, v in rep["per_robot"].items()
@@ -1128,6 +1158,7 @@ def serving_suite(n_frames: int = 8, chunk: int = 2, capacity: int = 3,
     p99s = [v["p99_s"] for v in per_robot.values()]
     p50s = [v["p50_s"] for v in per_robot.values()]
     churn = {
+        "inflight": rep["inflight"],
         "wall_s": wall,
         "robots_per_s": n_robots / wall,
         "frames_served": rep["frames_served"],
@@ -1139,6 +1170,7 @@ def serving_suite(n_frames: int = 8, chunk: int = 2, capacity: int = 3,
         "pose_p50_ms_median_robot": float(np.median(p50s)) * 1e3,
         "pose_p99_ms_worst_robot": float(np.max(p99s)) * 1e3,
         "chunk_wall": rep["chunk_wall"],
+        "decomposition": rep["decomposition"],
         "per_robot": per_robot,
     }
     report["churn"] = churn
@@ -1151,7 +1183,44 @@ def serving_suite(n_frames: int = 8, chunk: int = 2, capacity: int = 3,
                  f"{churn['chunk_traces']} (zero retrace over "
                  f"{churn['admissions']}J/{churn['departures']}L)"))
 
-    # -- 2. churned pool bitwise-equals a static fleet of survivors -----
+    # -- 2. synchronous reference vs the depth-2 pipelined drain --------
+    sync_eng, sync_poses, sync_wall = churn_run(1)
+    srep = sync_eng.latency_report()
+    pipe_eq = (set(sync_poses) == set(pipe_poses)
+               and all(np.array_equal(sync_poses[r], pipe_poses[r])
+                       for r in sync_poses))
+    assert pipe_eq, "pipelined drain diverged from synchronous drain"
+
+    def drain_side(r, poses_wall):
+        pr = {k: v for k, v in r["per_robot"].items() if k != "warmup"}
+        return {
+            "inflight": r["inflight"],
+            "wall_s": poses_wall,
+            "chunks": r["chunks"],
+            "chunk_wall": r["chunk_wall"],
+            "decomposition": r["decomposition"],
+            "pose_p99_ms_worst_robot": float(np.max(
+                [v["p99_s"] for v in pr.values()])) * 1e3,
+            "chunk_traces": r["pool"]["chunk_traces"],
+        }
+
+    sync_cw, pipe_cw = srep["chunk_wall"], rep["chunk_wall"]
+    report["pipelined"] = {
+        "sync": drain_side(srep, sync_wall),
+        "depth2": drain_side(rep, wall),
+        "speedup_chunk_mean": sync_cw["mean"] / pipe_cw["mean"],
+        "rsd_sync": sync_cw["rsd"],
+        "rsd_depth2": pipe_cw["rsd"],
+        "bitwise_equal": pipe_eq,
+    }
+    rows.append(("serving/pipelined_chunk_mean", pipe_cw["mean"],
+                 f"x{sync_cw['mean'] / pipe_cw['mean']:.2f} vs sync "
+                 f"{sync_cw['mean']*1e3:.2f}ms"))
+    rows.append(("serving/pipelined_chunk_rsd", 0.0,
+                 f"rsd {pipe_cw['rsd']:.2f} (sync {sync_cw['rsd']:.2f}), "
+                 f"bitwise={pipe_eq}"))
+
+    # -- 3. churned pool bitwise-equals a static fleet of survivors -----
     def fresh():
         return RobotStatePool(cfg, seq.cam, capacity=2, window=window)
 
@@ -1196,7 +1265,7 @@ def serving_suite(n_frames: int = 8, chunk: int = 2, capacity: int = 3,
     rows.append(("serving/bitwise_churned_vs_static", 0.0,
                  f"equal={equal} over {len(fields)} state fields"))
 
-    # -- 3. the explicitly-slow path: elastic overflow resize -----------
+    # -- 4. the explicitly-slow path: elastic overflow resize -----------
     pos_before = churned.positions()
     t0 = time.perf_counter()
     churned.resize(4)

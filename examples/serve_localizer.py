@@ -1,7 +1,8 @@
 """Localization-as-a-service gateway: robot sessions over asyncio.
 
     PYTHONPATH=src python examples/serve_localizer.py \
-        [--capacity 3] [--robots 5] [--frames 8] [--chunk 2]
+        [--capacity 3] [--robots 5] [--frames 8] [--chunk 2] \
+        [--inflight 2]
 
 The deployment story the paper opens with — a fleet of heterogeneous
 machines served by ONE localization stack — as a running service:
@@ -16,8 +17,12 @@ machines served by ONE localization stack — as a running service:
 Robot sessions arrive Poisson-style, each streaming its frames and
 awaiting poses per drained chunk; a single serving loop drains the
 request queue + frame streams into one fleet dispatch per chunk
-(``repro.serve.ServingEngine``). More sessions than pool slots forces
-the explicitly-slow overflow path (elastic resize, counted separately).
+(``repro.serve.ServingEngine``), pipelined ``--inflight`` chunks deep:
+the gather stages chunk N+1 into the pool's ping-pong host buffers
+while chunk N executes, and poses sync one chunk behind (the loop
+calls ``flush()`` at shutdown so tail poses are never dropped). More
+sessions than pool slots forces the explicitly-slow overflow path
+(elastic resize, counted separately).
 On exit the gateway prints the SLAMBench-style report: robots/sec
 admitted, per-robot p50/p99 pose latency, chunk traces (== 1).
 
@@ -89,7 +94,7 @@ async def main_async(args):
     pool = RobotStatePool(cfg, seq.cam, capacity=args.capacity, window=8)
     engine = ServingEngine(pool, chunk=args.chunk,
                            dt_imu=seq.dt / seq.imu_per_frame,
-                           overflow="resize")
+                           overflow="resize", inflight=args.inflight)
 
     rng = np.random.RandomState(0)
     arrivals = np.cumsum(rng.exponential(args.mean_interarrival,
@@ -107,8 +112,10 @@ async def main_async(args):
                               scenarios[i], float(arrivals[i]), drained)
                 for i in range(args.robots)]
     done = await asyncio.gather(*sessions)
-    # one more chunk so the queued leaves drain before the report
+    # one more chunk so the queued leaves drain, then flush the
+    # pipelined tail before the report
     await asyncio.to_thread(engine.run_chunk)
+    await asyncio.to_thread(engine.flush)
     stop.set()
     await loop_task
     wall = time.perf_counter() - t0
@@ -118,8 +125,13 @@ async def main_async(args):
           f"in {wall:.1f}s "
           f"({rep['pool']['admissions'] / wall:.2f} robots/sec admitted)")
     cw = rep["chunk_wall"]
-    print(f"chunk drain: {int(cw['count'])} chunks, "
+    print(f"chunk drain (inflight={rep['inflight']}): "
+          f"{int(cw['count'])} chunks, "
           f"p50 {cw['p50']*1e3:.0f} ms, p99 {cw['p99']*1e3:.0f} ms")
+    dec = rep["decomposition"]
+    print("  boundary decomposition: " + ", ".join(
+        f"{k} p50 {dec[k]['p50']*1e3:.1f} ms"
+        for k in ("stage", "dispatch", "sync", "host_stage")))
     for rid, st in sorted(rep["per_robot"].items()):
         print(f"  {rid:8s} {st['frames']:3d} poses  "
               f"p50 {st['p50_s']*1e3:7.1f} ms  p99 {st['p99_s']*1e3:7.1f} ms")
@@ -136,6 +148,9 @@ def main():
     ap.add_argument("--robots", type=int, default=5)
     ap.add_argument("--frames", type=int, default=8)
     ap.add_argument("--chunk", type=int, default=2)
+    ap.add_argument("--inflight", type=int, default=2,
+                    help="pipeline depth: chunks in flight before the "
+                         "pose sync (1 = synchronous drain)")
     ap.add_argument("--mean-interarrival", type=float, default=0.5)
     asyncio.run(main_async(ap.parse_args()))
 

@@ -36,7 +36,7 @@ feedback); SLAM robots' append-only replay always defers one chunk.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +59,24 @@ from repro.distributed.fleet_mesh import (chunk_sharding, fleet_mesh,
                                           mesh_shards, padded_batch,
                                           robot_sharding, shard_fleet_chunk,
                                           shard_fleet_step, shard_states)
+
+
+class ChunkHostWork(NamedTuple):
+    """Host-side follow-up owed by one chunk dispatch — everything the
+    drain back of a pipelined caller needs to finish the chunk later
+    (or to decide it cannot be deferred at all).
+
+    ``kalman_off`` and ``has_reg`` are FEEDBACK: their host fixes must
+    reach the batched state before the next dispatch, so a pipelined
+    caller applies them at the dispatch front (a bubble, only at those
+    operating points). ``has_slam`` is append-only bookkeeping with no
+    state dependency — the one piece that can ride a chunk behind."""
+    mode_np: np.ndarray      # validated (B,) mode ids
+    act: np.ndarray          # (K, B_padded) activity mask
+    base_idx: np.ndarray     # per-robot absolute frame base (pre-chunk)
+    kalman_off: bool         # in-scan MSCKF update gated off -> host fix
+    has_slam: bool           # SLAM robots advanced -> deferred replay
+    has_reg: bool            # chunk-flush robots advanced -> immediate fix
 
 
 class FleetLocalizer:
@@ -319,18 +337,42 @@ class FleetLocalizer:
         Registration robots' host-stage pose fix is applied once at the
         END of the chunk — chunk-granularity feedback; use K=1 (``step``)
         when per-frame registration feedback matters.
+
+        This is the SYNCHRONOUS reference: dispatch + host drain in one
+        call. Pipelined callers split it — ``dispatch_chunk`` is the
+        front, ``finish_chunk`` (or the per-half methods) the back.
         """
+        states, outs, work = self.dispatch_chunk(
+            states, imgs_l, imgs_r, imu_accel, imu_gyro, gps, mode_ids,
+            dt_imu, active=active, stager=stager)
+        states = self.finish_chunk(states, outs, work)
+        return states, outs
+
+    def dispatch_chunk(self, states: LocalizerState, imgs_l, imgs_r,
+                       imu_accel, imu_gyro, gps, mode_ids, dt_imu: float,
+                       active=None, stager: Optional[_ChunkStager] = None,
+                       base_idx: Optional[np.ndarray] = None
+                       ) -> Tuple[LocalizerState, FrameOutputs,
+                                  ChunkHostWork]:
+        """The dispatch FRONT of ``step_chunk``: stage + dispatch one
+        chunk and return un-synced device-resident outputs plus the
+        ``ChunkHostWork`` owed on the host. Nothing here blocks on the
+        dispatched chunk, with one caveat: ``base_idx=None`` reads
+        ``states.frame_idx`` to the host, which waits for the PREVIOUS
+        chunk. Pipelined callers (the serving pool) pass their own
+        host-tracked frame bases so the dispatch front never syncs."""
         K = np.asarray(imgs_l).shape[0]
         mode_np = self.scenarios.validate_ids(mode_ids)
         act, n_real = self._active_mask(K, active)
-        base_idx = np.asarray(states.frame_idx)      # pre-chunk, per robot
+        if base_idx is None:
+            base_idx = np.asarray(states.frame_idx)  # pre-chunk, per robot
 
         inputs_np = self._build_chunk(imgs_l, imgs_r, imu_accel, imu_gyro,
                                       gps, mode_np, act)
         # external callers (the serving pool) may own a persistent
-        # _ChunkStager: staging then rides the two-slot input ring
-        # (pre-sharded device_put, committed async H2D on accelerators)
-        # instead of the default one-shot placement
+        # _ChunkStager: staging then rides the input ring (pre-sharded
+        # device_put, committed async H2D on accelerators) instead of
+        # the default one-shot placement
         if stager is None:
             inputs = self._put(inputs_np, self._chunk_in_sharding)
             staged = None
@@ -345,13 +387,30 @@ class FleetLocalizer:
             staged.consumed = True       # buffers donated to the dispatch
         self.dispatch_count += 1
 
-        if self.host_kalman_fallback and self._kalman_off(plan, mode_np):
-            states = self._host_kalman_fix(states, outs, act)
-        if self.scenarios.mask(mode_np,
-                               self.scenarios.host_stage_ids()).any():
-            states = self._host_chunk_stage(states, outs, mode_np, act,
-                                            base_idx)
-        return states, outs
+        tab = self.scenarios
+        col_active = act[:, :len(mode_np)].any(axis=0)
+        work = ChunkHostWork(
+            mode_np=mode_np, act=act, base_idx=base_idx,
+            kalman_off=bool(self.host_kalman_fallback
+                            and self._kalman_off(plan, mode_np)),
+            has_slam=bool((tab.mask(mode_np, tab.host_stage_ids("slam"))
+                           & col_active).any()),
+            has_reg=bool((tab.mask(mode_np, tab.chunk_flush_ids())
+                          & col_active).any()))
+        return states, outs, work
+
+    def finish_chunk(self, states: LocalizerState, outs: FrameOutputs,
+                     work: ChunkHostWork) -> LocalizerState:
+        """The drain BACK of ``step_chunk``: apply the chunk's owed host
+        work synchronously, in the reference order (host-Kalman fix,
+        SLAM replay, registration fix). Pipelined callers instead apply
+        the feedback halves at dispatch and defer ``_slam_replay``."""
+        if work.kalman_off:
+            states = self._host_kalman_fix(states, outs, work.act)
+        if work.has_slam or work.has_reg:
+            states = self._host_chunk_stage(states, outs, work.mode_np,
+                                            work.act, work.base_idx)
+        return states
 
     def _chunk_plan(self, n_real: int) -> sched.OffloadPlan:
         """Per-chunk offload plan at the chunk's REAL frame count (the

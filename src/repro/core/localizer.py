@@ -172,16 +172,20 @@ class _StagedChunk:
 
 
 class _ChunkStager:
-    """Two-slot host->device input ring for the async chunk pipeline.
+    """N-slot (default two) host->device input ring for the async chunk
+    pipeline.
 
     ``stage`` pre-stacks a chunk's padded host arrays and ships them
     with one ``jax.device_put`` while the previous chunk executes. Each
     staged buffer is written exactly once and never mutated afterwards
     (``device_put`` may alias host memory on CPU, so in-place slot reuse
-    would corrupt an in-flight chunk); the two slots instead bound how
+    would corrupt an in-flight chunk); the slots instead bound how
     many chunks are in flight, and a slot may only be restaged after its
     previous occupant's dispatch consumed (donated) the buffers —
-    enforced by assertion.
+    enforced by assertion. ``slots`` sizes the ring for callers that
+    keep more than two chunks in flight (the serving pool's depth-D
+    pipelined drain allocates one ring slot — and one host ping-pong
+    staging set — per in-flight chunk).
 
     ``sharding`` (a ``NamedSharding`` over the robots mesh, or None for
     the single-device path) makes the ``device_put`` split each staged
@@ -199,8 +203,10 @@ class _ChunkStager:
     (zero-copy), so the uncommitted PR-3 path is kept there bitwise
     intact — same call, same aliasing, same buffers."""
 
-    def __init__(self):
-        self._slots: List[Optional[_StagedChunk]] = [None, None]
+    def __init__(self, slots: int = 2):
+        if slots < 2:
+            raise ValueError("input ring needs >= 2 slots to overlap")
+        self._slots: List[Optional[_StagedChunk]] = [None] * slots
         self._next = 0
         self.staged_chunks = 0
         self.stage_seconds = 0.0     # host time spent staging (hidden
@@ -226,7 +232,7 @@ class _ChunkStager:
         target = sharding if sharding is not None else self._commit_dev
         staged = _StagedChunk(jax.device_put(inputs_np, target))
         self._slots[self._next] = staged
-        self._next ^= 1
+        self._next = (self._next + 1) % len(self._slots)
         self.staged_chunks += 1
         self.stage_seconds += time.perf_counter() - t0
         return staged

@@ -9,18 +9,22 @@ slot-table write instead of a localizer rebuild — zero retraces across
 arbitrary join/leave sequences. ``ServingEngine`` batches queued
 joins/leaves/scenario swaps into one slot-table update at each chunk
 boundary and drives ragged per-robot frame streams through the fleet's
-chunked dispatch. ``examples/serve_localizer.py`` is the asyncio
-gateway on top.
+chunked dispatch — pipelined: the dispatch front gathers robot frames
+straight into the pool's ping-pong host staging buffers and keeps up
+to ``inflight`` chunks executing while poses sync one chunk behind
+(``flush()`` drains the tail). ``examples/serve_localizer.py`` is the
+asyncio gateway on top.
 
 This package is localization-only; the LM-era serving stack
 (``repro.launch.serve`` + the deleted ``examples/serve_lm.py``) is
 quarantined behind explicit imports, mirroring the PR 4/5 quarantines.
 """
 from repro.serve.engine import ServingEngine
-from repro.serve.pool import (PoolFull, RobotStatePool, SlotTicket,
-                              StaleGeneration, UnknownRobot)
+from repro.serve.pool import (InFlightChunk, PoolFull, RobotStatePool,
+                              SlotTicket, StaleGeneration,
+                              StagingOverrun, UnknownRobot)
 
 __all__ = [
-    "PoolFull", "RobotStatePool", "ServingEngine", "SlotTicket",
-    "StaleGeneration", "UnknownRobot",
+    "InFlightChunk", "PoolFull", "RobotStatePool", "ServingEngine",
+    "SlotTicket", "StagingOverrun", "StaleGeneration", "UnknownRobot",
 ]

@@ -5,18 +5,37 @@ boundaries. Robot sessions submit joins, leaves, scenario swaps and
 frames at any time; the engine queues them, and ``run_chunk`` — the
 single drain point — applies the queued requests as one batched
 slot-table update, gathers each bound robot's staged frames (ragged,
-up to ``chunk`` each), and advances the whole pool in ONE fleet
-dispatch. Nothing ever touches the pool mid-dispatch, so the async
-input ring's written-once invariant and the zero-retrace guarantee
-both hold by construction.
+up to ``chunk`` each, high-priority robots first), and advances the
+whole pool in ONE fleet dispatch.
 
-Per-chunk drain wall time rides ``launch.watchdog.StepTimeTracker``
-(``snapshot()`` reports without resetting); per-pose latency is
-submit-to-return, tracked per robot for the gateway's p50/p99 report.
+Since the pipelined drain (PR 9) ``run_chunk`` is split into a
+dispatch FRONT and a drain BACK around a bounded in-flight deque::
+
+    gather -> stage -> dispatch chunk N+1   ||   chunk N executes
+                 sync chunk N's poses one behind -> host stage
+
+The gather writes robot frames straight into the pool's ping-pong
+host staging buffers (zero per-chunk allocation), the dispatch
+returns un-synced device arrays plus a slot->robot manifest
+(``pool.dispatch_staged``), and poses sync one chunk behind at the
+drain point (``pool.drain_chunk``) — ``inflight=`` bounds the depth
+(default 2; 1 degenerates to the synchronous reference drain).
+Chunks whose scenario contract demands feedback before the next
+dispatch (Registration chunk-flush, the host-Kalman fallback) force
+an immediate drain, mirroring ``FleetLocalizer.run``'s per-robot
+flush policy; ``flush()`` drains the tail.
+
+Per-chunk wall time rides ``launch.watchdog.StepTimeTracker``
+(``snapshot()`` reports without resetting), decomposed into
+stage/dispatch/sync/host-stage trackers so ``latency_report`` says
+where the time lives. Per-pose latency is submit-to-drain — stamped
+when the pose is actually synced, NOT when its chunk was dispatched —
+with the queue wait (submit-to-dispatch) reported separately from the
+in-flight remainder.
 
 Overflow policy is explicit: ``overflow="resize"`` grows the pool
-(the slow, retrace-counting path), ``overflow="reject"`` refuses the
-join and counts it.
+(the slow, retrace-counting path — the pipeline is flushed first),
+``overflow="reject"`` refuses the join and counts it.
 """
 from __future__ import annotations
 
@@ -28,7 +47,8 @@ import numpy as np
 
 from repro.core.environment import MODE_VIO
 from repro.launch.watchdog import StepTimeTracker
-from repro.serve.pool import PoolFull, RobotStatePool, SlotTicket
+from repro.serve.pool import (InFlightChunk, PoolFull, RobotStatePool,
+                              SlotTicket, UnknownRobot)
 
 
 class ServingEngine:
@@ -44,26 +64,58 @@ class ServingEngine:
         or ``"reject"`` (count and drop the join).
     tracker: optional ``StepTimeTracker`` for per-chunk drain wall
         time (a fresh one is created by default).
+    inflight: max chunks dispatched but not yet drained (the pipeline
+        depth). 2 (default) gathers/stages/dispatches chunk N+1 while
+        chunk N executes and syncs poses one chunk behind; 1 is the
+        synchronous reference. Bounded by ``pool.staging_depth`` —
+        each in-flight chunk owns one host staging set.
+    gather_budget: optional cap on total frames gathered per chunk
+        (bounds the host staging time of one boundary). When more
+        frames are queued than the budget drains, high-``priority``
+        robots are served first; the rest wait, FIFO per robot.
     """
 
     def __init__(self, pool: RobotStatePool, chunk: int = 8,
                  dt_imu: float = 0.005, overflow: str = "resize",
                  tracker: Optional[StepTimeTracker] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, inflight: int = 2,
+                 gather_budget: Optional[int] = None):
         if overflow not in ("resize", "reject"):
             raise ValueError(f"unknown overflow policy {overflow!r}")
+        if not 1 <= inflight <= pool.staging_depth:
+            raise ValueError(
+                f"inflight={inflight} outside [1, {pool.staging_depth}] "
+                "(each in-flight chunk owns one of the pool's "
+                "staging_depth host staging sets)")
+        if gather_budget is not None and gather_budget < 1:
+            raise ValueError("gather_budget must be >= 1 (or None)")
         self.pool = pool
         self.chunk = int(chunk)
         self.dt_imu = float(dt_imu)
         self.overflow = overflow
+        self.inflight = int(inflight)
+        self.gather_budget = gather_budget
         self.tracker = tracker if tracker is not None else StepTimeTracker()
         self._clock = clock
         # FIFO control queue: ("join"|"leave"|"assign", robot_id, arg)
         self._requests: Deque[Tuple[str, Any, Any]] = deque()
         # robot id -> deque of (submit_time, frame tuple) single frames
         self._streams: Dict[Any, Deque[Tuple[float, Tuple]]] = {}
+        self._priority: Dict[Any, int] = {}
+        # dispatched-but-undrained chunks, oldest first (drain is FIFO)
+        self._inflight: Deque[InFlightChunk] = deque()
+        self.peak_inflight = 0
         self.tickets: Dict[Any, SlotTicket] = {}
+        # submit-to-pose latency (stamped at the DRAIN point) and its
+        # queue-wait component (submit-to-dispatch), per robot
         self.latencies: Dict[Any, List[float]] = {}
+        self.queue_waits: Dict[Any, List[float]] = {}
+        # where one chunk boundary's wall time lives: host gather into
+        # the staging buffers / dispatch enqueue / blocking pose sync /
+        # deferred host map stage
+        self.decomp = {name: StepTimeTracker()
+                       for name in ("stage", "dispatch", "sync",
+                                    "host_stage")}
         self.chunks = 0
         self.frames_served = 0
         self.rejected = 0
@@ -72,8 +124,9 @@ class ServingEngine:
     # submission surface: NEVER touches the pool
     # ------------------------------------------------------------------
     def submit_join(self, robot_id, scenario=MODE_VIO, p0=None, v0=None,
-                    q0=None) -> None:
-        self._requests.append(("join", robot_id, (scenario, p0, v0, q0)))
+                    q0=None, priority: int = 0) -> None:
+        self._requests.append(
+            ("join", robot_id, (scenario, p0, v0, q0, priority)))
 
     def submit_leave(self, robot_id) -> None:
         self._requests.append(("leave", robot_id, None))
@@ -97,10 +150,13 @@ class ServingEngine:
             return len(self._streams.get(robot_id, ()))
         return sum(len(q) for q in self._streams.values())
 
+    def inflight_chunks(self) -> int:
+        return len(self._inflight)
+
     # ------------------------------------------------------------------
     # the drain point
     # ------------------------------------------------------------------
-    def _admit(self, rid, scenario, p0, v0, q0) -> None:
+    def _admit(self, rid, scenario, p0, v0, q0, priority, poses) -> None:
         try:
             tk = self.pool.admit(rid, scenario, p0=p0, v0=v0, q0=q0)
         except PoolFull:
@@ -108,100 +164,250 @@ class ServingEngine:
                 self.rejected += 1
                 self._streams.pop(rid, None)
                 return
+            # the pool cannot grow under in-flight chunks (their
+            # staging sets and outputs belong to the old program):
+            # drain the pipeline, then take the explicitly-slow path
+            while self._inflight:
+                self._drain_oldest(poses)
             self.pool.resize(max(2 * self.pool.capacity,
                                  self.pool.capacity + 1))
             tk = self.pool.admit(rid, scenario, p0=p0, v0=v0, q0=q0)
         self.tickets[rid] = tk
+        self._priority[rid] = int(priority)
         self.latencies.setdefault(rid, [])
 
-    def _drain_requests(self) -> None:
+    def _mutates_inflight_slot(self) -> bool:
+        """True when a queued leave or scenario swap targets a slot
+        some in-flight chunk still references (manifest slots cover
+        every active slot, so a deferred SLAM replay's slots are a
+        subset). A leave pops the map the replay owes; a swap to
+        Registration would read it at the next dispatch, pre-replay."""
+        touched = {s for fl in self._inflight for _, s, _ in fl.manifest}
+        for kind, rid, _ in self._requests:
+            if kind == "join":
+                continue
+            try:
+                if self.pool.slot_of(rid) in touched:
+                    return True
+            except UnknownRobot:
+                pass    # surfaces properly in _drain_requests
+        return False
+
+    def _drain_requests(self, poses) -> None:
         """Apply every queued control request in FIFO order — one
         batched slot-table update between dispatches."""
         while self._requests:
             kind, rid, arg = self._requests.popleft()
             if kind == "join":
-                self._admit(rid, *arg)
+                self._admit(rid, *arg, poses)
             elif kind == "leave":
                 self.pool.retire(rid)
                 self.tickets.pop(rid, None)
                 self._streams.pop(rid, None)
+                self._priority.pop(rid, None)
             else:
                 self.pool.assign_scenario(rid, arg)
 
-    def _gather(self) -> Tuple[Dict[Any, Tuple], Dict[Any, List[float]]]:
-        """Pop up to ``chunk`` staged frames per BOUND robot, stacked
-        into the per-robot (n_b, ...) arrays the pool dispatches."""
-        frames: Dict[Any, Tuple] = {}
+    def _gather_order(self) -> List[Any]:
+        """Bound robots with staged frames, high priority first (stable:
+        admission order breaks ties) — the order the gather serves them
+        when ``gather_budget`` can't drain everything."""
+        order = [rid for rid in self.pool.robot_ids
+                 if self._streams.get(rid)]
+        order.sort(key=lambda rid: -self._priority.get(rid, 0))
+        return order
+
+    def _dispatch_front(self) -> Optional[InFlightChunk]:
+        """Gather staged frames straight into the pool's next ping-pong
+        staging set (no per-robot ``np.stack``, no fresh chunk buffers)
+        and dispatch — nothing here blocks on device execution. Returns
+        None when no bound robot has frames."""
+        order = self._gather_order()
+        if not order:
+            return None
+        t0 = time.perf_counter()
+        ipf = int(np.asarray(
+            self._streams[order[0]][0][1][2]).shape[0])
+        staging = self.pool.acquire_staging(self.chunk, ipf)
+        counts = np.zeros(self.pool.capacity, np.int64)
+        manifest: List[Tuple[Any, int, int]] = []
         stamps: Dict[Any, List[float]] = {}
-        for rid in self.pool.robot_ids:
-            q = self._streams.get(rid)
-            if not q:
-                continue
-            take = [q.popleft() for _ in range(min(self.chunk, len(q)))]
-            stamps[rid] = [t for t, _ in take]
-            il = np.stack([f[0] for _, f in take])
-            ir = np.stack([f[1] for _, f in take])
-            ac = np.stack([f[2] for _, f in take])
-            gy = np.stack([f[3] for _, f in take])
-            gp = (np.stack([f[4] for _, f in take])
-                  if all(f[4] is not None for _, f in take) else None)
-            frames[rid] = (il, ir, ac, gy, gp)
-        return frames, stamps
+        remaining = self.gather_budget
+        for rid in order:
+            q = self._streams[rid]
+            take = min(self.chunk, len(q))
+            if remaining is not None:
+                take = min(take, remaining)
+                if take == 0:
+                    break        # budget spent; lower priorities wait
+            s = self.pool.slot_of(rid)
+            ts = []
+            for j in range(take):
+                t, (il, ir, ac, gy, gp) = q.popleft()
+                staging.il[j, s] = il
+                staging.ir[j, s] = ir
+                staging.ac[j, s] = ac
+                staging.gy[j, s] = gy
+                staging.gps[j, s] = np.nan if gp is None else gp
+                ts.append(t)
+            counts[s] = take
+            manifest.append((rid, s, take))
+            stamps[rid] = ts
+            if remaining is not None:
+                remaining -= take
+        t1 = time.perf_counter()
+        self.decomp["stage"].add(t1 - t0)
+        fl = self.pool.dispatch_staged(staging, counts, manifest,
+                                       self.dt_imu)
+        self.decomp["dispatch"].add(time.perf_counter() - t1)
+        now = self._clock()
+        fl.meta["stamps"] = stamps
+        for rid, ts in stamps.items():
+            self.queue_waits.setdefault(rid, []).extend(
+                now - t for t in ts)
+        return fl
+
+    def _drain_oldest(self, poses: Dict[Any, List[np.ndarray]]) -> None:
+        """Drain the oldest in-flight chunk: the one blocking pose sync
+        (plus its deferred host stage), latency stamped at THIS point —
+        the time the pose actually became available to the caller."""
+        fl = self._inflight.popleft()
+        out = self.pool.drain_chunk(fl)
+        self.decomp["sync"].add(fl.meta.get("sync_s", 0.0))
+        self.decomp["host_stage"].add(fl.meta.get("host_s", 0.0))
+        now = self._clock()
+        stamps = fl.meta.get("stamps", {})
+        for rid, p in out.items():
+            poses.setdefault(rid, []).append(p)
+            ts = stamps.get(rid, ())
+            self.latencies.setdefault(rid, []).extend(
+                now - t for t in ts)
+            self.frames_served += len(ts)
+
+    @staticmethod
+    def _merge(poses: Dict[Any, List[np.ndarray]]
+               ) -> Dict[Any, np.ndarray]:
+        return {rid: ps[0] if len(ps) == 1 else np.concatenate(ps)
+                for rid, ps in poses.items()}
 
     def run_chunk(self) -> Dict[Any, np.ndarray]:
         """One serving iteration: drain control requests, gather staged
-        frames, dispatch the pool one chunk, record latencies. Returns
-        robot id -> (n_b, 3) poses drained this chunk."""
+        frames into the next ping-pong buffer, dispatch, and sync poses
+        one chunk behind (``inflight`` deep). Returns robot id ->
+        (n_b, 3) poses DRAINED this call — at depth 2 these are the
+        previous call's dispatch, while this call's chunk executes
+        under the gather/stage of the next one."""
         t0 = self._clock()
-        self._drain_requests()
-        frames, stamps = self._gather()
-        poses = (self.pool.step_chunk(frames, self.dt_imu, self.chunk)
-                 if frames else {})
-        now = self._clock()
-        for rid, ts in stamps.items():
-            if rid not in poses:
-                continue
-            lat = self.latencies.setdefault(rid, [])
-            lat.extend(now - t for t in ts)
-            self.frames_served += len(ts)
-        self.tracker.add(now - t0)
-        self.chunks += 1
-        return poses
+        poses: Dict[Any, List[np.ndarray]] = {}
+        had_requests = bool(self._requests)
+        if self._inflight and self._mutates_inflight_slot():
+            # a leave or swap whose slot is still referenced by an
+            # in-flight chunk races the per-slot host map a deferred
+            # SLAM replay owes (retire pops it; a swap to Registration
+            # reads it at the next dispatch) — flush so the host-stage
+            # order matches the synchronous reference bitwise. Joins
+            # and already-served leaves/swaps keep the pipeline:
+            # admits land in slots a flushing retire emptied, and
+            # retire itself is pure slot-table bookkeeping.
+            while self._inflight:
+                self._drain_oldest(poses)
+        self._drain_requests(poses)
+        # keep room for this boundary's dispatch (the knob may be
+        # lowered mid-run; steady state never enters this loop)
+        while len(self._inflight) >= self.inflight:
+            self._drain_oldest(poses)
+        fl = self._dispatch_front()
+        if fl is not None:
+            self._inflight.append(fl)
+            self.peak_inflight = max(self.peak_inflight,
+                                     len(self._inflight))
+            # feedback chunks (Registration flush, host-Kalman fix)
+            # already paid their sync — return their poses now; other
+            # chunks drain one behind the dispatch front
+            target = 0 if fl.needs_flush else self.inflight - 1
+            while len(self._inflight) > target:
+                self._drain_oldest(poses)
+        elif self._inflight:
+            # nothing to dispatch: the tail still makes progress
+            self._drain_oldest(poses)
+        if had_requests or fl is not None or poses:
+            # idle boundaries (nothing queued, staged, or in flight)
+            # would record near-zero walls and poison the rsd
+            self.tracker.add(self._clock() - t0)
+            self.chunks += 1
+        return self._merge(poses)
+
+    def flush(self) -> Dict[Any, np.ndarray]:
+        """Drain every in-flight chunk (the pipeline tail) and return
+        the poses, concatenated per robot."""
+        poses: Dict[Any, List[np.ndarray]] = {}
+        while self._inflight:
+            self._drain_oldest(poses)
+        return self._merge(poses)
+
+    def _drainable_frames(self) -> bool:
+        """True when some queued frame can still reach a dispatch: its
+        robot is bound, or a join for it is queued. Frames for unknown
+        robots never drain and must not spin ``run_until_drained``."""
+        if not self._streams:
+            return False
+        bound = set(self.pool.robot_ids)
+        bound.update(rid for kind, rid, _ in self._requests
+                     if kind == "join")
+        return any(q for rid, q in self._streams.items() if rid in bound)
 
     def run_until_drained(self, max_chunks: int = 10_000
                           ) -> Dict[Any, np.ndarray]:
-        """Drive ``run_chunk`` until no requests or frames remain,
-        concatenating per-robot poses across chunks."""
+        """Drive ``run_chunk`` until no requests, drainable frames or
+        IN-FLIGHT chunks remain (the pipelined tail is flushed, never
+        dropped), concatenating per-robot poses across chunks."""
         out: Dict[Any, List[np.ndarray]] = {}
         for _ in range(max_chunks):
-            if not self._requests and not any(
-                    self._streams.get(rid)
-                    for rid in list(self._streams)):
+            if not (self._requests or self._inflight
+                    or self._drainable_frames()):
                 break
             for rid, p in self.run_chunk().items():
                 out.setdefault(rid, []).append(p)
+        for rid, p in self.flush().items():
+            out.setdefault(rid, []).append(p)
         return {rid: np.concatenate(ps) for rid, ps in out.items()}
 
     # ------------------------------------------------------------------
     # reporting
     # ------------------------------------------------------------------
+    @staticmethod
+    def _pcts(a) -> Dict[str, float]:
+        a = np.asarray(a, np.float64)
+        return {"p50_s": float(np.percentile(a, 50)) if a.size else 0.0,
+                "p99_s": float(np.percentile(a, 99)) if a.size else 0.0}
+
     def latency_report(self) -> Dict[str, Any]:
         """Gateway-facing summary: per-chunk drain stats (via the
-        tracker's non-resetting ``snapshot``) plus per-robot p50/p99
-        submit-to-pose latency and the churn/retrace counters."""
+        tracker's non-resetting ``snapshot``), the chunk-boundary
+        stage/dispatch/sync/host-stage decomposition, per-robot p50/p99
+        submit-to-pose latency split into queue wait (submit-to-
+        dispatch) and pipeline residence (dispatch-to-drain), and the
+        churn/retrace counters."""
         per_robot = {}
         for rid, lat in self.latencies.items():
-            a = np.asarray(lat, np.float64)
-            per_robot[str(rid)] = {
-                "frames": int(a.size),
-                "p50_s": float(np.percentile(a, 50)) if a.size else 0.0,
-                "p99_s": float(np.percentile(a, 99)) if a.size else 0.0,
-            }
+            st = {"frames": int(len(lat)), **self._pcts(lat)}
+            qw = self.queue_waits.get(rid, [])
+            st["queue_wait"] = self._pcts(qw)
+            # the non-queue remainder: device execution + pipeline
+            # residence of each frame (total minus its queue wait)
+            n = min(len(lat), len(qw))
+            st["in_pipeline"] = self._pcts(
+                np.asarray(lat[:n]) - np.asarray(qw[:n]))
+            per_robot[str(rid)] = st
         return {
             "chunks": self.chunks,
             "frames_served": self.frames_served,
             "rejected_joins": self.rejected,
+            "inflight": self.inflight,
+            "peak_inflight": self.peak_inflight,
             "chunk_wall": self.tracker.snapshot(),
+            "decomposition": {name: tr.snapshot()
+                              for name, tr in self.decomp.items()},
             "per_robot": per_robot,
             "pool": {
                 "capacity": self.pool.capacity,

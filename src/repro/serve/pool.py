@@ -34,6 +34,7 @@ program, counted separately (``retired_chunk_traces``).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -50,6 +51,89 @@ from repro.distributed.fleet_mesh import shard_states
 class PoolFull(RuntimeError):
     """Admission requested with no free slot (capacity exhausted).
     Callers choose the slow path explicitly: ``resize`` or reject."""
+
+
+class StagingOverrun(RuntimeError):
+    """A host staging set was acquired (or written) while its previous
+    chunk was still in flight — the pipelined drain fell more than
+    ``staging_depth`` chunks behind the dispatch front."""
+
+
+class _StagingSet:
+    """One ping-pong host staging buffer set: the fixed (K, C, ...)
+    arrays a chunk's gathered frames are written straight into (no
+    per-robot ``np.stack``, no fresh ``np.zeros`` per chunk). Paired
+    1:1 with an input-ring slot: ``device_put`` ALIASES these arrays on
+    CPU, so a set is write-protected from dispatch until its chunk is
+    drained — writes to an in-flight set raise instead of corrupting
+    the executing chunk. Stale data from the set's previous chunk is
+    left in place: inactive (frame, slot) lanes are ``lax.cond``-gated
+    in the scan (select discards their values bitwise), and active
+    lanes are always fully rewritten (GPS gets an explicit NaN when a
+    frame carries no fix)."""
+
+    __slots__ = ("il", "ir", "ac", "gy", "gps", "in_flight")
+
+    def __init__(self, K: int, C: int, H: int, W: int, ipf: int):
+        self.il = np.zeros((K, C, H, W), np.float32)
+        self.ir = np.zeros((K, C, H, W), np.float32)
+        self.ac = np.zeros((K, C, ipf, 3), np.float32)
+        self.gy = np.zeros((K, C, ipf, 3), np.float32)
+        self.gps = np.full((K, C, 3), np.nan, np.float32)
+        self.in_flight = False
+
+    def _arrays(self):
+        return (self.il, self.ir, self.ac, self.gy, self.gps)
+
+    def protect(self) -> None:
+        """Dispatch: freeze the set until its chunk drains."""
+        self.in_flight = True
+        for a in self._arrays():
+            a.setflags(write=False)
+
+    def release(self) -> None:
+        """Drain: the chunk's execution is complete (its outputs were
+        synced), so the aliased host memory is reusable."""
+        self.in_flight = False
+        for a in self._arrays():
+            a.setflags(write=True)
+
+
+class InFlightChunk:
+    """One dispatched-but-undrained chunk: device-resident outputs plus
+    the slot->robot manifest that maps them back to robots at drain
+    time, the staging set to release, and the deferred host work.
+
+    ``outs`` are un-synced JAX arrays — nothing blocks until ``drain``
+    reads ``outs.p``. ``manifest`` is a tuple of ``(robot_id, slot,
+    n_frames)`` captured at dispatch, so poses route to the robot that
+    OWNED the slot when the chunk was dispatched even if it departed
+    (or the slot was recycled) while the chunk was in flight.
+    ``needs_flush`` marks chunks whose scenario contract (Registration
+    chunk-flush feedback, the host-Kalman operating point) forced the
+    feedback fix at dispatch — pipelined callers drain them
+    immediately instead of holding them back.
+
+    ``retired`` pins the chunk's DONATED input state (the pre-chunk
+    pool states) until drain: dropping the last reference to a donated
+    jax.Array whose consuming execution is still in flight blocks the
+    caller in the buffer destructor (~the chunk's full device time on
+    the CPU runtime) — the one hidden sync that would serialize the
+    whole pipeline. Held here, the destructor runs at drain time, when
+    the execution has provably completed and deletion is free."""
+
+    __slots__ = ("outs", "manifest", "staging", "pending_slam",
+                 "needs_flush", "retired", "meta")
+
+    def __init__(self, outs, manifest, staging, pending_slam,
+                 needs_flush, retired=None):
+        self.outs = outs
+        self.manifest = manifest
+        self.staging = staging
+        self.pending_slam = pending_slam
+        self.needs_flush = needs_flush
+        self.retired = retired
+        self.meta = {}               # caller scratch (engine timestamps)
 
 
 class StaleGeneration(RuntimeError):
@@ -95,9 +179,11 @@ class RobotStatePool:
                  window: Optional[int] = None, scheduler=None,
                  mesh=None, devices=None,
                  host_kalman_fallback: bool = True,
-                 adaptive: bool = False):
+                 adaptive: bool = False, staging_depth: int = 2):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if staging_depth < 1:
+            raise ValueError("staging_depth must be >= 1")
         self.cfg = cfg
         self.cam = cam
         self.capacity = capacity
@@ -114,10 +200,19 @@ class RobotStatePool:
         self._free: List[int] = list(range(capacity - 1, -1, -1))
         self.generation = np.zeros(capacity, np.int64)
         self._mode = np.full(capacity, MODE_VIO, np.int32)
-        # persistent two-slot input ring: chunk staging rides the async
-        # pipeline machinery (pre-sharded device_put; committed async
-        # H2D on accelerator backends)
-        self._stager = _ChunkStager()
+        # persistent input ring: chunk staging rides the async pipeline
+        # machinery (pre-sharded device_put; committed async H2D on
+        # accelerator backends) — one ring slot AND one host ping-pong
+        # staging set per in-flight chunk the caller may keep
+        self.staging_depth = int(staging_depth)
+        self._stager = _ChunkStager(slots=max(2, self.staging_depth))
+        self._staging: List[_StagingSet] = []
+        self._staging_key: Optional[Tuple[int, int]] = None   # (K, ipf)
+        self._staging_next = 0
+        # host-tracked per-slot absolute frame bases: lets the dispatch
+        # front hand the SLAM replay its frame indices without syncing
+        # ``states.frame_idx`` (which would block on the previous chunk)
+        self._base_idx = np.zeros(capacity, np.int64)
         self._writer = jax.jit(_write_row, donate_argnums=(0,))
         self._ipf: Optional[int] = None          # IMU samples per frame
         # --- churn counters ---
@@ -218,6 +313,7 @@ class RobotStatePool:
         # stage (SLAM keyframes/map are per-robot, keyed by slot)
         self.fleet._robots.pop(s, None)
         self._mode[s] = mid
+        self._base_idx[s] = 0        # fresh row -> frame_idx restarts
         self._slot_of[robot_id] = s
         tk = SlotTicket(robot_id, s, int(self.generation[s]))
         self._ticket_of[robot_id] = tk
@@ -278,11 +374,148 @@ class RobotStatePool:
         return {rid: p[s].copy() for rid, s in self._slot_of.items()}
 
     # ------------------------------------------------------------------
-    # the hot path: one fleet dispatch advances every occupied slot
+    # the hot path: one fleet dispatch advances every occupied slot.
+    # Split into a dispatch FRONT (acquire_staging -> write frames ->
+    # dispatch_staged, nothing blocks) and a drain BACK (drain_chunk,
+    # the one pose sync) so the serving engine can keep depth-D chunks
+    # in flight; step_chunk composes the two as the synchronous
+    # reference path.
     # ------------------------------------------------------------------
+    def acquire_staging(self, chunk: int, ipf: int) -> _StagingSet:
+        """Next ping-pong host staging set (round-robin, aligned with
+        the input-ring slots), writable. Raises ``StagingOverrun`` when
+        every set is still in flight — the caller must drain a chunk
+        before staging another. Reallocates lazily when the chunk shape
+        changes (first call, new K/ipf, post-resize)."""
+        key = (int(chunk), int(ipf))
+        if self._staging_key != key:
+            if any(st.in_flight for st in self._staging):
+                raise StagingOverrun(
+                    "chunk shape changed while chunks are in flight")
+            fe = self.cfg.frontend
+            self._staging = [
+                _StagingSet(key[0], self.capacity, fe.height, fe.width,
+                            key[1])
+                for _ in range(self.staging_depth)]
+            self._staging_key = key
+            self._staging_next = 0
+        st = self._staging[self._staging_next]
+        if st.in_flight:
+            raise StagingOverrun(
+                f"all {self.staging_depth} staging sets in flight — "
+                "drain before staging another chunk")
+        self._staging_next = (self._staging_next + 1) % self.staging_depth
+        return st
+
+    def staging_in_flight(self) -> int:
+        return sum(1 for st in self._staging if st.in_flight)
+
+    def dispatch_staged(self, staging: _StagingSet, counts: np.ndarray,
+                        manifest: Tuple[Tuple[Any, int, int], ...],
+                        dt_imu: float) -> InFlightChunk:
+        """Dispatch one gathered chunk WITHOUT syncing its outputs.
+
+        ``staging`` holds the written frames, ``counts`` the per-slot
+        staged frame counts, ``manifest`` the ``(robot_id, slot, n)``
+        routing captured by the gatherer. Scenario feedback that cannot
+        be deferred is applied here (mirroring ``FleetLocalizer.run``'s
+        per-robot flush policy): the Registration chunk-flush fix and
+        the host-Kalman fallback sync only the slices they need and
+        mark the chunk ``needs_flush``; SLAM replay — append-only
+        bookkeeping — is deferred to ``drain_chunk``. The staging set
+        is write-protected until the chunk drains."""
+        K, C = staging.il.shape[:2]
+        active = np.arange(K)[:, None] < np.asarray(counts)[None, :]
+        base_idx = self._base_idx.copy()
+        retired = self.states     # donated below; pinned until drain
+        states, outs, work = self.fleet.dispatch_chunk(
+            self.states, staging.il, staging.ir, staging.ac, staging.gy,
+            staging.gps, self._mode.copy(), dt_imu, active=active,
+            stager=self._stager, base_idx=base_idx)
+        self.states = states
+        self._base_idx += np.asarray(counts, self._base_idx.dtype)
+        staging.protect()
+        needs_flush = False
+        if work.kalman_off:
+            # feedback: the boundary update must reach the next dispatch
+            self.states = self.fleet._host_kalman_fix(
+                self.states, outs, work.act)
+            needs_flush = True
+        if work.has_reg:
+            # the chunk-flush contract: Registration pose fixes sync
+            # their robots' slices and land before the next dispatch
+            self.states = self.fleet._registration_fix(
+                self.states, outs, work.mode_np, work.act)
+            needs_flush = True
+        pending_slam = ((work.mode_np, work.act, work.base_idx)
+                        if work.has_slam else None)
+        return InFlightChunk(outs, tuple(manifest), staging,
+                             pending_slam, needs_flush, retired=retired)
+
+    def drain_chunk(self, fl: InFlightChunk) -> Dict[Any, np.ndarray]:
+        """The one pose sync: block until ``fl``'s chunk has executed,
+        run its deferred SLAM replay, release its staging set, and
+        route poses back through the manifest. Chunks must drain in
+        dispatch order (the engine's FIFO deque guarantees it)."""
+        t0 = time.perf_counter()
+        p = np.asarray(fl.outs.p)    # blocks until the chunk completes
+        fl.retired = None            # donated input state: now free
+        t_sync = time.perf_counter()
+        if fl.pending_slam is not None:
+            self.fleet._slam_replay(fl.outs, *fl.pending_slam)
+            fl.pending_slam = None
+        fl.staging.release()
+        # where this drain's wall time went (read by the engine's
+        # stage/dispatch/sync/host-stage decomposition trackers)
+        fl.meta["sync_s"] = t_sync - t0
+        fl.meta["host_s"] = time.perf_counter() - t_sync
+        return {rid: p[:n, s].copy() for rid, s, n in fl.manifest}
+
+    def write_frames(self, staging: _StagingSet, slot: int,
+                     frames: Tuple) -> int:
+        """Write one robot's ``(imgs_l, imgs_r, accel, gyro, gps)``
+        stack into its staging column (rows ``[0:n]``); GPS ``None``
+        becomes NaN (the scan's no-fix sentinel — stale finite values
+        from the set's previous chunk must never read as a fix)."""
+        n = int(np.asarray(frames[0]).shape[0])
+        if n == 0:
+            return 0
+        if n > staging.il.shape[0]:
+            raise ValueError(
+                f"staged {n} frames > chunk {staging.il.shape[0]}")
+        staging.il[:n, slot] = frames[0]
+        staging.ir[:n, slot] = frames[1]
+        staging.ac[:n, slot] = frames[2]
+        staging.gy[:n, slot] = frames[3]
+        staging.gps[:n, slot] = (np.nan if frames[4] is None
+                                 else frames[4])
+        return n
+
+    def dispatch_chunk(self, frames: Dict[Any, Tuple], dt_imu: float,
+                       chunk: int) -> Optional[InFlightChunk]:
+        """Dispatch front over a ``frames`` dict (robot id -> per-robot
+        stacks): gather into the next staging set and dispatch. Returns
+        None (no dispatch) when nothing is staged."""
+        staged = [(rid, self.slot_of(rid), fr)
+                  for rid, fr in frames.items()
+                  if int(np.asarray(fr[0]).shape[0]) > 0]
+        if not staged:
+            return None
+        if self._ipf is None:
+            self._ipf = int(np.asarray(staged[0][2][2]).shape[1])
+        staging = self.acquire_staging(chunk, self._ipf)
+        counts = np.zeros(self.capacity, np.int64)
+        manifest = []
+        for rid, s, fr in staged:
+            counts[s] = self.write_frames(staging, s, fr)
+            manifest.append((rid, s, int(counts[s])))
+        return self.dispatch_staged(staging, counts, manifest, dt_imu)
+
     def step_chunk(self, frames: Dict[Any, Tuple], dt_imu: float,
                    chunk: int) -> Dict[Any, np.ndarray]:
-        """Advance staged per-robot frame streams one fixed-K chunk.
+        """Advance staged per-robot frame streams one fixed-K chunk,
+        SYNCHRONOUSLY (dispatch + immediate drain — the pipelined
+        path's bitwise reference).
 
         ``frames``: robot id -> ``(imgs_l, imgs_r, imu_accel, imu_gyro,
         gps)`` with leading per-robot frame count ``n_b <= chunk``
@@ -294,47 +527,8 @@ class RobotStatePool:
 
         Returns robot id -> (n_b, 3) poses for the frames drained this
         chunk (empty dict, no dispatch, when nothing is staged)."""
-        K = int(chunk)
-        C = self.capacity
-        fe = self.cfg.frontend
-        counts = np.zeros(C, np.int64)
-        staged: List[Tuple[Any, int, Tuple]] = []
-        for rid, fr in frames.items():
-            s = self.slot_of(rid)
-            n = int(np.asarray(fr[0]).shape[0])
-            if n == 0:
-                continue
-            if n > K:
-                raise ValueError(
-                    f"robot {rid!r} staged {n} frames > chunk {K}")
-            counts[s] = n
-            staged.append((rid, s, fr))
-        if not staged:
-            return {}
-        if self._ipf is None:
-            self._ipf = int(np.asarray(staged[0][2][2]).shape[1])
-        ipf = self._ipf
-
-        il = np.zeros((K, C, fe.height, fe.width), np.float32)
-        ir = np.zeros((K, C, fe.height, fe.width), np.float32)
-        ac = np.zeros((K, C, ipf, 3), np.float32)
-        gy = np.zeros((K, C, ipf, 3), np.float32)
-        gps = np.full((K, C, 3), np.nan, np.float32)
-        for rid, s, (fl, fr_, fa, fg, fp) in staged:
-            n = counts[s]
-            il[:n, s] = np.asarray(fl, np.float32)
-            ir[:n, s] = np.asarray(fr_, np.float32)
-            ac[:n, s] = np.asarray(fa, np.float32)
-            gy[:n, s] = np.asarray(fg, np.float32)
-            if fp is not None:
-                gps[:n, s] = np.asarray(fp, np.float32)
-        active = np.arange(K)[:, None] < counts[None, :]
-
-        self.states, outs = self.fleet.step_chunk(
-            self.states, il, ir, ac, gy, gps, self._mode.copy(),
-            dt_imu, active=active, stager=self._stager)
-        p = np.asarray(outs.p)
-        return {rid: p[:counts[s], s].copy() for rid, s, _ in staged}
+        fl = self.dispatch_chunk(frames, dt_imu, chunk)
+        return {} if fl is None else self.drain_chunk(fl)
 
     # ------------------------------------------------------------------
     # the explicitly-slow path: elastic capacity overflow
@@ -349,6 +543,10 @@ class RobotStatePool:
         if new_capacity <= self.capacity:
             raise ValueError(
                 f"resize must grow: {new_capacity} <= {self.capacity}")
+        if self.staging_in_flight():
+            raise StagingOverrun(
+                "resize with chunks in flight — drain (flush) the "
+                "pipeline before growing the pool")
         old_cap = self.capacity
         old_states = jax.device_get(self.states)
         old_robots = self.fleet._robots
@@ -375,7 +573,15 @@ class RobotStatePool:
              np.full(new_capacity - old_cap, MODE_VIO, np.int32)])
         self._free = sorted(self._free + list(range(old_cap, new_capacity)),
                             reverse=True)
-        self._stager = _ChunkStager()    # old ring slots die with the pool
+        self._base_idx = np.concatenate(
+            [self._base_idx,
+             np.zeros(new_capacity - old_cap, self._base_idx.dtype)])
+        # old ring slots and staging sets die with the pool (their
+        # capacity axis no longer matches)
+        self._stager = _ChunkStager(slots=max(2, self.staging_depth))
+        self._staging = []
+        self._staging_key = None
+        self._staging_next = 0
         self.resizes += 1
 
     # ------------------------------------------------------------------
