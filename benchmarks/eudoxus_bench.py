@@ -1018,6 +1018,160 @@ def kernels_microbench(reps: int = 7,
 
 
 # ---------------------------------------------------------------------------
+# Autotuner: searched launch configs vs the built-in defaults (PR 10)
+# ---------------------------------------------------------------------------
+
+def tuning_suite(reps: int = 5, n_frames: int = 16, chunk: int = 4,
+                 tune_reps: int = 2, max_configs: int = 0,
+                 n_sizes: int = 0,
+                 out_json: str = "BENCH_tuning.json") -> List[Row]:
+    """The autotuner's measuring stick, written to ``out_json``:
+
+    1. ``tune()`` sweeps every tunable kernel's declared config space
+       over its calibration sizes (``max_configs``/``n_sizes`` bound the
+       search for CI smokes; 0 = unbounded) and records the winners.
+    2. ``kernels``: per (kernel, size), the default launch config vs the
+       tuned winner, jitted, mean+p99 per path — the direct default-vs-
+       tuned delta the profile claims.
+    3. ``end_to_end``: a chunked VIO run with the Pallas spine forced,
+       untuned vs with the tuned profile installed — ms/frame and the
+       chunk trace count for BOTH runs (1 each: a profile swap
+       recompiles at plan-resolution time, never mid-run).
+
+    On CPU the kernels run in interpret mode, so the absolute numbers
+    are slow and the winners frequently stay at the defaults — the
+    point is the machinery: the same searched profile, persisted and
+    installed on real hardware, moves real tile sizes."""
+    import gc
+    import json
+    import os
+
+    from repro.kernels import registry as kreg
+    from repro.kernels import tuning
+
+    def stats(fn) -> Tuple[float, float]:
+        fn()                                   # warmup/compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        a = np.asarray(ts)
+        return float(a.mean()) * 1e6, float(np.percentile(a, 99)) * 1e6
+
+    def jit_pallas(spec, args, cfg):
+        """Jit the Pallas path with ``cfg`` closed over statically (the
+        frontend's EudoxusConfig operand is static too)."""
+        if spec.name == "frontend_fused":
+            il, ir, fe_cfg = args
+            return (jax.jit(lambda a, b: spec.pallas(a, b, fe_cfg,
+                                                     **cfg)), (il, ir))
+        return jax.jit(lambda *a: spec.pallas(*a, **cfg)), args
+
+    sweep = {name: list(kreg.REGISTRY[name].calibrate_sizes
+                        [:n_sizes or None])
+             for name in kreg.TUNABLE_KERNELS}
+    t0 = time.perf_counter()
+    models = tuning.tune(reps=tune_reps,
+                         max_configs=max_configs or None,
+                         sizes=sweep, install=False)
+    search_s = time.perf_counter() - t0
+    prof = models.tuned
+
+    rows: List[Row] = []
+    report: Dict = {"reps": reps, "tune_reps": tune_reps,
+                    "max_configs": max_configs, "search_s": search_s,
+                    "kernels": {}, "end_to_end": {}}
+    rows.append(("tuning/search", search_s * 1e6,
+                 f"kernels={len(prof.kernels())},"
+                 f"max_configs={max_configs or 'all'}"))
+    gc.collect()
+    gc.disable()
+    try:
+        for name in kreg.TUNABLE_KERNELS:
+            spec = kreg.REGISTRY[name]
+            for n in sweep[name]:
+                args = spec.calibrate_inputs(n)
+                if not spec.supports(*args):
+                    continue
+                cfg = prof.lookup(name, spec.size_feature(*args)) or {}
+                fd, call_args = jit_pallas(spec, args, {})
+                mean_d, p99_d = stats(lambda: fd(*call_args))
+                ft, call_args = jit_pallas(spec, args, cfg)
+                mean_t, p99_t = stats(lambda: ft(*call_args))
+                entry = {"config": cfg,
+                         "default": {"mean_us": mean_d, "p99_us": p99_d},
+                         "tuned": {"mean_us": mean_t, "p99_us": p99_t},
+                         "speedup": mean_d / max(mean_t, 1e-9)}
+                report["kernels"].setdefault(name, {})[f"n{n}"] = entry
+                rows.append((f"tuning/{name}_n{n}", mean_t,
+                             f"default={mean_d:.0f}us,"
+                             f"speedup={entry['speedup']:.2f}x,"
+                             f"config={cfg or 'default'}"))
+    finally:
+        gc.enable()
+
+    # end-to-end: the tuned profile through plan resolution (Pallas
+    # spine forced so the configs actually reach the call sites on CPU)
+    fe = dataclasses.replace(EDX_DRONE.frontend, height=48, width=64,
+                             max_features=48)
+    cfg = dataclasses.replace(EDX_DRONE, frontend=fe)
+    seq = frames.generate(n_frames=n_frames, H=48, W=64, n_landmarks=200,
+                          accel_sigma=0.5, gyro_sigma=0.02)
+    ipf = seq.imu_per_frame
+    accel = np.stack([seq.imu_accel[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                      for i in range(n_frames)])
+    gyro = np.stack([seq.imu_gyro[max(i - 1, 0) * ipf:max(i, 1) * ipf]
+                     for i in range(n_frames)])
+    env = Environment(True, False)
+    v0 = (seq.poses[1][:3, 3] - seq.poses[0][:3, 3]) / seq.dt
+
+    def e2e_pass(install):
+        kreg.install_models(models if install else None)
+        loc = Localizer(cfg, seq.cam, window=4)
+
+        def run():
+            # fresh state per pass: loc.run donates the state buffers
+            st = loc.init_state(p0=seq.poses[0][:3, 3], v0=v0)
+            loc.run(st, seq.images_left, seq.images_right, accel, gyro,
+                    seq.gps, env, seq.dt / ipf, chunk=chunk)
+        run()                                  # warmup/compile
+        t0 = time.perf_counter()
+        run()
+        wall = time.perf_counter() - t0
+        return wall / n_frames * 1e3, loc.chunk_trace_count()
+
+    saved_force = os.environ.get("REPRO_KERNELS")
+    saved_models = kreg.installed_models()
+    os.environ["REPRO_KERNELS"] = "pallas"
+    try:
+        ms_def, traces_def = e2e_pass(install=False)
+        ms_tuned, traces_tuned = e2e_pass(install=True)
+    finally:
+        if saved_force is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = saved_force
+        kreg.install_models(saved_models)
+    report["end_to_end"] = {
+        "workload": "vio_48x64_w4_pallas_forced",
+        "n_frames": n_frames, "chunk": chunk,
+        "default": {"ms_per_frame": ms_def, "traces": traces_def},
+        "tuned": {"ms_per_frame": ms_tuned, "traces": traces_tuned},
+        "speedup": ms_def / max(ms_tuned, 1e-9)}
+    rows.append(("tuning/e2e_default_ms", ms_def * 1e3,
+                 f"traces={traces_def}"))
+    rows.append(("tuning/e2e_tuned_ms", ms_tuned * 1e3,
+                 f"traces={traces_tuned},"
+                 f"speedup={ms_def / max(ms_tuned, 1e-9):.2f}x"))
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Serving: continuous robot admission over the paged state pool (PR 8)
 # ---------------------------------------------------------------------------
 
@@ -1375,7 +1529,21 @@ def main() -> None:
                          "(fused Pallas vs unfused XLA, mean+p99 per "
                          "path) and write BENCH_kernels.json")
     ap.add_argument("--reps", type=int, default=7,
-                    help="timing samples per kernel path for --kernels")
+                    help="timing samples per kernel path for --kernels "
+                         "and --tuning")
+    ap.add_argument("--tuning", action="store_true",
+                    help="run the autotuner suite: tune() over the "
+                         "declared config spaces, per-kernel default-vs-"
+                         "tuned mean+p99, and an end-to-end chunked run "
+                         "with the tuned profile installed; writes "
+                         "BENCH_tuning.json")
+    ap.add_argument("--tune-configs", type=int, default=0,
+                    help="bound the configs swept per (kernel, size) "
+                         "for --tuning (0 = the full space; CI smoke "
+                         "passes 2)")
+    ap.add_argument("--tune-sizes", type=int, default=0,
+                    help="bound the calibration sizes swept per kernel "
+                         "for --tuning (0 = the full sweep)")
     ap.add_argument("--scenarios", action="store_true",
                     help="run every registered scenario (incl. drone_vio "
                          "and vio_degraded) plus a mixed-scenario fleet "
@@ -1419,6 +1587,13 @@ def main() -> None:
               f"{'cache_hit' if cached else 'refit'}:{args.models}")
     if args.kernels:
         for name, us, derived in kernels_microbench(reps=args.reps):
+            print(f"{name},{us:.1f},{derived}")
+        return
+    if args.tuning:
+        for name, us, derived in tuning_suite(
+                reps=args.reps, n_frames=max(args.frames, 8),
+                chunk=args.chunk or 4, max_configs=args.tune_configs,
+                n_sizes=args.tune_sizes):
             print(f"{name},{us:.1f},{derived}")
         return
     if args.scenarios:

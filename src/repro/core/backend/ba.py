@@ -179,7 +179,8 @@ def _schur_tail(Hpp, bp, yy, yv, jitter):
 
 def marginalize_schur_normal(Hpp, bp, r, jx, jl, use_pallas,
                              jitter: float = 1e-4,
-                             allow_pallas: bool = True):
+                             allow_pallas: bool = True,
+                             config=None):
     """Marginalize straight from the BA residual Jacobians: the widened
     ``marg_schur`` kernel assembles each landmark tile's normal-equation
     blocks (Hpl/Hll/bl contractions of r/jx/jl) in VMEM and feeds them
@@ -188,13 +189,17 @@ def marginalize_schur_normal(Hpp, bp, r, jx, jl, use_pallas,
     — which the 6x6 Schur tail needs whole — are assembled by XLA.
 
     Numerically identical to ``build_normal_eqs`` + ``marginalize_schur``
-    (the xla branch runs the exact relocated op sequence)."""
+    (the xla branch runs the exact relocated op sequence). ``config`` —
+    the plan's autotuned launch kwargs for the Pallas branch (landmark
+    tile size / double buffering; static at trace time)."""
     from repro.kernels import marg_schur
 
+    kcfg = dict(config or {})
     if allow_pallas:
         yy, yv = jax.lax.cond(
             use_pallas,
-            lambda ops: marg_schur.accumulate_normal(*ops, jitter=jitter),
+            lambda ops: marg_schur.accumulate_normal(*ops, jitter=jitter,
+                                                     **kcfg),
             lambda ops: marg_schur.accumulate_normal_ref(*ops,
                                                          jitter=jitter),
             (r, jx, jl))
@@ -205,8 +210,8 @@ def marginalize_schur_normal(Hpp, bp, r, jx, jl, use_pallas,
 
 def ba_round(ba: BAState, lms: jax.Array, lm_valid: jax.Array,
              intr: jax.Array, *, lm_iters: int, lm_lambda0: float,
-             marg_pallas: jax.Array, allow_pallas: bool = True
-             ) -> BAState:
+             marg_pallas: jax.Array, allow_pallas: bool = True,
+             marg_config=None) -> BAState:
     """One windowed BA + marginalization pass over the current window.
 
     Mirrors the host ``_run_ba``: LM-optimize the window, linearize at
@@ -226,6 +231,7 @@ def ba_round(ba: BAState, lms: jax.Array, lm_valid: jax.Array,
     bp = jnp.einsum("kmri,kmr->ki", jx, r)
     h_prior, b_prior = marginalize_schur_normal(hpp, bp, r, jx, jl,
                                                 marg_pallas,
-                                                allow_pallas=allow_pallas)
+                                                allow_pallas=allow_pallas,
+                                                config=marg_config)
     return ba._replace(H_prior=h_prior, b_prior=b_prior,
                        last_cost=costs[-1].astype(jnp.float32))

@@ -14,7 +14,7 @@ exactly what the paper ships to the backend.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,14 +65,17 @@ def _fe_match_ref(img_l: jax.Array, img_r: jax.Array, cfg):
 def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
                  prev_img_l: Optional[jax.Array] = None,
                  prev_feats: Optional[fast.Features] = None,
-                 fused_gate: Optional[jax.Array] = None) -> FrontendResult:
+                 fused_gate: Optional[jax.Array] = None,
+                 fused_config: Optional[Mapping] = None) -> FrontendResult:
     """Full frontend for one stereo frame (optionally tracking from t-1).
 
     ``fused_gate`` (traced bool) selects the ``frontend_fused`` Pallas
     megakernel for the FE+MO slice via ``lax.cond``; ``None`` — or a
     frame shape the fused path's NMS tiling can't take — statically
     drops the fused branch, keeping the unfused path's program (and its
-    numerics) untouched for every existing caller."""
+    numerics) untouched for every existing caller. ``fused_config`` is
+    the plan's autotuned launch kwargs for the fused kernel (static at
+    trace time; None/{} keeps its built-in blocks)."""
     from repro.kernels import frontend_fused
 
     use_fused = (fused_gate is not None
@@ -80,9 +83,11 @@ def run_frontend(img_l: jax.Array, img_r: jax.Array, cfg,
                                               img_l.shape[1],
                                               cfg.nms_window))
     if use_fused:
+        kcfg = dict(fused_config or {})
         fl, fr, dl, m = jax.lax.cond(
             fused_gate,
-            lambda ims: frontend_fused.fe_match(ims[0], ims[1], cfg),
+            lambda ims: frontend_fused.fe_match(ims[0], ims[1], cfg,
+                                                **kcfg),
             lambda ims: _fe_match_ref(ims[0], ims[1], cfg),
             (img_l, img_r))
     else:
@@ -129,7 +134,8 @@ def init_carry(cfg) -> FrontendCarry:
 
 
 def step_carry(carry: FrontendCarry, img_l: jax.Array, img_r: jax.Array,
-               cfg, fused_gate: Optional[jax.Array] = None
+               cfg, fused_gate: Optional[jax.Array] = None,
+               fused_config: Optional[Mapping] = None
                ) -> Tuple[FrontendCarry, FrontendResult]:
     """One frontend stage of the scan body: run the full frontend from
     the carried previous frame, then advance the carry."""
@@ -138,7 +144,7 @@ def step_carry(carry: FrontendCarry, img_l: jax.Array, img_r: jax.Array,
         score=jnp.zeros(carry.prev_valid.shape, jnp.float32),
         valid=carry.prev_valid)
     fr = run_frontend(img_l, img_r, cfg, carry.prev_img, prev_feats,
-                      fused_gate=fused_gate)
+                      fused_gate=fused_gate, fused_config=fused_config)
     new_carry = FrontendCarry(prev_img=img_l, prev_yx=fr.yx,
                               prev_valid=fr.valid)
     return new_carry, fr

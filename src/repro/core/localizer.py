@@ -98,7 +98,13 @@ def resolve_kernel_plan(plan: sched.OffloadPlan, cfg: EudoxusConfig,
     entirely from this transfer term.
 
     All dummies are ``np.empty`` — decide_path only reads shapes/dtypes,
-    so resolution never allocates device memory or traces kernels."""
+    so resolution never allocates device memory or traces kernels.
+
+    Each registry ``Decision`` also carries the installed tuned
+    profile's launch config for its size bucket; the winning configs of
+    kernels that resolved to Pallas are collected into
+    ``plan.configs`` and threaded (statically) to the call sites by
+    ``step.flags_from_plan``."""
     from repro.kernels import registry as kreg
     l = cfg.backend.ba_landmarks
     kw = cfg.backend.ba_window
@@ -110,15 +116,20 @@ def resolve_kernel_plan(plan: sched.OffloadPlan, cfg: EudoxusConfig,
     P = np.empty((d, d), np.float32)
     F_seq = np.empty((8, 15, 15), np.float32)
     Q = np.empty((15, 15), np.float32)
-    return plan.replace(
-        marg_schur=kreg.decide_path(
-            "marg_schur", r, jx, jl, transfer_bw=transfer_bw) == "pallas",
-        frontend_fused=kreg.decide_path(
+    decisions = {
+        "marg_schur": kreg.decide_path(
+            "marg_schur", r, jx, jl, transfer_bw=transfer_bw),
+        "frontend_fused": kreg.decide_path(
             "frontend_fused", img, img, cfg.frontend,
-            transfer_bw=transfer_bw) == "pallas",
-        cov_update=kreg.decide_path(
+            transfer_bw=transfer_bw),
+        "cov_update": kreg.decide_path(
             "cov_update", P, F_seq, Q, np.int32(1),
-            transfer_bw=transfer_bw) == "pallas")
+            transfer_bw=transfer_bw)}
+    configs = {name: dict(dec.config) for name, dec in decisions.items()
+               if dec == "pallas" and dec.config}
+    return plan.replace(
+        configs=configs,
+        **{name: dec == "pallas" for name, dec in decisions.items()})
 
 
 def resolve_marg_kernel(plan: sched.OffloadPlan,

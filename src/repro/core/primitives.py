@@ -88,6 +88,16 @@ class FrameCtx:
             return jnp.bool_(True)
         return gates[key]
 
+    def kernel_config(self, key: str) -> Dict[str, Any]:
+        """The plan's autotuned launch config for kernel ``key`` — a
+        STATIC kwargs dict ({} = the kernel's built-in defaults). Unlike
+        gates these never trace: they pick the Pallas launch geometry at
+        trace time (step.KernelConfigs)."""
+        configs = getattr(self.flags, "configs", None)
+        if configs is None:
+            return {}
+        return configs.get(key)
+
 
 @dataclass(frozen=True)
 class FrameCarry:
@@ -179,8 +189,9 @@ def _frontend(ctx: FrameCtx, c: FrameCarry, params: Mapping) -> FrameCarry:
     if (ctx.allow_pallas_marg and gates is not None
             and "frontend_fused" in gates):
         fused_gate = gates["frontend_fused"]
-    fe_carry, fr = pipeline.step_carry(fe_carry, c.img_l, c.img_r, ctx.cfg,
-                                       fused_gate=fused_gate)
+    fe_carry, fr = pipeline.step_carry(
+        fe_carry, c.img_l, c.img_r, ctx.cfg, fused_gate=fused_gate,
+        fused_config=ctx.kernel_config("frontend_fused"))
     return _replace(c, fr=fr, prev_img=fe_carry.prev_img,
                     prev_yx=fe_carry.prev_yx,
                     prev_valid=fe_carry.prev_valid)
@@ -224,7 +235,8 @@ def _imu_propagate(ctx: FrameCtx, c: FrameCarry,
         q = jnp.where(do, q, f.q)
         p = jnp.where(do, p, f.p)
         v = jnp.where(do, v, f.v)
-        P = cov_update.fused_update(f.P, F_seq, Q, do)
+        P = cov_update.fused_update(f.P, F_seq, Q, do,
+                                    **ctx.kernel_config("cov_update"))
         W = f.clones_q.shape[0]
         return f._replace(
             q=q, p=p, v=v,
@@ -324,7 +336,8 @@ def _ba_marginalize(ctx: FrameCtx, c: FrameCarry, params: Mapping):
             b, lms, lmv, intr, lm_iters=ctx.be_cfg.lm_iters,
             lm_lambda0=ctx.be_cfg.lm_lambda0,
             marg_pallas=ctx.gate("marg_schur"),
-            allow_pallas=ctx.allow_pallas_marg)
+            allow_pallas=ctx.allow_pallas_marg,
+            marg_config=ctx.kernel_config("marg_schur"))
 
     ba3 = jax.lax.cond(trigger, run_ba, lambda b: b, ba2)
     return ba3, trigger

@@ -99,7 +99,7 @@ KERNEL_MODELS = {
     "hamming": 1,
     "matmul": 1,
     "cholesky": 2,
-    "flash": 1,
+    "fast_detect": 1,
 }
 
 
@@ -172,12 +172,22 @@ class OffloadPlan(Mapping):
       cov_update     — same, for the fused IMU propagate+augment
                        covariance megakernel in imu_propagate.
 
+    Alongside the boolean decisions the plan carries ``configs``: the
+    autotuned per-kernel launch configs (kernel name -> kwargs dict)
+    that ``localizer.resolve_kernel_plan`` collected from the registry's
+    ``Decision``s. They are trace-time constants — ``step.PlanFlags``
+    threads them to the fused call sites as static aux data, so a
+    changed config recompiles at plan-resolution time, never mid-run.
+    An empty mapping (the untuned default) leaves every kernel on its
+    built-in literals, bitwise.
+
     Legacy attribute aliases (``plan.kalman_gain`` etc.,
     ``_LEGACY_PLAN_FIELDS``) are kept for existing call sites."""
 
-    __slots__ = ("_d",)
+    __slots__ = ("_d", "_configs")
 
-    def __init__(self, decisions: Optional[Mapping] = None, **fields):
+    def __init__(self, decisions: Optional[Mapping] = None,
+                 configs: Optional[Mapping] = None, **fields):
         d = {k: PLAN_KEY_DEFAULTS.get(k, True) for k in PLAN_KEYS}
         if decisions is not None:
             for k, v in dict(decisions).items():
@@ -185,6 +195,12 @@ class OffloadPlan(Mapping):
         for k, v in fields.items():
             d[_LEGACY_PLAN_FIELDS.get(k, k)] = bool(v)
         object.__setattr__(self, "_d", d)
+        cfgs = {}
+        if configs:
+            for k, v in dict(configs).items():
+                if v:
+                    cfgs[str(k)] = dict(v)
+        object.__setattr__(self, "_configs", cfgs)
 
     # Mapping interface (keyed by primitive name; legacy names resolve)
     def __getitem__(self, key: str) -> bool:
@@ -199,17 +215,27 @@ class OffloadPlan(Mapping):
     def __len__(self) -> int:
         return len(self._d)
 
+    @property
+    def configs(self) -> Mapping[str, Mapping]:
+        """Autotuned per-kernel launch configs ({} when untuned)."""
+        return self._configs
+
     def replace(self, **fields) -> "OffloadPlan":
         """A copy with the given decisions overridden (primitive or
-        legacy key names)."""
-        return OffloadPlan(self._d, **fields)
+        legacy key names); ``configs=...`` replaces the tuned-config
+        payload, which is otherwise carried over unchanged."""
+        configs = fields.pop("configs", self._configs)
+        return OffloadPlan(self._d, configs=configs, **fields)
 
     def __repr__(self) -> str:
         inner = ", ".join(f"{k}={v}" for k, v in sorted(self._d.items()))
+        if self._configs:
+            inner += f", configs={sorted(self._configs)}"
         return f"OffloadPlan({inner})"
 
     def __eq__(self, other) -> bool:
-        return isinstance(other, OffloadPlan) and self._d == other._d
+        return (isinstance(other, OffloadPlan) and self._d == other._d
+                and self._configs == other._configs)
 
     # legacy attribute aliases
     @property
@@ -296,6 +322,10 @@ class LatencyModels:
     observations: Dict[Tuple[str, str], ObservationBuffer] = field(
         default_factory=dict)
     obs_decay: float = 0.85
+    # autotuned launch configs (kernels.tuning.TunedProfile) riding with
+    # the latency models: same install lifecycle, same fingerprinted
+    # persistence, consulted by registry.decide_path on the Pallas path
+    tuned: Optional[object] = None
 
     def fit_kernel(self, name: str, sizes, host_times, accel_times):
         """Offline calibration fit. Takes PRECEDENCE over any online

@@ -81,6 +81,61 @@ class LocalizerState(NamedTuple):
     ba: ba_mod.BAState       # SLAM keyframe window + marginalization prior
 
 
+class KernelConfigs:
+    """The plan's autotuned per-kernel launch configs as a STATIC
+    trace-time constant.
+
+    Registered as a leafless pytree whose aux_data is the object itself:
+    the configs never become traced values, they select which Pallas
+    launch geometry gets traced — so a different tuned profile is a
+    different treedef and jit recompiles at the next dispatch (config
+    changes recompile at load time, never mid-run), while an identical
+    profile hashes equal and reuses the compiled program. The empty
+    instance (untuned) leaves every kernel on its built-in literal
+    blocks, bitwise."""
+
+    __slots__ = ("_items",)
+
+    def __init__(self, configs: Mapping = None):
+        items = []
+        if configs:
+            for k in sorted(configs):
+                v = configs[k]
+                if not v:
+                    continue
+                items.append((str(k), tuple(sorted(dict(v).items()))))
+        object.__setattr__(self, "_items", tuple(items))
+
+    def get(self, key: str) -> Dict:
+        """Launch kwargs for kernel ``key`` ({} when untuned)."""
+        for k, v in self._items:
+            if k == key:
+                return dict(v)
+        return {}
+
+    def as_dict(self) -> Dict[str, Dict]:
+        return {k: dict(v) for k, v in self._items}
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, KernelConfigs)
+                and self._items == other._items)
+
+    def __hash__(self) -> int:
+        return hash(self._items)
+
+    def __repr__(self) -> str:
+        return f"KernelConfigs({dict(self._items)!r})"
+
+
+jax.tree_util.register_pytree_node(
+    KernelConfigs, lambda c: ((), c), lambda aux, children: aux)
+
+EMPTY_CONFIGS = KernelConfigs()
+
+
 class PlanFlags(NamedTuple):
     """The scheduler's pre-resolved decisions as they enter the fused
     dispatch, generalized to the primitive registry:
@@ -109,10 +164,17 @@ class PlanFlags(NamedTuple):
                 runtime instead of executing both sides of a batched
                 select.
 
+    ``configs``  the plan's autotuned per-kernel launch configs as a
+                STATIC ``KernelConfigs`` (never traced: block sizes are
+                launch geometry, not data). ``EMPTY_CONFIGS`` — the
+                untuned default — keeps every kernel on its built-in
+                literals bitwise.
+
     The legacy field views (``kalman``/``marg``/``marg_pallas``/
     ``slam``) read the corresponding entries."""
     gates: Dict[str, jax.Array]
     active: Dict[str, jax.Array]
+    configs: KernelConfigs = EMPTY_CONFIGS
 
     @property
     def kalman(self):
@@ -208,7 +270,20 @@ def flags_from_plan(plan, slam_active=None, modes=None,
         if slam_active is not None and "slam" in act:
             act["slam"] = bool(slam_active)
     active = {nm: jnp.asarray(bool(v)) for nm, v in act.items()}
-    return PlanFlags(gates=gates, active=active)
+    if multi:
+        # one compiled program has ONE launch geometry per kernel:
+        # merge per-scenario configs first-wins over the table order
+        # (plans resolved from the same installed profile agree anyway)
+        merged = {}
+        for nm in table.names:
+            if nm in plan:
+                for k, v in (getattr(plan[nm], "configs", None)
+                             or {}).items():
+                    merged.setdefault(k, v)
+        configs = KernelConfigs(merged)
+    else:
+        configs = KernelConfigs(getattr(plan, "configs", None))
+    return PlanFlags(gates=gates, active=active, configs=configs)
 
 
 class FrameInputs(NamedTuple):
@@ -357,7 +432,8 @@ def localize_step(state: LocalizerState, img_l: jax.Array, img_r: jax.Array,
     # dispatch carries one fleet-wide plan or one plan per scenario
     frame_gates = {k: (v[safe_mode] if getattr(v, "ndim", 0) == 1 else v)
                    for k, v in flags.gates.items()}
-    frame_flags = PlanFlags(gates=frame_gates, active=flags.active)
+    frame_flags = PlanFlags(gates=frame_gates, active=flags.active,
+                            configs=flags.configs)
 
     ctx = prim.FrameCtx(cfg=cfg, be_cfg=be_cfg, fx=fx, fy=fy, cx=cx, cy=cy,
                         baseline=baseline, vocab=vocab, flags=frame_flags,

@@ -13,9 +13,29 @@ def default_interpret() -> bool:
         return True
 
 
-def pick_block(dim: int, target: int) -> int:
-    """Largest divisor of `dim` that is <= target (keeps grids exact)."""
+def pick_block(dim: int, target: int, *, min_block: int = 1) -> int:
+    """Largest divisor of ``dim`` that is <= ``target`` (keeps grids
+    exact, so every Pallas BlockSpec tiles the axis without remainder).
+
+    Boundary shapes degrade EXPLICITLY rather than silently:
+
+    - ``dim <= target``: the whole axis is one block (returns ``dim``).
+    - prime ``dim > target``: no divisor above 1 exists below the
+      target, so the validated fallback is block size 1 — a legal but
+      degenerate grid of ``dim`` steps. Callers that cannot afford that
+      pass ``min_block``; when no divisor >= ``min_block`` fits under
+      the target the fallback is the whole axis (``dim``, one block —
+      always valid) instead of a sub-minimum tile.
+    - non-positive ``dim``/``target``/``min_block`` is a caller bug and
+      raises instead of looping or returning a nonsense block.
+    """
+    if dim < 1 or target < 1 or min_block < 1:
+        raise ValueError(
+            f"pick_block needs positive sizes: dim={dim}, "
+            f"target={target}, min_block={min_block}")
     b = min(dim, target)
     while dim % b:
         b -= 1
+    if b < min_block:
+        return dim            # validated fallback: one whole-axis block
     return b

@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import default_interpret
+import functools
+
+from repro.kernels.common import default_interpret, pick_block
 
 
 def _propagate_P(P, F, Q):
@@ -59,17 +61,23 @@ def _augment_P(P):
     return P_new
 
 
-def _cov_kernel(F_ref, Q_ref, gate_ref, P_ref, out_ref):
+def _cov_kernel(F_ref, Q_ref, gate_ref, P_ref, out_ref, *, bk):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _load():
         out_ref[...] = P_ref[...]                     # one DRAM read of P
 
-    P = out_ref[...]
-    F = F_ref[...][0]
-    P_upd = _propagate_P(P, F, Q_ref[...])
-    out_ref[...] = jnp.where(gate_ref[...][0, 0] > 0, P_upd, P)
+    gate = gate_ref[...][0, 0] > 0
+    Q = Q_ref[...]
+    # bk samples per grid step, applied in the SAME sequential order as
+    # the bk=1 grid — bitwise-identical result at any tiling, fewer grid
+    # steps (the autotuner's block_k knob trades grid overhead against
+    # per-step F-block residency)
+    for j in range(bk):
+        P = out_ref[...]
+        P_upd = _propagate_P(P, F_ref[...][j], Q)
+        out_ref[...] = jnp.where(gate, P_upd, P)
 
     @pl.when(i == pl.num_programs(0) - 1)
     def _augment():
@@ -77,19 +85,22 @@ def _cov_kernel(F_ref, Q_ref, gate_ref, P_ref, out_ref):
 
 
 def fused_update(P: jax.Array, F_seq: jax.Array, Q: jax.Array,
-                 do_prop: jax.Array, *,
+                 do_prop: jax.Array, *, block_k: int = 1,
                  interpret: Optional[bool] = None) -> jax.Array:
     """P (d,d), F_seq (K,15,15), Q (15,15), do_prop () int32/bool ->
-    augmented post-propagation covariance (d,d)."""
+    augmented post-propagation covariance (d,d). ``block_k`` — IMU
+    samples consumed per grid step (numerics-exact at any value: the
+    sweep stays strictly sequential)."""
     if interpret is None:
         interpret = default_interpret()
     d = P.shape[0]
     K = F_seq.shape[0]
+    bk = pick_block(K, block_k)
     gate = jnp.asarray(do_prop, jnp.int32).reshape(1, 1)
     return pl.pallas_call(
-        _cov_kernel,
-        grid=(K,),
-        in_specs=[pl.BlockSpec((1, 15, 15), lambda i: (i, 0, 0)),
+        functools.partial(_cov_kernel, bk=bk),
+        grid=(K // bk,),
+        in_specs=[pl.BlockSpec((bk, 15, 15), lambda i: (i, 0, 0)),
                   pl.BlockSpec((15, 15), lambda i: (0, 0)),
                   pl.BlockSpec((1, 1), lambda i: (0, 0)),
                   pl.BlockSpec((d, d), lambda i: (0, 0))],

@@ -7,6 +7,14 @@ the memory-roofline win recorded in EXPERIMENTS.md §Perf.
 
 Layout: q (B,S,H,D); k,v (B,T,H,D) with matching head counts (GQA heads
 are expanded by the caller — see models/attention._prepare_gqa).
+
+QUARANTINED from the localization registry surface: ``flash`` has no
+``kernels.registry`` spec, no latency model, and no tuning space — the
+Eudoxus spine never dispatches it, so calibrate()/tune() skip it
+entirely. models/attention.py imports this module directly (platform-
+gated via ``ops.use_pallas``), and the kernel tests exercise it as a
+standalone. ``blocked_matmul`` stays registered — the backend solves
+route through it.
 """
 from __future__ import annotations
 

@@ -37,6 +37,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.frontend import fast, filters, orb, stereo
 from repro.kernels.common import default_interpret, pick_block
@@ -52,11 +53,14 @@ def supported(h: int, w: int, cell: int) -> bool:
 # kernel A: blur + FAST-9 + cell NMS over row-blocks of the padded frame
 # --------------------------------------------------------------------------
 
-def _fe_kernel(pad_ref, smooth_ref, best_ref, idx_ref, *, taps, H, W, bh,
-               pad, cell, threshold, arc_len):
-    i = pl.program_id(0)
-    row0 = i * bh
-    P = pad_ref[...]                                  # (H+2p, W+2p) VMEM
+def _fe_block_compute(P, base, row0, *, taps, H, W, bh, pad, cell,
+                      threshold, arc_len):
+    """The blur + FAST-9 + cell-NMS math for one row-block, reading the
+    padded source ``P`` starting at padded row ``base`` (the block's
+    first unpadded row is ``row0`` — equal to ``base`` when P is the
+    whole padded frame, 0 when P is a DMA'd slab). Shared verbatim by
+    the auto-pipelined and double-buffered kernels, so both are bitwise
+    equal by construction."""
     r = len(taps) // 2
 
     # IF: separable Gaussian on this row-block (vertical then horizontal,
@@ -65,16 +69,15 @@ def _fe_kernel(pad_ref, smooth_ref, best_ref, idx_ref, *, taps, H, W, bh,
     vP = jnp.zeros((bh, W + 2 * pad), jnp.float32)
     for ti, t in enumerate(taps):
         vP = vP + jax.lax.dynamic_slice(
-            P, (row0 + (pad - r) + ti, 0), (bh, W + 2 * pad)) * t
+            P, (base + (pad - r) + ti, 0), (bh, W + 2 * pad)) * t
     smooth = jnp.zeros((bh, W), jnp.float32)
     for tj, t in enumerate(taps):
         smooth = smooth + vP[:, (pad - r) + tj:(pad - r) + tj + W] * t
-    smooth_ref[...] = smooth
 
     # FD: FAST-9 on the RAW block (ring offsets read from the same pad)
-    center = jax.lax.dynamic_slice(P, (row0 + pad, pad), (bh, W))
+    center = jax.lax.dynamic_slice(P, (base + pad, pad), (bh, W))
     ring = jnp.stack([
-        jax.lax.dynamic_slice(P, (row0 + pad + dy, pad + dx), (bh, W))
+        jax.lax.dynamic_slice(P, (base + pad + dy, pad + dx), (bh, W))
         for dy, dx in fast.CIRCLE])                   # (16, bh, W)
     diff = ring - center[None]
     brighter = diff > threshold
@@ -108,38 +111,107 @@ def _fe_kernel(pad_ref, smooth_ref, best_ref, idx_ref, *, taps, H, W, bh,
     s = s.reshape(bc * Wc, cell * cell)
     idx = jnp.argmax(s, axis=1)
     best = jnp.take_along_axis(s, idx[:, None], axis=1)[:, 0]
-    best_ref[...] = best.reshape(bc, Wc)
-    idx_ref[...] = idx.reshape(bc, Wc).astype(jnp.int32)
+    return smooth, best.reshape(bc, Wc), idx.reshape(bc, Wc)
 
 
-def _detect_describe(img: jax.Array, cfg, interpret: bool
+def _fe_kernel(pad_ref, smooth_ref, best_ref, idx_ref, *, taps, H, W, bh,
+               pad, cell, threshold, arc_len):
+    i = pl.program_id(0)
+    row0 = i * bh
+    P = pad_ref[...]                                  # (H+2p, W+2p) VMEM
+    smooth, best, idx = _fe_block_compute(
+        P, row0, row0, taps=taps, H=H, W=W, bh=bh, pad=pad, cell=cell,
+        threshold=threshold, arc_len=arc_len)
+    smooth_ref[...] = smooth
+    best_ref[...] = best
+    idx_ref[...] = idx.astype(jnp.int32)
+
+
+def _fe_db_kernel(pad_hbm, smooth_ref, best_ref, idx_ref, slab, sem, *,
+                  taps, H, W, bh, pad, cell, threshold, arc_len, nt):
+    """Double-buffered kernel A: the padded frame stays HBM-resident
+    (memory_space=ANY) and each grid step's (bh+2p)-row slab lands in
+    one slot of a two-deep VMEM ping-pong. The copy of slab i+1 is
+    issued before slab i's blur/score compute, so the HBM->VMEM
+    transfer rides under the arithmetic; TPU grids run sequentially, so
+    the scratch started at step i is exactly what step i+1 waits on.
+    Math is ``_fe_block_compute`` on the slab (base=0) — bitwise equal
+    to the auto-pipelined kernel."""
+    i = pl.program_id(0)
+    rows = bh + 2 * pad
+
+    def copy(t, slot):
+        return pltpu.make_async_copy(pad_hbm.at[pl.ds(t * bh, rows), :],
+                                     slab.at[slot], sem.at[slot])
+
+    @pl.when(i == 0)
+    def _warm():
+        copy(0, 0).start()
+
+    slot = jax.lax.rem(i, 2)
+
+    @pl.when(i + 1 < nt)
+    def _prefetch():
+        copy(i + 1, jax.lax.rem(i + 1, 2)).start()
+
+    copy(i, slot).wait()
+    smooth, best, idx = _fe_block_compute(
+        slab[slot], 0, i * bh, taps=taps, H=H, W=W, bh=bh, pad=pad,
+        cell=cell, threshold=threshold, arc_len=arc_len)
+    smooth_ref[...] = smooth
+    best_ref[...] = best
+    idx_ref[...] = idx.astype(jnp.int32)
+
+
+def _detect_describe(img: jax.Array, cfg, interpret: bool,
+                     block_cells: int = 8, block_n: int = 128,
+                     double_buffer: bool = False
                      ) -> Tuple[fast.Features, jax.Array, jax.Array]:
     """One image through kernels A + B: Features, desc (N,256) bool,
-    packed (N,8) uint32."""
+    packed (N,8) uint32. ``block_cells``/``block_n`` size kernel A's
+    row-block (in NMS cells) and kernel B's corner tile (autotuned);
+    ``double_buffer`` swaps kernel A for the explicit ping-pong variant
+    (single-block frames fall back — nothing to overlap)."""
     H, W = img.shape
     cell = cfg.nms_window
     taps = filters.gaussian_taps(cfg.gaussian_sigma)
     pad = max(len(taps) // 2, 3)                      # blur radius vs ring
     P = jnp.pad(img.astype(jnp.float32), pad, mode="edge")
     Hc, Wc = H // cell, W // cell
-    bc = pick_block(Hc, 8)
+    bc = pick_block(Hc, block_cells)
     bh = bc * cell
+    nt = H // bh
 
-    smooth, best, idx = pl.pallas_call(
-        functools.partial(_fe_kernel, taps=taps, H=H, W=W, bh=bh, pad=pad,
-                          cell=cell, threshold=cfg.fast_threshold,
-                          arc_len=cfg.fast_arc_len),
-        grid=(H // bh,),
-        in_specs=[pl.BlockSpec((H + 2 * pad, W + 2 * pad),
-                               lambda i: (0, 0))],
-        out_specs=[pl.BlockSpec((bh, W), lambda i: (i, 0)),
-                   pl.BlockSpec((bc, Wc), lambda i: (i, 0)),
-                   pl.BlockSpec((bc, Wc), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((H, W), jnp.float32),
-                   jax.ShapeDtypeStruct((Hc, Wc), jnp.float32),
-                   jax.ShapeDtypeStruct((Hc, Wc), jnp.int32)],
-        interpret=interpret,
-    )(P)
+    kern_kw = dict(taps=taps, H=H, W=W, bh=bh, pad=pad, cell=cell,
+                   threshold=cfg.fast_threshold, arc_len=cfg.fast_arc_len)
+    out_specs = [pl.BlockSpec((bh, W), lambda i: (i, 0)),
+                 pl.BlockSpec((bc, Wc), lambda i: (i, 0)),
+                 pl.BlockSpec((bc, Wc), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((H, W), jnp.float32),
+                 jax.ShapeDtypeStruct((Hc, Wc), jnp.float32),
+                 jax.ShapeDtypeStruct((Hc, Wc), jnp.int32)]
+    if double_buffer and nt >= 2:
+        smooth, best, idx = pl.pallas_call(
+            functools.partial(_fe_db_kernel, nt=nt, **kern_kw),
+            grid=(nt,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((2, bh + 2 * pad, W + 2 * pad),
+                                       jnp.float32),
+                            pltpu.SemaphoreType.DMA((2,))],
+            interpret=interpret,
+        )(P)
+    else:
+        smooth, best, idx = pl.pallas_call(
+            functools.partial(_fe_kernel, **kern_kw),
+            grid=(nt,),
+            in_specs=[pl.BlockSpec((H + 2 * pad, W + 2 * pad),
+                                   lambda i: (0, 0))],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(P)
 
     # top-K over cell maxima (identical arithmetic to fast.grid_nms_topk)
     bestf = best.reshape(Hc * Wc)
@@ -157,7 +229,7 @@ def _detect_describe(img: jax.Array, cfg, interpret: bool
         valid = jnp.pad(valid, (0, padn))
     feats = fast.Features(yx=yx, score=top_score, valid=valid)
 
-    desc_u8, packed = _describe(smooth, yx, interpret)
+    desc_u8, packed = _describe(smooth, yx, interpret, block_n=block_n)
     return feats, desc_u8 != 0, packed
 
 
@@ -177,11 +249,11 @@ def _fc_kernel(img_ref, yx_ref, cdy_ref, cdx_ref, pairs_ref,
     packed_ref[...] = orb.pack_bits(desc)
 
 
-def _describe(smooth: jax.Array, yx: jax.Array, interpret: bool
-              ) -> Tuple[jax.Array, jax.Array]:
+def _describe(smooth: jax.Array, yx: jax.Array, interpret: bool,
+              block_n: int = 128) -> Tuple[jax.Array, jax.Array]:
     H, W = smooth.shape
     n = yx.shape[0]
-    bn = pick_block(n, 128)
+    bn = pick_block(n, block_n)
     cdy, cdx = orb.circle_offsets()
     nc = cdy.shape[0]
     return pl.pallas_call(
@@ -240,6 +312,7 @@ def _mo_kernel(pl_ref, yxl_ref, vl_ref, pr_ref, yxr_ref, vr_ref,
 
 def match_packed(pk_l, yxl, vl, pk_r, yxr, vr, *, max_disparity: int,
                  hamming_budget: int, row_tol: int = 2,
+                 block_n: int = 128,
                  interpret: Optional[bool] = None) -> stereo.StereoMatches:
     """Epipolar-constrained hamming match on packed (N,8) descriptors.
     Integer distances order identically to the float reference (hamming
@@ -247,7 +320,7 @@ def match_packed(pk_l, yxl, vl, pk_r, yxr, vr, *, max_disparity: int,
     if interpret is None:
         interpret = default_interpret()
     NL, NR = pk_l.shape[0], pk_r.shape[0]
-    bn = pick_block(NL, 128)
+    bn = pick_block(NL, block_n)
     idx, best, dval = pl.pallas_call(
         functools.partial(_mo_kernel, max_disparity=max_disparity,
                           row_tol=row_tol),
@@ -278,18 +351,30 @@ def match_packed(pk_l, yxl, vl, pk_r, yxr, vr, *, max_disparity: int,
 # --------------------------------------------------------------------------
 
 def fe_match(img_l: jax.Array, img_r: jax.Array, cfg, *,
+             block_cells: int = 8, block_n: int = 128,
+             double_buffer: bool = False,
              interpret: Optional[bool] = None):
     """Fused FE + MO for one stereo frame: returns (fl, fr, dl, matches),
     the same tuple as ``pipeline._fe_match_ref`` (DR refinement and LK
-    tracking stay shared, outside the fusion boundary)."""
+    tracking stay shared, outside the fusion boundary).
+
+    ``block_cells``/``block_n``/``double_buffer`` are the autotuner's
+    launch knobs (kernel A row-block in NMS cells, kernel B/C corner
+    tile, explicit ping-pong staging of the padded frame) — every
+    setting is numerics-exact, the defaults reproduce the untuned
+    kernel bitwise."""
     if interpret is None:
         interpret = default_interpret()
     fl, dl, pk_l = _detect_describe(img_l.astype(jnp.float32), cfg,
-                                    interpret)
+                                    interpret, block_cells=block_cells,
+                                    block_n=block_n,
+                                    double_buffer=double_buffer)
     fr, _, pk_r = _detect_describe(img_r.astype(jnp.float32), cfg,
-                                   interpret)
+                                   interpret, block_cells=block_cells,
+                                   block_n=block_n,
+                                   double_buffer=double_buffer)
     m = match_packed(pk_l, fl.yx, fl.valid, pk_r, fr.yx, fr.valid,
                      max_disparity=cfg.stereo_max_disparity,
                      hamming_budget=cfg.stereo_hamming_budget,
-                     interpret=interpret)
+                     block_n=block_n, interpret=interpret)
     return fl, fr, dl, m

@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import default_interpret, pick_block
 
@@ -146,17 +147,90 @@ def _normal_kernel(r_ref, jx_ref, jl_ref, yy_ref, yv_ref, *, jitter):
     yv_ref[...] += yv[:, None]
 
 
+def _normal_db_kernel(r_hbm, jx_hbm, jl_hbm, yy_ref, yv_ref,
+                      r_s, jx_s, jl_s, r_sem, jx_sem, jl_sem,
+                      *, jitter, mb, nt):
+    """Explicitly double-buffered variant of ``_normal_kernel``: the
+    Jacobian slabs stay HBM-resident (memory_space=ANY) and each
+    landmark tile is DMA'd into one slot of a two-deep VMEM ping-pong —
+    the async copy of tile t+1 is issued BEFORE tile t's compute, so
+    the HBM->VMEM transfer overlaps the contraction instead of
+    serializing ahead of it (the automatic-pipelining grid can't overlap
+    here because the accumulator output blocks every grid step on the
+    same tile). Tiles are consumed in the identical ascending order as
+    the grid version, so the float accumulation is bitwise-identical at
+    the same ``mb``."""
+
+    def copies(t, slot):
+        sl = pl.ds(t * mb, mb)
+        return (pltpu.make_async_copy(r_hbm.at[:, sl, :],
+                                      r_s.at[slot], r_sem.at[slot]),
+                pltpu.make_async_copy(jx_hbm.at[:, sl, :, :],
+                                      jx_s.at[slot], jx_sem.at[slot]),
+                pltpu.make_async_copy(jl_hbm.at[:, sl, :, :],
+                                      jl_s.at[slot], jl_sem.at[slot]))
+
+    yy_ref[...] = jnp.zeros_like(yy_ref)
+    yv_ref[...] = jnp.zeros_like(yv_ref)
+    for c in copies(0, 0):                     # warm-up: tile 0 -> slot 0
+        c.start()
+
+    def step(t, carry):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < nt)
+        def _prefetch():                       # overlaps this tile's math
+            for c in copies(t + 1, jax.lax.rem(t + 1, 2)):
+                c.start()
+
+        for c in copies(t, slot):
+            c.wait()
+        g, a, b = _normal_tile(r_s[slot], jx_s[slot], jl_s[slot], jitter)
+        yy, yv = _tile_terms(g, a, b)
+        yy_ref[...] += yy
+        yv_ref[...] += yv[:, None]
+        return carry
+
+    jax.lax.fori_loop(0, nt, step, 0)
+
+
 def accumulate_normal(r: jax.Array, jx: jax.Array, jl: jax.Array, *,
                       jitter: float = 1e-4, mb: int = 16,
+                      double_buffer: bool = False,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array]:
     """Fused JᵀJ assembly + Schur accumulation from BA residual
-    Jacobians: r (K,M,2), jx (K,M,2,6), jl (K,M,2,3) -> (6K,6K), (6K,)."""
+    Jacobians: r (K,M,2), jx (K,M,2,6), jl (K,M,2,3) -> (6K,6K), (6K,).
+
+    ``mb`` tiles the landmark axis (autotuned; changing it reorders the
+    float accumulation within tolerance). ``double_buffer`` swaps the
+    automatically-pipelined grid for the explicit two-deep VMEM
+    ping-pong (``_normal_db_kernel``) — bitwise-identical results at
+    the same ``mb``; it needs >= 2 tiles to have anything to overlap,
+    so single-tile shapes fall back to the grid form."""
     if interpret is None:
         interpret = default_interpret()
     k, m = jx.shape[0], jx.shape[1]
     d = 6 * k
     mb = pick_block(m, mb)
+    nt = m // mb
+    if double_buffer and nt >= 2:
+        yy, yv = pl.pallas_call(
+            functools.partial(_normal_db_kernel, jitter=jitter, mb=mb,
+                              nt=nt),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)] * 3,
+            out_shape=[jax.ShapeDtypeStruct((d, d), jx.dtype),
+                       jax.ShapeDtypeStruct((d, 1), jx.dtype)],
+            scratch_shapes=[pltpu.VMEM((2, k, mb, 2), r.dtype),
+                            pltpu.VMEM((2, k, mb, 2, 6), jx.dtype),
+                            pltpu.VMEM((2, k, mb, 2, 3), jl.dtype),
+                            pltpu.SemaphoreType.DMA((2,)),
+                            pltpu.SemaphoreType.DMA((2,)),
+                            pltpu.SemaphoreType.DMA((2,))],
+            interpret=interpret,
+        )(r, jx, jl)
+        return yy, yv[:, 0]
     yy, yv = pl.pallas_call(
         functools.partial(_normal_kernel, jitter=jitter),
         grid=(m // mb,),

@@ -73,8 +73,6 @@ def _shape_supports(op: str, shapes) -> bool:
             return len(shapes[0]) == 2
         if op == "hamming" and len(shapes) >= 2:
             return len(shapes[0]) == 2 and len(shapes[1]) == 2
-        if op == "flash":
-            return len(shapes[0]) == 4
     except (IndexError, TypeError):
         return False
     return True
@@ -95,15 +93,6 @@ def _shape_size(op: str, shapes) -> float:
             return float(h) * w
         if op == "hamming":
             return float(shapes[0][0]) * shapes[1][0]
-        if op == "flash":
-            # registry feature: q elements x kv length. Only q's shape is
-            # available here; kv length == q length for the LM's
-            # self-attention callers
-            q = shapes[0]
-            size = 1.0
-            for d in q:
-                size *= d
-            return size * q[1]
     except (IndexError, TypeError, ValueError):
         pass
     return None
@@ -138,9 +127,10 @@ def hamming_distance(dl: jax.Array, dr: jax.Array) -> jax.Array:
     return registry.dispatch("hamming", dl, dr)
 
 
-# --------------------------------------------------------------------------
-# LM kernels
-# --------------------------------------------------------------------------
-
-def flash_attention(q, k, v, causal: bool = True):
-    return registry.dispatch("flash", q, k, v, causal=causal)
+# NOTE: the LM-era flash-attention facade is gone — ``flash`` is no
+# longer a registry kernel (the localization spine never calls it, and
+# keeping it in the calibration/tuning sweep wasted bench budget on a
+# kernel the paper's workload can't reach). kernels/flash_attention.py
+# itself remains for models/attention.py, which imports it directly and
+# gates on ``use_pallas("flash", ...)`` — now a pure platform check, as
+# no latency model is fitted for it.

@@ -28,6 +28,13 @@ accelerated composition (whose building blocks themselves dispatch
 through this registry, reaching real Pallas kernels on TPU) and the
 "xla" path is the eager host execution — the same FPGA-vs-CPU decision
 structure the paper evaluates, realized on this container's hardware.
+
+``decide_path`` returns a ``Decision(path, config)``: when a tuned
+profile (``kernels.tuning.tune()``) is installed alongside the latency
+models, the decision also carries the autotuned launch config (block
+sizes, landmark tiles, double-buffering) for the chosen size bucket,
+and ``dispatch`` applies it to the Pallas call. ``Decision`` compares
+equal to its path string, so path-only callers are unaffected.
 """
 from __future__ import annotations
 
@@ -35,7 +42,8 @@ import functools
 import json
 import os
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterable, Mapping, NamedTuple,
+                    Optional, Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +100,14 @@ class KernelSpec:
     # optional: size -> args for the calibration sweep
     calibrate_inputs: Optional[Callable] = None
     calibrate_sizes: Tuple[int, ...] = ()
+    # optional: declared autotuning space (kwarg name -> candidate
+    # values, every candidate numerics-preserving) swept by
+    # ``tuning.tune()``, plus a per-config validity predicate
+    # ``(config, *args, **kw) -> bool`` mirroring ``supports`` — e.g.
+    # matmul rejects block candidates whose resolved tiles break the
+    # MXU's 8x128 alignment before they are ever timed.
+    tuning_space: Optional[Dict[str, Tuple]] = None
+    config_supports: Optional[Callable] = None
 
 
 # --------------------------------------------------------------------------
@@ -121,9 +137,9 @@ def _matmul_xla(a, b):
     return ref.matmul(a, b)
 
 
-def _matmul_pallas(a, b):
+def _matmul_pallas(a, b, **cfg):
     from repro.kernels import blocked_matmul
-    return blocked_matmul.matmul(a, b)
+    return blocked_matmul.matmul(a, b, **cfg)
 
 
 def _cholesky_xla(a):
@@ -141,9 +157,9 @@ def _conv2d_xla(img, k):
     return ref.conv2d_3x3(img, k)
 
 
-def _conv2d_pallas(img, k):
+def _conv2d_pallas(img, k, **cfg):
     from repro.kernels import conv2d
-    return conv2d.conv2d_3x3(img, k)
+    return conv2d.conv2d_3x3(img, k, **cfg)
 
 
 def _hamming_xla(dl, dr):
@@ -151,19 +167,28 @@ def _hamming_xla(dl, dr):
     return ref.hamming_distance(dl, dr)
 
 
-def _hamming_pallas(dl, dr):
+def _hamming_pallas(dl, dr, **cfg):
     from repro.kernels import stereo_hamming
-    return stereo_hamming.hamming_distance(dl, dr)
+    return stereo_hamming.hamming_distance(dl, dr, **cfg)
 
 
-def _flash_xla(q, k, v, causal=True):
+# NOTE: the LM-era flash-attention kernel is QUARANTINED from the
+# localization registry (mirroring the sharding.py / configs.lm
+# quarantines): no localization primitive attends over token sequences,
+# so it no longer occupies a dispatch name, a latency-model slot, or the
+# autotuner's sweep. ``kernels/flash_attention.py`` itself stays as a
+# standalone Pallas exemplar (tests and benchmarks import it directly).
+
+
+def _fast_detect_xla(img, threshold=20.0, arc_len=9):
     from repro.kernels import ref
-    return ref.flash_attention(q, k, v, causal=causal)
+    return ref.fast_score(img, threshold=threshold, arc_len=arc_len)
 
 
-def _flash_pallas(q, k, v, causal=True):
-    from repro.kernels import flash_attention as fa
-    return fa.flash_attention(q, k, v, causal=causal)
+def _fast_detect_pallas(img, threshold=20.0, arc_len=9, **cfg):
+    from repro.kernels import fast_detect
+    return fast_detect.fast_score(img, threshold=threshold,
+                                  arc_len=arc_len, **cfg)
 
 
 # --- composite paper kernels (Fig. 16): accel = jitted composition whose
@@ -231,9 +256,9 @@ def _marg_schur_xla(r, jx, jl):
     return marg_schur.accumulate_normal_ref(r, jx, jl)
 
 
-def _marg_schur_pallas(r, jx, jl):
+def _marg_schur_pallas(r, jx, jl, **cfg):
     from repro.kernels import marg_schur
-    return marg_schur.accumulate_normal(r, jx, jl)
+    return marg_schur.accumulate_normal(r, jx, jl, **cfg)
 
 
 # --- frontend megakernel (detect + describe + match): the pallas path
@@ -245,9 +270,9 @@ def _frontend_fused_xla(img_l, img_r, cfg):
     return pipeline._fe_match_ref(img_l, img_r, cfg)
 
 
-def _frontend_fused_pallas(img_l, img_r, cfg):
+def _frontend_fused_pallas(img_l, img_r, cfg, **kcfg):
     from repro.kernels import frontend_fused
-    return frontend_fused.fe_match(img_l, img_r, cfg)
+    return frontend_fused.fe_match(img_l, img_r, cfg, **kcfg)
 
 
 def _frontend_fused_supports(img_l, img_r, cfg):
@@ -267,9 +292,9 @@ def _cov_update_xla(P, F_seq, Q, do_prop):
     return cov_update.update_ref(P, F_seq, Q, do_prop)
 
 
-def _cov_update_pallas(P, F_seq, Q, do_prop):
+def _cov_update_pallas(P, F_seq, Q, do_prop, **cfg):
     from repro.kernels import cov_update
-    return cov_update.fused_update(P, F_seq, Q, do_prop)
+    return cov_update.fused_update(P, F_seq, Q, do_prop, **cfg)
 
 
 # --------------------------------------------------------------------------
@@ -349,6 +374,41 @@ def _matmul_inputs(n: int):
             jnp.asarray(rs.randn(n, n), jnp.float32))
 
 
+def _fast_inputs(h: int):
+    rs = np.random.RandomState(9)
+    return (jnp.asarray(rs.rand(h, 128) * 255, jnp.float32),)
+
+
+# --------------------------------------------------------------------------
+# per-config validity predicates (the tuning-space analogue of
+# ``supports``: a candidate the target tiling can't host is filtered out
+# of the sweep before it is ever timed)
+# --------------------------------------------------------------------------
+
+def _matmul_config_supports(config, a, b) -> bool:
+    """Mirror ``tileable_matmul`` at the RESOLVED block sizes: after
+    ``pick_block`` shrinks a candidate to divide the axis, the tile must
+    still satisfy the MXU's 8-sublane / 128-lane fp32 alignment."""
+    from repro.kernels.common import pick_block
+    m, k = a.shape
+    n = b.shape[1]
+    bm = pick_block(m, config.get("bm", 128))
+    bk = pick_block(k, config.get("bk", 128))
+    bn = pick_block(n, config.get("bn", 128))
+    return bm % 8 == 0 and bk % 128 == 0 and bn % 128 == 0
+
+
+def _marg_schur_config_supports(config, r, jx, jl) -> bool:
+    """A double-buffered pipeline needs >= 2 landmark tiles at the
+    resolved tile size — with a single tile there is no copy/compute
+    overlap to win, only DMA bookkeeping to lose."""
+    from repro.kernels.common import pick_block
+    if not config.get("double_buffer", False):
+        return True
+    m = jl.shape[1]
+    return m // pick_block(m, config.get("mb", 16)) >= 2
+
+
 # --------------------------------------------------------------------------
 # the registry
 # --------------------------------------------------------------------------
@@ -366,7 +426,10 @@ _register(KernelSpec(
     size_feature=lambda a, b: float(a.shape[0]) * a.shape[1] * b.shape[1],
     transfer_bytes=lambda a, b: _nbytes(a, b),
     supports=lambda a, b: tileable_matmul(a.shape, b.shape),
-    calibrate_inputs=_matmul_inputs, calibrate_sizes=(128, 256, 384)))
+    calibrate_inputs=_matmul_inputs, calibrate_sizes=(128, 256, 384),
+    tuning_space={"bm": (64, 128, 256), "bk": (128, 256),
+                  "bn": (128, 256)},
+    config_supports=_matmul_config_supports))
 
 _register(KernelSpec(
     name="cholesky", xla=_cholesky_xla, pallas=_cholesky_pallas,
@@ -379,20 +442,24 @@ _register(KernelSpec(
     size_feature=lambda img, k: float(img.shape[0]) * img.shape[1],
     transfer_bytes=lambda img, k: _nbytes(img, k),
     supports=lambda img, k: img.ndim == 2,
-    calibrate_inputs=_conv_inputs, calibrate_sizes=(64, 128, 256)))
+    calibrate_inputs=_conv_inputs, calibrate_sizes=(64, 128, 256),
+    tuning_space={"block_h": (32, 64, 128, 256)}))
 
 _register(KernelSpec(
     name="hamming", xla=_hamming_xla, pallas=_hamming_pallas,
     size_feature=lambda dl, dr: float(dl.shape[0]) * dr.shape[0],
     transfer_bytes=lambda dl, dr: _nbytes(dl, dr),
     supports=lambda dl, dr: dl.ndim == 2 and dr.ndim == 2,
-    calibrate_inputs=_hamming_inputs, calibrate_sizes=(64, 128, 256)))
+    calibrate_inputs=_hamming_inputs, calibrate_sizes=(64, 128, 256),
+    tuning_space={"block": (64, 128, 256)}))
 
 _register(KernelSpec(
-    name="flash", xla=_flash_xla, pallas=_flash_pallas,
-    size_feature=lambda q, k, v, **kw: float(np.prod(q.shape)) * k.shape[1],
-    transfer_bytes=lambda q, k, v, **kw: _nbytes(q, k, v),
-    supports=lambda q, k, v, **kw: q.ndim == 4))
+    name="fast_detect", xla=_fast_detect_xla, pallas=_fast_detect_pallas,
+    size_feature=lambda img, **kw: float(img.shape[0]) * img.shape[1],
+    transfer_bytes=lambda img, **kw: _nbytes(img),
+    supports=lambda img, **kw: img.ndim == 2,
+    calibrate_inputs=_fast_inputs, calibrate_sizes=(64, 128, 256),
+    tuning_space={"block_h": (16, 32, 64, 128)}))
 
 _register(KernelSpec(
     name="projection", xla=_projection_host, pallas=_projection_accel,
@@ -422,7 +489,9 @@ _register(KernelSpec(
     size_feature=lambda r, jx, jl: float(jl.shape[1]),  # landmark count
     transfer_bytes=lambda r, jx, jl: _nbytes(r, jx, jl),
     supports=lambda r, jx, jl: jl.ndim == 4 and jl.shape[-1] == 3,
-    calibrate_inputs=_marg_schur_inputs, calibrate_sizes=(16, 32, 64)))
+    calibrate_inputs=_marg_schur_inputs, calibrate_sizes=(16, 32, 64),
+    tuning_space={"mb": (8, 16, 32, 64), "double_buffer": (False, True)},
+    config_supports=_marg_schur_config_supports))
 
 _register(KernelSpec(
     name="frontend_fused",
@@ -431,7 +500,9 @@ _register(KernelSpec(
     * img_l.shape[1],                                  # pixel count
     transfer_bytes=lambda img_l, img_r, cfg: _nbytes(img_l, img_r),
     supports=_frontend_fused_supports,
-    calibrate_inputs=_frontend_fused_inputs, calibrate_sizes=(64, 128)))
+    calibrate_inputs=_frontend_fused_inputs, calibrate_sizes=(64, 128),
+    tuning_space={"block_cells": (4, 8, 16), "block_n": (64, 128),
+                  "double_buffer": (False, True)}))
 
 _register(KernelSpec(
     name="cov_update", xla=_cov_update_xla, pallas=_cov_update_pallas,
@@ -440,16 +511,68 @@ _register(KernelSpec(
     supports=lambda P, F_seq, Q, do_prop: P.ndim == 2
     and P.shape[0] == P.shape[1] and P.shape[0] >= 21
     and (P.shape[0] - 15) % 6 == 0,
-    calibrate_inputs=_cov_update_inputs, calibrate_sizes=(10, 20, 30)))
+    calibrate_inputs=_cov_update_inputs, calibrate_sizes=(10, 20, 30),
+    tuning_space={"block_k": (1, 2, 5)}))
+
+# every spec with a declared tuning space — the autotuner's default sweep
+TUNABLE_KERNELS = tuple(sorted(
+    name for name, spec in REGISTRY.items() if spec.tuning_space))
 
 
 # --------------------------------------------------------------------------
 # dispatch
 # --------------------------------------------------------------------------
 
+class Decision(NamedTuple):
+    """``decide_path``'s verdict: the chosen path plus the installed
+    tuned-profile launch config for that call's size bucket (None when
+    no profile is installed, the kernel is untuned, or the winner was
+    the kernel's built-in defaults).
+
+    Compares and hashes as its path string, so the long-standing
+    ``decide_path(...) == "pallas"`` call sites keep working unchanged;
+    config-aware callers unpack ``path, config``."""
+    path: str
+    config: Optional[Mapping[str, Any]] = None
+
+    def __eq__(self, other):
+        if isinstance(other, Decision):
+            return (self.path == other.path
+                    and self.config == other.config)
+        if isinstance(other, str):
+            return self.path == other
+        return NotImplemented
+
+    def __ne__(self, other):
+        eq = self.__eq__(other)
+        return eq if eq is NotImplemented else not eq
+
+    def __hash__(self):
+        return hash(self.path)
+
+
+def _tuned_config(spec: KernelSpec, args, kw) -> Optional[Dict[str, Any]]:
+    """The installed tuned profile's winning config for this call, or
+    None. The winner is re-validated against the spec's per-config
+    predicate at the ACTUAL shapes — a config tuned at a calibration
+    size never forces an invalid tiling onto an odd production shape."""
+    models = _INSTALLED
+    profile = getattr(models, "tuned", None) if models is not None else None
+    if not profile:
+        return None
+    config = profile.lookup(spec.name, spec.size_feature(*args, **kw))
+    if not config:
+        return None
+    if (spec.config_supports is not None
+            and not spec.config_supports(config, *args, **kw)):
+        return None
+    return config
+
+
 def decide_path(name: str, *args, transfer_bw: Optional[float] = None,
-                **kw) -> str:
-    """Which path would run: 'pallas' (accelerator) or 'xla' (host).
+                **kw) -> Decision:
+    """Which path would run: 'pallas' (accelerator) or 'xla' (host),
+    plus the tuned launch config when one is installed for that path.
 
     REPRO_KERNELS is read per call (not at import) so tests/benchmarks
     can toggle without re-importing; inside an already-compiled jitted
@@ -461,7 +584,7 @@ def decide_path(name: str, *args, transfer_bw: Optional[float] = None,
     # auto | pallas | pallas! (strict: raise on unsupported shapes) | xla
     force = os.environ.get("REPRO_KERNELS", "auto")
     if force == "xla":
-        return "xla"
+        return Decision("xla")
     if not spec.supports(*args, **kw):
         if force == "pallas!":
             shapes = [tuple(a.shape) for a in args if hasattr(a, "shape")]
@@ -470,24 +593,31 @@ def decide_path(name: str, *args, transfer_bw: Optional[float] = None,
                 f"not support argument shapes {shapes} — the kernel's "
                 "tiling predicate rejected them (no silent XLA fallback "
                 "under the strict force)")
-        return "xla"
+        return Decision("xla")
     if force in ("pallas", "pallas!"):
-        return "pallas"
+        return Decision("pallas", _tuned_config(spec, args, kw))
     models = _INSTALLED
     if models is not None and models.fitted(name):
         size = spec.size_feature(*args, **kw)
         tb = spec.transfer_bytes(*args, **kw)
-        return ("pallas" if models.should_offload(name, size, tb,
-                                                  transfer_bw=transfer_bw)
-                else "xla")
-    return "pallas" if _on_tpu() else "xla"
+        if models.should_offload(name, size, tb, transfer_bw=transfer_bw):
+            return Decision("pallas", _tuned_config(spec, args, kw))
+        return Decision("xla")
+    if _on_tpu():
+        return Decision("pallas", _tuned_config(spec, args, kw))
+    return Decision("xla")
 
 
 def dispatch(name: str, *args, **kw):
-    """Run kernel ``name`` on the path ``decide_path`` picks."""
+    """Run kernel ``name`` on the path ``decide_path`` picks, with the
+    tuned profile's launch config (if any) applied to the Pallas path.
+    Explicit caller kwargs win over the profile."""
     spec = REGISTRY[name]
-    if decide_path(name, *args, **kw) == "pallas":
-        return spec.pallas(*args, **kw)
+    decision = decide_path(name, *args, **kw)
+    if decision == "pallas":
+        merged = dict(decision.config or {})
+        merged.update(kw)
+        return spec.pallas(*args, **merged)
     return spec.xla(*args, **kw)
 
 
@@ -591,6 +721,13 @@ def save_models(models: sched.LatencyModels, path: str) -> None:
             "transfer_bw": models.transfer_bw,
             "fixed_overhead_s": models.fixed_overhead_s,
             "host": side(models.host), "accel": side(models.accel)}
+    tuned = getattr(models, "tuned", None)
+    if tuned:
+        # the autotuner's winning launch configs ride in the same
+        # fingerprinted blob: block sizes searched on one device are as
+        # hardware-specific as latency coefficients, so the mismatch
+        # refusal below covers both
+        blob["tuned"] = tuned.to_json()
     with open(path, "w") as f:
         json.dump(blob, f, indent=1, sort_keys=True)
 
@@ -626,6 +763,9 @@ def load_models(path: str, *,
             rm.r2 = m["r2"]
             rm.provenance = m.get("provenance", "calibrated")
             side[k] = rm
+    if blob.get("tuned"):
+        from repro.kernels import tuning
+        models.tuned = tuning.TunedProfile.from_json(blob["tuned"])
     return models
 
 

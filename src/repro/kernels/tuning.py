@@ -1,0 +1,200 @@
+"""Kernel autotuner — searched launch configs for the Pallas layer.
+
+The registry (PR 2) made the *path* a calibrated decision: fitted
+latency models pick Pallas vs XLA per kernel and size. This module
+makes the *config* a searched dimension of the same machinery — the
+move every autotuned kernel stack makes, and what the paper's
+hardware does at synthesis time (line-buffer depths, PE array tiling,
+corner budgets sized per deployment).
+
+Each ``KernelSpec`` declares a ``tuning_space`` (parameter name ->
+candidate values: block sizes, grid tilings, double-buffering) and an
+optional ``config_supports`` validity predicate mirroring ``supports``/
+``tileable_matmul`` — the searched space stays hardware-valid by
+construction. ``tune()`` sweeps each kernel's space over its existing
+calibration size sweep, timing every candidate with the same
+``scheduler.profile_fn`` harness ``calibrate()`` uses, and records the
+winner per (kernel, size bucket) in a ``TunedProfile``.
+
+The profile rides the calibrated registry end to end:
+
+* attached to ``scheduler.LatencyModels.tuned`` and persisted inside
+  the same schema-v2 fingerprinted JSON (``registry.save_models`` /
+  ``load_models``) — a profile tuned on foreign hardware is refused
+  exactly like foreign latency coefficients;
+* consulted by ``registry.decide_path`` whenever a kernel resolves to
+  the Pallas path: the returned ``Decision`` carries the winning
+  config, and the plan/flags plumbing threads it to the call site at
+  trace time (config changes recompile at load time, never mid-run);
+* absent profile (or an empty winner) falls back to the kernels'
+  built-in literals bitwise — untuned behavior is byte-identical to
+  the pre-autotuner program.
+
+All candidate configs are NUMERICS-PRESERVING: they tile or pipeline
+the same arithmetic (block sizes, double-buffered staging), they never
+change what is computed — so a tuned profile can only move latency,
+not results (``marg_schur``'s landmark tile size reorders a float
+accumulation within documented tolerance; everything else is exact).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import scheduler as sched
+
+KernelConfig = Dict[str, Any]
+
+
+class TunedProfile:
+    """Winners of a ``tune()`` sweep: kernel name -> sorted
+    ``(size_feature, config)`` buckets.
+
+    Lookup follows the calibration convention: sizes are the spec's
+    ``size_feature`` scale (the scale dispatch queries at), and a query
+    resolves to the smallest swept bucket that covers it (the first
+    bucket with ``size >= query``; queries past the sweep use the
+    largest bucket). An empty winning config means the default literals
+    beat every candidate at that size — recorded explicitly so a
+    round-tripped profile reproduces the decision, not just the
+    non-default subset."""
+
+    def __init__(self) -> None:
+        self._buckets: Dict[str, List[Tuple[float, KernelConfig]]] = {}
+
+    def record(self, name: str, size_feature: float,
+               config: Optional[KernelConfig]) -> None:
+        buckets = self._buckets.setdefault(name, [])
+        entry = (float(size_feature), dict(config or {}))
+        buckets[:] = [b for b in buckets if b[0] != entry[0]]
+        buckets.append(entry)
+        buckets.sort(key=lambda b: b[0])
+
+    def lookup(self, name: str, size_feature: float
+               ) -> Optional[KernelConfig]:
+        """Winning config for ``name`` at ``size_feature`` (a copy), or
+        None when the kernel was never tuned / the winner is the
+        default."""
+        buckets = self._buckets.get(name)
+        if not buckets:
+            return None
+        chosen = buckets[-1][1]
+        for size, config in buckets:
+            if size_feature <= size:
+                chosen = config
+                break
+        return dict(chosen) if chosen else None
+
+    def kernels(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._buckets))
+
+    def buckets(self, name: str) -> List[Tuple[float, KernelConfig]]:
+        """The (size, config) sweep for one kernel (copies)."""
+        return [(s, dict(c)) for s, c in self._buckets.get(name, [])]
+
+    def __bool__(self) -> bool:
+        return bool(self._buckets)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, TunedProfile)
+                and self._buckets == other._buckets)
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}:{len(v)}" for k, v in
+                          sorted(self._buckets.items()))
+        return f"TunedProfile({inner})"
+
+    # JSON round trip (embedded in the registry's schema-v2 blob)
+    def to_json(self) -> Dict:
+        return {"kernels": {name: [[size, config] for size, config
+                                   in buckets]
+                            for name, buckets in self._buckets.items()}}
+
+    @classmethod
+    def from_json(cls, blob: Dict) -> "TunedProfile":
+        prof = cls()
+        for name, buckets in blob.get("kernels", {}).items():
+            for size, config in buckets:
+                prof.record(name, float(size),
+                            {str(k): v for k, v in dict(config).items()})
+        return prof
+
+
+def enumerate_configs(spec, *args, max_configs: Optional[int] = None,
+                      **kw) -> List[KernelConfig]:
+    """The spec's candidate configs at these operand shapes: the
+    cartesian product of its declared ``tuning_space``, filtered by its
+    ``config_supports`` validity predicate (mirroring ``supports`` —
+    candidates a real accelerator's tiling can't host never get timed).
+    Deterministic order (sorted parameter names, declared value order),
+    so ``max_configs`` bounds the sweep reproducibly (the CI smoke's
+    2-configs-per-kernel cap)."""
+    space = getattr(spec, "tuning_space", None) or {}
+    names = sorted(space)
+    out: List[KernelConfig] = []
+    for values in itertools.product(*(space[n] for n in names)):
+        config = dict(zip(names, values))
+        predicate = getattr(spec, "config_supports", None)
+        if predicate is not None and not predicate(config, *args, **kw):
+            continue
+        out.append(config)
+        if max_configs is not None and len(out) >= max_configs:
+            break
+    return out
+
+
+def tune(models: Optional[sched.LatencyModels] = None,
+         kernels: Optional[Iterable[str]] = None,
+         sizes: Optional[Dict[str, Sequence[int]]] = None,
+         reps: int = 3, max_configs: Optional[int] = None,
+         install: bool = True,
+         path: Optional[str] = None) -> sched.LatencyModels:
+    """The autotuning pass: sweep every kernel's declared config space
+    over its calibration size sweep, timing each candidate's Pallas
+    path with the same ``scheduler.profile_fn`` harness ``calibrate()``
+    uses, and record the per-(kernel, size) winner in
+    ``models.tuned``.
+
+    ``kernels`` defaults to every registered spec with a non-empty
+    tuning space (``registry.TUNABLE_KERNELS``); ``sizes`` overrides a
+    kernel's sweep (CI smokes pass one tiny size); ``max_configs``
+    bounds the candidates per (kernel, size) deterministically. The
+    default (no explicit config) is always timed as the baseline, so a
+    winner is only ever recorded when a candidate was measured at
+    least as fast — and an empty winner records "the defaults won"
+    explicitly. ``install`` publishes the models (profile included) to
+    dispatch; ``path`` persists them as the registry's fingerprinted
+    schema-v2 JSON."""
+    from repro.kernels import registry as kreg
+
+    models = models or kreg.installed_models() or sched.LatencyModels()
+    names = tuple(kernels) if kernels is not None else kreg.TUNABLE_KERNELS
+    sizes = sizes or {}
+    profile = TunedProfile()
+    for name in names:
+        spec = kreg.REGISTRY[name]
+        if spec.calibrate_inputs is None or not spec.tuning_space:
+            continue
+        sweep = list(sizes.get(name, spec.calibrate_sizes))
+        for n in sweep:
+            args = spec.calibrate_inputs(n)
+            if not spec.supports(*args):
+                continue
+            candidates = enumerate_configs(spec, *args,
+                                           max_configs=max_configs)
+            best_config: KernelConfig = {}
+            best_t = sched.profile_fn(lambda: spec.pallas(*args),
+                                      reps=reps)
+            for config in candidates:
+                t = sched.profile_fn(
+                    lambda config=config: spec.pallas(*args, **config),
+                    reps=reps)
+                if t < best_t:
+                    best_config, best_t = config, t
+            profile.record(name, spec.size_feature(*args), best_config)
+    models.tuned = profile
+    if install:
+        kreg.install_models(models)
+    if path is not None:
+        kreg.save_models(models, path)
+    return models

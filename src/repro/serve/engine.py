@@ -73,13 +73,27 @@ class ServingEngine:
         (bounds the host staging time of one boundary). When more
         frames are queued than the budget drains, high-``priority``
         robots are served first; the rest wait, FIFO per robot.
+    shrink_after: shrink-on-idle trigger — after this many CONSECUTIVE
+        chunk boundaries with occupancy at or below ``shrink_low_water
+        * capacity``, halve the pool (never below the highest bound
+        slot + 1 or ``shrink_min_capacity``; bound slots never
+        relocate). The inverse of the overflow resize and just as
+        explicit: the pipeline is flushed first and the retrace is
+        counted. Default None = never shrink.
+    shrink_low_water: occupancy fraction that counts as idle (default
+        0.25 — a pool more than 4x over-provisioned for ``shrink_after``
+        chunks gives the memory back).
+    shrink_min_capacity: floor the shrink never crosses (default 1).
     """
 
     def __init__(self, pool: RobotStatePool, chunk: int = 8,
                  dt_imu: float = 0.005, overflow: str = "resize",
                  tracker: Optional[StepTimeTracker] = None,
                  clock=time.perf_counter, inflight: int = 2,
-                 gather_budget: Optional[int] = None):
+                 gather_budget: Optional[int] = None,
+                 shrink_after: Optional[int] = None,
+                 shrink_low_water: float = 0.25,
+                 shrink_min_capacity: int = 1):
         if overflow not in ("resize", "reject"):
             raise ValueError(f"unknown overflow policy {overflow!r}")
         if not 1 <= inflight <= pool.staging_depth:
@@ -89,6 +103,12 @@ class ServingEngine:
                 "staging_depth host staging sets)")
         if gather_budget is not None and gather_budget < 1:
             raise ValueError("gather_budget must be >= 1 (or None)")
+        if shrink_after is not None and shrink_after < 1:
+            raise ValueError("shrink_after must be >= 1 (or None)")
+        if not 0.0 < shrink_low_water < 1.0:
+            raise ValueError("shrink_low_water must be in (0, 1)")
+        if shrink_min_capacity < 1:
+            raise ValueError("shrink_min_capacity must be >= 1")
         self.pool = pool
         self.chunk = int(chunk)
         self.dt_imu = float(dt_imu)
@@ -119,6 +139,13 @@ class ServingEngine:
         self.chunks = 0
         self.frames_served = 0
         self.rejected = 0
+        # shrink-on-idle: consecutive low-occupancy boundaries seen,
+        # and downward resizes taken
+        self.shrink_after = shrink_after
+        self.shrink_low_water = float(shrink_low_water)
+        self.shrink_min_capacity = int(shrink_min_capacity)
+        self._low_chunks = 0
+        self.shrinks = 0
 
     # ------------------------------------------------------------------
     # submission surface: NEVER touches the pool
@@ -284,6 +311,36 @@ class ServingEngine:
                 now - t for t in ts)
             self.frames_served += len(ts)
 
+    def _maybe_shrink(self, poses: Dict[Any, List[np.ndarray]]) -> None:
+        """Shrink-on-idle: after ``shrink_after`` consecutive boundaries
+        at or below the low-water occupancy, halve the pool — bounded
+        below by the highest bound slot (slots never relocate; admission
+        fills lowest-first, so long-idle pools compact naturally) and
+        ``shrink_min_capacity``. Flushes the pipeline first, exactly
+        like the overflow grow: resize refuses under in-flight chunks."""
+        if self.shrink_after is None:
+            return
+        cap = self.pool.capacity
+        if (cap <= self.shrink_min_capacity
+                or self.pool.occupancy
+                > self.shrink_low_water * cap):
+            self._low_chunks = 0
+            return
+        self._low_chunks += 1
+        if self._low_chunks < self.shrink_after:
+            return
+        bound = self.pool._slot_of.values()
+        floor = max(self.shrink_min_capacity,
+                    max(bound) + 1 if bound else 1)
+        target = max(floor, cap // 2)
+        if target >= cap:
+            return      # a high bound slot pins the capacity for now
+        while self._inflight:
+            self._drain_oldest(poses)
+        self.pool.resize(target)
+        self.shrinks += 1
+        self._low_chunks = 0
+
     @staticmethod
     def _merge(poses: Dict[Any, List[np.ndarray]]
                ) -> Dict[Any, np.ndarray]:
@@ -312,6 +369,7 @@ class ServingEngine:
             while self._inflight:
                 self._drain_oldest(poses)
         self._drain_requests(poses)
+        self._maybe_shrink(poses)
         # keep room for this boundary's dispatch (the knob may be
         # lowered mid-run; steady state never enters this loop)
         while len(self._inflight) >= self.inflight:
@@ -416,6 +474,7 @@ class ServingEngine:
                 "departures": self.pool.departures,
                 "scenario_swaps": self.pool.scenario_swaps,
                 "resizes": self.pool.resizes,
+                "shrinks": self.shrinks,
                 "chunk_traces": self.pool.chunk_trace_count(),
                 "retired_chunk_traces": self.pool.retired_chunk_traces,
             },

@@ -534,32 +534,53 @@ class RobotStatePool:
     # the explicitly-slow path: elastic capacity overflow
     # ------------------------------------------------------------------
     def resize(self, new_capacity: int) -> None:
-        """Grow the pool to ``new_capacity`` slots, carrying every
-        occupied row across pools: host-gather the old padded state,
-        re-pad to the new fleet's batch, re-place across the robots
-        mesh. Slot indices, tickets and generations are preserved.
-        Costs one retrace of the chunk program (the old program's
-        traces accumulate in ``retired_chunk_traces``)."""
-        if new_capacity <= self.capacity:
+        """Re-compile the pool at ``new_capacity`` slots, carrying every
+        occupied row across pools bitwise: host-gather the old padded
+        state, re-pad (grow) or truncate the pad rows (shrink) to the
+        new fleet's batch, re-place across the robots mesh. Slot
+        indices, tickets and generations are preserved. Costs one
+        retrace of the chunk program (the old program's traces
+        accumulate in ``retired_chunk_traces``).
+
+        Shrinking requires every BOUND slot to sit below the new
+        capacity — admission fills lowest-index-first, so after the
+        high-water robots depart the top rows are pure pad and the pool
+        can drop them without relocating anyone (relocation would
+        invalidate tickets). Both directions refuse while chunks are in
+        flight: the ring/staging capacity axis dies with the pool."""
+        if new_capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if new_capacity == self.capacity:
             raise ValueError(
-                f"resize must grow: {new_capacity} <= {self.capacity}")
+                f"resize must change capacity: {new_capacity} == "
+                f"{self.capacity}")
         if self.staging_in_flight():
             raise StagingOverrun(
                 "resize with chunks in flight — drain (flush) the "
-                "pipeline before growing the pool")
+                "pipeline before resizing the pool")
+        if new_capacity < self.capacity:
+            high = sorted(s for s in self._slot_of.values()
+                          if s >= new_capacity)
+            if high:
+                raise ValueError(
+                    f"cannot shrink to {new_capacity}: bound slots "
+                    f"{high} would be dropped (slots never relocate — "
+                    "tickets pin them)")
         old_cap = self.capacity
+        keep = min(old_cap, new_capacity)
         old_states = jax.device_get(self.states)
         old_robots = self.fleet._robots
         self.retired_chunk_traces += self.fleet.chunk_trace_count()
 
         self.fleet = FleetLocalizer(self.cfg, self.cam,
                                     batch=new_capacity, **self._fleet_kw)
-        self.fleet._robots.update(old_robots)
+        self.fleet._robots.update(
+            {s: r for s, r in old_robots.items() if s < new_capacity})
         fresh = jax.device_get(self.fleet.init_state())
 
         def carry(old, new):
             out = np.asarray(new).copy()
-            out[:old_cap] = np.asarray(old)[:old_cap]
+            out[:keep] = np.asarray(old)[:keep]
             return out
         carried = jax.tree_util.tree_map(carry, old_states, fresh)
         self.states = shard_states(
@@ -567,15 +588,17 @@ class RobotStatePool:
 
         self.capacity = new_capacity
         self.generation = np.concatenate(
-            [self.generation, np.zeros(new_capacity - old_cap, np.int64)])
+            [self.generation[:keep],
+             np.zeros(new_capacity - keep, np.int64)])
         self._mode = np.concatenate(
-            [self._mode,
-             np.full(new_capacity - old_cap, MODE_VIO, np.int32)])
-        self._free = sorted(self._free + list(range(old_cap, new_capacity)),
-                            reverse=True)
+            [self._mode[:keep],
+             np.full(new_capacity - keep, MODE_VIO, np.int32)])
+        self._free = sorted(
+            [s for s in self._free if s < new_capacity]
+            + list(range(old_cap, new_capacity)), reverse=True)
         self._base_idx = np.concatenate(
-            [self._base_idx,
-             np.zeros(new_capacity - old_cap, self._base_idx.dtype)])
+            [self._base_idx[:keep],
+             np.zeros(new_capacity - keep, self._base_idx.dtype)])
         # old ring slots and staging sets die with the pool (their
         # capacity axis no longer matches)
         self._stager = _ChunkStager(slots=max(2, self.staging_depth))

@@ -230,7 +230,96 @@ def test_engine_resize_overflow_carries_state(synthetic_sequence,
     assert np.allclose(pool.position(eng.tickets["b"]), [4.0, 5.0, 6.0])
     pool.check_invariants()
     with pytest.raises(ValueError):
-        pool.resize(2)                     # grow-only
+        pool.resize(2)                     # no-op resize refused
+
+
+# ---------------------------------------------------------------------------
+# shrink-on-idle: the downward resize (PR 10)
+# ---------------------------------------------------------------------------
+def test_pool_shrink_carries_state_bitwise(synthetic_sequence, small_cfg):
+    pool = RobotStatePool(small_cfg, synthetic_sequence.cam, capacity=4,
+                          window=8)
+    tk = pool.admit("a", p0=np.array([1.0, 2.0, 3.0]))
+    row_before = pool.state_row(tk)
+    pool.resize(2)
+    assert pool.capacity == 2 and pool.resizes == 1
+    assert pool.free_slots == 1
+    row_after = pool.state_row(tk)
+    before, after = _tree_leaves_pair(row_before, row_after)
+    assert len(before) == len(after)
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pool.check_invariants()
+    # the freed high slots are really gone: the pool refills to 2, not 4
+    pool.admit("b")
+    with pytest.raises(PoolFull):
+        pool.admit("c")
+
+
+def _tree_leaves_pair(a, b):
+    import jax
+    return (jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+
+
+def test_pool_shrink_refusals(synthetic_sequence, small_cfg):
+    pool = RobotStatePool(small_cfg, synthetic_sequence.cam, capacity=4,
+                          window=8)
+    pool.admit("hi", slot=3)
+    # a bound slot above the new capacity pins it (slots never relocate)
+    with pytest.raises(ValueError):
+        pool.resize(2)
+    pool.retire("hi")
+    pool.admit("lo", slot=0)
+    # chunks in flight pin it too: the staging capacity axis dies with
+    # the old pool
+    fl = pool.dispatch_chunk({"lo": _robot_frames(synthetic_sequence,
+                                                  0, 2)},
+                             dt_imu=0.005, chunk=2)
+    from repro.serve.pool import StagingOverrun
+    with pytest.raises(StagingOverrun):
+        pool.resize(2)
+    pool.drain_chunk(fl)
+    pool.resize(2)
+    assert pool.capacity == 2 and pool.retired_chunk_traces == 1
+    pool.check_invariants()
+
+
+def test_engine_shrink_on_idle(synthetic_sequence, small_cfg):
+    pool = RobotStatePool(small_cfg, synthetic_sequence.cam, capacity=4,
+                          window=8)
+    eng = ServingEngine(pool, chunk=2, shrink_after=2,
+                        shrink_low_water=0.3)
+    eng.submit_join("a", p0=np.array([7.0, 8.0, 9.0]))
+    eng.run_chunk()
+    # occupancy 1/4 <= 0.3*4: low-water, but not for long enough yet
+    assert pool.capacity == 4 and eng.shrinks == 0
+    eng.run_chunk()
+    eng.run_chunk()
+    # after shrink_after consecutive idle boundaries: halved, state kept
+    assert pool.capacity == 2 and eng.shrinks == 1
+    assert np.allclose(pool.position(eng.tickets["a"]), [7.0, 8.0, 9.0])
+    # occupancy 1/2 > 0.3*2: no further shrink, the counter resets
+    eng.run_chunk()
+    eng.run_chunk()
+    eng.run_chunk()
+    assert pool.capacity == 2 and eng.shrinks == 1
+    assert eng.latency_report()["pool"]["shrinks"] == 1
+    pool.check_invariants()
+
+
+def test_engine_shrink_default_off(bookkeeping_pool):
+    pool = bookkeeping_pool
+    _drain(pool)
+    eng = ServingEngine(pool, chunk=2)
+    for _ in range(8):                     # empty pool, many boundaries
+        eng.run_chunk()
+    assert pool.capacity == 4 and eng.shrinks == 0
+    with pytest.raises(ValueError):
+        ServingEngine(pool, shrink_after=0)
+    with pytest.raises(ValueError):
+        ServingEngine(pool, shrink_after=2, shrink_low_water=1.5)
+    with pytest.raises(ValueError):
+        ServingEngine(pool, shrink_after=2, shrink_min_capacity=0)
 
 
 def test_tracker_snapshot_is_non_resetting():

@@ -1,0 +1,309 @@
+"""Kernel autotuner: the searched config dimension of the calibrated
+registry (PR 10).
+
+Pinned here:
+  * ``pick_block`` boundary shapes degrade explicitly (whole-axis
+    fallback, min_block floor, ValueError on nonsense);
+  * ``enumerate_configs`` is deterministic, predicate-filtered, and
+    boundable (the CI smoke's 2-configs-per-kernel cap);
+  * every candidate config is numerics-preserving at real shapes
+    (fuzzed sample per tunable kernel, bitwise except ``marg_schur``'s
+    documented accumulation-order tolerance);
+  * tune() -> save -> load -> decide_path reproduces the winning config
+    EXACTLY, and a profile tuned on foreign hardware is refused like
+    foreign latency coefficients;
+  * dispatch applies the installed winner, explicit kwargs outrank it;
+  * config changes recompile at plan-resolution time (``KernelConfigs``
+    is leafless static aux data), never mid-run.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scheduler as sched
+from repro.core.step import EMPTY_CONFIGS, KernelConfigs, PlanFlags
+from repro.kernels import registry, tuning
+from repro.kernels.common import pick_block
+
+
+@pytest.fixture(autouse=True)
+def _clean_models():
+    registry.install_models(None)
+    yield
+    registry.install_models(None)
+
+
+# ---------------------------------------------------------------------------
+# pick_block boundary shapes
+# ---------------------------------------------------------------------------
+def test_pick_block_basic_divisors():
+    assert pick_block(256, 128) == 128
+    assert pick_block(384, 256) == 192      # largest divisor <= target
+    assert pick_block(100, 128) == 100      # dim <= target: whole axis
+
+
+def test_pick_block_prime_degenerates_to_one():
+    assert pick_block(13, 8) == 1
+
+
+def test_pick_block_min_block_fallback_is_whole_axis():
+    # no divisor of 13 in [4, 8] -> the validated fallback is ONE
+    # whole-axis block, never a sub-minimum tile
+    assert pick_block(13, 8, min_block=4) == 13
+    # a qualifying divisor is still preferred over the fallback
+    assert pick_block(12, 8, min_block=4) == 6
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        pick_block(0, 8)
+    with pytest.raises(ValueError):
+        pick_block(8, 0)
+    with pytest.raises(ValueError):
+        pick_block(8, 4, min_block=0)
+
+
+# ---------------------------------------------------------------------------
+# config enumeration: deterministic, predicate-filtered, boundable
+# ---------------------------------------------------------------------------
+def test_enumerate_configs_deterministic_product():
+    spec = registry.REGISTRY["matmul"]
+    args = registry._matmul_inputs(256)
+    configs = tuning.enumerate_configs(spec, *args)
+    assert configs == tuning.enumerate_configs(spec, *args)
+    # full product at an every-candidate-valid size
+    assert len(configs) == 3 * 2 * 2
+    assert all(set(c) == {"bm", "bk", "bn"} for c in configs)
+
+
+def test_enumerate_configs_filters_invalid_tilings():
+    # at n=384, pick_block(384, 256) = 192 which breaks the 128-lane
+    # alignment -> every bk=256 / bn=256 candidate must be filtered
+    spec = registry.REGISTRY["matmul"]
+    args = registry._matmul_inputs(384)
+    configs = tuning.enumerate_configs(spec, *args)
+    assert configs
+    assert all(c["bk"] != 256 and c["bn"] != 256 for c in configs)
+
+
+def test_enumerate_configs_max_configs_is_a_prefix():
+    spec = registry.REGISTRY["matmul"]
+    args = registry._matmul_inputs(256)
+    full = tuning.enumerate_configs(spec, *args)
+    assert tuning.enumerate_configs(spec, *args, max_configs=2) == full[:2]
+
+
+def test_tunable_kernels_cover_the_spine():
+    assert set(registry.MEGAKERNELS) <= set(registry.TUNABLE_KERNELS)
+    assert "matmul" in registry.TUNABLE_KERNELS
+    # the LM-era flash kernel is quarantined from the registry surface
+    assert "flash" not in registry.REGISTRY
+    assert "flash" not in registry.TUNABLE_KERNELS
+
+
+# ---------------------------------------------------------------------------
+# every candidate is numerics-preserving at real shapes (fuzzed sample)
+# ---------------------------------------------------------------------------
+def _leaves(x):
+    return [np.asarray(v) for v in jax.tree_util.tree_leaves(x)]
+
+
+@pytest.mark.parametrize("name", registry.TUNABLE_KERNELS)
+def test_config_space_parity_fuzzed(name):
+    spec = registry.REGISTRY[name]
+    args = spec.calibrate_inputs(spec.calibrate_sizes[0])
+    configs = tuning.enumerate_configs(spec, *args)
+    assert configs, f"{name} declared a tuning space with no valid config"
+    rs = np.random.RandomState(hash(name) % (2**31))
+    sample = [configs[i] for i in
+              rs.choice(len(configs), size=min(4, len(configs)),
+                        replace=False)]
+    base = _leaves(spec.pallas(*args))
+    for config in sample:
+        out = _leaves(spec.pallas(*args, **config))
+        for b, o in zip(base, out):
+            if name == "marg_schur":
+                # the landmark tile size reorders a float accumulation
+                np.testing.assert_allclose(o, b, rtol=1e-5, atol=1e-5)
+            else:
+                np.testing.assert_array_equal(o, b)
+
+
+def test_cov_update_block_k_is_bitwise():
+    """The sweep stays strictly sequential at any block_k — bitwise, not
+    just close (the plan may swap configs between runs; trajectories
+    must not move)."""
+    spec = registry.REGISTRY["cov_update"]
+    args = spec.calibrate_inputs(spec.calibrate_sizes[0])
+    base = _leaves(spec.pallas(*args))
+    for bk in spec.tuning_space["block_k"]:
+        out = _leaves(spec.pallas(*args, block_k=bk))
+        for b, o in zip(base, out):
+            np.testing.assert_array_equal(o, b)
+
+
+# ---------------------------------------------------------------------------
+# TunedProfile bucket semantics
+# ---------------------------------------------------------------------------
+def test_profile_bucket_lookup():
+    prof = tuning.TunedProfile()
+    prof.record("k", 100, {"a": 1})
+    prof.record("k", 1000, {"a": 2})
+    assert prof.lookup("k", 50) == {"a": 1}      # smallest covering bucket
+    assert prof.lookup("k", 100) == {"a": 1}
+    assert prof.lookup("k", 500) == {"a": 2}
+    assert prof.lookup("k", 5000) == {"a": 2}    # past the sweep: largest
+    assert prof.lookup("other", 100) is None
+
+
+def test_profile_records_default_winners_explicitly():
+    prof = tuning.TunedProfile()
+    prof.record("k", 64, {})
+    assert "k" in prof.kernels()                 # the decision is recorded
+    assert prof.lookup("k", 64) is None          # ...but yields no kwargs
+    assert tuning.TunedProfile.from_json(prof.to_json()) == prof
+
+
+# ---------------------------------------------------------------------------
+# tune() round trip: search -> persist -> load -> decide_path
+# ---------------------------------------------------------------------------
+def _temp_spec(name):
+    """A tiny registered spec with a 3-candidate space and a recording
+    pallas path (so dispatch's applied kwargs are observable)."""
+    calls = []
+
+    def pallas(x, blk=8, **kw):
+        calls.append({"blk": blk})
+        return x
+
+    spec = registry.KernelSpec(
+        name=name, xla=lambda x, **kw: x, pallas=pallas,
+        size_feature=lambda x, **kw: float(x.shape[0]),
+        transfer_bytes=lambda x, **kw: 4 * x.size,
+        supports=lambda x, **kw: True,
+        calibrate_inputs=lambda n: (jnp.ones((n, 128), jnp.float32),),
+        calibrate_sizes=(64,),
+        tuning_space={"blk": (8, 16, 32)})
+    registry.REGISTRY[name] = spec
+    return spec, calls
+
+
+def test_tune_roundtrip_reproduces_winner(tmp_path, monkeypatch):
+    name = "_tuning_test_kernel"
+    _, calls = _temp_spec(name)
+    # deterministic timer: default 1.0, then blk=8 -> 0.5, blk=16 -> 0.2,
+    # blk=32 -> 0.9 (enumeration order) => the winner is blk=16
+    times = iter([1.0, 0.5, 0.2, 0.9])
+    monkeypatch.setattr(tuning.sched, "profile_fn",
+                        lambda fn, reps=3: (fn(), next(times))[1])
+    path = str(tmp_path / "models.json")
+    try:
+        models = tuning.tune(kernels=(name,), reps=1, install=False,
+                             path=path)
+        assert models.tuned.buckets(name) == [(64.0, {"blk": 16})]
+
+        loaded = registry.load_models(path)
+        assert loaded.tuned == models.tuned
+        registry.install_models(loaded)
+        monkeypatch.setenv("REPRO_KERNELS", "pallas")
+        x = jnp.ones((64, 128), jnp.float32)
+        d = registry.decide_path(name, x)
+        assert d == "pallas" and d.config == {"blk": 16}
+
+        # dispatch applies the winner; explicit kwargs outrank it
+        calls.clear()
+        registry.dispatch(name, x)
+        assert calls == [{"blk": 16}]
+        registry.dispatch(name, x, blk=99)
+        assert calls[-1] == {"blk": 99}
+        # uninstalled profile -> the built-in default, bitwise fallback
+        registry.install_models(None)
+        registry.dispatch(name, x)
+        assert calls[-1] == {"blk": 8}
+    finally:
+        del registry.REGISTRY[name]
+
+
+def test_tuned_profile_fingerprint_refusal(tmp_path):
+    lm = sched.LatencyModels()
+    sizes = np.linspace(64, 1024, 8)
+    lm.fit_kernel("projection", sizes, 1e-6 * sizes, 1e-7 * sizes)
+    prof = tuning.TunedProfile()
+    prof.record("matmul", 2**21, {"bm": 64})
+    lm.tuned = prof
+    path = str(tmp_path / "models.json")
+    registry.save_models(lm, path)
+    with open(path) as f:
+        blob = json.load(f)
+    assert blob["tuned"] == prof.to_json()   # rides the schema-v2 blob
+    for key, val in (("device_kind", "EDX-CAR FPGA"),
+                     ("device_count", "512")):
+        bad = json.loads(json.dumps(blob))
+        bad["fingerprint"][key] = val
+        with open(path, "w") as f:
+            json.dump(bad, f)
+        with pytest.raises(registry.CalibrationMismatch):
+            registry.load_models(path)
+        # the explicit escape hatch still carries the profile across
+        loaded = registry.load_models(path, allow_mismatch=True)
+        assert loaded.tuned == prof
+
+
+def test_decide_path_string_compat():
+    """Decision keeps comparing like the old plain-string returns."""
+    d = registry.Decision("xla")
+    assert d == "xla" and d != "pallas"
+    p = registry.Decision("pallas", {"bm": 64})
+    assert p == "pallas" and p != "xla"
+    assert p != registry.Decision("pallas", {"bm": 128})
+    assert p == registry.Decision("pallas", {"bm": 64})
+    assert len({d, registry.Decision("xla")}) == 1
+
+
+# ---------------------------------------------------------------------------
+# config changes recompile at load time, never mid-run
+# ---------------------------------------------------------------------------
+def test_kernel_configs_static_pytree_semantics():
+    c = KernelConfigs({"marg_schur": {"mb": 8}, "empty": {}})
+    assert c and c.get("marg_schur") == {"mb": 8}
+    assert c.get("empty") == {} and c.get("missing") == {}
+    assert not jax.tree_util.tree_leaves(c)      # leafless: static aux
+    assert c == KernelConfigs({"marg_schur": {"mb": 8}})
+    assert hash(c) == hash(KernelConfigs({"marg_schur": {"mb": 8}}))
+    assert not EMPTY_CONFIGS and c != EMPTY_CONFIGS
+
+
+def test_config_change_retraces_next_dispatch():
+    traces = []
+
+    @jax.jit
+    def f(configs, x):
+        traces.append(1)
+        return x + len(configs.get("k"))
+
+    x = jnp.ones((2,))
+    f(KernelConfigs({"k": {"a": 1}}), x)
+    f(KernelConfigs({"k": {"a": 1}}), x)
+    assert len(traces) == 1                      # same config: one trace
+    f(KernelConfigs({"k": {"a": 1, "b": 2}}), x)
+    assert len(traces) == 2                      # changed config: retrace
+
+
+def test_offload_plan_threads_configs_to_flags():
+    plan = sched.OffloadPlan(configs={"marg_schur": {"mb": 8},
+                                      "nothing": {}})
+    assert plan.configs == {"marg_schur": {"mb": 8}}
+    # replace() preserves configs unless overridden
+    plan2 = plan.replace(msckf_update=False)
+    assert plan2.configs == plan.configs
+    plan3 = plan.replace(configs={})
+    assert plan3.configs == {}
+    # equality sees configs (a swapped profile is a different plan)
+    assert plan != plan3
+    flags = PlanFlags(gates=(), active=None,
+                      configs=KernelConfigs(plan.configs))
+    assert flags.configs.get("marg_schur") == {"mb": 8}
